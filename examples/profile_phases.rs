@@ -1,0 +1,33 @@
+use mlmem_spgemm::gen::scale::{grid_for_bytes, ScaleFactor};
+use mlmem_spgemm::gen::MgProblem;
+use mlmem_spgemm::kkmem::symbolic::{max_row_upper_bound, rowmap_from_sizes, symbolic};
+use mlmem_spgemm::kkmem::CompressedMatrix;
+use mlmem_spgemm::prelude::Domain;
+use mlmem_spgemm::util::timer::Timer;
+
+fn main() {
+    let scale = ScaleFactor::default();
+    for domain in [Domain::Laplace3D, Domain::Elasticity] {
+        let grid = grid_for_bytes(domain, scale.gb(4.0));
+        let p = MgProblem::build(domain, grid, 2);
+        let (a, b) = (&p.r, &p.a);
+        let t = Timer::start();
+        let comp = CompressedMatrix::compress(b);
+        let t_comp = t.elapsed_secs();
+        let t = Timer::start();
+        let sizes = symbolic(a, &comp);
+        let t_sym = t.elapsed_secs();
+        let t = Timer::start();
+        let _rm = rowmap_from_sizes(&sizes);
+        let ub = max_row_upper_bound(a, b);
+        let t_misc = t.elapsed_secs();
+        let t = Timer::start();
+        let c = mlmem_spgemm::kkmem::spgemm(a, b, &Default::default());
+        let t_full = t.elapsed_secs();
+        println!(
+            "{}: compress {:.4}s symbolic {:.4}s misc {:.4}s FULL {:.4}s (numeric ≈ {:.4}s) ub={} cnnz={}",
+            domain.name(), t_comp, t_sym, t_misc, t_full,
+            t_full - t_comp - t_sym - t_misc, ub, c.nnz()
+        );
+    }
+}

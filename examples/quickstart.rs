@@ -1,0 +1,64 @@
+//! Quickstart: build a multigrid problem, multiply it natively, then run
+//! the same multiplication through the KNL and P100 simulators and
+//! compare the placements the paper studies.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use mlmem_spgemm::gen::scale::ScaleFactor;
+use mlmem_spgemm::kkmem::{spgemm, spgemm_sim, Placement, SpgemmOptions};
+use mlmem_spgemm::memory::arch::{knl, p100, GpuMode, KnlMode};
+use mlmem_spgemm::memory::MemSim;
+use mlmem_spgemm::prelude::*;
+use mlmem_spgemm::sparse::ops::spgemm_reference;
+
+fn main() {
+    let scale = ScaleFactor::default(); // paper-GB -> MiB
+    // A 1 "GB" Laplace3D problem with restriction/prolongation.
+    let grid = mlmem_spgemm::gen::scale::grid_for_bytes(Domain::Laplace3D, scale.gb(1.0));
+    let prob = MgProblem::build(Domain::Laplace3D, grid, 2);
+    println!(
+        "Laplace3D: A {}x{} ({} nnz), R {}x{}, P {}x{}",
+        prob.a.nrows,
+        prob.a.ncols,
+        prob.a.nnz(),
+        prob.r.nrows,
+        prob.r.ncols,
+        prob.p.nrows,
+        prob.p.ncols
+    );
+
+    // 1. Native KKMEM multiply (real threads), verified on a small slice.
+    let opts = SpgemmOptions { threads: 8, ..Default::default() };
+    let (ra, secs) = mlmem_spgemm::util::timer::time_it(|| spgemm(&prob.r, &prob.a, &opts));
+    println!("native R x A: {} nnz in {:.3}s (8 threads)", ra.nnz(), secs);
+    let small = prob.a.slice_rows(0, 50.min(prob.a.nrows));
+    assert!(spgemm(&small, &prob.a, &opts)
+        .approx_eq(&spgemm_reference(&small, &prob.a), 1e-10));
+
+    // 2. The same multiplication on the simulated machines.
+    for (label, arch) in [
+        ("KNL DDR 256T", knl(KnlMode::Ddr, 256, scale)),
+        ("KNL HBM 256T", knl(KnlMode::Hbm, 256, scale)),
+        ("KNL Cache16 256T", knl(KnlMode::Cache16, 256, scale)),
+        ("P100 HBM", p100(GpuMode::Hbm, scale)),
+        ("P100 pinned", p100(GpuMode::Pinned, scale)),
+    ] {
+        let mut sim = MemSim::new(arch.spec.clone());
+        match spgemm_sim(
+            &mut sim,
+            &prob.r,
+            &prob.a,
+            Placement::uniform(arch.default_loc),
+            &SpgemmOptions::default(),
+        ) {
+            Ok(_) => {
+                let rep = sim.finish();
+                println!(
+                    "{label:<18} {:>7.2} GFLOP/s  (L2 miss {:>5.2}%)",
+                    rep.gflops, rep.l2_miss_pct
+                );
+            }
+            Err(e) => println!("{label:<18} does not fit: {e}"),
+        }
+    }
+}

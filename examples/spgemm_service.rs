@@ -1,0 +1,72 @@
+//! Serving example: run the L3 coordinator as a batch service — many
+//! concurrent SpGEMM jobs with Auto policy (the planner picks flat/DP/
+//! chunked per job), reporting per-job decisions plus latency and
+//! throughput, like a Trilinos-style deployment would see.
+//!
+//! Run: `cargo run --release --example spgemm_service`
+
+use mlmem_spgemm::bench::experiments::{Mul, ProblemCache};
+use mlmem_spgemm::coordinator::{PlannerOptions, Policy, SpgemmService};
+use mlmem_spgemm::gen::scale::ScaleFactor;
+use mlmem_spgemm::memory::arch::{knl, KnlMode};
+use mlmem_spgemm::prelude::*;
+use mlmem_spgemm::util::stats::Summary;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let scale = ScaleFactor::default();
+    let arch = Arc::new(knl(KnlMode::Ddr, 256, scale));
+    let svc = SpgemmService::new(4, 64, PlannerOptions::default());
+    let mut cache = ProblemCache::default();
+
+    // A mixed batch: every domain, both multiplications, two sizes.
+    let mut jobs = Vec::new();
+    for domain in Domain::ALL {
+        for mul in [Mul::RxA, Mul::AxP] {
+            for gb in [0.5, 1.0] {
+                let p = cache.get(domain, gb, scale).clone();
+                let (a, b) = mul.operands(&p);
+                jobs.push((domain.name(), mul.name(), gb, a.clone(), b.clone()));
+            }
+        }
+    }
+
+    println!("submitting {} jobs to 4 workers...", jobs.len());
+    let wall = Instant::now();
+    let mut handles = Vec::new();
+    let mut submit_times = Vec::new();
+    for (domain, mul, gb, a, b) in jobs {
+        let t0 = Instant::now();
+        let h = svc
+            .submit_spgemm(Arc::new(a), Arc::new(b), Arc::clone(&arch), Policy::Auto)
+            .expect("queue has room");
+        submit_times.push((h.id, domain, mul, gb, t0));
+        handles.push(h);
+    }
+
+    let mut latencies = Vec::new();
+    for (h, (_, domain, mul, gb, t0)) in handles.into_iter().zip(submit_times) {
+        let r = h.wait().expect("job ok");
+        let latency = t0.elapsed().as_secs_f64();
+        latencies.push(latency);
+        println!(
+            "job {:>3} {:<10} {:<3} {:>4} GB -> {:<18} {:>7.2} GF/s  (wall {:>6.3}s)",
+            r.id,
+            domain,
+            mul,
+            gb,
+            r.decision.name(),
+            r.report.gflops,
+            latency
+        );
+    }
+    let total = wall.elapsed().as_secs_f64();
+    let (sub, done, failed, rejected) = svc.metrics.snapshot();
+    let s = Summary::of(&latencies);
+    println!("\n== service summary ==");
+    println!("jobs          : {done}/{sub} done, {failed} failed, {rejected} rejected");
+    println!("wall time     : {total:.2}s  ({:.1} jobs/s)", done as f64 / total);
+    println!("latency       : median {:.3}s  p-max {:.3}s", s.median, s.max);
+    println!("simulated agg : {:.2} GFLOP/s", svc.aggregate_gflops());
+}

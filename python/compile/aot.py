@@ -1,0 +1,58 @@
+"""AOT export: lower the Layer-2 graphs to HLO *text* under artifacts/.
+
+HLO text, NOT ``.serialize()``: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+published `xla` rust crate) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    exports = [
+        ("block_mm", model.chunk_product, model.example_args(fused=False)),
+        ("block_mm_fused", model.chunk_product_fused, model.example_args(fused=True)),
+    ]
+    for name, fn, spec in exports:
+        lowered = jax.jit(fn).lower(*spec)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # Shape metadata for the rust loader (flat key=value, no JSON parser
+    # needed on the rust side).
+    meta = os.path.join(args.out_dir, "meta.txt")
+    with open(meta, "w") as f:
+        f.write(f"chunk_m={model.CHUNK_M}\n")
+        f.write(f"chunk_k={model.CHUNK_K}\n")
+        f.write(f"chunk_n={model.CHUNK_N}\n")
+        f.write("dtype=f32\n")
+    print(f"wrote {meta}")
+
+
+if __name__ == "__main__":
+    main()

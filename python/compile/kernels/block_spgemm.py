@@ -1,0 +1,137 @@
+"""Layer 1 — Pallas dense-block SpGEMM kernel.
+
+The paper's chunking algorithms stage row blocks of A/B/C through fast
+memory and run a fused multiply-add subkernel on the staged chunks. On
+TPU the same insight maps onto the BlockSpec HBM<->VMEM schedule: the
+grid walks (i, j, k) tiles of the staged chunk pair, each (bm x bk) @
+(bk x bn) tile product runs on the MXU, and the partial sum lives in a
+VMEM scratch accumulator. The fused variant seeds the accumulator with
+the previous partial C — exactly Algorithm 1's
+``C^p = A_p x B_p + C^{p-1}`` (see DESIGN.md §Hardware-Adaptation).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO; correctness (and the
+HLO the rust runtime loads) is identical, only the backend differs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile (128x128 systolic array).
+DEFAULT_BLOCK = 128
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    """One (i, j, k) grid step: acc += a_tile @ b_tile.
+
+    The accumulator scratch lives in VMEM and is written back to the
+    output tile on the last k step.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...]
+
+
+def _mm_fused_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, n_k: int):
+    """Fused multiply-add: acc starts from the previous partial C tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = c_ref[...]
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...]
+
+
+def _grid_specs(m, k, n, bm, bk, bn):
+    grid = (m // bm, n // bn, k // bk)
+    a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    # C/O tiles are revisited across k: index map ignores kk — this is the
+    # "AC-resident" schedule of Algorithm 2 expressed as a BlockSpec.
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    return grid, a_spec, b_spec, o_spec
+
+
+def _check_shapes(m, k, n, bm, bk, bn):
+    if m % bm or k % bk or n % bn:
+        raise ValueError(
+            f"chunk dims ({m},{k},{n}) must be multiples of tiles ({bm},{bk},{bn})"
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def block_matmul(a, b, *, bm=DEFAULT_BLOCK, bk=DEFAULT_BLOCK, bn=DEFAULT_BLOCK):
+    """C = A @ B over MXU tiles (densified chunk fast path)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"shape mismatch {a.shape} @ {b.shape}"
+    _check_shapes(m, k, n, bm, bk, bn)
+    grid, a_spec, b_spec, o_spec = _grid_specs(m, k, n, bm, bk, bn)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[a_spec, b_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu_vmem((bm, bn))],
+        interpret=True,
+    )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def block_matmul_fused(
+    a, b, c_prev, *, bm=DEFAULT_BLOCK, bk=DEFAULT_BLOCK, bn=DEFAULT_BLOCK
+):
+    """C = A @ B + C_prev — Algorithm 1/2/3's fused chunk subkernel."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and c_prev.shape == (m, n)
+    _check_shapes(m, k, n, bm, bk, bn)
+    grid, a_spec, b_spec, o_spec = _grid_specs(m, k, n, bm, bk, bn)
+    return pl.pallas_call(
+        functools.partial(_mm_fused_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[a_spec, b_spec, o_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu_vmem((bm, bn))],
+        interpret=True,
+    )(a, b, c_prev)
+
+
+def pltpu_vmem(shape):
+    """VMEM scratch allocation, tolerant of pallas API layout changes."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM(shape, jnp.float32)
+    except Exception:  # pragma: no cover - fallback for older/newer APIs
+        return pl.MemorySpace.ANY  # type: ignore[attr-defined]
+
+
+def vmem_footprint_bytes(bm=DEFAULT_BLOCK, bk=DEFAULT_BLOCK, bn=DEFAULT_BLOCK):
+    """Static VMEM usage per grid step: A, B, C tiles + accumulator (f32).
+
+    Documented in DESIGN.md §Perf: tiles must fit the ~16 MiB/core VMEM.
+    """
+    return 4 * (bm * bk + bk * bn + 2 * bm * bn)

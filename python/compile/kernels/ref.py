@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the Pallas block kernels.
+
+Every kernel correctness test asserts ``kernel(...) ~= ref(...)``; the
+reference is deliberately the most obvious possible expression.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_matmul(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def ref_matmul_fused(a, b, c_prev):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32) + c_prev

@@ -1,0 +1,51 @@
+"""Layer 2 — the JAX compute graph the rust coordinator AOT-loads.
+
+The paper's system multiplies staged chunk pairs; the dense-block fast
+path expresses one staged pair as a dense ``(M, K) @ (K, N)`` product
+(plus the fused previous-partial add), built on the Layer-1 Pallas
+kernel so the whole thing lowers into a single HLO module.
+
+Python runs at build time only: `aot.py` lowers these functions once to
+HLO text under `artifacts/`, and the rust runtime executes them via
+PJRT. Nothing here is imported on the request path.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.block_spgemm import (
+    DEFAULT_BLOCK,
+    block_matmul,
+    block_matmul_fused,
+)
+
+# Fixed chunk geometry of the AOT artifacts. One executable per variant,
+# as the system prompt's runtime contract requires fixed shapes.
+CHUNK_M = 256
+CHUNK_K = 256
+CHUNK_N = 256
+
+
+def chunk_product(a, b):
+    """C = A @ B for one staged chunk pair (returns a 1-tuple for the
+    HLO text interchange contract)."""
+    return (block_matmul(a, b, bm=DEFAULT_BLOCK, bk=DEFAULT_BLOCK, bn=DEFAULT_BLOCK),)
+
+
+def chunk_product_fused(a, b, c_prev):
+    """C = A @ B + C_prev — the fused multiply-add of Algorithms 1-3."""
+    out = block_matmul_fused(
+        a, b, c_prev, bm=DEFAULT_BLOCK, bk=DEFAULT_BLOCK, bn=DEFAULT_BLOCK
+    )
+    return (out,)
+
+
+def example_args(fused: bool):
+    import jax
+
+    f32 = jnp.float32
+    a = jax.ShapeDtypeStruct((CHUNK_M, CHUNK_K), f32)
+    b = jax.ShapeDtypeStruct((CHUNK_K, CHUNK_N), f32)
+    if fused:
+        c = jax.ShapeDtypeStruct((CHUNK_M, CHUNK_N), f32)
+        return (a, b, c)
+    return (a, b)

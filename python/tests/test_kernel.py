@@ -1,0 +1,82 @@
+"""Layer-1 correctness: the Pallas block kernels against the pure-jnp
+oracle, swept over shapes and values with hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.block_spgemm import (
+    block_matmul,
+    block_matmul_fused,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import ref_matmul, ref_matmul_fused
+
+RNG = np.random.default_rng(1234)
+
+
+def rand(shape, scale=1.0, dtype=np.float32):
+    return jnp.asarray(RNG.standard_normal(shape).astype(dtype) * scale)
+
+
+# Tile-multiple dims; small tiles keep interpret-mode fast.
+dims = st.sampled_from([32, 64, 96, 128])
+
+
+@settings(max_examples=12, deadline=None)
+@given(m=dims, k=dims, n=dims)
+def test_block_matmul_matches_ref(m, k, n):
+    a, b = rand((m, k)), rand((k, n))
+    out = block_matmul(a, b, bm=32, bk=32, bn=32)
+    np.testing.assert_allclose(out, ref_matmul(a, b), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(m=dims, k=dims, n=dims, scale=st.sampled_from([1e-3, 1.0, 1e3]))
+def test_block_matmul_fused_matches_ref(m, k, n, scale):
+    a, b, c = rand((m, k), scale), rand((k, n), scale), rand((m, n), scale)
+    out = block_matmul_fused(a, b, c, bm=32, bk=32, bn=32)
+    np.testing.assert_allclose(
+        out, ref_matmul_fused(a, b, c), rtol=1e-4, atol=1e-4 * scale * scale
+    )
+
+
+@pytest.mark.parametrize("bm,bk,bn", [(32, 32, 32), (64, 32, 64), (128, 128, 128)])
+def test_tile_shapes(bm, bk, bn):
+    m, k, n = bm * 2, bk * 2, bn * 2
+    a, b = rand((m, k)), rand((k, n))
+    out = block_matmul(a, b, bm=bm, bk=bk, bn=bn)
+    np.testing.assert_allclose(out, ref_matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_non_multiple_shapes_rejected():
+    a, b = rand((100, 128)), rand((128, 128))
+    with pytest.raises(ValueError):
+        block_matmul(a, b, bm=64, bk=64, bn=64)
+
+
+def test_identity_and_zero():
+    n = 64
+    eye = jnp.eye(n, dtype=jnp.float32)
+    x = rand((n, n))
+    np.testing.assert_allclose(
+        block_matmul(eye, x, bm=32, bk=32, bn=32), x, rtol=1e-6
+    )
+    zero = jnp.zeros((n, n), jnp.float32)
+    np.testing.assert_allclose(
+        block_matmul_fused(zero, x, x, bm=32, bk=32, bn=32), x, rtol=1e-6
+    )
+
+
+def test_fused_equals_matmul_plus_c():
+    a, b, c = rand((64, 64)), rand((64, 64)), rand((64, 64))
+    lhs = block_matmul_fused(a, b, c, bm=32, bk=32, bn=32)
+    rhs = block_matmul(a, b, bm=32, bk=32, bn=32) + c
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-5)
+
+
+def test_vmem_footprint_within_budget():
+    # Default 128-tiles: A+B+C+acc tiles must fit a 16 MiB VMEM core.
+    assert vmem_footprint_bytes() <= 16 * 1024 * 1024
+    assert vmem_footprint_bytes(32, 32, 32) == 4 * (32 * 32) * 4

@@ -1,0 +1,46 @@
+//! Accumulator micro-benchmark: insert+drain throughput of the three
+//! accumulator strategies — the innermost operation of the numeric phase
+//! and the top target of the §Perf pass.
+
+use mlmem_spgemm::kkmem::accumulator::Accumulator;
+use mlmem_spgemm::kkmem::mempool::{AccKind, PooledAcc};
+use mlmem_spgemm::memory::NullTracer;
+use mlmem_spgemm::util::rng::Xoshiro256;
+use mlmem_spgemm::util::stats::Summary;
+use mlmem_spgemm::util::table::Table;
+use mlmem_spgemm::util::timer::bench_runs;
+
+fn main() {
+    let mut t = Table::new(&["accumulator", "row nnz", "M inserts/s"])
+        .with_title("accumulator insert+drain throughput (native)");
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    for kind in [AccKind::Hash, AccKind::Dense, AccKind::TwoLevel] {
+        for &row_nnz in &[8usize, 64, 512] {
+            let cols: Vec<u32> = (0..row_nnz)
+                .map(|_| rng.usize_below(100_000) as u32)
+                .collect();
+            let mut acc = PooledAcc::build(kind, row_nnz * 2, 100_000, 4096, 0);
+            let mut out = Vec::with_capacity(row_nnz);
+            let rows_per_rep = 20_000;
+            let samples = bench_runs(1, 5, |_| {
+                let mut tracer = NullTracer;
+                for _ in 0..rows_per_rep {
+                    for &c in &cols {
+                        acc.insert(&mut tracer, c, 1.0);
+                    }
+                    out.clear();
+                    acc.drain_into(&mut tracer, &mut out);
+                    std::hint::black_box(&out);
+                }
+            });
+            let s = Summary::of(&samples);
+            let inserts = (rows_per_rep * row_nnz) as f64;
+            t.row(&[
+                kind.name().to_string(),
+                row_nnz.to_string(),
+                format!("{:.1}", inserts / s.median / 1e6),
+            ]);
+        }
+    }
+    t.print();
+}

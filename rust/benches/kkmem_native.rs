@@ -1,0 +1,45 @@
+//! Native KKMEM throughput (no simulation): GFLOP/s of the parallel
+//! two-phase SpGEMM on each problem domain — the L3 hot-path baseline
+//! for the §Perf optimization loop. Custom harness (criterion is not in
+//! the offline vendor set).
+
+use mlmem_spgemm::bench::experiments::Mul;
+use mlmem_spgemm::gen::scale::{grid_for_bytes, ScaleFactor};
+use mlmem_spgemm::gen::MgProblem;
+use mlmem_spgemm::kkmem::{spgemm, SpgemmOptions};
+use mlmem_spgemm::prelude::Domain;
+use mlmem_spgemm::sparse::ops::spgemm_flops;
+use mlmem_spgemm::util::stats::Summary;
+use mlmem_spgemm::util::table::Table;
+use mlmem_spgemm::util::timer::bench_runs;
+
+fn main() {
+    let scale = ScaleFactor::default();
+    let threads: usize = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut t = Table::new(&[
+        "problem", "mult", "nnz(C-work)", "median s", "GFLOP/s", "stddev%",
+    ])
+    .with_title(format!("kkmem_native: parallel KKMEM, {threads} threads"));
+    for domain in Domain::ALL {
+        let grid = grid_for_bytes(domain, scale.gb(4.0));
+        let p = MgProblem::build(domain, grid, 2);
+        for mul in [Mul::RxA, Mul::AxP] {
+            let (a, b) = mul.operands(&p);
+            let flops = spgemm_flops(a, b);
+            let opts = SpgemmOptions { threads, ..Default::default() };
+            let samples = bench_runs(1, 5, |_| {
+                std::hint::black_box(spgemm(a, b, &opts));
+            });
+            let s = Summary::of(&samples);
+            t.row(&[
+                domain.name().to_string(),
+                mul.name().to_string(),
+                flops.to_string(),
+                format!("{:.4}", s.median),
+                format!("{:.3}", flops as f64 / s.median / 1e9),
+                format!("{:.1}", 100.0 * s.stddev / s.median),
+            ]);
+        }
+    }
+    t.print();
+}

@@ -1,0 +1,31 @@
+//! `cargo bench` entry that regenerates every table and figure of the
+//! paper at reduced size (the full-size sweep is `mlmem bench --exp all`)
+//! and archives CSVs under `reports/bench/`. One bench target per paper
+//! artifact keeps `cargo bench` output aligned with the paper's
+//! evaluation section.
+
+use mlmem_spgemm::bench::experiments::ProblemCache;
+use mlmem_spgemm::bench::figures::BenchConfig;
+use mlmem_spgemm::bench::{run_experiment, EXPERIMENTS};
+use mlmem_spgemm::util::timer::Timer;
+
+fn main() {
+    let mut cfg = BenchConfig::default();
+    // Reduced sweep so `cargo bench` stays minutes, not hours.
+    cfg.sizes_gb = vec![1.0, 4.0, 16.0];
+    cfg.graph_scale = 12;
+    let mut cache = ProblemCache::default();
+    let out = std::path::Path::new("reports/bench");
+    println!("== paper tables & figures (reduced sweep; see `mlmem bench` for full) ==\n");
+    for id in EXPERIMENTS {
+        let t = Timer::start();
+        let table = run_experiment(id, &cfg, &mut cache).expect("known experiment");
+        let secs = t.elapsed_secs();
+        table.print();
+        println!("[{id} regenerated in {secs:.2}s]\n");
+        table
+            .write_csv(out.join(format!("{id}.csv")))
+            .expect("write CSV");
+    }
+    println!("CSVs archived under {}", out.display());
+}

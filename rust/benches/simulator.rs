@@ -1,0 +1,62 @@
+//! Simulator overhead benchmarks: raw cache-probe throughput and the
+//! slowdown of a simulated multiplication vs the native kernel — the
+//! numbers that bound how large a paper-GB sweep the harness can afford.
+
+use mlmem_spgemm::gen::scale::{grid_for_bytes, ScaleFactor};
+use mlmem_spgemm::gen::MgProblem;
+use mlmem_spgemm::kkmem::{spgemm, spgemm_sim, Placement, SpgemmOptions};
+use mlmem_spgemm::memory::arch::{knl, KnlMode};
+use mlmem_spgemm::memory::cache::{Cache, CacheSpec};
+use mlmem_spgemm::memory::MemSim;
+use mlmem_spgemm::prelude::Domain;
+use mlmem_spgemm::util::rng::Xoshiro256;
+use mlmem_spgemm::util::stats::Summary;
+use mlmem_spgemm::util::timer::bench_runs;
+
+fn bench_cache_probes() {
+    let mut cache = Cache::new(CacheSpec { size_bytes: 32 * 1024, ways: 4 });
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let addrs: Vec<u64> = (0..1_000_000).map(|_| rng.next_below(1 << 24)).collect();
+    let samples = bench_runs(1, 5, |_| {
+        for &a in &addrs {
+            std::hint::black_box(cache.access(a, false));
+        }
+    });
+    let s = Summary::of(&samples);
+    println!(
+        "cache sim      : {:>8.1} M probes/s (median of 5)",
+        addrs.len() as f64 / s.median / 1e6
+    );
+}
+
+fn bench_sim_overhead() {
+    let scale = ScaleFactor::default();
+    let grid = grid_for_bytes(Domain::Brick3D, scale.gb(2.0));
+    let p = MgProblem::build(Domain::Brick3D, grid, 2);
+    let opts = SpgemmOptions::default();
+
+    let native = Summary::of(&bench_runs(1, 3, |_| {
+        std::hint::black_box(spgemm(&p.r, &p.a, &opts));
+    }));
+    let simulated = Summary::of(&bench_runs(1, 3, |_| {
+        let arch = knl(KnlMode::Ddr, 256, scale);
+        let mut sim = MemSim::new(arch.spec);
+        std::hint::black_box(
+            spgemm_sim(&mut sim, &p.r, &p.a, Placement::uniform(arch.default_loc), &opts)
+                .unwrap(),
+        );
+        std::hint::black_box(sim.finish());
+    }));
+    println!(
+        "sim overhead   : native {:.4}s vs simulated {:.4}s => {:.1}x (target <= 20x)",
+        native.median,
+        simulated.median,
+        simulated.median / native.median
+    );
+}
+
+fn main() {
+    println!("== simulator benchmarks ==");
+    bench_cache_probes();
+    bench_sim_overhead();
+}

@@ -1,0 +1,37 @@
+//! Native triangle-counting throughput across the three paper graphs and
+//! thread counts — the tricount hot-path baseline for §Perf.
+
+use mlmem_spgemm::gen::graphs::GraphKind;
+use mlmem_spgemm::kkmem::CompressedMatrix;
+use mlmem_spgemm::tricount::{degree_sorted_lower, tricount};
+use mlmem_spgemm::util::stats::Summary;
+use mlmem_spgemm::util::table::Table;
+use mlmem_spgemm::util::timer::bench_runs;
+
+fn main() {
+    let hw: usize = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut t = Table::new(&["graph", "edges", "threads", "median s", "M edges/s", "triangles"])
+        .with_title("tricount_native");
+    for kind in GraphKind::ALL {
+        let adj = kind.build(13, 42);
+        let l = degree_sorted_lower(&adj);
+        let lc = CompressedMatrix::compress(&l);
+        let edges = adj.nnz() / 2;
+        for threads in [1usize, hw] {
+            let mut count = 0;
+            let samples = bench_runs(1, 5, |_| {
+                count = std::hint::black_box(tricount(&l, &lc, threads));
+            });
+            let s = Summary::of(&samples);
+            t.row(&[
+                kind.name().to_string(),
+                edges.to_string(),
+                threads.to_string(),
+                format!("{:.4}", s.median),
+                format!("{:.2}", edges as f64 / s.median / 1e6),
+                count.to_string(),
+            ]);
+        }
+    }
+    t.print();
+}

@@ -1,0 +1,224 @@
+//! Shared experiment plumbing for the figure/table reproductions:
+//! problem construction at paper-GB sizes, and one-shot simulated runs
+//! for every machine mode the paper benchmarks.
+
+use crate::chunk::{gpu_chunked_sim, knl_chunked_sim, ChunkedProduct};
+use crate::gen::multigrid::MgProblem;
+use crate::gen::scale::{grid_for_bytes, ScaleFactor};
+use crate::gen::stencil::Domain;
+use crate::kkmem::{spgemm_sim, Placement, SpgemmOptions};
+use crate::memory::arch::{knl, p100, Arch, GpuMode, KnlMode};
+use crate::memory::{MemSim, SimReport};
+use crate::placement::{dp_placement, pin_one, ProblemSizes, Structure};
+use crate::sparse::Csr;
+use std::collections::HashMap;
+
+/// Which multiplication of the triple product to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mul {
+    AxP,
+    RxA,
+}
+
+impl Mul {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mul::AxP => "AxP",
+            Mul::RxA => "RxA",
+        }
+    }
+
+    pub fn operands<'p>(&self, p: &'p MgProblem) -> (&'p Csr, &'p Csr) {
+        match self {
+            Mul::AxP => (&p.a, &p.p),
+            Mul::RxA => (&p.r, &p.a),
+        }
+    }
+}
+
+/// Problem cache: building the big stencils repeatedly dominates harness
+/// time, so experiments share instances per (domain, size).
+#[derive(Default)]
+pub struct ProblemCache {
+    cache: HashMap<(Domain, u64), MgProblem>,
+}
+
+impl ProblemCache {
+    /// A-matrix target of `gb` paper-GB under `scale`, coarsening 2.
+    pub fn get(&mut self, domain: Domain, gb: f64, scale: ScaleFactor) -> &MgProblem {
+        let key = (domain, (gb * 1024.0) as u64);
+        self.cache.entry(key).or_insert_with(|| {
+            let target = scale.gb(gb);
+            let grid = grid_for_bytes(domain, target);
+            MgProblem::build(domain, grid, 2)
+        })
+    }
+}
+
+/// Result of one simulated run (None = configuration does not fit, the
+/// paper's "missing data point").
+pub type RunOutcome = Option<SimReport>;
+
+fn run_with_arch(a: &Csr, b: &Csr, arch: &Arch, placement: Option<Placement>) -> RunOutcome {
+    let mut sim = MemSim::new(arch.spec.clone());
+    let placement = placement.unwrap_or(Placement::uniform(arch.default_loc));
+    match spgemm_sim(&mut sim, a, b, placement, &SpgemmOptions::default()) {
+        Ok(_) => Some(sim.finish()),
+        Err(_) => None,
+    }
+}
+
+/// Flat KNL run in a given mode/threads.
+pub fn run_knl(a: &Csr, b: &Csr, mode: KnlMode, threads: usize, scale: ScaleFactor) -> RunOutcome {
+    run_with_arch(a, b, &knl(mode, threads, scale), None)
+}
+
+/// KNL selective-data-placement run (B fast, rest DDR); None if B does
+/// not fit fast memory.
+pub fn run_knl_dp(a: &Csr, b: &Csr, threads: usize, scale: ScaleFactor) -> RunOutcome {
+    let arch = knl(KnlMode::Ddr, threads, scale);
+    let sizes = ProblemSizes::measure(a, b);
+    let fast_usable = arch.spec.pools[crate::memory::FAST.0].usable();
+    let placement = dp_placement(&sizes, fast_usable.saturating_sub(1 << 16))?;
+    run_with_arch(a, b, &arch, Some(placement))
+}
+
+/// KNL chunked run (Algorithm 1) with a fast budget in paper-GB.
+pub fn run_knl_chunk(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    budget_gb: f64,
+    scale: ScaleFactor,
+) -> Option<(ChunkedProduct, SimReport)> {
+    let arch = knl(KnlMode::Ddr, threads, scale);
+    let mut sim = MemSim::new(arch.spec.clone());
+    let budget = scale.gb(budget_gb);
+    match knl_chunked_sim(&mut sim, a, b, budget, &SpgemmOptions::default()) {
+        Ok(p) => Some((p, sim.finish())),
+        Err(_) => None,
+    }
+}
+
+/// Flat GPU run in a given mode.
+pub fn run_gpu(a: &Csr, b: &Csr, mode: GpuMode, scale: ScaleFactor) -> RunOutcome {
+    run_with_arch(a, b, &p100(mode, scale), None)
+}
+
+/// GPU run with exactly one structure pinned in host memory (Table 3).
+pub fn run_gpu_pin_one(a: &Csr, b: &Csr, which: Structure, scale: ScaleFactor) -> RunOutcome {
+    run_with_arch(a, b, &p100(GpuMode::Hbm, scale), Some(pin_one(which)))
+}
+
+/// GPU chunked run (Algorithms 2–4) with a fast budget in paper-GB.
+pub fn run_gpu_chunk(
+    a: &Csr,
+    b: &Csr,
+    budget_gb: f64,
+    scale: ScaleFactor,
+) -> Option<(ChunkedProduct, SimReport)> {
+    let arch = p100(GpuMode::Pinned, scale);
+    let mut sim = MemSim::new(arch.spec.clone());
+    let budget = scale.gb(budget_gb);
+    match gpu_chunked_sim(&mut sim, a, b, budget, &SpgemmOptions::default()) {
+        Ok(p) => Some((p, sim.finish())),
+        Err(_) => None,
+    }
+}
+
+/// Format an optional GFLOP/s outcome ("-" for missing points, as the
+/// paper leaves gaps for runs that did not fit/complete).
+pub fn fmt_gflops(o: &RunOutcome) -> String {
+    match o {
+        Some(r) => format!("{:.2}", r.gflops),
+        None => "-".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_problem() -> MgProblem {
+        let mut cache = ProblemCache::default();
+        // 1/16 paper-GB => 64 KiB A at default scale: fast to build.
+        cache.get(Domain::Laplace3D, 0.0625, ScaleFactor::default()).clone()
+    }
+
+    #[test]
+    fn problem_cache_reuses() {
+        let mut cache = ProblemCache::default();
+        let s = ScaleFactor::default();
+        let g1 = cache.get(Domain::Brick3D, 0.125, s).grid;
+        let g2 = cache.get(Domain::Brick3D, 0.125, s).grid;
+        assert_eq!(g1, g2);
+        assert_eq!(cache.cache.len(), 1);
+    }
+
+    #[test]
+    fn all_knl_modes_run_small() {
+        let p = small_problem();
+        let s = ScaleFactor::default();
+        for mode in KnlMode::ALL {
+            for mul in [Mul::AxP, Mul::RxA] {
+                let (a, b) = mul.operands(&p);
+                let r = run_knl(a, b, mode, 64, s);
+                assert!(r.is_some(), "{} {}", mode.name(), mul.name());
+                assert!(r.unwrap().gflops > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn all_gpu_modes_run_small() {
+        let p = small_problem();
+        let s = ScaleFactor::default();
+        for mode in GpuMode::ALL {
+            let (a, b) = Mul::RxA.operands(&p);
+            let r = run_gpu(a, b, mode, s);
+            assert!(r.is_some(), "{}", mode.name());
+        }
+    }
+
+    #[test]
+    fn dp_runs_when_b_fits() {
+        let p = small_problem();
+        let s = ScaleFactor::default();
+        let (a, b) = Mul::RxA.operands(&p);
+        assert!(run_knl_dp(a, b, 256, s).is_some());
+    }
+
+    #[test]
+    fn chunked_runners_work() {
+        let p = small_problem();
+        let s = ScaleFactor::default();
+        let (a, b) = Mul::RxA.operands(&p);
+        let (cp, rep) = run_knl_chunk(a, b, 256, 8.0, s).unwrap();
+        assert!(cp.mults > 0);
+        assert!(rep.gflops > 0.0);
+        let (cp2, rep2) = run_gpu_chunk(a, b, 8.0, s).unwrap();
+        assert!(cp2.mults > 0);
+        assert!(rep2.copy_seconds > 0.0);
+    }
+
+    #[test]
+    fn pinned_gpu_much_slower_than_hbm() {
+        // The paper's central GPU observation, at small scale.
+        let p = small_problem();
+        let s = ScaleFactor::default();
+        let (a, b) = Mul::RxA.operands(&p);
+        let hbm = run_gpu(a, b, GpuMode::Hbm, s).unwrap();
+        let pin = run_gpu(a, b, GpuMode::Pinned, s).unwrap();
+        assert!(
+            hbm.gflops > 3.0 * pin.gflops,
+            "HBM {} vs pinned {}",
+            hbm.gflops,
+            pin.gflops
+        );
+    }
+
+    #[test]
+    fn fmt_handles_missing() {
+        assert_eq!(fmt_gflops(&None), "-");
+    }
+}

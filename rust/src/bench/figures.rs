@@ -1,0 +1,321 @@
+//! Figure reproductions: one function per figure of the paper's
+//! evaluation, each returning a [`Table`] whose rows are the same series
+//! the paper plots.
+
+use super::experiments::{
+    fmt_gflops, run_gpu, run_gpu_chunk, run_knl, run_knl_chunk, run_knl_dp, Mul, ProblemCache,
+};
+use crate::gen::graphs::GraphKind;
+use crate::gen::scale::ScaleFactor;
+use crate::gen::stencil::Domain;
+use crate::kkmem::CompressedMatrix;
+use crate::memory::alloc::Location;
+use crate::memory::arch::{knl, GpuMode, KnlMode};
+use crate::memory::{MemSim, FAST};
+use crate::tricount::{degree_sorted_lower, tricount_sim, TriPlacement};
+use crate::util::table::Table;
+
+/// Harness configuration shared by all experiments.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub scale: ScaleFactor,
+    /// Paper-GB sizes of the A matrix (Figures 3/4/6/7/9/10/12/13).
+    pub sizes_gb: Vec<f64>,
+    /// Graph scale exponent for Figure 11 / Table 4.
+    pub graph_scale: u32,
+    pub seed: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            scale: ScaleFactor::default(),
+            sizes_gb: vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0],
+            graph_scale: 13,
+            seed: 42,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Small configuration for tests/CI.
+    pub fn quick() -> Self {
+        Self {
+            sizes_gb: vec![0.25, 1.0],
+            graph_scale: 9,
+            ..Default::default()
+        }
+    }
+}
+
+/// Figures 3 & 4: KNL GFLOP/s across memory modes, 64 and 256 threads,
+/// weak-scaled sizes.
+pub fn fig_knl_modes(cfg: &BenchConfig, cache: &mut ProblemCache, mul: Mul) -> Table {
+    let fig = if mul == Mul::AxP { "Figure 3" } else { "Figure 4" };
+    let mut t = Table::new(&[
+        "problem", "A(GB)", "threads", "HBM", "DDR", "Cache16", "Cache8",
+    ])
+    .with_title(format!("{fig}: {} GFLOP/s on KNL", mul.name()));
+    for domain in Domain::ALL {
+        for &gb in &cfg.sizes_gb {
+            let p = cache.get(domain, gb, cfg.scale).clone();
+            let (a, b) = mul.operands(&p);
+            for threads in [64usize, 256] {
+                let cells: Vec<String> = KnlMode::ALL
+                    .iter()
+                    .map(|&mode| fmt_gflops(&run_knl(a, b, mode, threads, cfg.scale)))
+                    .collect();
+                t.row(&[
+                    vec![domain.name().to_string(), format!("{gb}"), format!("{threads}")],
+                    cells,
+                ]
+                .concat());
+            }
+        }
+    }
+    t
+}
+
+/// Figures 6 & 7: P100 GFLOP/s for HBM / pinned / UVM.
+pub fn fig_gpu_modes(cfg: &BenchConfig, cache: &mut ProblemCache, mul: Mul) -> Table {
+    let fig = if mul == Mul::AxP { "Figure 6" } else { "Figure 7" };
+    let mut t = Table::new(&["problem", "A(GB)", "HBM", "HostPin", "UVM"])
+        .with_title(format!("{fig}: {} GFLOP/s on P100", mul.name()));
+    for domain in Domain::ALL {
+        for &gb in &cfg.sizes_gb {
+            let p = cache.get(domain, gb, cfg.scale).clone();
+            let (a, b) = mul.operands(&p);
+            let cells: Vec<String> = GpuMode::ALL
+                .iter()
+                .map(|&mode| fmt_gflops(&run_gpu(a, b, mode, cfg.scale)))
+                .collect();
+            t.row(&[vec![domain.name().to_string(), format!("{gb}")], cells].concat());
+        }
+    }
+    t
+}
+
+/// Figure 9: KNL A×P with DP overlay (DDR / Cache16 / DP / HBM).
+pub fn fig9_knl_dp_axp(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
+    let mut t = Table::new(&["problem", "A(GB)", "threads", "DDR", "Cache16", "DP", "HBM"])
+        .with_title("Figure 9: AxP on KNL with selective data placement");
+    for domain in Domain::ALL {
+        for &gb in &cfg.sizes_gb {
+            let p = cache.get(domain, gb, cfg.scale).clone();
+            let (a, b) = Mul::AxP.operands(&p);
+            for threads in [64usize, 256] {
+                t.row(&[
+                    domain.name().to_string(),
+                    format!("{gb}"),
+                    format!("{threads}"),
+                    fmt_gflops(&run_knl(a, b, KnlMode::Ddr, threads, cfg.scale)),
+                    fmt_gflops(&run_knl(a, b, KnlMode::Cache16, threads, cfg.scale)),
+                    fmt_gflops(&run_knl_dp(a, b, threads, cfg.scale)),
+                    fmt_gflops(&run_knl(a, b, KnlMode::Hbm, threads, cfg.scale)),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Figure 10: KNL R×A with DP and Chunk8 (256 threads, where the paper
+/// runs the chunked algorithm).
+pub fn fig10_knl_dp_chunk_rxa(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
+    let mut t = Table::new(&[
+        "problem", "A(GB)", "threads", "DDR", "Cache16", "DP", "Chunk8", "HBM",
+    ])
+    .with_title("Figure 10: RxA on KNL with DP and chunking");
+    for domain in Domain::ALL {
+        for &gb in &cfg.sizes_gb {
+            let p = cache.get(domain, gb, cfg.scale).clone();
+            let (a, b) = Mul::RxA.operands(&p);
+            for threads in [64usize, 256] {
+                let chunk = if threads == 256 {
+                    run_knl_chunk(a, b, threads, 8.0, cfg.scale)
+                        .map(|(_, rep)| format!("{:.2}", rep.gflops))
+                        .unwrap_or_else(|| "-".into())
+                } else {
+                    "-".into()
+                };
+                t.row(&[
+                    domain.name().to_string(),
+                    format!("{gb}"),
+                    format!("{threads}"),
+                    fmt_gflops(&run_knl(a, b, KnlMode::Ddr, threads, cfg.scale)),
+                    fmt_gflops(&run_knl(a, b, KnlMode::Cache16, threads, cfg.scale)),
+                    fmt_gflops(&run_knl_dp(a, b, threads, cfg.scale)),
+                    chunk,
+                    fmt_gflops(&run_knl(a, b, KnlMode::Hbm, threads, cfg.scale)),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// One triangle-count simulated run; returns (seconds, triangles).
+fn tricount_run(
+    adj: &crate::sparse::Csr,
+    mode: KnlMode,
+    threads: usize,
+    dp: bool,
+    scale: ScaleFactor,
+) -> Option<(f64, u64)> {
+    let arch = knl(mode, threads, scale);
+    let l = degree_sorted_lower(adj);
+    let lc = CompressedMatrix::compress(&l);
+    let mut sim = MemSim::new(arch.spec.clone());
+    let placement = if dp {
+        TriPlacement { l: arch.default_loc, lc: Location::Pool(FAST), mask: arch.default_loc }
+    } else {
+        TriPlacement::uniform(arch.default_loc)
+    };
+    let (tri, _) = tricount_sim(&mut sim, &l, &lc, placement).ok()?;
+    Some((sim.finish().seconds, tri))
+}
+
+/// Figure 11: triangle-counting time (seconds) on KNL for the three
+/// graphs, DDR/HBM/Cache16/DP × {64, 256} threads.
+pub fn fig11_tricount(cfg: &BenchConfig) -> Table {
+    let mut t = Table::new(&[
+        "graph", "vertices", "edges", "threads", "DDR", "HBM", "Cache16", "DP", "triangles",
+    ])
+    .with_title("Figure 11: triangle counting time (simulated seconds)");
+    for kind in GraphKind::ALL {
+        let adj = kind.build(cfg.graph_scale, cfg.seed);
+        for threads in [64usize, 256] {
+            let ddr = tricount_run(&adj, KnlMode::Ddr, threads, false, cfg.scale);
+            let hbm = tricount_run(&adj, KnlMode::Hbm, threads, false, cfg.scale);
+            let c16 = tricount_run(&adj, KnlMode::Cache16, threads, false, cfg.scale);
+            let dp = tricount_run(&adj, KnlMode::Ddr, threads, true, cfg.scale);
+            let fmt = |o: &Option<(f64, u64)>| {
+                o.map(|(s, _)| format!("{s:.4}")).unwrap_or_else(|| "-".into())
+            };
+            let triangles = ddr
+                .or(hbm)
+                .map(|(_, n)| n.to_string())
+                .unwrap_or_else(|| "-".into());
+            t.row(&[
+                kind.name().to_string(),
+                adj.nrows.to_string(),
+                (adj.nnz() / 2).to_string(),
+                threads.to_string(),
+                fmt(&ddr),
+                fmt(&hbm),
+                fmt(&c16),
+                fmt(&dp),
+                triangles,
+            ]);
+        }
+    }
+    t
+}
+
+/// Figures 12 & 13: GPU chunked algorithms vs flat modes.
+pub fn fig_gpu_chunked(cfg: &BenchConfig, cache: &mut ProblemCache, mul: Mul) -> Table {
+    let fig = if mul == Mul::AxP { "Figure 12" } else { "Figure 13" };
+    let mut t = Table::new(&[
+        "problem", "A(GB)", "HBM", "HostPin", "UVM", "Chunk8", "Chunk16", "parts(8)", "algo",
+    ])
+    .with_title(format!("{fig}: {} chunked GFLOP/s on P100", mul.name()));
+    for domain in Domain::ALL {
+        for &gb in &cfg.sizes_gb {
+            let p = cache.get(domain, gb, cfg.scale).clone();
+            let (a, b) = mul.operands(&p);
+            let c8 = run_gpu_chunk(a, b, 8.0, cfg.scale);
+            let c16 = run_gpu_chunk(a, b, 16.0, cfg.scale);
+            let fmt_c = |o: &Option<(crate::chunk::ChunkedProduct, crate::memory::SimReport)>| {
+                o.as_ref()
+                    .map(|(_, rep)| format!("{:.2}", rep.gflops))
+                    .unwrap_or_else(|| "-".into())
+            };
+            let parts = c8
+                .as_ref()
+                .map(|(cp, _)| format!("{}x{}", cp.n_parts_ac, cp.n_parts_b))
+                .unwrap_or_else(|| "-".into());
+            let algo = c8
+                .as_ref()
+                .map(|(cp, _)| {
+                    if cp.n_parts_ac == 1 && cp.n_parts_b == 1 {
+                        "whole".to_string()
+                    } else if cp.n_parts_ac >= cp.n_parts_b {
+                        "B-resident".to_string()
+                    } else {
+                        "AC-resident".to_string()
+                    }
+                })
+                .unwrap_or_else(|| "-".into());
+            t.row(&[
+                domain.name().to_string(),
+                format!("{gb}"),
+                fmt_gflops(&run_gpu(a, b, GpuMode::Hbm, cfg.scale)),
+                fmt_gflops(&run_gpu(a, b, GpuMode::Pinned, cfg.scale)),
+                fmt_gflops(&run_gpu(a, b, GpuMode::Uvm, cfg.scale)),
+                fmt_c(&c8),
+                fmt_c(&c16),
+                parts,
+                algo,
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> (BenchConfig, ProblemCache) {
+        let mut cfg = BenchConfig::quick();
+        cfg.sizes_gb = vec![0.0625];
+        cfg.graph_scale = 8;
+        (cfg, ProblemCache::default())
+    }
+
+    #[test]
+    fn fig3_4_have_rows_for_all_domains() {
+        let (cfg, mut cache) = quick();
+        let t3 = fig_knl_modes(&cfg, &mut cache, Mul::AxP);
+        let t4 = fig_knl_modes(&cfg, &mut cache, Mul::RxA);
+        assert_eq!(t3.n_rows(), 4 * 1 * 2);
+        assert_eq!(t4.n_rows(), 8);
+        assert!(t3.render().contains("Laplace3D"));
+    }
+
+    #[test]
+    fn fig6_7_render() {
+        let (cfg, mut cache) = quick();
+        let t = fig_gpu_modes(&cfg, &mut cache, Mul::AxP);
+        assert_eq!(t.n_rows(), 4);
+        assert!(!t.to_csv().is_empty());
+    }
+
+    #[test]
+    fn fig9_10_render() {
+        let (cfg, mut cache) = quick();
+        let t9 = fig9_knl_dp_axp(&cfg, &mut cache);
+        let t10 = fig10_knl_dp_chunk_rxa(&cfg, &mut cache);
+        assert_eq!(t9.n_rows(), 8);
+        assert_eq!(t10.n_rows(), 8);
+    }
+
+    #[test]
+    fn fig11_counts_triangles() {
+        let (cfg, _) = quick();
+        let t = fig11_tricount(&cfg);
+        assert_eq!(t.n_rows(), 6);
+        let csv = t.to_csv();
+        // Triangle column should hold at least one real number.
+        assert!(csv.lines().skip(1).any(|l| {
+            l.rsplit(',').next().map(|v| v.parse::<u64>().is_ok()).unwrap_or(false)
+        }));
+    }
+
+    #[test]
+    fn fig12_13_render() {
+        let (cfg, mut cache) = quick();
+        let t = fig_gpu_chunked(&cfg, &mut cache, Mul::RxA);
+        assert_eq!(t.n_rows(), 4);
+    }
+}

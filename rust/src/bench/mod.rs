@@ -1,0 +1,87 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation (`mlmem bench --exp <id>`), plus the ablations DESIGN.md
+//! lists. Tables print paper-shaped rows and archive CSVs under
+//! `reports/`.
+
+pub mod experiments;
+pub mod figures;
+pub mod tables;
+
+use crate::util::table::Table;
+use experiments::{Mul, ProblemCache};
+use figures::BenchConfig;
+use std::path::Path;
+
+/// All experiment ids the harness knows.
+pub const EXPERIMENTS: &[&str] = &[
+    "table1", "table2", "table3", "table4", "fig3", "fig4", "fig6", "fig7", "fig9", "fig10",
+    "fig11", "fig12", "fig13", "ablate-acc", "ablate-algo", "ablate-compression",
+    "ablate-overlap", "profiles",
+];
+
+/// Run one experiment by id.
+pub fn run_experiment(id: &str, cfg: &BenchConfig, cache: &mut ProblemCache) -> Option<Table> {
+    Some(match id {
+        "table1" => tables::table1(cfg, cache),
+        "table2" => tables::table2(cfg, cache),
+        "table3" => tables::table3(cfg, cache),
+        "table4" => tables::table4(cfg),
+        "fig3" => figures::fig_knl_modes(cfg, cache, Mul::AxP),
+        "fig4" => figures::fig_knl_modes(cfg, cache, Mul::RxA),
+        "fig6" => figures::fig_gpu_modes(cfg, cache, Mul::AxP),
+        "fig7" => figures::fig_gpu_modes(cfg, cache, Mul::RxA),
+        "fig9" => figures::fig9_knl_dp_axp(cfg, cache),
+        "fig10" => figures::fig10_knl_dp_chunk_rxa(cfg, cache),
+        "fig11" => figures::fig11_tricount(cfg),
+        "fig12" => figures::fig_gpu_chunked(cfg, cache, Mul::AxP),
+        "fig13" => figures::fig_gpu_chunked(cfg, cache, Mul::RxA),
+        "ablate-acc" => tables::ablate_accumulators(cfg, cache),
+        "ablate-algo" => tables::ablate_gpu_algos(cfg, cache),
+        "ablate-compression" => tables::ablate_compression(cfg, cache),
+        "ablate-overlap" => tables::ablate_overlap(cfg, cache),
+        "profiles" => tables::machine_profiles(cfg),
+        _ => return None,
+    })
+}
+
+/// Run an experiment set, printing each table and archiving CSVs.
+pub fn run_and_report(
+    ids: &[String],
+    cfg: &BenchConfig,
+    out_dir: Option<&Path>,
+) -> Result<(), String> {
+    let mut cache = ProblemCache::default();
+    let expanded: Vec<String> = if ids.iter().any(|s| s == "all") {
+        EXPERIMENTS.iter().map(|s| s.to_string()).collect()
+    } else {
+        ids.to_vec()
+    };
+    for id in &expanded {
+        let t = run_experiment(id, cfg, &mut cache)
+            .ok_or_else(|| format!("unknown experiment `{id}`; known: {EXPERIMENTS:?}"))?;
+        t.print();
+        println!();
+        if let Some(dir) = out_dir {
+            let path = dir.join(format!("{id}.csv"));
+            t.write_csv(&path).map_err(|e| format!("writing {}: {e}", path.display()))?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_experiment_ids_resolve() {
+        let mut cfg = BenchConfig::quick();
+        cfg.sizes_gb = vec![0.0625];
+        cfg.graph_scale = 7;
+        let mut cache = ProblemCache::default();
+        for id in EXPERIMENTS {
+            assert!(run_experiment(id, &cfg, &mut cache).is_some(), "{id}");
+        }
+        assert!(run_experiment("bogus", &cfg, &mut cache).is_none());
+    }
+}

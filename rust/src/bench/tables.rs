@@ -1,0 +1,343 @@
+//! Table reproductions (Tables 1–4) and the design-choice ablations
+//! DESIGN.md calls out.
+
+use super::experiments::{fmt_gflops, run_gpu, run_gpu_pin_one, run_knl, Mul, ProblemCache};
+use super::figures::BenchConfig;
+use crate::gen::graphs::GraphKind;
+use crate::gen::rhs::uniform_degree;
+use crate::gen::stencil::Domain;
+use crate::kkmem::{spgemm_sim, AccKind, CompressedMatrix, Placement, SpgemmOptions};
+use crate::memory::arch::{knl, p100, GpuMode, KnlMode};
+use crate::memory::MemSim;
+use crate::placement::Structure;
+use crate::tricount::{degree_sorted_lower, tricount_sim, TriPlacement};
+use crate::util::table::Table;
+
+/// Table 1: L2 cache-miss percentages for R×A and A×P on the four
+/// problems (KNL, DDR, 64 threads — the Kokkos-profiling setup).
+pub fn table1(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
+    let gb = cfg.sizes_gb.first().copied().unwrap_or(1.0);
+    let mut t = Table::new(&["", "Laplace3D", "BigStar2D", "Brick3D", "Elasticity"])
+        .with_title("Table 1: L2 cache miss percentages");
+    for mul in [Mul::AxP, Mul::RxA] {
+        let mut row = vec![format!("{} L2-Miss%", mul.name())];
+        for domain in Domain::ALL {
+            let p = cache.get(domain, gb, cfg.scale).clone();
+            let (a, b) = mul.operands(&p);
+            let cell = run_knl(a, b, KnlMode::Ddr, 64, cfg.scale)
+                .map(|r| format!("{:.2}", r.l2_miss_pct))
+                .unwrap_or_else(|| "-".into());
+            row.push(cell);
+        }
+        t.row(&row);
+    }
+    t
+}
+
+/// Table 2: Elasticity R and A times random RHS matrices with rising δ —
+/// DDR vs HBM GFLOP/s plus L1/L2 miss ratios.
+pub fn table2(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
+    // Keep the instance small enough that even the δ=256 RHS fits HBM
+    // (the paper's sweep holds R and A fixed while the RHS grows).
+    let gb = cfg.sizes_gb.first().copied().unwrap_or(1.0).min(0.5);
+    let p = cache.get(Domain::Elasticity, gb, cfg.scale).clone();
+    let mut t = Table::new(&["mult", "delta", "DDR GF/s", "HBM GF/s", "L1 M%", "L2 M%"])
+        .with_title("Table 2: RHS density sweep (Elasticity)");
+    for (label, lhs) in [("RxRHS", &p.r), ("AxRHS", &p.a)] {
+        for &delta in &[1usize, 4, 16, 64, 256] {
+            let rhs = uniform_degree(lhs.ncols, lhs.ncols.min(1 << 20), delta, cfg.seed + delta as u64);
+            let ddr = run_knl(lhs, &rhs, KnlMode::Ddr, 256, cfg.scale);
+            let hbm = run_knl(lhs, &rhs, KnlMode::Hbm, 256, cfg.scale);
+            let (l1, l2) = ddr
+                .as_ref()
+                .map(|r| (format!("{:.2}", r.l1_miss_pct), format!("{:.2}", r.l2_miss_pct)))
+                .unwrap_or_else(|| ("-".into(), "-".into()));
+            t.row(&[
+                label.to_string(),
+                delta.to_string(),
+                fmt_gflops(&ddr),
+                fmt_gflops(&hbm),
+                l1,
+                l2,
+            ]);
+        }
+    }
+    t
+}
+
+/// Table 3: GPU per-structure placement — each of A, B, C pinned to host
+/// memory in turn, plus all-HBM and all-pinned, with structure sizes.
+pub fn table3(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
+    let gb = cfg.sizes_gb.first().copied().unwrap_or(4.0);
+    let mut t = Table::new(&[
+        "problem", "mult", "HBM", "A_Pin", "B_Pin", "C_Pin", "HostPin", "A(GB)", "B(GB)", "C(GB)",
+    ])
+    .with_title("Table 3: GFLOP/s under per-structure placement (P100)");
+    let gbf = |bytes: u64| {
+        format!("{:.2}", bytes as f64 * cfg.scale.denominator as f64 / (1u64 << 30) as f64)
+    };
+    for domain in Domain::ALL {
+        for mul in [Mul::RxA, Mul::AxP] {
+            let p = cache.get(domain, gb, cfg.scale).clone();
+            let (a, b) = mul.operands(&p);
+            let sizes = crate::placement::ProblemSizes::measure(a, b);
+            t.row(&[
+                domain.name().to_string(),
+                mul.name().to_string(),
+                fmt_gflops(&run_gpu(a, b, GpuMode::Hbm, cfg.scale)),
+                fmt_gflops(&run_gpu_pin_one(a, b, Structure::A, cfg.scale)),
+                fmt_gflops(&run_gpu_pin_one(a, b, Structure::B, cfg.scale)),
+                fmt_gflops(&run_gpu_pin_one(a, b, Structure::C, cfg.scale)),
+                fmt_gflops(&run_gpu(a, b, GpuMode::Pinned, cfg.scale)),
+                gbf(sizes.a_bytes),
+                gbf(sizes.b_bytes),
+                gbf(sizes.c_bytes),
+            ]);
+        }
+    }
+    t
+}
+
+/// Table 4: triangle-counting L1/L2 cache miss rates (KNL, 64 threads).
+pub fn table4(cfg: &BenchConfig) -> Table {
+    let mut t = Table::new(&["graph", "L1-M%", "L2-M%"])
+        .with_title("Table 4: triangle counting cache miss rates");
+    for kind in GraphKind::ALL {
+        let adj = kind.build(cfg.graph_scale, cfg.seed);
+        let l = degree_sorted_lower(&adj);
+        let lc = CompressedMatrix::compress(&l);
+        let arch = knl(KnlMode::Ddr, 64, cfg.scale);
+        let mut sim = MemSim::new(arch.spec.clone());
+        let row = match tricount_sim(&mut sim, &l, &lc, TriPlacement::uniform(arch.default_loc)) {
+            Ok(_) => {
+                let rep = sim.finish();
+                vec![
+                    kind.name().to_string(),
+                    format!("{:.2}", rep.l1_miss_pct),
+                    format!("{:.2}", rep.l2_miss_pct),
+                ]
+            }
+            Err(_) => vec![kind.name().to_string(), "-".into(), "-".into()],
+        };
+        t.row(&row);
+    }
+    t
+}
+
+/// Ablation: hashmap vs dense vs two-level accumulator (§3.1's locality
+/// argument, measured).
+pub fn ablate_accumulators(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
+    let gb = cfg.sizes_gb.first().copied().unwrap_or(1.0);
+    let mut t = Table::new(&["problem", "mult", "hash", "dense", "two-level", "hash L1M%", "dense L1M%"])
+        .with_title("Ablation: accumulator strategy (KNL DDR 256T, GFLOP/s)");
+    for domain in Domain::ALL {
+        for mul in [Mul::AxP, Mul::RxA] {
+            let p = cache.get(domain, gb, cfg.scale).clone();
+            let (a, b) = mul.operands(&p);
+            let run = |acc: AccKind| {
+                let arch = knl(KnlMode::Ddr, 256, cfg.scale);
+                let mut sim = MemSim::new(arch.spec.clone());
+                let opts = SpgemmOptions { acc, ..Default::default() };
+                spgemm_sim(&mut sim, a, b, Placement::uniform(arch.default_loc), &opts)
+                    .ok()
+                    .map(|_| sim.finish())
+            };
+            let h = run(AccKind::Hash);
+            let d = run(AccKind::Dense);
+            let tl = run(AccKind::TwoLevel);
+            let miss = |o: &Option<crate::memory::SimReport>| {
+                o.as_ref()
+                    .map(|r| format!("{:.2}", r.l1_miss_pct))
+                    .unwrap_or_else(|| "-".into())
+            };
+            t.row(&[
+                domain.name().to_string(),
+                mul.name().to_string(),
+                fmt_gflops(&h),
+                fmt_gflops(&d),
+                fmt_gflops(&tl),
+                miss(&h),
+                miss(&d),
+            ]);
+        }
+    }
+    t
+}
+
+/// Ablation: forced Algorithm 2 vs Algorithm 3 vs the heuristic's pick —
+/// validates the copy-cost model by showing the heuristic tracks the
+/// better loop order.
+pub fn ablate_gpu_algos(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
+    use crate::chunk::partition::{csr_prefix_bytes, sum_prefixes};
+    use crate::chunk::{plan_gpu_chunks_sized, GpuChunkAlgo};
+    let gb = cfg.sizes_gb.last().copied().unwrap_or(4.0);
+    let mut t = Table::new(&["problem", "mult", "heuristic-pick", "pred-copy(MB)", "parts-ac", "parts-b"])
+        .with_title("Ablation: Algorithm 4 decisions at 8GB budget");
+    for domain in Domain::ALL {
+        for mul in [Mul::RxA, Mul::AxP] {
+            let p = cache.get(domain, gb, cfg.scale).clone();
+            let (a, b) = mul.operands(&p);
+            let sizes = crate::placement::ProblemSizes::measure(a, b);
+            let a_prefix = csr_prefix_bytes(a);
+            // C prefix estimated uniformly from total (coarse but fine for
+            // the decision ablation).
+            let per_row = sizes.c_bytes / (a.nrows as u64 + 1);
+            let c_prefix: Vec<u64> = (0..=a.nrows as u64).map(|i| i * per_row).collect();
+            let ac = sum_prefixes(&a_prefix, &c_prefix);
+            let b_prefix = csr_prefix_bytes(b);
+            let plan = plan_gpu_chunks_sized(
+                &ac,
+                &b_prefix,
+                sizes.a_bytes,
+                sizes.c_bytes,
+                cfg.scale.gb(8.0),
+            );
+            let pick = match plan.algo {
+                GpuChunkAlgo::AcResident => "Alg2 (AC-resident)",
+                GpuChunkAlgo::BResident => "Alg3 (B-resident)",
+            };
+            t.row(&[
+                domain.name().to_string(),
+                mul.name().to_string(),
+                pick.to_string(),
+                format!("{:.2}", plan.predicted_copy_bytes as f64 / 1e6),
+                plan.p_ac.len().to_string(),
+                plan.p_b.len().to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Ablation: compression ratio per domain (the §2.1 mechanism).
+pub fn ablate_compression(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
+    let gb = cfg.sizes_gb.first().copied().unwrap_or(1.0);
+    let mut t = Table::new(&["matrix", "nnz", "compressed", "ratio"])
+        .with_title("Ablation: column-set compression effectiveness");
+    for domain in Domain::ALL {
+        let p = cache.get(domain, gb, cfg.scale).clone();
+        for (name, m) in [("A", &p.a), ("P", &p.p)] {
+            let c = CompressedMatrix::compress(m);
+            t.row(&[
+                format!("{}/{}", domain.name(), name),
+                m.nnz().to_string(),
+                c.nnz().to_string(),
+                format!("{:.2}", c.ratio(m)),
+            ]);
+        }
+    }
+    t
+}
+
+/// Ablation: estimated double-buffering headroom (§4.2 future work):
+/// overlap copies with compute instead of serializing.
+pub fn ablate_overlap(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
+    let gb = cfg.sizes_gb.last().copied().unwrap_or(4.0);
+    let mut t = Table::new(&[
+        "problem", "mult", "Chunk16", "Chunk16+overlap(est)", "gain",
+    ])
+    .with_title("Ablation: double-buffering headroom estimate (P100)");
+    for domain in Domain::ALL {
+        for mul in [Mul::RxA, Mul::AxP] {
+            let p = cache.get(domain, gb, cfg.scale).clone();
+            let (a, b) = mul.operands(&p);
+            if let Some((_, rep)) = super::experiments::run_gpu_chunk(a, b, 16.0, cfg.scale) {
+                let serial = rep.seconds;
+                let kernel = serial - rep.copy_seconds;
+                let overlapped = kernel.max(rep.copy_seconds) + rep.uvm_seconds;
+                let g = |s: f64| rep.flops as f64 / s / 1e9;
+                t.row(&[
+                    domain.name().to_string(),
+                    mul.name().to_string(),
+                    format!("{:.2}", g(serial)),
+                    format!("{:.2}", g(overlapped)),
+                    format!("{:.2}x", serial / overlapped),
+                ]);
+            } else {
+                t.row(&[
+                    domain.name().to_string(),
+                    mul.name().to_string(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Sanity table: P100 profile — not in the paper, prints the machine
+/// parameters used (documentation aid).
+pub fn machine_profiles(cfg: &BenchConfig) -> Table {
+    let mut t = Table::new(&["machine", "pool", "BW (GB/s)", "latency", "capacity", "MLP"])
+        .with_title("Machine profiles (simulated)");
+    for arch in [
+        knl(KnlMode::Ddr, 64, cfg.scale),
+        p100(GpuMode::Hbm, cfg.scale),
+    ] {
+        for pool in &arch.spec.pools {
+            t.row(&[
+                arch.spec.name.clone(),
+                pool.name.to_string(),
+                format!("{:.0}", pool.bandwidth_bps / 1e9),
+                format!("{:.0} ns", pool.latency_s * 1e9),
+                crate::util::table::human_bytes(pool.capacity),
+                format!("{:.0}", pool.max_outstanding),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> (BenchConfig, ProblemCache) {
+        let mut cfg = BenchConfig::quick();
+        cfg.sizes_gb = vec![0.0625];
+        cfg.graph_scale = 8;
+        (cfg, ProblemCache::default())
+    }
+
+    #[test]
+    fn table1_has_two_rows() {
+        let (cfg, mut cache) = quick();
+        let t = table1(&cfg, &mut cache);
+        assert_eq!(t.n_rows(), 2);
+        assert!(t.render().contains("L2-Miss%"));
+    }
+
+    #[test]
+    fn table2_sweeps_density() {
+        let (cfg, mut cache) = quick();
+        let t = table2(&cfg, &mut cache);
+        assert_eq!(t.n_rows(), 10);
+    }
+
+    #[test]
+    fn table3_has_all_placements() {
+        let (cfg, mut cache) = quick();
+        let t = table3(&cfg, &mut cache);
+        assert_eq!(t.n_rows(), 8);
+        assert!(t.render().contains("B_Pin"));
+    }
+
+    #[test]
+    fn table4_runs() {
+        let (cfg, _) = quick();
+        let t = table4(&cfg);
+        assert_eq!(t.n_rows(), 3);
+    }
+
+    #[test]
+    fn ablations_run() {
+        let (cfg, mut cache) = quick();
+        assert_eq!(ablate_accumulators(&cfg, &mut cache).n_rows(), 8);
+        assert_eq!(ablate_gpu_algos(&cfg, &mut cache).n_rows(), 8);
+        assert_eq!(ablate_compression(&cfg, &mut cache).n_rows(), 8);
+        assert_eq!(ablate_overlap(&cfg, &mut cache).n_rows(), 8);
+        assert_eq!(machine_profiles(&cfg).n_rows(), 4);
+    }
+}

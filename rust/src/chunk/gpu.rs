@@ -1,0 +1,381 @@
+//! Algorithms 2 & 3 — 2D chunking for GPUs (§3.3.1): both A/C and B are
+//! partitioned row-wise; either the A/C block stays resident in fast
+//! memory while B chunks stream (Algorithm 2), or a B chunk stays
+//! resident while A/C blocks stream (Algorithm 3). Loop order and
+//! partition sizes come from the Algorithm 4 heuristic.
+
+use super::heuristic::{plan_gpu_chunks_sized, GpuChunkAlgo, GpuChunkPlan};
+use super::knl::ChunkedProduct;
+use super::partition::{csr_prefix_bytes, range_bytes, sum_prefixes};
+use crate::kkmem::mempool::PooledAcc;
+use crate::kkmem::numeric::{emit_row, fused_numeric_row, Layout};
+use crate::kkmem::spgemm::{alloc_csr_regions, alloc_csr_regions_sized};
+use crate::kkmem::symbolic::{max_row_upper_bound, symbolic};
+use crate::kkmem::{CompressedMatrix, SpgemmOptions};
+use crate::memory::alloc::{AllocError, Location};
+use crate::memory::machine::{MemSim, MemTracer, RegionId};
+use crate::memory::pool::{FAST, SLOW};
+use crate::sparse::csr::{Csr, Idx};
+
+type CsrRegions = (RegionId, RegionId, RegionId);
+
+/// Vertically stack row-blocks into one CSR.
+fn vstack(blocks: &[Csr], ncols: usize) -> Csr {
+    let nrows: usize = blocks.iter().map(|b| b.nrows).sum();
+    let nnz: usize = blocks.iter().map(|b| b.nnz()).sum();
+    let mut rowmap = Vec::with_capacity(nrows + 1);
+    rowmap.push(0usize);
+    let mut entries = Vec::with_capacity(nnz);
+    let mut values = Vec::with_capacity(nnz);
+    for b in blocks {
+        assert_eq!(b.ncols, ncols);
+        let base = entries.len();
+        entries.extend_from_slice(&b.entries);
+        values.extend_from_slice(&b.values);
+        for i in 0..b.nrows {
+            rowmap.push(base + b.rowmap[i + 1]);
+        }
+    }
+    Csr::new(nrows, ncols, rowmap, entries, values)
+}
+
+/// C-row byte prefix from symbolic sizes.
+fn c_prefix_from_sizes(sizes: &[usize]) -> Vec<u64> {
+    let mut p = vec![0u64; sizes.len() + 1];
+    for (i, &s) in sizes.iter().enumerate() {
+        p[i + 1] = p[i] + 8 + 12 * s as u64;
+    }
+    p
+}
+
+struct Staged {
+    regions: CsrRegions,
+    csr: Csr,
+}
+
+/// Stage a row slice of `m` into the fast pool, charging the bulk copy.
+fn stage_slice(
+    sim: &mut MemSim,
+    name: &str,
+    m: &Csr,
+    src: CsrRegions,
+    lo: usize,
+    hi: usize,
+) -> Result<Staged, AllocError> {
+    let slice = m.slice_rows(lo, hi);
+    let regions = alloc_csr_regions(sim, name, &slice, Location::Pool(FAST))?;
+    sim.bulk_copy(src.0, regions.0, (slice.nrows as u64 + 1) * 8);
+    if slice.nnz() > 0 {
+        sim.bulk_copy(src.1, regions.1, slice.nnz() as u64 * 4);
+        sim.bulk_copy(src.2, regions.2, slice.nnz() as u64 * 8);
+    }
+    Ok(Staged { regions, csr: slice })
+}
+
+fn free_regions(sim: &mut MemSim, r: CsrRegions) {
+    sim.free(r.0);
+    sim.free(r.1);
+    sim.free(r.2);
+}
+
+/// Run the Algorithm 4 planner for this multiplication.
+pub fn plan_for(sim: &MemSim, a: &Csr, b: &Csr, fast_budget: u64, acc_bytes: u64) -> (GpuChunkPlan, Vec<usize>) {
+    let b_comp = CompressedMatrix::compress(b);
+    let sizes = symbolic(a, &b_comp);
+    let a_prefix = csr_prefix_bytes(a);
+    let c_prefix = c_prefix_from_sizes(&sizes);
+    let ac_prefix = sum_prefixes(&a_prefix, &c_prefix);
+    let b_prefix = csr_prefix_bytes(b);
+    let usable = sim.spec.pools[FAST.0]
+        .usable()
+        .min(fast_budget)
+        .saturating_sub(acc_bytes)
+        .max(1);
+    let plan = plan_gpu_chunks_sized(
+        &ac_prefix,
+        &b_prefix,
+        a_prefix[a.nrows],
+        c_prefix[a.nrows],
+        usable,
+    );
+    (plan, sizes)
+}
+
+/// Simulated GPU chunked SpGEMM: A, B, C live in host pinned memory
+/// (slow); chunks are staged into HBM (fast) per the heuristic's plan.
+pub fn gpu_chunked_sim(
+    sim: &mut MemSim,
+    a: &Csr,
+    b: &Csr,
+    fast_budget: u64,
+    opts: &SpgemmOptions,
+) -> Result<ChunkedProduct, AllocError> {
+    assert_eq!(a.ncols, b.nrows, "spgemm shape mismatch");
+    sim.set_compute_efficiency(crate::memory::machine::lane_efficiency(
+        a.avg_degree(),
+        b.avg_degree(),
+    ));
+    let row_ub = max_row_upper_bound(a, b);
+    let acc_wrap = crate::kkmem::spgemm::acc_trace_wrap(sim);
+    let acc_bytes = crate::kkmem::spgemm::acc_region_bytes(
+        opts.acc.footprint_bytes(row_ub, b.ncols),
+        acc_wrap,
+    );
+    let (plan, c_sizes) = plan_for(sim, a, b, fast_budget, acc_bytes);
+    let c_prefix = c_prefix_from_sizes(&c_sizes);
+
+    // Host (slow) residents.
+    let slow = Location::Pool(SLOW);
+    let a_reg = alloc_csr_regions(sim, "A", a, slow)?;
+    let b_reg = alloc_csr_regions(sim, "B", b, slow)?;
+    let c_nnz: usize = c_sizes.iter().sum();
+    let c_reg = alloc_csr_regions_sized(sim, "C", a.nrows, c_nnz, slow)?;
+    // Device-global accumulator (second level).
+    let acc_region = sim.alloc("accumulator", acc_bytes, Location::Pool(FAST))?;
+    let mut acc = PooledAcc::build_wrapped(
+        opts.acc,
+        row_ub,
+        b.ncols,
+        opts.tl_l1_entries,
+        acc_region,
+        acc_wrap,
+    );
+
+    let mut mults = 0u64;
+    let mut copied_bytes = 0u64;
+    let mut out: Vec<(Idx, f64)> = Vec::new();
+
+    let run_block = |sim: &mut MemSim,
+                     acc: &mut PooledAcc,
+                     out: &mut Vec<(Idx, f64)>,
+                     fa: &Staged,
+                     fb: &Staged,
+                     fc_reg: CsrRegions,
+                     range: (usize, usize),
+                     prev: Option<&Csr>,
+                     mults: &mut u64|
+     -> Csr {
+        let lay = Layout {
+            a_rowmap: fa.regions.0,
+            a_entries: fa.regions.1,
+            a_values: fa.regions.2,
+            b_rowmap: fb.regions.0,
+            b_entries: fb.regions.1,
+            b_values: fb.regions.2,
+            c_rowmap: fc_reg.0,
+            c_entries: fc_reg.1,
+            c_values: fc_reg.2,
+            acc: 0,
+            // Previous partial is read from the same fast block (in-place
+            // update model).
+            c_prev_rowmap: fc_reg.0,
+            c_prev_entries: fc_reg.1,
+            c_prev_values: fc_reg.2,
+        };
+        let nrows = fa.csr.nrows;
+        let mut rowmap = vec![0usize; nrows + 1];
+        let mut entries: Vec<Idx> = Vec::new();
+        let mut values: Vec<f64> = Vec::new();
+        for li in 0..nrows {
+            *mults +=
+                fused_numeric_row(sim, &lay, &fa.csr, &fb.csr, range, prev, li, acc, out);
+            sim.write(lay.c_rowmap, (li as u64 + 1) * 8, 8);
+            let pos = entries.len();
+            entries.resize(pos + out.len(), 0);
+            values.resize(pos + out.len(), 0.0);
+            emit_row(sim, &lay, pos, out, &mut entries, &mut values);
+            rowmap[li + 1] = entries.len();
+        }
+        Csr::new(nrows, b.ncols, rowmap, entries, values)
+    };
+
+    let mut block_results: Vec<Csr> = Vec::with_capacity(plan.p_ac.len());
+    match plan.algo {
+        GpuChunkAlgo::AcResident => {
+            // Algorithm 2: outer AC, inner B.
+            for (ai, &(alo, ahi)) in plan.p_ac.iter().enumerate() {
+                let fa = stage_slice(sim, &format!("FA.{ai}"), a, a_reg, alo, ahi)?;
+                copied_bytes += fa.csr.size_bytes();
+                let c_block_bytes = range_bytes(&c_prefix, alo, ahi) + 8;
+                let c_block_nnz: usize = c_sizes[alo..ahi].iter().sum();
+                let fc = alloc_csr_regions_sized(
+                    sim,
+                    &format!("FC.{ai}"),
+                    ahi - alo,
+                    c_block_nnz,
+                    Location::Pool(FAST),
+                )?;
+                // Only C's row pointers come in (C starts empty).
+                sim.bulk_copy(c_reg.0, fc.0, (ahi - alo + 1) as u64 * 8);
+                copied_bytes += (ahi - alo + 1) as u64 * 8;
+                let mut partial: Option<Csr> = None;
+                for (bi, &(blo, bhi)) in plan.p_b.iter().enumerate() {
+                    let fb = stage_slice(sim, &format!("FB.{ai}.{bi}"), b, b_reg, blo, bhi)?;
+                    copied_bytes += fb.csr.size_bytes();
+                    let new_partial = run_block(
+                        sim,
+                        &mut acc,
+                        &mut out,
+                        &fa,
+                        &fb,
+                        fc,
+                        (blo, bhi),
+                        partial.as_ref(),
+                        &mut mults,
+                    );
+                    partial = Some(new_partial);
+                    free_regions(sim, fb.regions);
+                }
+                let done = partial.unwrap_or_else(|| Csr::empty(ahi - alo, b.ncols));
+                // copy2Slow(FC, C): finished block streams back to host.
+                sim.bulk_copy(fc.1, c_reg.1, done.nnz() as u64 * 4);
+                sim.bulk_copy(fc.2, c_reg.2, done.nnz() as u64 * 8);
+                copied_bytes += done.nnz() as u64 * 12;
+                block_results.push(done);
+                let _ = c_block_bytes;
+                free_regions(sim, fa.regions);
+                free_regions(sim, fc);
+            }
+        }
+        GpuChunkAlgo::BResident => {
+            // Algorithm 3: outer B, inner AC.
+            let mut partials: Vec<Option<Csr>> = vec![None; plan.p_ac.len()];
+            for (bi, &(blo, bhi)) in plan.p_b.iter().enumerate() {
+                let fb = stage_slice(sim, &format!("FB.{bi}"), b, b_reg, blo, bhi)?;
+                copied_bytes += fb.csr.size_bytes();
+                for (ai, &(alo, ahi)) in plan.p_ac.iter().enumerate() {
+                    let fa = stage_slice(sim, &format!("FA.{bi}.{ai}"), a, a_reg, alo, ahi)?;
+                    copied_bytes += fa.csr.size_bytes();
+                    let c_block_nnz: usize = c_sizes[alo..ahi].iter().sum();
+                    let fc = alloc_csr_regions_sized(
+                        sim,
+                        &format!("FC.{bi}.{ai}"),
+                        ahi - alo,
+                        c_block_nnz,
+                        Location::Pool(FAST),
+                    )?;
+                    // Bring in the previous partial (row pointers only on
+                    // the first pass — C is empty then).
+                    match &partials[ai] {
+                        Some(prev) => {
+                            sim.bulk_copy(c_reg.0, fc.0, (ahi - alo + 1) as u64 * 8);
+                            sim.bulk_copy(c_reg.1, fc.1, prev.nnz() as u64 * 4);
+                            sim.bulk_copy(c_reg.2, fc.2, prev.nnz() as u64 * 8);
+                            copied_bytes += prev.size_bytes();
+                        }
+                        None => {
+                            sim.bulk_copy(c_reg.0, fc.0, (ahi - alo + 1) as u64 * 8);
+                            copied_bytes += (ahi - alo + 1) as u64 * 8;
+                        }
+                    }
+                    let new_partial = run_block(
+                        sim,
+                        &mut acc,
+                        &mut out,
+                        &fa,
+                        &fb,
+                        fc,
+                        (blo, bhi),
+                        partials[ai].as_ref(),
+                        &mut mults,
+                    );
+                    // Partial streams back out every pass.
+                    sim.bulk_copy(fc.1, c_reg.1, new_partial.nnz() as u64 * 4);
+                    sim.bulk_copy(fc.2, c_reg.2, new_partial.nnz() as u64 * 8);
+                    copied_bytes += new_partial.nnz() as u64 * 12;
+                    partials[ai] = Some(new_partial);
+                    free_regions(sim, fa.regions);
+                    free_regions(sim, fc);
+                }
+                free_regions(sim, fb.regions);
+            }
+            for (ai, p) in partials.into_iter().enumerate() {
+                let (alo, ahi) = plan.p_ac[ai];
+                block_results.push(p.unwrap_or_else(|| Csr::empty(ahi - alo, b.ncols)));
+            }
+        }
+    }
+    let c = vstack(&block_results, b.ncols);
+    Ok(ChunkedProduct {
+        c,
+        mults,
+        n_parts_b: plan.p_b.len(),
+        n_parts_ac: plan.p_ac.len(),
+        copied_bytes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::scale::ScaleFactor;
+    use crate::memory::arch::{p100, GpuMode};
+    use crate::sparse::ops::spgemm_reference;
+
+    fn gpu_sim() -> MemSim {
+        MemSim::new(p100(GpuMode::Pinned, ScaleFactor::default()).spec)
+    }
+
+    #[test]
+    fn vstack_roundtrip() {
+        let m = crate::gen::rhs::random_csr(10, 6, 0, 4, 1);
+        let blocks = vec![m.slice_rows(0, 3), m.slice_rows(3, 7), m.slice_rows(7, 10)];
+        assert!(vstack(&blocks, 6).approx_eq(&m, 0.0));
+    }
+
+    #[test]
+    fn whole_fit_single_parts() {
+        let a = crate::gen::rhs::random_csr(30, 20, 1, 4, 2);
+        let b = crate::gen::rhs::random_csr(20, 30, 1, 4, 3);
+        let mut sim = gpu_sim();
+        let p = gpu_chunked_sim(&mut sim, &a, &b, 1 << 24, &SpgemmOptions::default()).unwrap();
+        assert_eq!((p.n_parts_ac, p.n_parts_b), (1, 1));
+        assert!(p.c.approx_eq(&spgemm_reference(&a, &b), 1e-12));
+        // Whole problem copied in, result copied out.
+        assert!(p.copied_bytes >= a.size_bytes() + b.size_bytes());
+    }
+
+    #[test]
+    fn forced_2d_chunking_matches_reference() {
+        let a = crate::gen::rhs::random_csr(60, 50, 1, 6, 4);
+        let b = crate::gen::rhs::random_csr(50, 70, 1, 6, 5);
+        let expect = spgemm_reference(&a, &b);
+        // Budget forces both dimensions to split.
+        let budget = (a.size_bytes() + b.size_bytes()) / 4;
+        let mut sim = gpu_sim();
+        let p = gpu_chunked_sim(&mut sim, &a, &b, budget, &SpgemmOptions::default()).unwrap();
+        assert!(
+            p.n_parts_ac > 1 || p.n_parts_b > 1,
+            "expected chunking at budget {budget}"
+        );
+        assert!(p.c.approx_eq(&expect, 1e-12));
+    }
+
+    #[test]
+    fn both_algorithms_give_same_product() {
+        // Force each loop order by making the other side trivially small.
+        let a = crate::gen::rhs::random_csr(40, 30, 1, 5, 6);
+        let b = crate::gen::rhs::random_csr(30, 40, 1, 5, 7);
+        let expect = spgemm_reference(&a, &b);
+        for budget in [(a.size_bytes() + b.size_bytes()) / 3, b.size_bytes() * 2] {
+            let mut sim = gpu_sim();
+            let p =
+                gpu_chunked_sim(&mut sim, &a, &b, budget, &SpgemmOptions::default()).unwrap();
+            assert!(p.c.approx_eq(&expect, 1e-12), "budget {budget}");
+        }
+    }
+
+    #[test]
+    fn stencil_gpu_chunked_correct() {
+        let g = crate::gen::stencil::Grid::new(5, 5, 5);
+        let a = crate::gen::stencil::brick3d(g);
+        let expect = spgemm_reference(&a, &a);
+        let mut sim = gpu_sim();
+        let p =
+            gpu_chunked_sim(&mut sim, &a, &a, a.size_bytes(), &SpgemmOptions::default()).unwrap();
+        assert!(p.c.approx_eq(&expect, 1e-12));
+        let rep = sim.finish();
+        assert!(rep.copy_seconds > 0.0);
+        assert!(rep.gflops > 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Chunking algorithms for problems larger than the fast memory
+//! (§3.2.2, §3.3.1): row-wise partitioning, the KNL B-chunking
+//! (Algorithm 1), the GPU 2D chunking (Algorithms 2–3), and the
+//! copy-cost decision heuristic (Algorithm 4).
+
+pub mod gpu;
+pub mod heuristic;
+pub mod knl;
+pub mod partition;
+
+pub use gpu::gpu_chunked_sim;
+pub use heuristic::{plan_gpu_chunks, plan_gpu_chunks_sized, GpuChunkAlgo, GpuChunkPlan};
+pub use knl::{knl_chunked_sim, ChunkedProduct};

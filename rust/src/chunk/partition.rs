@@ -1,0 +1,164 @@
+//! Row-wise partitioning by byte budget (the `BinarySearch(B, pSize)` of
+//! Algorithms 1–4): split a CSR's rows into contiguous ranges of roughly
+//! equal bytes, each fitting a fast-memory budget.
+
+use crate::sparse::Csr;
+
+/// Prefix byte sizes of a CSR's rows: `prefix[i]` = bytes of rows `< i`
+/// (each row costs 8 B of rowmap + 12 B per nonzero; the `+8` terminal
+/// rowmap entry is charged to the slice holder).
+pub fn csr_prefix_bytes(m: &Csr) -> Vec<u64> {
+    let mut prefix = vec![0u64; m.nrows + 1];
+    for i in 0..m.nrows {
+        prefix[i + 1] = prefix[i] + 8 + 12 * m.row_len(i) as u64;
+    }
+    prefix
+}
+
+/// Element-wise sum of two row-aligned prefixes (partitioning A and C
+/// together in the GPU algorithms).
+pub fn sum_prefixes(a: &[u64], b: &[u64]) -> Vec<u64> {
+    assert_eq!(a.len(), b.len(), "prefix length mismatch");
+    a.iter().zip(b).map(|(&x, &y)| x + y).collect()
+}
+
+/// Bytes of rows `[lo, hi)` under `prefix`.
+#[inline]
+pub fn range_bytes(prefix: &[u64], lo: usize, hi: usize) -> u64 {
+    prefix[hi] - prefix[lo]
+}
+
+/// Partition rows into contiguous ranges each of at most `max_bytes`,
+/// balanced like the paper: `np = ceil(total/max)` parts of target
+/// `total/np` bytes, with boundaries found by binary search on the
+/// prefix; the `max_bytes` cap is enforced strictly. A single row larger
+/// than `max_bytes` gets its own (oversized) part — callers treat that as
+/// "does not fit".
+pub fn partition_balanced(prefix: &[u64], max_bytes: u64) -> Vec<(usize, usize)> {
+    let nrows = prefix.len() - 1;
+    let total = prefix[nrows];
+    if nrows == 0 || total == 0 {
+        return vec![(0, nrows)];
+    }
+    assert!(max_bytes > 0, "zero byte budget");
+    let np = total.div_ceil(max_bytes).max(1);
+    let target = total / np; // the paper's pSize
+    let mut parts = Vec::with_capacity(np as usize);
+    let mut lo = 0usize;
+    while lo < nrows {
+        // Furthest boundary within the hard cap.
+        let hi_cap = prefix.partition_point(|&p| p <= prefix[lo] + max_bytes) - 1;
+        // Balanced boundary near the target size.
+        let hi_target = prefix.partition_point(|&p| p <= prefix[lo] + target) - 1;
+        // Prefer the balanced cut, never exceed the cap, always advance.
+        let hi = hi_target.min(hi_cap).max(lo + 1).min(nrows);
+        parts.push((lo, hi));
+        lo = hi;
+    }
+    parts
+}
+
+/// Validate that ranges tile `[0, nrows)` exactly.
+pub fn is_partition(parts: &[(usize, usize)], nrows: usize) -> bool {
+    if nrows == 0 {
+        return true;
+    }
+    let mut expect = 0usize;
+    for &(lo, hi) in parts {
+        if lo != expect || hi <= lo {
+            return false;
+        }
+        expect = hi;
+    }
+    expect == nrows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(degrees: &[usize]) -> Csr {
+        let mut rowmap = vec![0usize];
+        let mut entries = Vec::new();
+        for &d in degrees {
+            for j in 0..d {
+                entries.push(j as u32);
+            }
+            rowmap.push(entries.len());
+        }
+        let n = entries.len();
+        Csr::new(degrees.len(), degrees.iter().max().map(|&d| d.max(1)).unwrap_or(1), rowmap, entries, vec![1.0; n])
+    }
+
+    #[test]
+    fn prefix_matches_slice_bytes() {
+        let mat = m(&[3, 0, 5, 2]);
+        let p = csr_prefix_bytes(&mat);
+        for lo in 0..mat.nrows {
+            for hi in lo..=mat.nrows {
+                let slice = mat.slice_rows(lo, hi);
+                // slice bytes = range + 8 (terminal rowmap entry).
+                assert_eq!(slice.size_bytes(), range_bytes(&p, lo, hi) + 8);
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_partition_tiles_and_fits() {
+        let mat = m(&[4, 4, 4, 4, 4, 4, 4, 4]);
+        let p = csr_prefix_bytes(&mat);
+        let total = p[8];
+        let parts = partition_balanced(&p, total / 3 + 1);
+        assert!(is_partition(&parts, 8));
+        assert!(parts.len() >= 3);
+        for &(lo, hi) in &parts {
+            assert!(range_bytes(&p, lo, hi) <= total / 3 + 1);
+        }
+    }
+
+    #[test]
+    fn whole_matrix_when_budget_large() {
+        let mat = m(&[2, 2, 2]);
+        let p = csr_prefix_bytes(&mat);
+        let parts = partition_balanced(&p, 1 << 30);
+        assert_eq!(parts, vec![(0, 3)]);
+    }
+
+    #[test]
+    fn skewed_rows_respected() {
+        // One huge row among small ones.
+        let mat = m(&[1, 1, 100, 1, 1]);
+        let p = csr_prefix_bytes(&mat);
+        let budget = 8 + 12 * 100; // exactly the big row
+        let parts = partition_balanced(&p, budget as u64);
+        assert!(is_partition(&parts, 5));
+        for &(lo, hi) in &parts {
+            if hi - lo > 1 {
+                assert!(range_bytes(&p, lo, hi) <= budget as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_single_row_isolated() {
+        let mat = m(&[1, 50, 1]);
+        let p = csr_prefix_bytes(&mat);
+        let parts = partition_balanced(&p, 64); // smaller than the big row
+        assert!(is_partition(&parts, 3));
+        // The big row sits alone in some part.
+        assert!(parts.iter().any(|&(lo, hi)| (lo, hi) == (1, 2)));
+    }
+
+    #[test]
+    fn sum_prefixes_adds() {
+        assert_eq!(sum_prefixes(&[0, 2, 5], &[0, 1, 1]), vec![0, 3, 6]);
+    }
+
+    #[test]
+    fn empty_matrix_single_part() {
+        let mat = Csr::empty(0, 1);
+        let p = csr_prefix_bytes(&mat);
+        let parts = partition_balanced(&p, 100);
+        assert!(is_partition(&parts, 0));
+    }
+}

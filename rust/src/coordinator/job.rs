@@ -1,0 +1,112 @@
+//! Job specifications and results for the SpGEMM service: a job names a
+//! multiplication (or triangle count), a machine profile, and a policy;
+//! the result carries the product summary plus the simulated report.
+
+use crate::memory::arch::Arch;
+use crate::memory::SimReport;
+use crate::sparse::Csr;
+use std::sync::Arc;
+
+/// What to execute.
+#[derive(Clone)]
+pub enum JobKind {
+    /// `C = A × B`.
+    Spgemm { a: Arc<Csr>, b: Arc<Csr> },
+    /// Triangle count on an undirected adjacency matrix.
+    TriCount { adj: Arc<Csr> },
+}
+
+/// How the planner is allowed to execute a job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Place everything per the machine's default location.
+    Flat,
+    /// Selective data placement when the irregular structure fits fast
+    /// memory, falling back to Flat.
+    DataPlacement,
+    /// Chunk through fast memory with the given staging budget.
+    Chunked { fast_budget: u64 },
+    /// Planner chooses: Flat if all fits fast, DP if B fits, else chunked.
+    Auto,
+}
+
+/// A submitted job.
+#[derive(Clone)]
+pub struct Job {
+    pub id: u64,
+    pub kind: JobKind,
+    pub arch: Arc<Arch>,
+    pub policy: Policy,
+}
+
+/// What the planner decided to do (recorded for observability).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Decision {
+    FlatDefault,
+    FlatFast,
+    DataPlacement,
+    ChunkedKnl { parts: usize },
+    ChunkedGpu { parts_ac: usize, parts_b: usize },
+}
+
+impl Decision {
+    pub fn name(&self) -> String {
+        match self {
+            Decision::FlatDefault => "flat-default".into(),
+            Decision::FlatFast => "flat-fast".into(),
+            Decision::DataPlacement => "data-placement".into(),
+            Decision::ChunkedKnl { parts } => format!("chunked-knl({parts})"),
+            Decision::ChunkedGpu { parts_ac, parts_b } => {
+                format!("chunked-gpu({parts_ac}x{parts_b})")
+            }
+        }
+    }
+}
+
+/// Result of a completed job.
+pub struct JobResult {
+    pub id: u64,
+    pub decision: Decision,
+    pub report: SimReport,
+    /// Product summary (the matrix itself is dropped unless small).
+    pub c_nrows: usize,
+    pub c_nnz: usize,
+    /// Triangle count for TriCount jobs.
+    pub triangles: Option<u64>,
+}
+
+/// Error from planning or execution.
+#[derive(Debug)]
+pub struct JobError {
+    pub id: u64,
+    pub message: String,
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job {}: {}", self.id, self.message)
+    }
+}
+
+impl std::error::Error for JobError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decision_names() {
+        assert_eq!(Decision::FlatDefault.name(), "flat-default");
+        assert_eq!(Decision::ChunkedKnl { parts: 3 }.name(), "chunked-knl(3)");
+        assert_eq!(
+            Decision::ChunkedGpu { parts_ac: 2, parts_b: 4 }.name(),
+            "chunked-gpu(2x4)"
+        );
+    }
+
+    #[test]
+    fn job_error_display() {
+        let e = JobError { id: 7, message: "does not fit".into() };
+        assert_eq!(e.to_string(), "job 7: does not fit");
+    }
+}

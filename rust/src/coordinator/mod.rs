@@ -1,0 +1,11 @@
+//! L3 coordination: job specifications, the placement/chunking planner
+//! (the paper's decision procedure as a runtime policy), and a
+//! backpressured multi-worker service front-end.
+
+pub mod job;
+pub mod planner;
+pub mod service;
+
+pub use job::{Decision, Job, JobError, JobKind, JobResult, Policy};
+pub use planner::{execute, PlannerOptions};
+pub use service::{JobHandle, Metrics, SpgemmService};

@@ -1,0 +1,265 @@
+//! The placement/chunking planner: encodes the paper's decision structure
+//! as a runtime policy. Given a job and its machine, choose between flat
+//! placement, selective data placement, and the chunked algorithms —
+//! exactly the decision a production KNL/GPU deployment of KKMEM makes
+//! per multiplication.
+
+use super::job::{Decision, Job, JobError, JobKind, JobResult, Policy};
+use crate::chunk::{gpu_chunked_sim, knl_chunked_sim};
+use crate::kkmem::{spgemm_sim, Placement, SpgemmOptions};
+use crate::memory::alloc::Location;
+use crate::memory::arch::MachineKind;
+use crate::memory::pool::FAST;
+use crate::memory::MemSim;
+use crate::placement::{dp_placement, ProblemSizes};
+use crate::tricount::{degree_sorted_lower, tricount_sim, TriPlacement};
+use crate::kkmem::CompressedMatrix;
+
+/// Options the executor applies to every job.
+#[derive(Clone, Copy, Debug)]
+pub struct PlannerOptions {
+    pub spgemm: SpgemmOptions,
+    /// Staging budget for Auto-mode chunking (defaults to the fast pool's
+    /// usable capacity at execution time).
+    pub auto_chunk_budget: Option<u64>,
+}
+
+impl Default for PlannerOptions {
+    fn default() -> Self {
+        Self { spgemm: SpgemmOptions::default(), auto_chunk_budget: None }
+    }
+}
+
+/// Execute one job to completion (plan + run under the simulator).
+pub fn execute(job: &Job, opts: &PlannerOptions) -> Result<JobResult, JobError> {
+    match &job.kind {
+        JobKind::Spgemm { a, b } => execute_spgemm(job, a, b, opts),
+        JobKind::TriCount { adj } => execute_tricount(job, adj, opts),
+    }
+}
+
+fn err(job: &Job, m: impl std::fmt::Display) -> JobError {
+    JobError { id: job.id, message: m.to_string() }
+}
+
+fn execute_spgemm(
+    job: &Job,
+    a: &crate::sparse::Csr,
+    b: &crate::sparse::Csr,
+    opts: &PlannerOptions,
+) -> Result<JobResult, JobError> {
+    let arch = &job.arch;
+    let fast_usable = arch.spec.pools[FAST.0].usable();
+    let sizes = ProblemSizes::measure(a, b);
+    let acc_slack = 1 << 16; // accumulator + staging slack
+    let (decision, placement_or_chunk): (Decision, Option<Placement>) = match job.policy {
+        Policy::Flat => (Decision::FlatDefault, Some(Placement::uniform(arch.default_loc))),
+        Policy::DataPlacement => match dp_placement(&sizes, fast_usable.saturating_sub(acc_slack))
+        {
+            Some(p) => (Decision::DataPlacement, Some(p)),
+            None => (Decision::FlatDefault, Some(Placement::uniform(arch.default_loc))),
+        },
+        Policy::Chunked { .. } => (placeholder_chunk_decision(arch), None),
+        Policy::Auto => {
+            if sizes.total() + acc_slack <= fast_usable {
+                (Decision::FlatFast, Some(Placement::uniform(Location::Pool(FAST))))
+            } else if let Some(p) =
+                dp_placement(&sizes, fast_usable.saturating_sub(acc_slack))
+            {
+                (Decision::DataPlacement, Some(p))
+            } else {
+                (placeholder_chunk_decision(arch), None)
+            }
+        }
+    };
+
+    let mut sim = MemSim::new(arch.spec.clone());
+    match placement_or_chunk {
+        Some(placement) => {
+            let prod = spgemm_sim(&mut sim, a, b, placement, &opts.spgemm)
+                .map_err(|e| err(job, e))?;
+            let report = sim.finish();
+            Ok(JobResult {
+                id: job.id,
+                decision,
+                report,
+                c_nrows: prod.c.nrows,
+                c_nnz: prod.c.nnz(),
+                triangles: None,
+            })
+        }
+        None => {
+            let budget = match job.policy {
+                Policy::Chunked { fast_budget } => fast_budget,
+                _ => opts.auto_chunk_budget.unwrap_or(fast_usable),
+            };
+            match arch.kind {
+                MachineKind::Knl => {
+                    let p = knl_chunked_sim(&mut sim, a, b, budget, &opts.spgemm)
+                        .map_err(|e| err(job, e))?;
+                    let report = sim.finish();
+                    Ok(JobResult {
+                        id: job.id,
+                        decision: Decision::ChunkedKnl { parts: p.n_parts_b },
+                        report,
+                        c_nrows: p.c.nrows,
+                        c_nnz: p.c.nnz(),
+                        triangles: None,
+                    })
+                }
+                MachineKind::Gpu => {
+                    let p = gpu_chunked_sim(&mut sim, a, b, budget, &opts.spgemm)
+                        .map_err(|e| err(job, e))?;
+                    let report = sim.finish();
+                    Ok(JobResult {
+                        id: job.id,
+                        decision: Decision::ChunkedGpu {
+                            parts_ac: p.n_parts_ac,
+                            parts_b: p.n_parts_b,
+                        },
+                        report,
+                        c_nrows: p.c.nrows,
+                        c_nnz: p.c.nnz(),
+                        triangles: None,
+                    })
+                }
+            }
+        }
+    }
+}
+
+fn placeholder_chunk_decision(arch: &crate::memory::arch::Arch) -> Decision {
+    match arch.kind {
+        MachineKind::Knl => Decision::ChunkedKnl { parts: 0 },
+        MachineKind::Gpu => Decision::ChunkedGpu { parts_ac: 0, parts_b: 0 },
+    }
+}
+
+fn execute_tricount(
+    job: &Job,
+    adj: &crate::sparse::Csr,
+    _opts: &PlannerOptions,
+) -> Result<JobResult, JobError> {
+    let arch = &job.arch;
+    let l = degree_sorted_lower(adj);
+    let lc = CompressedMatrix::compress(&l);
+    let fast_usable = arch.spec.pools[FAST.0].usable();
+    let mut sim = MemSim::new(arch.spec.clone());
+    // DP for tricount: compressed L goes fast when it fits (§4.1.2).
+    let placement = match job.policy {
+        Policy::DataPlacement | Policy::Auto
+            if lc.size_bytes() + 4096 <= fast_usable =>
+        {
+            TriPlacement {
+                l: arch.default_loc,
+                lc: Location::Pool(FAST),
+                mask: arch.default_loc,
+            }
+        }
+        _ => TriPlacement::uniform(arch.default_loc),
+    };
+    let decision = if placement.lc == Location::Pool(FAST)
+        && placement.l != Location::Pool(FAST)
+    {
+        Decision::DataPlacement
+    } else {
+        Decision::FlatDefault
+    };
+    let (triangles, _ops) =
+        tricount_sim(&mut sim, &l, &lc, placement).map_err(|e| err(job, e))?;
+    let report = sim.finish();
+    Ok(JobResult {
+        id: job.id,
+        decision,
+        report,
+        c_nrows: 0,
+        c_nnz: 0,
+        triangles: Some(triangles),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::scale::ScaleFactor;
+    use crate::memory::arch::{knl, p100, GpuMode, KnlMode};
+    use std::sync::Arc;
+
+    fn spgemm_job(id: u64, arch: crate::memory::arch::Arch, policy: Policy, n: usize) -> Job {
+        let a = Arc::new(crate::gen::rhs::random_csr(n, n, 1, 6, id));
+        let b = Arc::new(crate::gen::rhs::random_csr(n, n, 1, 6, id + 100));
+        Job { id, kind: JobKind::Spgemm { a, b }, arch: Arc::new(arch), policy }
+    }
+
+    #[test]
+    fn auto_small_problem_goes_flat_fast() {
+        let arch = knl(KnlMode::Ddr, 64, ScaleFactor::default());
+        let job = spgemm_job(1, arch, Policy::Auto, 50);
+        let r = execute(&job, &PlannerOptions::default()).unwrap();
+        assert_eq!(r.decision, Decision::FlatFast);
+        assert!(r.c_nnz > 0);
+    }
+
+    #[test]
+    fn auto_large_b_triggers_dp_or_chunk() {
+        // B bigger than the fast pool's usable 11.2 MiB (16 MiB * 0.7)
+        // forces past FlatFast and DP into chunking; banded structure
+        // keeps C small enough for DDR.
+        let arch = knl(KnlMode::Ddr, 256, ScaleFactor::default());
+        let n = 380_000;
+        let a = Arc::new(crate::gen::rhs::banded(n, n, 2, 2, 1));
+        let b = Arc::new(crate::gen::rhs::banded(n, n, 2, 2, 2));
+        assert!(b.size_bytes() > 11 * 1024 * 1024, "B = {}", b.size_bytes());
+        let job = Job {
+            id: 2,
+            kind: JobKind::Spgemm { a, b },
+            arch: Arc::new(arch),
+            policy: Policy::Auto,
+        };
+        let r = execute(&job, &PlannerOptions::default()).unwrap();
+        match r.decision {
+            Decision::ChunkedKnl { parts } => assert!(parts >= 2, "parts {parts}"),
+            other => panic!("expected chunked, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn explicit_chunked_gpu() {
+        let arch = p100(GpuMode::Pinned, ScaleFactor::default());
+        let mut job = spgemm_job(3, arch, Policy::Chunked { fast_budget: 1 << 14 }, 80);
+        job.policy = Policy::Chunked { fast_budget: 1 << 14 };
+        let r = execute(&job, &PlannerOptions::default()).unwrap();
+        match r.decision {
+            Decision::ChunkedGpu { parts_ac, parts_b } => {
+                assert!(parts_ac >= 1 && parts_b >= 1);
+            }
+            other => panic!("expected gpu chunked, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dp_policy_places_b_fast_when_fits() {
+        let arch = knl(KnlMode::Ddr, 64, ScaleFactor::default());
+        let job = spgemm_job(4, arch, Policy::DataPlacement, 60);
+        let r = execute(&job, &PlannerOptions::default()).unwrap();
+        assert_eq!(r.decision, Decision::DataPlacement);
+    }
+
+    #[test]
+    fn tricount_job_counts() {
+        let adj = Arc::new(crate::gen::graphs::erdos_renyi(50, 0.2, 7));
+        let l = crate::tricount::degree_sorted_lower(&adj);
+        let lc = CompressedMatrix::compress(&l);
+        let expect = crate::tricount::tricount(&l, &lc, 2);
+        let arch = knl(KnlMode::Ddr, 64, ScaleFactor::default());
+        let job = Job {
+            id: 5,
+            kind: JobKind::TriCount { adj },
+            arch: Arc::new(arch),
+            policy: Policy::DataPlacement,
+        };
+        let r = execute(&job, &PlannerOptions::default()).unwrap();
+        assert_eq!(r.triangles, Some(expect));
+        assert_eq!(r.decision, Decision::DataPlacement);
+    }
+}

@@ -1,0 +1,213 @@
+//! The SpGEMM service: a leader that accepts jobs, applies backpressure,
+//! executes them on a worker pool, and exposes aggregate metrics. This is
+//! the L3 "coordination" face of the library — what a Trilinos-style
+//! deployment would embed to run many multiplications against one
+//! machine's memory configuration.
+
+use super::job::{Job, JobError, JobKind, JobResult, Policy};
+use super::planner::{execute, PlannerOptions};
+use crate::memory::arch::Arch;
+use crate::sparse::Csr;
+use crate::util::threadpool::WorkerPool;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Aggregate service metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub rejected: AtomicU64,
+    /// Total simulated time across completed jobs (nanoseconds).
+    pub sim_time_ns: AtomicU64,
+    /// Total simulated flops across completed jobs.
+    pub flops: AtomicU64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+        (
+            self.submitted.load(Ordering::SeqCst),
+            self.completed.load(Ordering::SeqCst),
+            self.failed.load(Ordering::SeqCst),
+            self.rejected.load(Ordering::SeqCst),
+        )
+    }
+}
+
+/// Handle for an in-flight job.
+pub struct JobHandle {
+    pub id: u64,
+    rx: mpsc::Receiver<Result<JobResult, JobError>>,
+}
+
+impl JobHandle {
+    /// Block until the job finishes.
+    pub fn wait(self) -> Result<JobResult, JobError> {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| Err(JobError { id: self.id, message: "worker dropped".into() }))
+    }
+}
+
+/// The service.
+pub struct SpgemmService {
+    pool: WorkerPool,
+    opts: PlannerOptions,
+    next_id: AtomicU64,
+    /// Backpressure: reject submissions beyond this many queued jobs.
+    max_pending: usize,
+    pub metrics: Arc<Metrics>,
+}
+
+impl SpgemmService {
+    pub fn new(workers: usize, max_pending: usize, opts: PlannerOptions) -> Self {
+        Self {
+            pool: WorkerPool::new(workers),
+            opts,
+            next_id: AtomicU64::new(1),
+            max_pending,
+            metrics: Arc::new(Metrics::default()),
+        }
+    }
+
+    /// Submit a SpGEMM job. Returns `Err` with the job back when the
+    /// queue is full (backpressure).
+    pub fn submit_spgemm(
+        &self,
+        a: Arc<Csr>,
+        b: Arc<Csr>,
+        arch: Arc<Arch>,
+        policy: Policy,
+    ) -> Result<JobHandle, &'static str> {
+        self.submit_kind(JobKind::Spgemm { a, b }, arch, policy)
+    }
+
+    /// Submit a triangle-count job.
+    pub fn submit_tricount(
+        &self,
+        adj: Arc<Csr>,
+        arch: Arc<Arch>,
+        policy: Policy,
+    ) -> Result<JobHandle, &'static str> {
+        self.submit_kind(JobKind::TriCount { adj }, arch, policy)
+    }
+
+    fn submit_kind(
+        &self,
+        kind: JobKind,
+        arch: Arc<Arch>,
+        policy: Policy,
+    ) -> Result<JobHandle, &'static str> {
+        if self.pool.pending() >= self.max_pending {
+            self.metrics.rejected.fetch_add(1, Ordering::SeqCst);
+            return Err("queue full");
+        }
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.metrics.submitted.fetch_add(1, Ordering::SeqCst);
+        let job = Job { id, kind, arch, policy };
+        let opts = self.opts;
+        let metrics = Arc::clone(&self.metrics);
+        let (tx, rx) = mpsc::channel();
+        // Guard against worker panics poisoning the response channel.
+        let tx = Mutex::new(Some(tx));
+        self.pool.submit(move || {
+            let result = execute(&job, &opts);
+            match &result {
+                Ok(r) => {
+                    metrics.completed.fetch_add(1, Ordering::SeqCst);
+                    metrics
+                        .sim_time_ns
+                        .fetch_add((r.report.seconds * 1e9) as u64, Ordering::SeqCst);
+                    metrics.flops.fetch_add(r.report.flops, Ordering::SeqCst);
+                }
+                Err(_) => {
+                    metrics.failed.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+            if let Some(tx) = tx.lock().expect("tx lock").take() {
+                let _ = tx.send(result);
+            }
+        });
+        Ok(JobHandle { id, rx })
+    }
+
+    /// Wait for all queued jobs to complete.
+    pub fn drain(&self) {
+        self.pool.wait_idle();
+    }
+
+    /// Aggregate simulated GFLOP/s across completed jobs.
+    pub fn aggregate_gflops(&self) -> f64 {
+        let ns = self.metrics.sim_time_ns.load(Ordering::SeqCst);
+        if ns == 0 {
+            return 0.0;
+        }
+        self.metrics.flops.load(Ordering::SeqCst) as f64 / (ns as f64 * 1e-9) / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::scale::ScaleFactor;
+    use crate::memory::arch::{knl, KnlMode};
+
+    fn arch() -> Arc<Arch> {
+        Arc::new(knl(KnlMode::Ddr, 64, ScaleFactor::default()))
+    }
+
+    fn mat(seed: u64) -> Arc<Csr> {
+        Arc::new(crate::gen::rhs::random_csr(60, 60, 1, 5, seed))
+    }
+
+    #[test]
+    fn submits_and_completes_jobs() {
+        let svc = SpgemmService::new(2, 64, PlannerOptions::default());
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                svc.submit_spgemm(mat(i), mat(i + 50), arch(), Policy::Auto)
+                    .expect("queue has room")
+            })
+            .collect();
+        for h in handles {
+            let r = h.wait().expect("job ok");
+            assert!(r.c_nnz > 0);
+            assert!(r.report.gflops > 0.0);
+        }
+        let (sub, done, failed, rejected) = svc.metrics.snapshot();
+        assert_eq!((sub, done, failed, rejected), (6, 6, 0, 0));
+        assert!(svc.aggregate_gflops() > 0.0);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // One worker, queue cap 1: the second/third submission while the
+        // first runs must eventually hit "queue full".
+        let svc = SpgemmService::new(1, 1, PlannerOptions::default());
+        let mut rejected = 0;
+        let mut handles = Vec::new();
+        for i in 0..20 {
+            match svc.submit_spgemm(mat(i), mat(i + 100), arch(), Policy::Auto) {
+                Ok(h) => handles.push(h),
+                Err(_) => rejected += 1,
+            }
+        }
+        svc.drain();
+        assert!(rejected > 0, "expected backpressure rejections");
+        assert_eq!(svc.metrics.rejected.load(Ordering::SeqCst), rejected);
+    }
+
+    #[test]
+    fn mixed_job_kinds() {
+        let svc = SpgemmService::new(2, 16, PlannerOptions::default());
+        let adj = Arc::new(crate::gen::graphs::erdos_renyi(40, 0.25, 1));
+        let h1 = svc.submit_tricount(Arc::clone(&adj), arch(), Policy::Auto).unwrap();
+        let h2 = svc.submit_spgemm(mat(1), mat(2), arch(), Policy::Flat).unwrap();
+        let r1 = h1.wait().unwrap();
+        let r2 = h2.wait().unwrap();
+        assert!(r1.triangles.is_some());
+        assert!(r2.triangles.is_none());
+    }
+}

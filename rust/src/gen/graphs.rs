@@ -1,0 +1,275 @@
+//! Graph generators for the triangle-counting workload (§4.1.2). The
+//! paper uses twitter-2010 (social), uk-2005 (web crawl) and a graph500
+//! scale-25 RMAT graph; we generate scaled-down synthetic stand-ins with
+//! the same qualitative degree structure:
+//!
+//! * `rmat` — Kronecker/RMAT with graph500 parameters (a=.57,b=.19,c=.19):
+//!   heavy-tailed, hub-dominated (stands in for g500s25f16).
+//! * `social` — RMAT with stronger skew plus random triangles closed
+//!   (higher clustering, like a social network).
+//! * `webcrawl` — host-locality model: dense intra-host blocks with sparse
+//!   inter-host links (uk-2005's structure: high locality, huge local
+//!   cliques).
+
+use crate::sparse::coo::Coo;
+use crate::sparse::csr::Csr;
+use crate::util::rng::Xoshiro256;
+
+/// RMAT edge generator over `2^scale` vertices with `edge_factor` edges
+/// per vertex; returns a symmetrized, deduplicated, self-loop-free
+/// adjacency matrix with unit values.
+pub fn rmat(scale: u32, edge_factor: usize, a: f64, b: f64, c: f64, seed: u64) -> Csr {
+    assert!(a + b + c < 1.0, "rmat quadrant probabilities must sum < 1");
+    let n = 1usize << scale;
+    let m = n * edge_factor;
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut coo = Coo::with_capacity(n, n, 2 * m);
+    for _ in 0..m {
+        let (mut i, mut j) = (0usize, 0usize);
+        for level in (0..scale).rev() {
+            let r = rng.next_f64();
+            let bit = 1usize << level;
+            if r < a {
+                // top-left: nothing
+            } else if r < a + b {
+                j |= bit;
+            } else if r < a + b + c {
+                i |= bit;
+            } else {
+                i |= bit;
+                j |= bit;
+            }
+        }
+        if i == j {
+            continue; // drop self loops
+        }
+        coo.push(i, j, 1.0);
+        coo.push(j, i, 1.0);
+    }
+    let mut adj = coo.to_csr();
+    // Deduplicate by clamping summed duplicate values back to 1.0.
+    for v in adj.values.iter_mut() {
+        *v = 1.0;
+    }
+    adj
+}
+
+/// graph500 reference parameters.
+pub fn graph500(scale: u32, edge_factor: usize, seed: u64) -> Csr {
+    rmat(scale, edge_factor, 0.57, 0.19, 0.19, seed)
+}
+
+/// Social-network-like graph: skewed RMAT plus triangle closure — for
+/// every sampled wedge (u–v, v–w) we add (u, w) with probability
+/// `closure_p`, raising the clustering coefficient like twitter-2010.
+pub fn social(scale: u32, edge_factor: usize, closure_p: f64, seed: u64) -> Csr {
+    let base = rmat(scale, edge_factor, 0.65, 0.15, 0.15, seed);
+    let n = base.nrows;
+    let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xC105_E5);
+    let mut coo = Coo::with_capacity(n, n, base.nnz() + base.nnz() / 4);
+    for i in 0..n {
+        let (cols, _) = base.row(i);
+        for &c in cols {
+            coo.push(i, c as usize, 1.0);
+        }
+    }
+    // Close wedges centred on each vertex.
+    for v in 0..n {
+        let (neigh, _) = base.row(v);
+        if neigh.len() < 2 {
+            continue;
+        }
+        let tries = (neigh.len() / 2).max(1);
+        for _ in 0..tries {
+            if !rng.bernoulli(closure_p) {
+                continue;
+            }
+            let u = neigh[rng.usize_below(neigh.len())] as usize;
+            let w = neigh[rng.usize_below(neigh.len())] as usize;
+            if u != w {
+                coo.push(u, w, 1.0);
+                coo.push(w, u, 1.0);
+            }
+        }
+    }
+    let mut adj = coo.to_csr();
+    for v in adj.values.iter_mut() {
+        *v = 1.0;
+    }
+    adj
+}
+
+/// Web-crawl-like graph: `hosts` blocks of `host_size` pages; dense
+/// ring-ish intra-host linkage (probability `p_intra` per near pair) and
+/// sparse random inter-host links.
+pub fn webcrawl(hosts: usize, host_size: usize, p_intra: f64, inter_per_page: f64, seed: u64) -> Csr {
+    let n = hosts * host_size;
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut coo = Coo::new(n, n);
+    for h in 0..hosts {
+        let base = h * host_size;
+        // Intra-host: each page links to a window of following pages —
+        // produces the locally-dense, high-locality rows uk-2005 shows.
+        for p in 0..host_size {
+            let u = base + p;
+            let window = 12.min(host_size - p - 1);
+            for q in 1..=window {
+                if rng.bernoulli(p_intra) {
+                    let v = base + p + q;
+                    coo.push(u, v, 1.0);
+                    coo.push(v, u, 1.0);
+                }
+            }
+        }
+    }
+    // Inter-host long-range links.
+    let inter = (n as f64 * inter_per_page) as usize;
+    for _ in 0..inter {
+        let u = rng.usize_below(n);
+        let v = rng.usize_below(n);
+        if u != v {
+            coo.push(u, v, 1.0);
+            coo.push(v, u, 1.0);
+        }
+    }
+    let mut adj = coo.to_csr();
+    for v in adj.values.iter_mut() {
+        *v = 1.0;
+    }
+    adj
+}
+
+/// Erdős–Rényi G(n, p)-ish graph by expected edge count — small oracle
+/// graphs for triangle-count property tests.
+pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> Csr {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.bernoulli(p) {
+                coo.push(i, j, 1.0);
+                coo.push(j, i, 1.0);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// The three paper graphs (scaled stand-ins).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GraphKind {
+    G500,
+    Twitter,
+    Uk2005,
+}
+
+impl GraphKind {
+    pub const ALL: [GraphKind; 3] = [GraphKind::G500, GraphKind::Twitter, GraphKind::Uk2005];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GraphKind::G500 => "g500-like",
+            GraphKind::Twitter => "twitter-like",
+            GraphKind::Uk2005 => "uk2005-like",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "g500" | "graph500" | "g500-like" => Some(GraphKind::G500),
+            "twitter" | "twitter-like" => Some(GraphKind::Twitter),
+            "uk2005" | "uk-2005" | "uk2005-like" => Some(GraphKind::Uk2005),
+            _ => None,
+        }
+    }
+
+    /// Build at a scale parameter (vertex count grows with `scale`).
+    pub fn build(&self, scale: u32, seed: u64) -> Csr {
+        match self {
+            GraphKind::G500 => graph500(scale, 16, seed),
+            GraphKind::Twitter => social(scale, 18, 0.4, seed),
+            GraphKind::Uk2005 => {
+                let n = 1usize << scale;
+                let host = 64usize;
+                webcrawl(n / host, host, 0.55, 0.8, seed)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::ops::transpose;
+
+    fn is_symmetric(m: &Csr) -> bool {
+        m.approx_eq(&transpose(m), 0.0)
+    }
+
+    fn no_self_loops(m: &Csr) -> bool {
+        (0..m.nrows).all(|i| m.get(i, i) == 0.0)
+    }
+
+    #[test]
+    fn rmat_shape_and_symmetry() {
+        let g = graph500(8, 8, 42);
+        g.validate().unwrap();
+        assert_eq!(g.nrows, 256);
+        assert!(is_symmetric(&g));
+        assert!(no_self_loops(&g));
+        assert!(g.values.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let g = graph500(10, 16, 1);
+        let max = g.max_degree() as f64;
+        let avg = g.avg_degree();
+        assert!(max > 6.0 * avg, "rmat should be heavy-tailed: max={max} avg={avg}");
+    }
+
+    #[test]
+    fn social_has_more_triangles_than_base() {
+        // Closure should strictly add edges.
+        let base = rmat(8, 8, 0.65, 0.15, 0.15, 5);
+        let soc = social(8, 8, 0.5, 5);
+        assert!(soc.nnz() >= base.nnz());
+        assert!(is_symmetric(&soc));
+        assert!(no_self_loops(&soc));
+    }
+
+    #[test]
+    fn webcrawl_locality() {
+        let g = webcrawl(8, 32, 0.6, 0.2, 9);
+        g.validate().unwrap();
+        assert!(is_symmetric(&g));
+        // Most edges should be intra-host (|i-j| < host size).
+        let mut intra = 0usize;
+        for i in 0..g.nrows {
+            let (cols, _) = g.row(i);
+            for &c in cols {
+                if (c as usize / 32) == (i / 32) {
+                    intra += 1;
+                }
+            }
+        }
+        assert!(intra * 2 > g.nnz(), "webcrawl should be host-local");
+    }
+
+    #[test]
+    fn erdos_renyi_symmetric() {
+        let g = erdos_renyi(40, 0.2, 3);
+        assert!(is_symmetric(&g));
+        assert!(no_self_loops(&g));
+    }
+
+    #[test]
+    fn kinds_build_and_parse() {
+        for k in GraphKind::ALL {
+            let g = k.build(7, 11);
+            assert!(g.nrows >= 64);
+            assert!(is_symmetric(&g), "{} not symmetric", k.name());
+            assert_eq!(GraphKind::parse(k.name()), Some(k));
+        }
+    }
+}

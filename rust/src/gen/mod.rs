@@ -1,0 +1,13 @@
+//! Workload generators: the paper's four multigrid domains, restriction/
+//! prolongation operators, density-controlled random RHS matrices,
+//! triangle-counting graphs, and size→dimension solving.
+
+pub mod graphs;
+pub mod multigrid;
+pub mod rhs;
+pub mod scale;
+pub mod stencil;
+
+pub use multigrid::MgProblem;
+pub use scale::ScaleFactor;
+pub use stencil::{Domain, Grid};

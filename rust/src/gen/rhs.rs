@@ -1,0 +1,139 @@
+//! Random right-hand-side matrix generation with controlled uniform row
+//! degree δ — used by Table 2 of the paper (`R×RHS`, `A×RHS` for
+//! δ ∈ {1, 4, 16, 64, 256}) to isolate the effect of RHS density on
+//! spatial locality.
+
+use crate::sparse::csr::{Csr, Idx};
+use crate::util::rng::Xoshiro256;
+
+/// Random `nrows x ncols` CSR where every row has exactly
+/// `min(delta, ncols)` distinct nonzero columns (sorted), values in
+/// `[-1, 1)`.
+pub fn uniform_degree(nrows: usize, ncols: usize, delta: usize, seed: u64) -> Csr {
+    let delta = delta.min(ncols);
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut rowmap = vec![0usize; nrows + 1];
+    let mut entries: Vec<Idx> = Vec::with_capacity(nrows * delta);
+    let mut values: Vec<f64> = Vec::with_capacity(nrows * delta);
+    for i in 0..nrows {
+        let mut cols = rng.sample_distinct(ncols, delta);
+        cols.sort_unstable();
+        for c in cols {
+            entries.push(c as Idx);
+            values.push(rng.f64_range(-1.0, 1.0));
+        }
+        rowmap[i + 1] = entries.len();
+    }
+    Csr::new(nrows, ncols, rowmap, entries, values)
+}
+
+/// Random CSR where row degrees are drawn uniformly in
+/// `[min_deg, max_deg]` — used by property tests for irregular inputs.
+pub fn random_csr(
+    nrows: usize,
+    ncols: usize,
+    min_deg: usize,
+    max_deg: usize,
+    seed: u64,
+) -> Csr {
+    assert!(min_deg <= max_deg);
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut rowmap = vec![0usize; nrows + 1];
+    let mut entries: Vec<Idx> = Vec::new();
+    let mut values: Vec<f64> = Vec::new();
+    for i in 0..nrows {
+        let deg = (min_deg + rng.usize_below(max_deg - min_deg + 1)).min(ncols);
+        let mut cols = rng.sample_distinct(ncols, deg);
+        cols.sort_unstable();
+        for c in cols {
+            entries.push(c as Idx);
+            values.push(rng.f64_range(-1.0, 1.0));
+        }
+        rowmap[i + 1] = entries.len();
+    }
+    Csr::new(nrows, ncols, rowmap, entries, values)
+}
+
+/// Banded random matrix: nonzeros clustered within `bandwidth` of the
+/// diagonal — high spatial locality, the opposite extreme of
+/// [`uniform_degree`]'s scattered columns. Used in locality ablations.
+pub fn banded(nrows: usize, ncols: usize, delta: usize, bandwidth: usize, seed: u64) -> Csr {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut rowmap = vec![0usize; nrows + 1];
+    let mut entries: Vec<Idx> = Vec::new();
+    let mut values: Vec<f64> = Vec::new();
+    for i in 0..nrows {
+        let centre = if nrows <= 1 {
+            0
+        } else {
+            i * ncols / nrows // spread the band along the diagonal
+        };
+        let lo = centre.saturating_sub(bandwidth);
+        let hi = (centre + bandwidth + 1).min(ncols);
+        let width = hi - lo;
+        let deg = delta.min(width);
+        let mut cols = rng.sample_distinct(width, deg);
+        cols.sort_unstable();
+        for c in cols {
+            entries.push((lo + c) as Idx);
+            values.push(rng.f64_range(-1.0, 1.0));
+        }
+        rowmap[i + 1] = entries.len();
+    }
+    Csr::new(nrows, ncols, rowmap, entries, values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_degree_exact() {
+        let m = uniform_degree(50, 100, 7, 1);
+        m.validate().unwrap();
+        assert!(m.rows_sorted());
+        for i in 0..m.nrows {
+            assert_eq!(m.row_len(i), 7);
+        }
+    }
+
+    #[test]
+    fn uniform_degree_clamps_to_ncols() {
+        let m = uniform_degree(5, 3, 10, 2);
+        for i in 0..m.nrows {
+            assert_eq!(m.row_len(i), 3);
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = uniform_degree(20, 40, 5, 99);
+        let b = uniform_degree(20, 40, 5, 99);
+        let c = uniform_degree(20, 40, 5, 100);
+        assert!(a.approx_eq(&b, 0.0));
+        assert!(!a.approx_eq(&c, 0.0));
+    }
+
+    #[test]
+    fn random_csr_degree_bounds() {
+        let m = random_csr(100, 60, 2, 9, 7);
+        m.validate().unwrap();
+        for i in 0..m.nrows {
+            assert!((2..=9).contains(&m.row_len(i)));
+        }
+    }
+
+    #[test]
+    fn banded_stays_in_band() {
+        let m = banded(40, 40, 4, 3, 5);
+        m.validate().unwrap();
+        for i in 0..m.nrows {
+            let centre = i; // square matrix: centre == i
+            let (cols, _) = m.row(i);
+            for &c in cols {
+                let dist = (c as i64 - centre as i64).abs();
+                assert!(dist <= 3, "row {i} col {c} outside band");
+            }
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Size→dimension solving. The paper scales the A matrix from 1 GB to
+//! 32 GB on machines with 16 GB fast / 96 GB slow memory. We reproduce the
+//! *shape* of those weak-scaling sweeps at laptop scale by dividing every
+//! capacity in the system (matrix targets, HBM, DDR, caches) by a single
+//! `ScaleFactor` (default 1/1024: "1 GB" → 1 MiB), preserving all the
+//! fits/doesn't-fit crossovers.
+
+use super::stencil::{Domain, Grid};
+
+pub const GIB: u64 = 1024 * 1024 * 1024;
+
+/// Global capacity scale. `denominator = 1024` maps paper-GB to MiB.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScaleFactor {
+    pub denominator: u64,
+}
+
+impl Default for ScaleFactor {
+    fn default() -> Self {
+        Self { denominator: 1024 }
+    }
+}
+
+impl ScaleFactor {
+    pub fn new(denominator: u64) -> Self {
+        assert!(denominator >= 1);
+        Self { denominator }
+    }
+
+    /// Scale a paper-sized byte count down to simulation size.
+    pub fn bytes(&self, paper_bytes: u64) -> u64 {
+        (paper_bytes / self.denominator).max(1)
+    }
+
+    /// Paper "N GB" to simulation bytes.
+    pub fn gb(&self, n: f64) -> u64 {
+        ((n * GIB as f64) / self.denominator as f64).max(1.0) as u64
+    }
+}
+
+/// Estimated CSR bytes for `n` rows with average degree `deg`
+/// (rowmap 8 B/row + 12 B/nnz; see `Csr::size_bytes`).
+pub fn csr_bytes_estimate(n: u64, deg: f64) -> u64 {
+    8 * (n + 1) + (n as f64 * deg * 12.0) as u64
+}
+
+/// Rows needed for a CSR of roughly `target_bytes` at degree `deg`.
+pub fn rows_for_bytes(target_bytes: u64, deg: f64) -> u64 {
+    ((target_bytes as f64 - 8.0) / (8.0 + 12.0 * deg)).max(1.0) as u64
+}
+
+/// Solve a grid for `domain` such that its A matrix is ≈ `target_bytes`.
+/// 3D domains get a near-cubic grid, BigStar2D a near-square one.
+pub fn grid_for_bytes(domain: Domain, target_bytes: u64) -> Grid {
+    let deg = domain.interior_degree() as f64;
+    let rows = rows_for_bytes(target_bytes, deg);
+    let nodes = (rows / domain.dof() as u64).max(1);
+    match domain {
+        Domain::BigStar2D => {
+            let side = (nodes as f64).sqrt().round().max(3.0) as usize;
+            Grid::new(side, nodes.div_ceil(side as u64).max(3) as usize, 1)
+        }
+        _ => {
+            let side = (nodes as f64).cbrt().round().max(3.0) as usize;
+            let rem = nodes.div_ceil((side * side) as u64).max(3) as usize;
+            Grid::new(side, side, rem)
+        }
+    }
+}
+
+/// The paper's weak-scaling size points (in paper-GB), Figures 3/4/6/7.
+pub const PAPER_SIZES_GB: [f64; 6] = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_maps_gb_to_mib() {
+        let s = ScaleFactor::default();
+        assert_eq!(s.gb(1.0), 1024 * 1024);
+        assert_eq!(s.gb(16.0), 16 * 1024 * 1024);
+    }
+
+    #[test]
+    fn rows_roundtrip_bytes() {
+        for &deg in &[7.0, 13.0, 27.0, 81.0] {
+            let target = 1_000_000u64;
+            let rows = rows_for_bytes(target, deg);
+            let est = csr_bytes_estimate(rows, deg);
+            let err = (est as f64 - target as f64).abs() / target as f64;
+            assert!(err < 0.05, "deg={deg}: est {est} vs target {target}");
+        }
+    }
+
+    #[test]
+    fn grid_hits_target_size() {
+        let s = ScaleFactor::default();
+        for d in Domain::ALL {
+            let target = s.gb(2.0);
+            let g = grid_for_bytes(d, target);
+            let a = d.build(g);
+            let actual = a.size_bytes();
+            let err = (actual as f64 - target as f64).abs() / target as f64;
+            // Boundary rows have lower degree, so allow generous slack.
+            assert!(
+                err < 0.35,
+                "{}: built {} vs target {} (grid {:?})",
+                d.name(),
+                actual,
+                target,
+                g
+            );
+        }
+    }
+
+    #[test]
+    fn bigstar_is_2d() {
+        let g = grid_for_bytes(Domain::BigStar2D, 1_000_000);
+        assert_eq!(g.nz, 1);
+        // deg 13 → ~6100 rows → ~78 per side.
+        assert!(g.nx > 50);
+    }
+}

@@ -1,0 +1,158 @@
+//! KKMEM's "uniform memory pool" (§2.1): accumulator storage is sized
+//! once from the symbolic phase's upper bound and reused across all rows
+//! a thread processes — no allocation inside the numeric hot loop.
+
+use super::accumulator::{Accumulator, DenseAccumulator, HashAccumulator, TwoLevelAccumulator};
+use crate::memory::machine::{MemTracer, RegionId};
+use crate::sparse::csr::Idx;
+
+/// Accumulator strategy (an ablation axis; §3.1 argues for Hash).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccKind {
+    /// Single-level sparse hashmap (KNL path; the KKMEM default).
+    Hash,
+    /// Dense array accumulator (baseline with poor spatial locality).
+    Dense,
+    /// GPU-style shared-memory first level + global second level.
+    TwoLevel,
+}
+
+impl AccKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AccKind::Hash => "hash",
+            AccKind::Dense => "dense",
+            AccKind::TwoLevel => "two-level",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "hash" => Some(AccKind::Hash),
+            "dense" => Some(AccKind::Dense),
+            "twolevel" | "two-level" | "2l" => Some(AccKind::TwoLevel),
+            _ => None,
+        }
+    }
+
+    /// Backing-store bytes for one accumulator instance.
+    pub fn footprint_bytes(&self, row_ub: usize, ncols: usize) -> u64 {
+        match self {
+            AccKind::Hash => HashAccumulator::footprint_bytes(row_ub.max(16)),
+            AccKind::Dense => DenseAccumulator::footprint_bytes(ncols),
+            AccKind::TwoLevel => HashAccumulator::footprint_bytes(row_ub.max(16)),
+        }
+    }
+}
+
+/// A pool-built accumulator, dispatched statically in the hot loop via
+/// the enum (each arm monomorphizes `numeric_row`).
+pub enum PooledAcc {
+    Hash(HashAccumulator),
+    Dense(DenseAccumulator),
+    TwoLevel(TwoLevelAccumulator),
+}
+
+impl PooledAcc {
+    /// Build one accumulator: `row_ub` is the symbolic max-row upper
+    /// bound, `ncols` the output width, `tl_l1_entries` the shared-memory
+    /// entry budget for the two-level variant.
+    pub fn build(
+        kind: AccKind,
+        row_ub: usize,
+        ncols: usize,
+        tl_l1_entries: usize,
+        region: RegionId,
+    ) -> Self {
+        Self::build_wrapped(kind, row_ub, ncols, tl_l1_entries, region, u64::MAX)
+    }
+
+    /// Like [`build`](Self::build), wrapping the hash accumulator's
+    /// trace addresses into `wrap` bytes (cache-residency model under
+    /// capacity scaling — see `HashAccumulator::with_wrap`).
+    pub fn build_wrapped(
+        kind: AccKind,
+        row_ub: usize,
+        ncols: usize,
+        tl_l1_entries: usize,
+        region: RegionId,
+        wrap: u64,
+    ) -> Self {
+        match kind {
+            AccKind::Hash => {
+                PooledAcc::Hash(HashAccumulator::with_wrap(row_ub.max(16), region, wrap))
+            }
+            AccKind::Dense => PooledAcc::Dense(DenseAccumulator::new(ncols, region)),
+            AccKind::TwoLevel => PooledAcc::TwoLevel(TwoLevelAccumulator::new(
+                tl_l1_entries,
+                row_ub.max(16),
+                region,
+            )),
+        }
+    }
+}
+
+impl Accumulator for PooledAcc {
+    #[inline]
+    fn insert<T: MemTracer>(&mut self, t: &mut T, col: Idx, val: f64) {
+        match self {
+            PooledAcc::Hash(a) => a.insert(t, col, val),
+            PooledAcc::Dense(a) => a.insert(t, col, val),
+            PooledAcc::TwoLevel(a) => a.insert(t, col, val),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            PooledAcc::Hash(a) => a.len(),
+            PooledAcc::Dense(a) => a.len(),
+            PooledAcc::TwoLevel(a) => a.len(),
+        }
+    }
+
+    fn drain_into<T: MemTracer>(&mut self, t: &mut T, out: &mut Vec<(Idx, f64)>) {
+        match self {
+            PooledAcc::Hash(a) => a.drain_into(t, out),
+            PooledAcc::Dense(a) => a.drain_into(t, out),
+            PooledAcc::TwoLevel(a) => a.drain_into(t, out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::machine::NullTracer;
+
+    #[test]
+    fn all_kinds_build_and_accumulate() {
+        let mut t = NullTracer;
+        for kind in [AccKind::Hash, AccKind::Dense, AccKind::TwoLevel] {
+            let mut acc = PooledAcc::build(kind, 32, 100, 16, 0);
+            acc.insert(&mut t, 5, 1.0);
+            acc.insert(&mut t, 5, 2.0);
+            acc.insert(&mut t, 9, 1.0);
+            assert_eq!(acc.len(), 2, "{}", kind.name());
+            let mut out = Vec::new();
+            acc.drain_into(&mut t, &mut out);
+            out.sort_by_key(|&(c, _)| c);
+            assert_eq!(out[0], (5, 3.0));
+            assert_eq!(out[1], (9, 1.0));
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in [AccKind::Hash, AccKind::Dense, AccKind::TwoLevel] {
+            assert_eq!(AccKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(AccKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn footprints_positive() {
+        for k in [AccKind::Hash, AccKind::Dense, AccKind::TwoLevel] {
+            assert!(k.footprint_bytes(100, 1000) > 0);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! KKMEM — the baseline SpGEMM method of the paper (§2.1): a two-phase,
+//! hierarchical, row-wise algorithm with compressed symbolic analysis and
+//! sparse hashmap accumulators backed by a uniform memory pool.
+
+pub mod accumulator;
+pub mod compression;
+pub mod mempool;
+pub mod numeric;
+pub mod spgemm;
+pub mod symbolic;
+
+pub use compression::CompressedMatrix;
+pub use mempool::AccKind;
+pub use numeric::Layout;
+pub use spgemm::{spgemm, spgemm_sim, Placement, SimProduct, SpgemmOptions};

@@ -1,0 +1,245 @@
+//! KKMEM numeric phase — the instrumented hot loop whose memory behaviour
+//! the whole paper is about. Each row of `A` streams once; each `A` entry
+//! pulls a row of `B` (the irregular accesses); products accumulate in a
+//! sparse accumulator; the finished row streams out to `C` (§3.1).
+//!
+//! Every function is generic over [`MemTracer`], so the identical code
+//! path runs natively (NullTracer — zero overhead, real threads) or under
+//! the machine simulator (MemSim — full cache/pool accounting).
+
+use super::accumulator::Accumulator;
+use crate::memory::machine::{MemTracer, RegionId};
+use crate::sparse::csr::{Csr, Idx};
+
+/// Region handles for the data structures of one multiplication.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Layout {
+    pub a_rowmap: RegionId,
+    pub a_entries: RegionId,
+    pub a_values: RegionId,
+    pub b_rowmap: RegionId,
+    pub b_entries: RegionId,
+    pub b_values: RegionId,
+    pub c_rowmap: RegionId,
+    pub c_entries: RegionId,
+    pub c_values: RegionId,
+    /// Accumulator backing store (second level for TwoLevel).
+    pub acc: RegionId,
+    /// Previous partial result (fused multiply-add chunks).
+    pub c_prev_rowmap: RegionId,
+    pub c_prev_entries: RegionId,
+    pub c_prev_values: RegionId,
+}
+
+/// Compute one row `i` of `C = A × B` into `out` (cleared first).
+/// Returns the number of scalar multiplications performed.
+#[inline]
+pub fn numeric_row<T: MemTracer, A: Accumulator>(
+    t: &mut T,
+    lay: &Layout,
+    a: &Csr,
+    b: &Csr,
+    i: usize,
+    acc: &mut A,
+    out: &mut Vec<(Idx, f64)>,
+) -> u64 {
+    out.clear();
+    if T::ENABLED {
+        t.read(lay.a_rowmap, i as u64 * 8, 16);
+    }
+    let (acols, avals) = a.row(i);
+    if T::ENABLED && !acols.is_empty() {
+        let lo = a.rowmap[i] as u64;
+        t.read(lay.a_entries, lo * 4, acols.len() as u64 * 4);
+        t.read(lay.a_values, lo * 8, acols.len() as u64 * 8);
+    }
+    let mut mults: u64 = 0;
+    for (&k, &av) in acols.iter().zip(avals) {
+        let k = k as usize;
+        if T::ENABLED {
+            t.read(lay.b_rowmap, k as u64 * 8, 16);
+        }
+        let (bcols, bvals) = b.row(k);
+        if T::ENABLED && !bcols.is_empty() {
+            let lo = b.rowmap[k] as u64;
+            t.read(lay.b_entries, lo * 4, bcols.len() as u64 * 4);
+            t.read(lay.b_values, lo * 8, bcols.len() as u64 * 8);
+        }
+        for (&j, &bv) in bcols.iter().zip(bvals) {
+            acc.insert(t, j, av * bv);
+        }
+        mults += bcols.len() as u64;
+    }
+    t.flops(2 * mults);
+    acc.drain_into(t, out);
+    mults
+}
+
+/// Fused multiply-add row (the chunking subprocedure, §3.2.2): computes
+/// row `i` of `C_new = A[:, range) × B_chunk + C_prev`, where `B_chunk`
+/// holds rows `[range.0, range.1)` of the full `B` (so an `A` column `k`
+/// in range maps to chunk row `k - range.0`). `C_prev` values are
+/// inserted into the accumulator after the products, exactly as the paper
+/// describes ("once a multiplication for a row is completed, it inserts
+/// the existing values of C¹ into its hashmap accumulators").
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn fused_numeric_row<T: MemTracer, A: Accumulator>(
+    t: &mut T,
+    lay: &Layout,
+    a: &Csr,
+    b_chunk: &Csr,
+    range: (usize, usize),
+    c_prev: Option<&Csr>,
+    i: usize,
+    acc: &mut A,
+    out: &mut Vec<(Idx, f64)>,
+) -> u64 {
+    out.clear();
+    if T::ENABLED {
+        t.read(lay.a_rowmap, i as u64 * 8, 16);
+    }
+    let (acols, avals) = a.row(i);
+    if T::ENABLED && !acols.is_empty() {
+        let lo = a.rowmap[i] as u64;
+        t.read(lay.a_entries, lo * 4, acols.len() as u64 * 4);
+        t.read(lay.a_values, lo * 8, acols.len() as u64 * 8);
+    }
+    let (lo_r, hi_r) = range;
+    let mut mults: u64 = 0;
+    for (&k, &av) in acols.iter().zip(avals) {
+        let k = k as usize;
+        // Skip columns outside the chunk's row range (columns are not
+        // assumed sorted — the paper makes the same point).
+        if k < lo_r || k >= hi_r {
+            continue;
+        }
+        let bk = k - lo_r;
+        if T::ENABLED {
+            t.read(lay.b_rowmap, bk as u64 * 8, 16);
+        }
+        let (bcols, bvals) = b_chunk.row(bk);
+        if T::ENABLED && !bcols.is_empty() {
+            let blo = b_chunk.rowmap[bk] as u64;
+            t.read(lay.b_entries, blo * 4, bcols.len() as u64 * 4);
+            t.read(lay.b_values, blo * 8, bcols.len() as u64 * 8);
+        }
+        for (&j, &bv) in bcols.iter().zip(bvals) {
+            acc.insert(t, j, av * bv);
+        }
+        mults += bcols.len() as u64;
+    }
+    t.flops(2 * mults);
+    // Fold in the previous partial result.
+    if let Some(cp) = c_prev {
+        if T::ENABLED {
+            t.read(lay.c_prev_rowmap, i as u64 * 8, 16);
+        }
+        let (pcols, pvals) = cp.row(i);
+        if T::ENABLED && !pcols.is_empty() {
+            let plo = cp.rowmap[i] as u64;
+            t.read(lay.c_prev_entries, plo * 4, pcols.len() as u64 * 4);
+            t.read(lay.c_prev_values, plo * 8, pcols.len() as u64 * 8);
+        }
+        for (&j, &pv) in pcols.iter().zip(pvals) {
+            acc.insert(t, j, pv);
+        }
+    }
+    acc.drain_into(t, out);
+    mults
+}
+
+/// Write a finished row's pairs into the output arrays at `pos`,
+/// charging the streaming C writes.
+#[inline]
+pub fn emit_row<T: MemTracer>(
+    t: &mut T,
+    lay: &Layout,
+    pos: usize,
+    pairs: &[(Idx, f64)],
+    entries: &mut [Idx],
+    values: &mut [f64],
+) {
+    if T::ENABLED && !pairs.is_empty() {
+        t.write(lay.c_entries, pos as u64 * 4, pairs.len() as u64 * 4);
+        t.write(lay.c_values, pos as u64 * 8, pairs.len() as u64 * 8);
+    }
+    for (off, &(c, v)) in pairs.iter().enumerate() {
+        entries[pos + off] = c;
+        values[pos + off] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kkmem::accumulator::HashAccumulator;
+    use crate::memory::machine::NullTracer;
+    use crate::sparse::ops::spgemm_reference;
+
+    #[test]
+    fn numeric_row_matches_reference() {
+        let a = crate::gen::rhs::random_csr(10, 8, 1, 4, 1);
+        let b = crate::gen::rhs::random_csr(8, 12, 1, 4, 2);
+        let expect = spgemm_reference(&a, &b);
+        let mut t = NullTracer;
+        let lay = Layout::default();
+        let mut acc = HashAccumulator::new(64, 0);
+        let mut out = Vec::new();
+        for i in 0..a.nrows {
+            numeric_row(&mut t, &lay, &a, &b, i, &mut acc, &mut out);
+            out.sort_by_key(|&(c, _)| c);
+            let (ecols, evals) = expect.row(i);
+            assert_eq!(out.len(), ecols.len(), "row {i}");
+            for (k, &(c, v)) in out.iter().enumerate() {
+                assert_eq!(c, ecols[k]);
+                assert!((v - evals[k]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_row_range_plus_prev_equals_full() {
+        // Split B rows into [0,4) and [4,8): fused over the second range
+        // with the first partial as c_prev must equal the full product.
+        let a = crate::gen::rhs::random_csr(10, 8, 1, 5, 3);
+        let b = crate::gen::rhs::random_csr(8, 12, 1, 5, 4);
+        let expect = spgemm_reference(&a, &b);
+        let chunk1 = b.slice_rows(0, 4);
+        let chunk2 = b.slice_rows(4, 8);
+        let mut t = NullTracer;
+        let lay = Layout::default();
+        let mut acc = HashAccumulator::new(64, 0);
+        let mut out = Vec::new();
+        // Pass 1: range [0,4), no prev.
+        let mut c1 = crate::sparse::Coo::new(a.nrows, 12);
+        for i in 0..a.nrows {
+            fused_numeric_row(&mut t, &lay, &a, &chunk1, (0, 4), None, i, &mut acc, &mut out);
+            for &(c, v) in &out {
+                c1.push(i, c as usize, v);
+            }
+        }
+        let c1 = c1.to_csr();
+        // Pass 2: range [4,8), prev = c1.
+        let mut c2 = crate::sparse::Coo::new(a.nrows, 12);
+        for i in 0..a.nrows {
+            fused_numeric_row(&mut t, &lay, &a, &chunk2, (4, 8), Some(&c1), i, &mut acc, &mut out);
+            for &(c, v) in &out {
+                c2.push(i, c as usize, v);
+            }
+        }
+        let c2 = c2.to_csr();
+        assert!(c2.approx_eq(&expect, 1e-12));
+    }
+
+    #[test]
+    fn emit_row_writes_in_place() {
+        let mut t = NullTracer;
+        let lay = Layout::default();
+        let mut entries = vec![0 as Idx; 5];
+        let mut values = vec![0.0; 5];
+        emit_row(&mut t, &lay, 1, &[(7, 1.5), (9, -2.0)], &mut entries, &mut values);
+        assert_eq!(entries, vec![0, 7, 9, 0, 0]);
+        assert_eq!(values, vec![0.0, 1.5, -2.0, 0.0, 0.0]);
+    }
+}

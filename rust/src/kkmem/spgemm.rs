@@ -1,0 +1,370 @@
+//! Top-level KKMEM SpGEMM drivers:
+//!
+//! * [`spgemm`] — native two-phase multiplication with real threads
+//!   (1D row-wise partitioning, per-thread accumulators from the memory
+//!   pool) — the performance path.
+//! * [`spgemm_sim`] — the same algorithm run serially through the machine
+//!   simulator with a per-structure [`Placement`], producing both the
+//!   product and the simulated traffic/time — the reproduction path.
+
+use super::compression::CompressedMatrix;
+use super::mempool::{AccKind, PooledAcc};
+use super::numeric::{emit_row, numeric_row, Layout};
+use super::symbolic::{max_row_upper_bound, rowmap_from_sizes, symbolic};
+use crate::memory::alloc::{AllocError, Location};
+use crate::memory::machine::{MemSim, MemTracer, NullTracer, RegionId};
+use crate::sparse::csr::{Csr, Idx};
+use crate::util::threadpool::parallel_for_chunks;
+
+/// Options common to both drivers.
+#[derive(Clone, Copy, Debug)]
+pub struct SpgemmOptions {
+    pub acc: AccKind,
+    /// Native threads for [`spgemm`] (the simulator models concurrency
+    /// through its machine spec instead).
+    pub threads: usize,
+    /// Sort output rows by column (KKMEM leaves them unsorted by default).
+    pub sort_output: bool,
+    /// Shared-memory entry budget for the two-level accumulator.
+    pub tl_l1_entries: usize,
+}
+
+impl Default for SpgemmOptions {
+    fn default() -> Self {
+        Self { acc: AccKind::Hash, threads: 1, sort_output: false, tl_l1_entries: 4096 }
+    }
+}
+
+/// Where each structure of `C = A × B` lives (§3.2.1's selective data
+/// placement decides these).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub a: Location,
+    pub b: Location,
+    pub c: Location,
+    pub acc: Location,
+}
+
+impl Placement {
+    /// Everything in one location (the flat HBM/DDR/pinned/UVM modes).
+    pub fn uniform(loc: Location) -> Self {
+        Self { a: loc, b: loc, c: loc, acc: loc }
+    }
+}
+
+/// Unsafe cell for disjoint parallel writes into the output arrays; the
+/// symbolic rowmap guarantees each thread's rows occupy disjoint ranges.
+struct SyncSlice<T>(*mut T);
+unsafe impl<T> Sync for SyncSlice<T> {}
+impl<T> SyncSlice<T> {
+    #[inline]
+    unsafe fn write(&self, idx: usize, val: T) {
+        unsafe { *self.0.add(idx) = val };
+    }
+}
+
+/// Native parallel KKMEM: symbolic + numeric, real threads.
+pub fn spgemm(a: &Csr, b: &Csr, opts: &SpgemmOptions) -> Csr {
+    assert_eq!(a.ncols, b.nrows, "spgemm shape mismatch");
+    let b_comp = CompressedMatrix::compress(b);
+    let sizes = symbolic(a, &b_comp);
+    let rowmap = rowmap_from_sizes(&sizes);
+    let nnz = *rowmap.last().expect("rowmap nonempty");
+    let row_ub = max_row_upper_bound(a, b);
+    let mut entries = vec![0 as Idx; nnz];
+    let mut values = vec![0.0f64; nnz];
+    {
+        let e = SyncSlice(entries.as_mut_ptr());
+        let v = SyncSlice(values.as_mut_ptr());
+        let rowmap_ref = &rowmap;
+        // §Perf: dispatch on accumulator kind ONCE per thread chunk so the
+        // per-insert call is monomorphized (the PooledAcc enum cost a
+        // branch per multiply — ~15% of the numeric phase).
+        parallel_for_chunks(a.nrows, opts.threads, |lo, hi, _tid| {
+            use crate::kkmem::accumulator::{DenseAccumulator, HashAccumulator, TwoLevelAccumulator};
+            match opts.acc {
+                AccKind::Hash => numeric_rows_into(
+                    a, b, lo, hi, rowmap_ref, opts,
+                    HashAccumulator::new(row_ub.max(16), 0), &e, &v,
+                ),
+                AccKind::Dense => numeric_rows_into(
+                    a, b, lo, hi, rowmap_ref, opts,
+                    DenseAccumulator::new(b.ncols, 0), &e, &v,
+                ),
+                AccKind::TwoLevel => numeric_rows_into(
+                    a, b, lo, hi, rowmap_ref, opts,
+                    TwoLevelAccumulator::new(opts.tl_l1_entries, row_ub.max(16), 0), &e, &v,
+                ),
+            }
+        });
+    }
+    Csr::new(a.nrows, b.ncols, rowmap, entries, values)
+}
+
+/// Monomorphized numeric loop over a row range, writing into the shared
+/// output arrays at rowmap offsets.
+#[allow(clippy::too_many_arguments)]
+fn numeric_rows_into<A: crate::kkmem::accumulator::Accumulator>(
+    a: &Csr,
+    b: &Csr,
+    lo: usize,
+    hi: usize,
+    rowmap: &[usize],
+    opts: &SpgemmOptions,
+    mut acc: A,
+    e: &SyncSlice<Idx>,
+    v: &SyncSlice<f64>,
+) {
+    let lay = Layout::default();
+    let mut t = NullTracer;
+    let mut out: Vec<(Idx, f64)> = Vec::with_capacity(1 << 10);
+    for i in lo..hi {
+        numeric_row(&mut t, &lay, a, b, i, &mut acc, &mut out);
+        debug_assert_eq!(out.len(), rowmap[i + 1] - rowmap[i]);
+        if opts.sort_output {
+            out.sort_unstable_by_key(|&(c, _)| c);
+        }
+        let pos = rowmap[i];
+        for (off, &(c, val)) in out.iter().enumerate() {
+            // SAFETY: rows write disjoint [rowmap[i], rowmap[i+1]) ranges;
+            // threads own disjoint row sets.
+            unsafe {
+                e.write(pos + off, c);
+                v.write(pos + off, val);
+            }
+        }
+    }
+}
+
+/// Allocate the three CSR arrays of a matrix in `loc`; returns
+/// (rowmap, entries, values) region ids.
+pub fn alloc_csr_regions(
+    sim: &mut MemSim,
+    name: &str,
+    m: &Csr,
+    loc: Location,
+) -> Result<(RegionId, RegionId, RegionId), AllocError> {
+    alloc_csr_regions_sized(sim, name, m.nrows, m.nnz(), loc)
+}
+
+/// Same, from explicit dimensions (for outputs allocated pre-numeric).
+pub fn alloc_csr_regions_sized(
+    sim: &mut MemSim,
+    name: &str,
+    nrows: usize,
+    nnz: usize,
+    loc: Location,
+) -> Result<(RegionId, RegionId, RegionId), AllocError> {
+    let rowmap = sim.alloc(&format!("{name}.rowmap"), (nrows as u64 + 1) * 8, loc)?;
+    let entries = sim.alloc(&format!("{name}.entries"), (nnz as u64).max(1) * 4, loc)?;
+    let values = sim.alloc(&format!("{name}.values"), (nnz as u64).max(1) * 8, loc)?;
+    Ok((rowmap, entries, values))
+}
+
+/// Trace-window size for cache-resident accumulators: half the scaled
+/// L1, line-aligned.
+pub fn acc_trace_wrap(sim: &MemSim) -> u64 {
+    ((sim.spec.l1.size_bytes as u64 / 2) / 64 * 64).max(64)
+}
+
+/// Region bytes needed for a wrapped accumulator: the wrap window plus a
+/// line of slack (a wrapped 8-byte access can start at `wrap - 1`).
+pub fn acc_region_bytes(footprint: u64, wrap: u64) -> u64 {
+    footprint.min(wrap + 64).max(64)
+}
+
+/// Result of a simulated multiplication (the report comes separately
+/// from `MemSim::finish`).
+pub struct SimProduct {
+    pub c: Csr,
+    pub mults: u64,
+    /// Layout used (exposed for chunked callers).
+    pub layout: Layout,
+}
+
+/// Simulated KKMEM: allocates all structures per `placement`, then runs
+/// the numeric phase through the machine simulator. Fails if a structure
+/// does not fit its pool (the paper excludes such runs, e.g. 32 GB
+/// Laplace in 96 GB DDR).
+pub fn spgemm_sim(
+    sim: &mut MemSim,
+    a: &Csr,
+    b: &Csr,
+    placement: Placement,
+    opts: &SpgemmOptions,
+) -> Result<SimProduct, AllocError> {
+    assert_eq!(a.ncols, b.nrows, "spgemm shape mismatch");
+    sim.set_compute_efficiency(crate::memory::machine::lane_efficiency(
+        a.avg_degree(),
+        b.avg_degree(),
+    ));
+    // Symbolic phase (not instrumented — the paper studies the numeric
+    // phase; §2.1).
+    let b_comp = CompressedMatrix::compress(b);
+    let sizes = symbolic(a, &b_comp);
+    let rowmap = rowmap_from_sizes(&sizes);
+    let nnz = *rowmap.last().expect("rowmap nonempty");
+    let row_ub = max_row_upper_bound(a, b);
+
+    let (a_rm, a_en, a_va) = alloc_csr_regions(sim, "A", a, placement.a)?;
+    let (b_rm, b_en, b_va) = alloc_csr_regions(sim, "B", b, placement.b)?;
+    let (c_rm, c_en, c_va) = alloc_csr_regions_sized(sim, "C", a.nrows, nnz, placement.c)?;
+    // Hash accumulators are cache-resident in practice; wrap their trace
+    // window to half the (scaled) L1 so that relation survives scaling.
+    let acc_wrap = acc_trace_wrap(sim);
+    let footprint = opts.acc.footprint_bytes(row_ub, b.ncols);
+    let acc_bytes = if opts.acc == crate::kkmem::mempool::AccKind::Hash {
+        acc_region_bytes(footprint, acc_wrap)
+    } else {
+        footprint.max(64)
+    };
+    let acc_region = sim.alloc("accumulator", acc_bytes, placement.acc)?;
+    let lay = Layout {
+        a_rowmap: a_rm,
+        a_entries: a_en,
+        a_values: a_va,
+        b_rowmap: b_rm,
+        b_entries: b_en,
+        b_values: b_va,
+        c_rowmap: c_rm,
+        c_entries: c_en,
+        c_values: c_va,
+        acc: acc_region,
+        ..Default::default()
+    };
+
+    let mut acc = PooledAcc::build_wrapped(
+        opts.acc,
+        row_ub,
+        b.ncols,
+        opts.tl_l1_entries,
+        acc_region,
+        acc_wrap,
+    );
+    let mut entries = vec![0 as Idx; nnz];
+    let mut values = vec![0.0f64; nnz];
+    let mut out: Vec<(Idx, f64)> = Vec::new();
+    let mut mults = 0u64;
+    for i in 0..a.nrows {
+        mults += numeric_row(sim, &lay, a, b, i, &mut acc, &mut out);
+        if opts.sort_output {
+            out.sort_unstable_by_key(|&(c, _)| c);
+        }
+        // Rowmap write for this row (streamed).
+        sim.write(lay.c_rowmap, (i as u64 + 1) * 8, 8);
+        emit_row(sim, &lay, rowmap[i], &out, &mut entries, &mut values);
+    }
+    let c = Csr::new(a.nrows, b.ncols, rowmap, entries, values);
+    Ok(SimProduct { c, mults, layout: lay })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::scale::ScaleFactor;
+    use crate::memory::arch::{knl, KnlMode};
+    use crate::sparse::ops::spgemm_reference;
+
+    fn rand_pair(seed: u64) -> (Csr, Csr) {
+        (
+            crate::gen::rhs::random_csr(60, 40, 0, 6, seed),
+            crate::gen::rhs::random_csr(40, 70, 0, 6, seed + 1),
+        )
+    }
+
+    #[test]
+    fn native_matches_reference_all_acc_kinds() {
+        let (a, b) = rand_pair(10);
+        let expect = spgemm_reference(&a, &b);
+        for acc in [AccKind::Hash, AccKind::Dense, AccKind::TwoLevel] {
+            let opts = SpgemmOptions { acc, threads: 1, ..Default::default() };
+            let c = spgemm(&a, &b, &opts);
+            assert!(c.approx_eq(&expect, 1e-12), "acc {}", acc.name());
+        }
+    }
+
+    #[test]
+    fn native_parallel_matches_serial() {
+        let (a, b) = rand_pair(20);
+        let c1 = spgemm(&a, &b, &SpgemmOptions { threads: 1, ..Default::default() });
+        let c8 = spgemm(&a, &b, &SpgemmOptions { threads: 8, ..Default::default() });
+        assert_eq!(c1.rowmap, c8.rowmap);
+        assert!(c1.approx_eq(&c8, 1e-12));
+    }
+
+    #[test]
+    fn sorted_output_is_sorted() {
+        let (a, b) = rand_pair(30);
+        let c = spgemm(
+            &a,
+            &b,
+            &SpgemmOptions { threads: 4, sort_output: true, ..Default::default() },
+        );
+        assert!(c.rows_sorted());
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn stencil_product_correct() {
+        let g = crate::gen::stencil::Grid::new(6, 6, 6);
+        let a = crate::gen::stencil::laplace3d(g);
+        let c = spgemm(&a, &a, &SpgemmOptions { threads: 4, ..Default::default() });
+        assert!(c.approx_eq(&spgemm_reference(&a, &a), 1e-12));
+    }
+
+    #[test]
+    fn simulated_matches_reference_and_reports() {
+        let (a, b) = rand_pair(40);
+        let arch = knl(KnlMode::Ddr, 64, ScaleFactor::default());
+        let mut sim = MemSim::new(arch.spec);
+        let placement = Placement::uniform(arch.default_loc);
+        let prod = spgemm_sim(&mut sim, &a, &b, placement, &SpgemmOptions::default()).unwrap();
+        assert!(prod.c.approx_eq(&spgemm_reference(&a, &b), 1e-12));
+        assert!(prod.mults > 0);
+        let rep = sim.finish();
+        assert_eq!(rep.flops, 2 * prod.mults);
+        assert!(rep.seconds > 0.0);
+        assert!(rep.gflops > 0.0);
+        assert!(rep.l1_miss_pct >= 0.0 && rep.l1_miss_pct <= 100.0);
+    }
+
+    #[test]
+    fn simulated_hbm_beats_ddr_on_irregular() {
+        // An irregular multiplication (scattered A columns) should be at
+        // least as fast in HBM as in DDR.
+        let a = crate::gen::rhs::uniform_degree(400, 3000, 4, 5);
+        let b = crate::gen::rhs::uniform_degree(3000, 400, 8, 6);
+        let run = |mode: KnlMode| {
+            let arch = knl(mode, 256, ScaleFactor::default());
+            let mut sim = MemSim::new(arch.spec);
+            let placement = Placement::uniform(arch.default_loc);
+            spgemm_sim(&mut sim, &a, &b, placement, &SpgemmOptions::default()).unwrap();
+            sim.finish()
+        };
+        let hbm = run(KnlMode::Hbm);
+        let ddr = run(KnlMode::Ddr);
+        assert!(
+            hbm.gflops >= ddr.gflops,
+            "HBM {} vs DDR {}",
+            hbm.gflops,
+            ddr.gflops
+        );
+    }
+
+    #[test]
+    fn sim_fails_when_pool_too_small() {
+        // 16 MiB scaled HBM cannot hold a ~26 MiB A.
+        let a = crate::gen::rhs::uniform_degree(200_000, 200_000, 10, 7);
+        assert!(a.size_bytes() > 16 * 1024 * 1024);
+        let arch = knl(KnlMode::Hbm, 64, ScaleFactor::default());
+        let mut sim = MemSim::new(arch.spec);
+        let res = spgemm_sim(
+            &mut sim,
+            &a,
+            &a,
+            Placement::uniform(arch.default_loc),
+            &SpgemmOptions::default(),
+        );
+        assert!(res.is_err());
+    }
+}

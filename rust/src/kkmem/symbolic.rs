@@ -1,0 +1,168 @@
+//! KKMEM symbolic phase: compute the exact number of nonzeros in each row
+//! of `C = A × B` using the compressed representation of `B` (§2.1).
+//! Row sizes let the numeric phase allocate `C` exactly and let each
+//! thread write its rows without synchronization.
+//!
+//! The paper focuses its multilevel analysis on the numeric phase, so the
+//! symbolic phase is not instrumented for the memory simulator.
+
+use super::compression::CompressedMatrix;
+use crate::sparse::csr::{Csr, Idx};
+
+const EMPTY: Idx = Idx::MAX;
+
+/// A small reusable linear-probing map from block id to OR-ed mask.
+struct BlockUnion {
+    mask: usize,
+    keys: Vec<Idx>,
+    vals: Vec<u32>,
+    occupied: Vec<u32>,
+}
+
+impl BlockUnion {
+    fn new(capacity: usize) -> Self {
+        let cap = capacity.next_power_of_two().max(16);
+        Self {
+            mask: cap - 1,
+            keys: vec![EMPTY; cap],
+            vals: vec![0; cap],
+            occupied: Vec::new(),
+        }
+    }
+
+    /// OR `bits` into `block`'s slot, returning the slot index.
+    #[inline]
+    fn or_insert(&mut self, block: Idx, bits: u32) -> usize {
+        if self.occupied.len() * 4 >= self.keys.len() * 3 {
+            self.grow();
+        }
+        let mut slot = (block.wrapping_mul(2654435761)) as usize & self.mask;
+        loop {
+            let k = self.keys[slot];
+            if k == block {
+                self.vals[slot] |= bits;
+                return slot;
+            }
+            if k == EMPTY {
+                self.keys[slot] = block;
+                self.vals[slot] = bits;
+                self.occupied.push(slot as u32);
+                return slot;
+            }
+            slot = (slot + 1) & self.mask;
+        }
+    }
+
+    fn grow(&mut self) {
+        let mut next = BlockUnion::new(self.keys.len() * 2);
+        for &s in &self.occupied {
+            let _ = next.or_insert(self.keys[s as usize], self.vals[s as usize]);
+        }
+        *self = next;
+    }
+
+    /// Total set bits, then reset.
+    fn drain_popcount(&mut self) -> usize {
+        let mut total = 0usize;
+        for &s in &self.occupied {
+            total += self.vals[s as usize].count_ones() as usize;
+            self.keys[s as usize] = EMPTY;
+        }
+        self.occupied.clear();
+        total
+    }
+}
+
+/// Exact per-row nonzero counts of `C = A × B` via compressed union.
+pub fn symbolic(a: &Csr, b_compressed: &CompressedMatrix) -> Vec<usize> {
+    assert_eq!(a.ncols, b_compressed.nrows, "symbolic shape mismatch");
+    let mut sizes = vec![0usize; a.nrows];
+    let mut acc = BlockUnion::new(64);
+    for i in 0..a.nrows {
+        let (acols, _) = a.row(i);
+        // §Perf note: a last-(block,slot) memo was tried here and
+        // reverted — no measurable gain and a stale-slot hazard across
+        // map growth (EXPERIMENTS.md §Perf iteration log).
+        for &k in acols {
+            let (blocks, masks) = b_compressed.row(k as usize);
+            for (&blk, &m) in blocks.iter().zip(masks) {
+                let _ = acc.or_insert(blk, m);
+            }
+        }
+        sizes[i] = acc.drain_popcount();
+    }
+    sizes
+}
+
+/// Upper bound on any single C row's nnz: `max_i Σ_{k∈A(i,:)} nnz(B(k,:))`
+/// — sizes the numeric accumulators (KKMEM's "uniform memory pool").
+pub fn max_row_upper_bound(a: &Csr, b: &Csr) -> usize {
+    let mut max_ub = 0usize;
+    for i in 0..a.nrows {
+        let (acols, _) = a.row(i);
+        let ub: usize = acols.iter().map(|&k| b.row_len(k as usize)).sum();
+        max_ub = max_ub.max(ub);
+    }
+    max_ub
+}
+
+/// Prefix-sum row sizes into a CSR rowmap.
+pub fn rowmap_from_sizes(sizes: &[usize]) -> Vec<usize> {
+    let mut rowmap = vec![0usize; sizes.len() + 1];
+    for (i, &s) in sizes.iter().enumerate() {
+        rowmap[i + 1] = rowmap[i] + s;
+    }
+    rowmap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::ops::spgemm_reference;
+
+    fn check_sizes(a: &Csr, b: &Csr) {
+        let comp = CompressedMatrix::compress(b);
+        let sizes = symbolic(a, &comp);
+        let c = spgemm_reference(a, b);
+        let expect: Vec<usize> = (0..c.nrows).map(|i| c.row_len(i)).collect();
+        assert_eq!(sizes, expect);
+    }
+
+    #[test]
+    fn matches_reference_on_random() {
+        let a = crate::gen::rhs::random_csr(40, 30, 0, 8, 1);
+        let b = crate::gen::rhs::random_csr(30, 50, 0, 8, 2);
+        check_sizes(&a, &b);
+    }
+
+    #[test]
+    fn matches_reference_on_stencil() {
+        let g = crate::gen::stencil::Grid::new(5, 5, 5);
+        let a = crate::gen::stencil::laplace3d(g);
+        check_sizes(&a, &a);
+    }
+
+    #[test]
+    fn empty_rows_are_zero() {
+        let a = Csr::empty(4, 4);
+        let b = Csr::identity(4);
+        let comp = CompressedMatrix::compress(&b);
+        assert_eq!(symbolic(&a, &comp), vec![0; 4]);
+    }
+
+    #[test]
+    fn upper_bound_bounds() {
+        let a = crate::gen::rhs::random_csr(20, 20, 1, 5, 3);
+        let b = crate::gen::rhs::random_csr(20, 20, 1, 5, 4);
+        let ub = max_row_upper_bound(&a, &b);
+        let comp = CompressedMatrix::compress(&b);
+        let sizes = symbolic(&a, &comp);
+        assert!(sizes.iter().all(|&s| s <= ub));
+    }
+
+    #[test]
+    fn rowmap_prefix_sum() {
+        assert_eq!(rowmap_from_sizes(&[2, 0, 3]), vec![0, 2, 2, 5]);
+        assert_eq!(rowmap_from_sizes(&[]), vec![0]);
+    }
+}

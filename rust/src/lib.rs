@@ -1,0 +1,39 @@
+//! # mlmem-spgemm
+//!
+//! A reproduction of *"Sparse Matrix-Matrix Multiplication on Multilevel
+//! Memory Architectures: Algorithms and Experiments"* (Deveci, Hammond,
+//! Wolf, Rajamanickam — Sandia, 2018) as a three-layer Rust + JAX/Pallas
+//! system:
+//!
+//! * **Layer 3 (this crate)** — the KKMEM SpGEMM engine, selective data
+//!   placement, the KNL/GPU chunking algorithms, a multilevel-memory
+//!   architecture simulator (the paper's KNL and P100 testbeds are not
+//!   available, so their memory subsystems are simulated; see DESIGN.md),
+//!   a job coordinator, and the benchmark harness that regenerates every
+//!   table and figure of the paper.
+//! * **Layer 2/1 (build-time Python)** — a JAX model + Pallas block-matmul
+//!   kernel AOT-lowered to HLO text, loaded and executed from Rust via the
+//!   PJRT CPU client (`runtime`), used as the dense-block fast path.
+//!
+//! Quickstart: see `examples/quickstart.rs` and `README.md`.
+
+pub mod gen;
+pub mod kkmem;
+pub mod memory;
+pub mod placement;
+pub mod tricount;
+pub mod coordinator;
+pub mod runtime;
+pub mod bench;
+pub mod chunk;
+pub mod sparse;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Convenience re-exports for examples and integration tests.
+pub mod prelude {
+    pub use crate::gen::{Domain, Grid, MgProblem, ScaleFactor};
+    pub use crate::sparse::{Csr, Dense};
+}

@@ -1,0 +1,290 @@
+//! `mlmem` — CLI front-end for the multilevel-memory SpGEMM system.
+//!
+//! Subcommands:
+//! * `bench`    — regenerate the paper's tables/figures (+ ablations)
+//! * `spgemm`   — one simulated multiplication with full report
+//! * `tricount` — triangle counting on a generated graph
+//! * `serve`    — run the coordinator service over a batch of jobs
+//! * `info`     — print machine profiles and artifact status
+
+use mlmem_spgemm::bench::experiments::{Mul, ProblemCache};
+use mlmem_spgemm::bench::figures::BenchConfig;
+use mlmem_spgemm::bench::{run_and_report, EXPERIMENTS};
+use mlmem_spgemm::coordinator::{PlannerOptions, Policy, SpgemmService};
+use mlmem_spgemm::gen::scale::ScaleFactor;
+use mlmem_spgemm::gen::stencil::Domain;
+use mlmem_spgemm::gen::{graphs::GraphKind, MgProblem};
+use mlmem_spgemm::kkmem::{spgemm_sim, CompressedMatrix, Placement, SpgemmOptions};
+use mlmem_spgemm::memory::arch::{knl, p100, Arch, GpuMode, KnlMode};
+use mlmem_spgemm::memory::{MemSim, SimReport};
+use mlmem_spgemm::tricount::{degree_sorted_lower, tricount_sim, TriPlacement};
+use mlmem_spgemm::util::cli::{CommandSpec, ParsedArgs};
+use std::path::PathBuf;
+use std::process::ExitCode;
+use std::sync::Arc;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        print_usage();
+        return ExitCode::FAILURE;
+    };
+    let result = match cmd.as_str() {
+        "bench" => cmd_bench(rest),
+        "spgemm" => cmd_spgemm(rest),
+        "tricount" => cmd_tricount(rest),
+        "serve" => cmd_serve(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(format!("unknown command `{other}`\n")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(msg) => {
+            eprintln!("{msg}");
+            print_usage();
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "mlmem — multilevel-memory SpGEMM (Deveci et al. 2018 reproduction)\n\n\
+         Commands:\n  \
+         bench     regenerate the paper's tables/figures\n  \
+         spgemm    one simulated multiplication\n  \
+         tricount  triangle counting on a generated graph\n  \
+         serve     run the coordinator service over a job batch\n  \
+         info      machine profiles + artifact status\n\n\
+         Use `mlmem <command> --help` for flags."
+    );
+}
+
+fn scale_from(p: &ParsedArgs) -> Result<ScaleFactor, String> {
+    Ok(ScaleFactor::new(p.u64("scale-denom")?))
+}
+
+fn cmd_bench(argv: &[String]) -> Result<(), String> {
+    let spec = CommandSpec::new("bench", "regenerate the paper's tables and figures")
+        .opt("exp", "all", "experiment ids (comma list) or `all`")
+        .opt("sizes", "1,2,4,8,16,32", "A sizes in paper-GB")
+        .opt("graph-scale", "13", "log2 vertices for Figure 11 graphs")
+        .opt("scale-denom", "1024", "capacity scale denominator (1024 = paper-GB -> MiB)")
+        .opt("out-dir", "reports", "CSV output directory ('' to skip)")
+        .opt("seed", "42", "workload seed")
+        .switch("quick", "tiny sizes for smoke runs");
+    let p = spec.parse(argv)?;
+    let mut cfg = if p.flag("quick") { BenchConfig::quick() } else { BenchConfig::default() };
+    cfg.scale = scale_from(&p)?;
+    cfg.seed = p.u64("seed")?;
+    if !p.flag("quick") {
+        cfg.sizes_gb = p
+            .list("sizes")
+            .iter()
+            .map(|s| s.parse::<f64>().map_err(|e| format!("--sizes: {e}")))
+            .collect::<Result<_, _>>()?;
+        cfg.graph_scale = p.usize("graph-scale")? as u32;
+    }
+    let out = p.string("out-dir");
+    let out_dir = (!out.is_empty()).then(|| PathBuf::from(out));
+    run_and_report(&p.list("exp"), &cfg, out_dir.as_deref())
+}
+
+fn parse_machine(p: &ParsedArgs, threads: usize, scale: ScaleFactor) -> Result<Arch, String> {
+    let machine = p.str("machine");
+    match machine {
+        "knl" => {
+            let mode = KnlMode::parse(p.str("mode"))
+                .ok_or_else(|| format!("bad KNL mode `{}`", p.str("mode")))?;
+            Ok(knl(mode, threads, scale))
+        }
+        "gpu" | "p100" => {
+            let mode = GpuMode::parse(p.str("mode"))
+                .ok_or_else(|| format!("bad GPU mode `{}`", p.str("mode")))?;
+            Ok(p100(mode, scale))
+        }
+        other => Err(format!("unknown machine `{other}` (knl|gpu)")),
+    }
+}
+
+fn print_report(rep: &SimReport) {
+    println!("machine        : {}", rep.machine);
+    println!("threads        : {}", rep.threads);
+    println!("flops          : {}", rep.flops);
+    println!("simulated time : {:.6} s", rep.seconds);
+    println!("GFLOP/s        : {:.3}", rep.gflops);
+    println!(
+        "  compute {:.6}s  mem {:.6}s  copy {:.6}s  uvm {:.6}s",
+        rep.compute_seconds, rep.mem_seconds, rep.copy_seconds, rep.uvm_seconds
+    );
+    println!("L1 miss        : {:.2}%", rep.l1_miss_pct);
+    println!("L2 miss        : {:.2}%", rep.l2_miss_pct);
+    if let Some(mc) = rep.mcdram_miss_pct {
+        println!("MCDRAM miss    : {mc:.2}%");
+    }
+    for (i, tr) in rep.traffic.iter().enumerate() {
+        println!(
+            "pool[{i}]        : {} demand, {} bulk, {} latency events",
+            mlmem_spgemm::util::table::human_bytes(tr.demand_bytes()),
+            mlmem_spgemm::util::table::human_bytes(tr.bulk_read_bytes + tr.bulk_write_bytes),
+            tr.latency_events
+        );
+    }
+    if rep.uvm_faults > 0 {
+        println!("UVM faults     : {} ({} evictions)", rep.uvm_faults, rep.uvm_evictions);
+    }
+}
+
+fn cmd_spgemm(argv: &[String]) -> Result<(), String> {
+    let spec = CommandSpec::new("spgemm", "one simulated multiplication with a full report")
+        .opt("domain", "laplace", "laplace|bigstar|brick|elasticity")
+        .opt("mul", "rxa", "rxa|axp")
+        .opt("size-gb", "4", "A matrix size in paper-GB")
+        .opt("machine", "knl", "knl|gpu")
+        .opt("mode", "ddr", "knl: hbm|ddr|cache16|cache8; gpu: hbm|pinned|uvm")
+        .opt("threads", "256", "KNL thread count")
+        .opt("scale-denom", "1024", "capacity scale denominator");
+    let p = spec.parse(argv)?;
+    let scale = scale_from(&p)?;
+    let domain = Domain::parse(p.str("domain"))
+        .ok_or_else(|| format!("bad domain `{}`", p.str("domain")))?;
+    let mul = match p.str("mul") {
+        "rxa" => Mul::RxA,
+        "axp" => Mul::AxP,
+        other => return Err(format!("bad --mul `{other}`")),
+    };
+    let arch = parse_machine(&p, p.usize("threads")?, scale)?;
+    let mut cache = ProblemCache::default();
+    let prob: MgProblem = cache.get(domain, p.f64("size-gb")?, scale).clone();
+    let (a, b) = mul.operands(&prob);
+    println!(
+        "{} {}: A {}x{} nnz {}  B {}x{} nnz {}",
+        domain.name(),
+        mul.name(),
+        a.nrows,
+        a.ncols,
+        a.nnz(),
+        b.nrows,
+        b.ncols,
+        b.nnz()
+    );
+    let mut sim = MemSim::new(arch.spec.clone());
+    spgemm_sim(&mut sim, a, b, Placement::uniform(arch.default_loc), &SpgemmOptions::default())
+        .map_err(|e| format!("does not fit: {e}"))?;
+    print_report(&sim.finish());
+    Ok(())
+}
+
+fn cmd_tricount(argv: &[String]) -> Result<(), String> {
+    let spec = CommandSpec::new("tricount", "triangle counting on a generated graph")
+        .opt("graph", "g500", "g500|twitter|uk2005")
+        .opt("graph-scale", "13", "log2 vertex count")
+        .opt("machine", "knl", "knl|gpu")
+        .opt("mode", "ddr", "memory mode")
+        .opt("threads", "256", "KNL thread count")
+        .opt("seed", "42", "graph seed")
+        .opt("scale-denom", "1024", "capacity scale denominator")
+        .switch("dp", "place compressed L in fast memory");
+    let p = spec.parse(argv)?;
+    let scale = scale_from(&p)?;
+    let kind = GraphKind::parse(p.str("graph"))
+        .ok_or_else(|| format!("bad graph `{}`", p.str("graph")))?;
+    let arch = parse_machine(&p, p.usize("threads")?, scale)?;
+    let adj = kind.build(p.usize("graph-scale")? as u32, p.u64("seed")?);
+    println!("{}: {} vertices, {} edges", kind.name(), adj.nrows, adj.nnz() / 2);
+    let l = degree_sorted_lower(&adj);
+    let lc = CompressedMatrix::compress(&l);
+    let placement = if p.flag("dp") {
+        TriPlacement {
+            l: arch.default_loc,
+            lc: mlmem_spgemm::memory::Location::Pool(mlmem_spgemm::memory::FAST),
+            mask: arch.default_loc,
+        }
+    } else {
+        TriPlacement::uniform(arch.default_loc)
+    };
+    let mut sim = MemSim::new(arch.spec.clone());
+    let (tri, ops) =
+        tricount_sim(&mut sim, &l, &lc, placement).map_err(|e| format!("does not fit: {e}"))?;
+    println!("triangles      : {tri}  (AND ops: {ops})");
+    print_report(&sim.finish());
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<(), String> {
+    let spec = CommandSpec::new("serve", "run the coordinator service over a job batch")
+        .opt("jobs", "16", "number of multiplications to submit")
+        .opt("workers", "4", "executor worker threads")
+        .opt("machine", "knl", "knl|gpu")
+        .opt("mode", "ddr", "memory mode")
+        .opt("threads", "256", "KNL thread count")
+        .opt("size-gb", "1", "A size per job in paper-GB")
+        .opt("scale-denom", "1024", "capacity scale denominator");
+    let p = spec.parse(argv)?;
+    let scale = scale_from(&p)?;
+    let arch = Arc::new(parse_machine(&p, p.usize("threads")?, scale)?);
+    let jobs = p.usize("jobs")?;
+    let svc = SpgemmService::new(p.usize("workers")?, jobs * 2, PlannerOptions::default());
+    let mut cache = ProblemCache::default();
+    let size = p.f64("size-gb")?;
+    let wall = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for i in 0..jobs {
+        let domain = Domain::ALL[i % Domain::ALL.len()];
+        let prob = cache.get(domain, size, scale).clone();
+        let (a, b) = if i % 2 == 0 { Mul::RxA } else { Mul::AxP }.operands(&prob);
+        let h = svc
+            .submit_spgemm(Arc::new(a.clone()), Arc::new(b.clone()), Arc::clone(&arch), Policy::Auto)
+            .map_err(|e| e.to_string())?;
+        handles.push(h);
+    }
+    for h in handles {
+        let r = h.wait().map_err(|e| e.to_string())?;
+        println!(
+            "job {:>3}: {:<18} {:>8.2} GF/s  C nnz {}",
+            r.id,
+            r.decision.name(),
+            r.report.gflops,
+            r.c_nnz
+        );
+    }
+    let (sub, done, failed, rejected) = svc.metrics.snapshot();
+    println!(
+        "\n{done}/{sub} jobs done ({failed} failed, {rejected} rejected) in {:.2}s wall; \
+         aggregate simulated {:.2} GFLOP/s",
+        wall.elapsed().as_secs_f64(),
+        svc.aggregate_gflops()
+    );
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> Result<(), String> {
+    let spec = CommandSpec::new("info", "machine profiles + artifact status")
+        .opt("scale-denom", "1024", "capacity scale denominator");
+    let p = spec.parse(argv)?;
+    let scale = scale_from(&p)?;
+    let cfg = BenchConfig { scale, ..Default::default() };
+    mlmem_spgemm::bench::tables::machine_profiles(&cfg).print();
+    let dir = mlmem_spgemm::runtime::BlockExecutor::default_dir();
+    if mlmem_spgemm::runtime::BlockExecutor::artifacts_present(&dir) {
+        match mlmem_spgemm::runtime::BlockExecutor::load(&dir) {
+            Ok(exe) => println!(
+                "\nAOT artifacts: OK ({}; chunk {}x{}x{}, platform {})",
+                dir.display(),
+                exe.meta.m,
+                exe.meta.k,
+                exe.meta.n,
+                exe.platform()
+            ),
+            Err(e) => println!("\nAOT artifacts: present but failed to load: {e}"),
+        }
+    } else {
+        println!("\nAOT artifacts: missing (run `make artifacts`)");
+    }
+    println!("known experiments: {EXPERIMENTS:?}");
+    Ok(())
+}

@@ -1,0 +1,223 @@
+//! Allocation tracking: every simulated data structure (matrix arrays,
+//! accumulators, chunk staging buffers) is a [`Region`] in a global
+//! virtual address space, placed in a pool (or UVM-managed). The tracker
+//! enforces pool capacities with the fragmentation headroom the paper ran
+//! into (§4.1.1: >11 GB single arenas failing on 16 GB MCDRAM).
+
+use super::pool::{PoolId, PoolSpec};
+
+/// Where a region's bytes live.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Location {
+    /// Explicitly placed in one pool.
+    Pool(PoolId),
+    /// UVM-managed: pages migrate between host and HBM on touch.
+    Managed,
+}
+
+/// One tracked allocation.
+#[derive(Clone, Debug)]
+pub struct Region {
+    pub id: usize,
+    pub name: String,
+    pub base: u64,
+    pub bytes: u64,
+    pub loc: Location,
+    pub freed: bool,
+}
+
+impl Region {
+    #[inline]
+    pub fn contains(&self, addr: u64) -> bool {
+        addr >= self.base && addr < self.base + self.bytes
+    }
+}
+
+/// Error returned when an allocation does not fit its pool.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AllocError {
+    pub pool: &'static str,
+    pub requested: u64,
+    pub available: u64,
+}
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "allocation of {} B does not fit pool {} ({} B available after headroom)",
+            self.requested, self.pool, self.available
+        )
+    }
+}
+
+impl std::error::Error for AllocError {}
+
+const REGION_ALIGN: u64 = 4096;
+
+/// The allocation tracker. Addresses are never reused (freed regions keep
+/// their range so stale cache lines still resolve), but freed bytes are
+/// returned to the pool budget.
+#[derive(Clone, Debug)]
+pub struct AllocTracker {
+    pools: Vec<PoolSpec>,
+    used: Vec<u64>,
+    regions: Vec<Region>,
+    next_base: u64,
+}
+
+impl AllocTracker {
+    pub fn new(pools: Vec<PoolSpec>) -> Self {
+        let n = pools.len();
+        Self { pools, used: vec![0; n], regions: Vec::new(), next_base: REGION_ALIGN }
+    }
+
+    pub fn pool(&self, id: PoolId) -> &PoolSpec {
+        &self.pools[id.0]
+    }
+
+    pub fn pools(&self) -> &[PoolSpec] {
+        &self.pools
+    }
+
+    pub fn used(&self, id: PoolId) -> u64 {
+        self.used[id.0]
+    }
+
+    pub fn available(&self, id: PoolId) -> u64 {
+        self.pools[id.0].usable().saturating_sub(self.used[id.0])
+    }
+
+    /// Allocate `bytes` in `loc`. Managed regions are not budgeted against
+    /// a pool here (the UVM model enforces the HBM arena dynamically).
+    pub fn alloc(&mut self, name: &str, bytes: u64, loc: Location) -> Result<usize, AllocError> {
+        if let Location::Pool(p) = loc {
+            let avail = self.available(p);
+            if bytes > avail {
+                return Err(AllocError {
+                    pool: self.pools[p.0].name,
+                    requested: bytes,
+                    available: avail,
+                });
+            }
+            self.used[p.0] += bytes;
+        }
+        let id = self.regions.len();
+        let base = self.next_base;
+        self.next_base = (base + bytes + REGION_ALIGN - 1) / REGION_ALIGN * REGION_ALIGN
+            + REGION_ALIGN; // guard page between regions
+        self.regions.push(Region {
+            id,
+            name: name.to_string(),
+            base,
+            bytes,
+            loc,
+            freed: false,
+        });
+        Ok(id)
+    }
+
+    /// Return a region's bytes to its pool budget. The address range stays
+    /// reserved (no reuse) so in-flight cache lines still resolve.
+    pub fn free(&mut self, id: usize) {
+        let r = &mut self.regions[id];
+        assert!(!r.freed, "double free of region {} ({})", id, r.name);
+        r.freed = true;
+        if let Location::Pool(p) = r.loc {
+            self.used[p.0] -= r.bytes;
+        }
+    }
+
+    pub fn region(&self, id: usize) -> &Region {
+        &self.regions[id]
+    }
+
+    /// Resolve an address to its region (binary search by base — regions
+    /// are allocated in ascending address order).
+    pub fn resolve(&self, addr: u64) -> Option<&Region> {
+        let idx = self.regions.partition_point(|r| r.base <= addr);
+        if idx == 0 {
+            return None;
+        }
+        let r = &self.regions[idx - 1];
+        r.contains(addr).then_some(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::pool::{FAST, SLOW};
+
+    fn pools() -> Vec<PoolSpec> {
+        let mk = |name, cap: u64| PoolSpec {
+            name,
+            bandwidth_bps: 1e11,
+            latency_s: 1e-7,
+            capacity: cap,
+            alloc_headroom: 0.75,
+            max_outstanding: 64.0,
+            single_thread_bw_frac: 0.02,
+            random_bw_frac: 0.5,
+        };
+        vec![mk("fast", 1 << 20), mk("slow", 1 << 24)]
+    }
+
+    #[test]
+    fn alloc_and_resolve() {
+        let mut t = AllocTracker::new(pools());
+        let a = t.alloc("A", 10_000, Location::Pool(SLOW)).unwrap();
+        let b = t.alloc("B", 5_000, Location::Pool(FAST)).unwrap();
+        let ra = t.region(a).clone();
+        let rb = t.region(b).clone();
+        assert!(ra.base % 4096 == 0 && rb.base % 4096 == 0);
+        assert!(rb.base >= ra.base + ra.bytes);
+        assert_eq!(t.resolve(ra.base + 123).unwrap().id, a);
+        assert_eq!(t.resolve(rb.base).unwrap().id, b);
+        // Guard gap resolves to nothing.
+        assert!(t.resolve(ra.base + ra.bytes + 1).is_none());
+    }
+
+    #[test]
+    fn capacity_enforced_with_headroom() {
+        let mut t = AllocTracker::new(pools());
+        // fast usable = 0.75 MiB.
+        let usable = t.pool(FAST).usable();
+        assert!(t.alloc("big", usable + 1, Location::Pool(FAST)).is_err());
+        assert!(t.alloc("fits", usable, Location::Pool(FAST)).is_ok());
+        // Now full.
+        let err = t.alloc("more", 1, Location::Pool(FAST)).unwrap_err();
+        assert_eq!(err.available, 0);
+    }
+
+    #[test]
+    fn free_returns_budget() {
+        let mut t = AllocTracker::new(pools());
+        let usable = t.pool(FAST).usable();
+        let a = t.alloc("A", usable, Location::Pool(FAST)).unwrap();
+        t.free(a);
+        assert_eq!(t.available(FAST), usable);
+        // Freed region still resolves (stale cache lines).
+        let ra = t.region(a).clone();
+        assert!(t.resolve(ra.base).is_some());
+        assert!(t.region(a).freed);
+    }
+
+    #[test]
+    fn managed_not_budgeted() {
+        let mut t = AllocTracker::new(pools());
+        let id = t.alloc("uvm", 1 << 30, Location::Managed).unwrap();
+        assert_eq!(t.region(id).loc, Location::Managed);
+        assert_eq!(t.used(FAST), 0);
+        assert_eq!(t.used(SLOW), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_free_panics() {
+        let mut t = AllocTracker::new(pools());
+        let a = t.alloc("A", 64, Location::Pool(FAST)).unwrap();
+        t.free(a);
+        t.free(a);
+    }
+}

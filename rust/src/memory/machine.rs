@@ -1,0 +1,627 @@
+//! The machine simulator: routes every memory touch of an instrumented
+//! kernel through L1 → L2 → (MCDRAM cache) → pool / UVM, accumulates
+//! traffic, and converts the counters into simulated time with a
+//! roofline-style cost model.
+//!
+//! # Simulation model
+//!
+//! The kernel's *full* access stream runs through one representative
+//! cache hierarchy (per-core L1 + the core's L2 share). Compute and
+//! bandwidth are then divided across the configured thread count; the
+//! MLP-limited latency term uses each pool's system-wide
+//! `max_outstanding`. This single-hierarchy approximation preserves the
+//! quantities the paper's analysis rests on — L1/L2 miss ratios, per-pool
+//! line traffic, and the bandwidth/latency split — while keeping the
+//! simulation deterministic and fast.
+//!
+//! # Time model
+//!
+//! ```text
+//! t_compute  = flops / compute_rate(threads)
+//! t_bw[p]    = demand_bytes[p] / effective_bandwidth(p, threads)
+//! t_lat[p]   = latency_events[p] · latency[p] / max_outstanding[p]
+//! t_pool[p]  = max(t_bw[p], t_lat[p])      (a pool is bw- or MLP-bound)
+//! t_kernel   = max(t_compute, max_p t_pool[p])   (overlapped)
+//! t_total    = t_kernel + t_bulk_copies + t_uvm_faults   (serial parts)
+//! ```
+//!
+//! Bulk chunk copies and UVM page migrations are serial with compute, as
+//! in the paper (no double buffering; §4.2 discusses it as future work).
+
+use super::alloc::{AllocError, AllocTracker, Location, Region};
+use super::cache::{Cache, CacheSpec, LINE};
+use super::mcdram_cache::McdramCache;
+use super::pool::{PoolId, PoolSpec, PoolTraffic, FAST, SLOW};
+use super::uvm::{Uvm, UvmOutcome, UvmSpec};
+
+/// Region handle used by instrumented kernels.
+pub type RegionId = usize;
+
+/// Abstract memory tracer: the KKMEM kernels are generic over this so the
+/// same code runs under full simulation ([`MemSim`]) or natively with zero
+/// overhead ([`NullTracer`]).
+pub trait MemTracer {
+    /// Record a data read of `bytes` at `offset` within `region`.
+    fn read(&mut self, region: RegionId, offset: u64, bytes: u64);
+    /// Record a data write.
+    fn write(&mut self, region: RegionId, offset: u64, bytes: u64);
+    /// Record `n` floating-point operations.
+    fn flops(&mut self, n: u64);
+    /// True if this tracer actually simulates (lets kernels skip
+    /// address arithmetic entirely in the native path).
+    const ENABLED: bool;
+}
+
+/// Vector-lane efficiency of a row-wise SpGEMM on operands with average
+/// degrees `deg_a` and `deg_b`: saturating in the geometric-mean row
+/// work, calibrated so 7-nnz stencil rows land near the paper's Laplace
+/// plateau and 81-nnz elasticity rows near its peak.
+pub fn lane_efficiency(deg_a: f64, deg_b: f64) -> f64 {
+    let work = (deg_a.max(1.0) * deg_b.max(1.0)).sqrt();
+    work / (work + 5.0)
+}
+
+/// Zero-cost tracer for native performance runs.
+#[derive(Default, Clone, Copy)]
+pub struct NullTracer;
+
+impl MemTracer for NullTracer {
+    #[inline(always)]
+    fn read(&mut self, _r: RegionId, _o: u64, _b: u64) {}
+    #[inline(always)]
+    fn write(&mut self, _r: RegionId, _o: u64, _b: u64) {}
+    #[inline(always)]
+    fn flops(&mut self, _n: u64) {}
+    const ENABLED: bool = false;
+}
+
+/// Static description of a machine profile (see `arch.rs` for KNL/P100).
+#[derive(Clone, Debug)]
+pub struct MachineSpec {
+    pub name: String,
+    /// Pool 0 = fast (HBM/MCDRAM), pool 1 = slow (DDR/pinned host).
+    pub pools: Vec<PoolSpec>,
+    /// Per-core (per-representative-thread) L1.
+    pub l1: CacheSpec,
+    /// The core's share of L2 / LLC.
+    pub l2: CacheSpec,
+    /// `Some(bytes)` = KNL cache mode: MCDRAM fronts the slow pool.
+    pub mcdram_cache_bytes: Option<u64>,
+    /// UVM support (GPU profiles).
+    pub uvm: Option<UvmSpec>,
+    /// Active thread count for the time model.
+    pub threads: usize,
+    /// Physical cores (threads beyond this are hyperthreads).
+    pub cores: usize,
+    /// Achievable flops/s of one core running this kernel (calibrated to
+    /// the paper's compute-bound plateau, not the machine's peak — KKMEM
+    /// is a scalar hash-probing kernel, not a GEMM).
+    pub flops_per_core: f64,
+    /// Fractional extra throughput per hyperthread beyond `cores`.
+    pub ht_yield: f64,
+    /// Overlap factor for UVM fault latency (concurrent faults).
+    pub uvm_fault_overlap: f64,
+}
+
+impl MachineSpec {
+    pub fn compute_rate(&self) -> f64 {
+        let base = self.cores.min(self.threads) as f64 * self.flops_per_core;
+        let extra =
+            self.threads.saturating_sub(self.cores) as f64 * self.flops_per_core * self.ht_yield;
+        base + extra
+    }
+
+    pub fn fast(&self) -> &PoolSpec {
+        &self.pools[FAST.0]
+    }
+
+    pub fn slow(&self) -> &PoolSpec {
+        &self.pools[SLOW.0]
+    }
+}
+
+/// Result of a simulated run.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub machine: String,
+    pub threads: usize,
+    pub flops: u64,
+    pub seconds: f64,
+    pub gflops: f64,
+    pub compute_seconds: f64,
+    pub mem_seconds: f64,
+    pub copy_seconds: f64,
+    pub uvm_seconds: f64,
+    pub l1_miss_pct: f64,
+    pub l2_miss_pct: f64,
+    pub traffic: Vec<PoolTraffic>,
+    pub uvm_faults: u64,
+    pub uvm_evictions: u64,
+    /// MCDRAM memory-side cache miss ratio (cache-mode runs).
+    pub mcdram_miss_pct: Option<f64>,
+}
+
+/// The full machine simulator.
+pub struct MemSim {
+    pub spec: MachineSpec,
+    alloc: AllocTracker,
+    l1: Cache,
+    l2: Cache,
+    mcdram: Option<McdramCache>,
+    uvm: Option<Uvm>,
+    traffic: Vec<PoolTraffic>,
+    /// Last demand line id per pool (sequential-run detection).
+    last_line: Vec<u64>,
+    copy_seconds: f64,
+    flops: u64,
+    /// Per-workload compute efficiency in (0, 1]: the fraction of the
+    /// machine's calibrated scalar-kernel rate this multiplication's row
+    /// structure can use (short rows waste vector lanes — why the paper's
+    /// Laplace plateaus near 2 GFLOP/s while Elasticity reaches 5).
+    compute_efficiency: f64,
+}
+
+impl MemSim {
+    pub fn new(spec: MachineSpec) -> Self {
+        let alloc = AllocTracker::new(spec.pools.clone());
+        let l1 = Cache::new(spec.l1);
+        let l2 = Cache::new(spec.l2);
+        let mcdram = spec.mcdram_cache_bytes.map(McdramCache::new);
+        let uvm = spec.uvm.map(Uvm::new);
+        let n = spec.pools.len();
+        Self {
+            spec,
+            alloc,
+            l1,
+            l2,
+            mcdram,
+            uvm,
+            traffic: vec![PoolTraffic::default(); n],
+            last_line: vec![u64::MAX - 1; n],
+            copy_seconds: 0.0,
+            flops: 0,
+            compute_efficiency: 1.0,
+        }
+    }
+
+    /// Record a demand line touch on a pool, classifying sequential runs.
+    #[inline]
+    fn note_demand_line(&mut self, pool: usize, addr: u64) {
+        let line = addr / LINE as u64;
+        if line == self.last_line[pool].wrapping_add(1) {
+            self.traffic[pool].seq_lines += 1;
+        }
+        self.last_line[pool] = line;
+    }
+
+    /// Set the workload's compute efficiency (see field docs). Drivers
+    /// derive it from operand row densities via [`lane_efficiency`].
+    pub fn set_compute_efficiency(&mut self, eff: f64) {
+        self.compute_efficiency = eff.clamp(0.05, 1.0);
+    }
+
+    /// Allocate a named region.
+    pub fn alloc(&mut self, name: &str, bytes: u64, loc: Location) -> Result<RegionId, AllocError> {
+        self.alloc.alloc(name, bytes, loc)
+    }
+
+    pub fn free(&mut self, id: RegionId) {
+        self.alloc.free(id);
+    }
+
+    pub fn region(&self, id: RegionId) -> &Region {
+        self.alloc.region(id)
+    }
+
+    pub fn available(&self, pool: PoolId) -> u64 {
+        self.alloc.available(pool)
+    }
+
+    /// Bulk copy (the chunking algorithms' `copy2Fast`/`copy2Slow`):
+    /// streamed DMA at full bandwidth, serial with compute.
+    pub fn bulk_copy(&mut self, src: RegionId, dst: RegionId, bytes: u64) {
+        let (sp, dp) = (self.loc_pool(src), self.loc_pool(dst));
+        self.traffic[sp.0].bulk_read_bytes += bytes;
+        self.traffic[dp.0].bulk_write_bytes += bytes;
+        let threads = self.spec.threads;
+        let t_src = bytes as f64 / self.alloc.pool(sp).effective_bandwidth(threads);
+        let t_dst = bytes as f64 / self.alloc.pool(dp).effective_bandwidth(threads);
+        // Reads and writes of a memcpy pipeline overlap; the slower side
+        // plus one transfer latency bounds the copy.
+        self.copy_seconds += t_src.max(t_dst) + self.alloc.pool(sp).latency_s;
+    }
+
+    fn loc_pool(&self, id: RegionId) -> PoolId {
+        match self.alloc.region(id).loc {
+            Location::Pool(p) => p,
+            // Bulk transfers on managed memory stream from the host side.
+            Location::Managed => SLOW,
+        }
+    }
+
+    #[inline]
+    fn touch(&mut self, region: RegionId, offset: u64, bytes: u64, is_write: bool) {
+        debug_assert!(bytes > 0);
+        let r = self.alloc.region(region);
+        debug_assert!(
+            offset + bytes <= r.bytes,
+            "access past region `{}`: {}+{} > {}",
+            r.name,
+            offset,
+            bytes,
+            r.bytes
+        );
+        let base = r.base;
+        let loc = r.loc;
+        let first = (base + offset) / LINE as u64;
+        let last = (base + offset + bytes - 1) / LINE as u64;
+        for line in first..=last {
+            self.touch_line(line * LINE as u64, loc, is_write);
+        }
+    }
+
+    fn touch_line(&mut self, addr: u64, loc: Location, is_write: bool) {
+        let o1 = self.l1.access(addr, is_write);
+        if let Some(victim) = o1.writeback {
+            // L1 dirty victim lands in L2.
+            let o2 = self.l2.access(victim, true);
+            if let Some(v2) = o2.writeback {
+                self.line_to_backing(v2, true);
+            }
+        }
+        if o1.hit {
+            return;
+        }
+        let o2 = self.l2.access(addr, false);
+        if let Some(v2) = o2.writeback {
+            self.line_to_backing(v2, true);
+        }
+        if o2.hit {
+            return;
+        }
+        self.fill_from(addr, loc, is_write);
+    }
+
+    /// Resolve a victim address back to its region's backing store.
+    fn line_to_backing(&mut self, addr: u64, is_write: bool) {
+        let loc = self
+            .alloc
+            .resolve(addr)
+            .map(|r| r.loc)
+            // Lines from cleared/guard space default to the slow pool.
+            .unwrap_or(Location::Pool(SLOW));
+        self.fill_from(addr, loc, is_write);
+    }
+
+    /// Service an LLC miss (or write-back) at the backing store.
+    fn fill_from(&mut self, addr: u64, loc: Location, is_write: bool) {
+        match loc {
+            Location::Pool(p) => {
+                if p == SLOW {
+                    if let Some(mc) = self.mcdram.as_mut() {
+                        let wb_before = mc.writebacks;
+                        let hit = mc.access(addr, is_write);
+                        let new_wb = mc.writebacks - wb_before;
+                        // Victim write-backs stream to DDR.
+                        self.traffic[SLOW.0].lines_written += new_wb;
+                        if hit {
+                            // Served at MCDRAM speed.
+                            self.note_demand_line(FAST.0, addr);
+                            let t = &mut self.traffic[FAST.0];
+                            if is_write {
+                                t.lines_written += 1;
+                            } else {
+                                t.lines_read += 1;
+                                t.latency_events += 1;
+                            }
+                        } else {
+                            // DDR access + MCDRAM fill (fill charged to the
+                            // fast pool's write path).
+                            self.note_demand_line(SLOW.0, addr);
+                            let ts = &mut self.traffic[SLOW.0];
+                            ts.lines_read += 1;
+                            ts.latency_events += 1;
+                            self.traffic[FAST.0].lines_written += 1;
+                        }
+                        return;
+                    }
+                }
+                self.note_demand_line(p.0, addr);
+                let t = &mut self.traffic[p.0];
+                if is_write {
+                    t.lines_written += 1;
+                } else {
+                    t.lines_read += 1;
+                    t.latency_events += 1;
+                }
+            }
+            Location::Managed => {
+                let uvm = self
+                    .uvm
+                    .as_mut()
+                    .expect("managed region on a machine without UVM");
+                let page = uvm.spec().page_bytes;
+                match uvm.touch(addr) {
+                    UvmOutcome::Resident => {}
+                    UvmOutcome::Fault { evicted } => {
+                        // Page migrates host -> HBM.
+                        self.traffic[SLOW.0].bulk_read_bytes += page;
+                        self.traffic[FAST.0].bulk_write_bytes += page;
+                        if evicted {
+                            self.traffic[FAST.0].bulk_read_bytes += page;
+                            self.traffic[SLOW.0].bulk_write_bytes += page;
+                        }
+                    }
+                }
+                // The line itself is then served from HBM.
+                self.note_demand_line(FAST.0, addr);
+                let t = &mut self.traffic[FAST.0];
+                if is_write {
+                    t.lines_written += 1;
+                } else {
+                    t.lines_read += 1;
+                    t.latency_events += 1;
+                }
+            }
+        }
+    }
+
+    /// Flush caches (dirty write-backs) — call once at the end of a run.
+    fn flush(&mut self) {
+        for victim in self.l1.flush_dirty() {
+            let o2 = self.l2.access(victim, true);
+            if let Some(v2) = o2.writeback {
+                self.line_to_backing(v2, true);
+            }
+        }
+        for victim in self.l2.flush_dirty() {
+            self.line_to_backing(victim, true);
+        }
+    }
+
+    /// Invalidate cache contents without charging write-backs — used at
+    /// chunk boundaries where the bulk copy supersedes cached lines.
+    pub fn invalidate_caches(&mut self) {
+        self.l1.clear();
+        self.l2.clear();
+    }
+
+    /// Consume the simulator and produce the report.
+    pub fn finish(mut self) -> SimReport {
+        self.flush();
+        let threads = self.spec.threads;
+        let compute_seconds =
+            self.flops as f64 / (self.spec.compute_rate() * self.compute_efficiency);
+        let mut mem_seconds: f64 = 0.0;
+        for (i, pool) in self.spec.pools.iter().enumerate() {
+            let t = &self.traffic[i];
+            // Sequential-run demand lines stream at full bandwidth; the
+            // scattered remainder sees the pool's random-access rate.
+            let (seq_bytes, rand_bytes) = t.demand_split_bytes();
+            let t_bw = seq_bytes as f64 / pool.effective_bandwidth(threads)
+                + rand_bytes as f64 / pool.effective_random_bandwidth(threads);
+            let t_lat = pool.latency_seconds(t.latency_events);
+            mem_seconds = mem_seconds.max(t_bw.max(t_lat));
+        }
+        let (uvm_faults, uvm_evictions, uvm_seconds) = match &self.uvm {
+            Some(u) => {
+                let spec = u.spec();
+                let overlap = self.spec.uvm_fault_overlap.max(1.0);
+                // Cold faults overlap with other work; evictions (the
+                // thrashing regime) serialize on TLB shootdown +
+                // write-back and see no such overlap — this is what
+                // collapses UVM to pinned speed once the working set
+                // exceeds the HBM arena (§3.3).
+                let fault_lat = u.faults as f64 * spec.fault_latency_s / overlap
+                    + u.evictions as f64 * spec.fault_latency_s;
+                let migrate_bytes = (u.faults + u.evictions) * spec.page_bytes;
+                let migrate_t = migrate_bytes as f64
+                    / self.spec.slow().effective_bandwidth(threads);
+                (u.faults, u.evictions, fault_lat + migrate_t)
+            }
+            None => (0, 0, 0.0),
+        };
+        let t_kernel = compute_seconds.max(mem_seconds);
+        let seconds = t_kernel + self.copy_seconds + uvm_seconds;
+        let gflops = if seconds > 0.0 {
+            self.flops as f64 / seconds / 1e9
+        } else {
+            0.0
+        };
+        SimReport {
+            machine: self.spec.name.clone(),
+            threads,
+            flops: self.flops,
+            seconds,
+            gflops,
+            compute_seconds,
+            mem_seconds,
+            copy_seconds: self.copy_seconds,
+            uvm_seconds,
+            l1_miss_pct: self.l1.miss_ratio() * 100.0,
+            l2_miss_pct: self.l2.miss_ratio() * 100.0,
+            traffic: self.traffic.clone(),
+            uvm_faults,
+            uvm_evictions,
+            mcdram_miss_pct: self.mcdram.as_ref().map(|m| m.miss_ratio() * 100.0),
+        }
+    }
+}
+
+impl MemTracer for MemSim {
+    #[inline]
+    fn read(&mut self, region: RegionId, offset: u64, bytes: u64) {
+        self.touch(region, offset, bytes, false);
+    }
+
+    #[inline]
+    fn write(&mut self, region: RegionId, offset: u64, bytes: u64) {
+        self.touch(region, offset, bytes, true);
+    }
+
+    #[inline]
+    fn flops(&mut self, n: u64) {
+        self.flops += n;
+    }
+
+    const ENABLED: bool = true;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(mcdram: Option<u64>, uvm: Option<UvmSpec>) -> MachineSpec {
+        let mk = |name, bw: f64, lat: f64, cap: u64, out: f64| PoolSpec {
+            name,
+            bandwidth_bps: bw,
+            latency_s: lat,
+            capacity: cap,
+            alloc_headroom: 0.75,
+            max_outstanding: out,
+            single_thread_bw_frac: 0.05,
+            random_bw_frac: 0.6,
+        };
+        MachineSpec {
+            name: "test".into(),
+            pools: vec![
+                mk("fast", 400e9, 150e-9, 1 << 20, 512.0),
+                mk("slow", 90e9, 130e-9, 1 << 24, 512.0),
+            ],
+            l1: CacheSpec { size_bytes: 512, ways: 2 },
+            l2: CacheSpec { size_bytes: 4096, ways: 4 },
+            mcdram_cache_bytes: mcdram,
+            uvm,
+            threads: 16,
+            cores: 16,
+            flops_per_core: 50e6,
+            ht_yield: 0.4,
+            uvm_fault_overlap: 4.0,
+        }
+    }
+
+    #[test]
+    fn compute_rate_with_ht() {
+        let mut s = spec(None, None);
+        assert_eq!(s.compute_rate(), 16.0 * 50e6);
+        s.threads = 32;
+        assert_eq!(s.compute_rate(), 16.0 * 50e6 + 16.0 * 50e6 * 0.4);
+    }
+
+    #[test]
+    fn streaming_read_counts_lines() {
+        let mut sim = MemSim::new(spec(None, None));
+        let r = sim.alloc("buf", 64 * 100, Location::Pool(SLOW)).unwrap();
+        for i in 0..100u64 {
+            sim.read(r, i * 64, 64);
+        }
+        sim.flops(1000);
+        let rep = sim.finish();
+        // All 100 distinct lines missed both caches and hit the slow pool.
+        assert_eq!(rep.traffic[SLOW.0].lines_read, 100);
+        assert_eq!(rep.traffic[FAST.0].lines_read, 0);
+        assert!(rep.l1_miss_pct > 99.0);
+        assert!(rep.gflops > 0.0);
+    }
+
+    #[test]
+    fn cached_rereads_do_not_touch_pool() {
+        let mut sim = MemSim::new(spec(None, None));
+        let r = sim.alloc("buf", 64, Location::Pool(SLOW)).unwrap();
+        for _ in 0..50 {
+            sim.read(r, 0, 8);
+        }
+        let rep = sim.finish();
+        assert_eq!(rep.traffic[SLOW.0].lines_read, 1);
+        assert!(rep.l1_miss_pct < 5.0);
+    }
+
+    #[test]
+    fn dirty_writeback_reaches_pool() {
+        let mut sim = MemSim::new(spec(None, None));
+        let r = sim.alloc("buf", 64 * 4, Location::Pool(FAST)).unwrap();
+        sim.write(r, 0, 64);
+        let rep = sim.finish();
+        // Write-allocate: 1 line read... write-allocate counts as written
+        // on the fill path; flush adds the dirty write-back.
+        assert!(rep.traffic[FAST.0].lines_written >= 1);
+    }
+
+    #[test]
+    fn fast_pool_time_less_than_slow() {
+        // Same traffic placed fast vs slow → faster simulated time.
+        let run = |loc: Location| {
+            let mut sim = MemSim::new(spec(None, None));
+            let r = sim.alloc("buf", 64 * 4096, Location::Pool(SLOW)).unwrap();
+            let f = sim.alloc("buf2", 64 * 4096, loc).unwrap();
+            // Stream over f; r unused (keeps address layout comparable).
+            let _ = r;
+            for i in 0..4096u64 {
+                sim.read(f, i * 64, 64);
+            }
+            sim.flops(10);
+            sim.finish().seconds
+        };
+        assert!(run(Location::Pool(FAST)) < run(Location::Pool(SLOW)));
+    }
+
+    #[test]
+    fn mcdram_cache_mode_absorbs_reuse() {
+        // Second pass over a DDR-resident buffer hits the MCDRAM cache.
+        let mut sim = MemSim::new(spec(Some(1 << 18), None));
+        let r = sim.alloc("buf", 64 * 128, Location::Pool(SLOW)).unwrap();
+        for _pass in 0..2 {
+            for i in 0..128u64 {
+                sim.read(r, i * 64, 8);
+            }
+            // Evict from L1/L2 so the second pass reaches MCDRAM.
+            sim.invalidate_caches();
+        }
+        let rep = sim.finish();
+        assert_eq!(rep.traffic[SLOW.0].lines_read, 128, "second pass served by MCDRAM");
+        assert!(rep.mcdram_miss_pct.unwrap() < 60.0);
+    }
+
+    #[test]
+    fn uvm_fault_then_resident() {
+        let uvm = UvmSpec { page_bytes: 4096, hbm_arena: 1 << 16, fault_latency_s: 10e-6 };
+        let mut sim = MemSim::new(spec(None, Some(uvm)));
+        let r = sim.alloc("managed", 8192, Location::Managed).unwrap();
+        sim.read(r, 0, 8);
+        sim.read(r, 64, 8); // same page, L2 miss? maybe cached; force lines
+        sim.read(r, 4096, 8); // second page
+        let rep = sim.finish();
+        assert_eq!(rep.uvm_faults, 2);
+        assert!(rep.uvm_seconds > 0.0);
+        // Migrated pages stream from the slow pool.
+        assert_eq!(rep.traffic[SLOW.0].bulk_read_bytes, 2 * 4096);
+    }
+
+    #[test]
+    fn bulk_copy_charges_serial_time() {
+        let mut sim = MemSim::new(spec(None, None));
+        let s = sim.alloc("src", 1 << 16, Location::Pool(SLOW)).unwrap();
+        let d = sim.alloc("dst", 1 << 16, Location::Pool(FAST)).unwrap();
+        sim.bulk_copy(s, d, 1 << 16);
+        let rep = sim.finish();
+        assert!(rep.copy_seconds > 0.0);
+        assert_eq!(rep.traffic[SLOW.0].bulk_read_bytes, 1 << 16);
+        assert_eq!(rep.traffic[FAST.0].bulk_write_bytes, 1 << 16);
+    }
+
+    #[test]
+    fn alloc_capacity_respected() {
+        let mut sim = MemSim::new(spec(None, None));
+        // fast usable = 0.75 * 1 MiB.
+        assert!(sim.alloc("too big", 1 << 20, Location::Pool(FAST)).is_err());
+    }
+
+    #[test]
+    fn null_tracer_is_noop() {
+        let mut t = NullTracer;
+        t.read(0, 0, 8);
+        t.write(0, 0, 8);
+        t.flops(10);
+        assert!(!NullTracer::ENABLED);
+    }
+}

@@ -1,0 +1,124 @@
+//! KNL memory-side MCDRAM cache (the "Cache16"/"Cache8" BIOS modes of
+//! §3.2). The real hardware uses MCDRAM as a direct-mapped, line-granular
+//! cache in front of DDR; DDR accesses that hit it see MCDRAM bandwidth
+//! and a small tag-check overhead, misses see DDR plus the fill. We model
+//! exactly that: a direct-mapped tag array over 64 B lines.
+
+use super::cache::LINE;
+
+/// Direct-mapped memory-side cache state.
+#[derive(Clone, Debug)]
+pub struct McdramCache {
+    lines: usize,
+    tags: Vec<u64>, // tag+1 (0 = invalid)
+    dirty: Vec<bool>,
+    pub hits: u64,
+    pub misses: u64,
+    /// Dirty-victim write-backs to DDR caused by fills.
+    pub writebacks: u64,
+}
+
+impl McdramCache {
+    /// `size_bytes` is the MCDRAM capacity used as cache (8 or 16 "GB",
+    /// scaled).
+    pub fn new(size_bytes: u64) -> Self {
+        let lines = (size_bytes as usize / LINE).max(1);
+        Self {
+            lines,
+            tags: vec![0; lines],
+            dirty: vec![false; lines],
+            hits: 0,
+            misses: 0,
+            writebacks: 0,
+        }
+    }
+
+    pub fn size_bytes(&self) -> u64 {
+        (self.lines * LINE) as u64
+    }
+
+    /// Access the line containing `addr`. Returns `true` on hit. Misses
+    /// fill the (direct-mapped) slot; a dirty victim bumps `writebacks`.
+    pub fn access(&mut self, addr: u64, is_write: bool) -> bool {
+        let line = addr / LINE as u64;
+        let slot = (line % self.lines as u64) as usize;
+        let tag = line / self.lines as u64 + 1; // +1 so 0 means invalid
+        if self.tags[slot] == tag {
+            self.hits += 1;
+            self.dirty[slot] |= is_write;
+            true
+        } else {
+            self.misses += 1;
+            if self.tags[slot] != 0 && self.dirty[slot] {
+                self.writebacks += 1;
+            }
+            self.tags[slot] = tag;
+            self.dirty[slot] = is_write;
+            false
+        }
+    }
+
+    pub fn miss_ratio(&self) -> f64 {
+        let t = self.hits + self.misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.misses as f64 / t as f64
+        }
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+        self.writebacks = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn second_access_hits() {
+        let mut m = McdramCache::new(1024);
+        assert!(!m.access(0, false));
+        assert!(m.access(0, false));
+        assert!(m.access(32, false)); // same line
+    }
+
+    #[test]
+    fn direct_mapped_conflict() {
+        let mut m = McdramCache::new(1024); // 16 lines
+        assert!(!m.access(0, false));
+        assert!(!m.access(1024, false)); // same slot, different tag
+        assert!(!m.access(0, false)); // evicted by the conflict
+    }
+
+    #[test]
+    fn dirty_victim_counts_writeback() {
+        let mut m = McdramCache::new(1024);
+        m.access(0, true); // dirty fill
+        m.access(1024, false); // conflict evicts dirty line
+        assert_eq!(m.writebacks, 1);
+        m.access(2048, false); // clean victim: no writeback
+        assert_eq!(m.writebacks, 1);
+    }
+
+    #[test]
+    fn working_set_within_capacity_all_hits() {
+        // 1024 B cache = 16 lines; stream 16 lines repeatedly.
+        let mut m = McdramCache::new(1024);
+        for _ in 0..4 {
+            for i in 0..16u64 {
+                m.access(i * 64, false);
+            }
+        }
+        assert_eq!(m.misses, 16);
+        assert_eq!(m.hits, 48);
+    }
+
+    #[test]
+    fn capacity_rounding() {
+        assert_eq!(McdramCache::new(100).size_bytes(), 64);
+    }
+}

@@ -1,0 +1,20 @@
+//! Multilevel-memory architecture simulator — the substitution for the
+//! paper's KNL and P100 testbeds (DESIGN.md §2). Pools with distinct
+//! bandwidth/latency/MLP characteristics, a set-associative L1/L2 cache
+//! simulator, KNL's MCDRAM memory-side cache mode, GPU UVM page
+//! migration, allocation tracking with fragmentation headroom, and the
+//! roofline-style time model that converts measured traffic into
+//! simulated GFLOP/s.
+
+pub mod alloc;
+pub mod arch;
+pub mod cache;
+pub mod machine;
+pub mod mcdram_cache;
+pub mod pool;
+pub mod uvm;
+
+pub use alloc::Location;
+pub use arch::{Arch, GpuMode, KnlMode, MachineKind};
+pub use machine::{MachineSpec, MemSim, MemTracer, NullTracer, RegionId, SimReport};
+pub use pool::{PoolId, FAST, SLOW};

@@ -1,0 +1,194 @@
+//! Memory pools: the named spaces of a multilevel-memory machine (KNL
+//! MCDRAM vs DDR4; P100 HBM2 vs NVLink-pinned host DDR), each with peak
+//! bandwidth, access latency, capacity, and a memory-level-parallelism
+//! limit. Traffic counters accumulate per-pool line reads/writes and
+//! latency-paying misses during a simulated kernel run.
+//!
+//! The key modelling distinction the paper turns on: KNL's two pools
+//! differ mostly in *bandwidth* (latencies are comparable and deeply
+//! overlappable), while the GPU's pinned pool differs in *latency* with a
+//! hard cap on outstanding NVLink transactions. We capture the latter as
+//! `max_outstanding`: the random-access (line-granular) throughput of a
+//! pool is `max_outstanding × 64 B / latency`, which for NVLink v1 is
+//! orders of magnitude below its streaming bandwidth — exactly why the
+//! paper's chunked algorithm (bulk DMA copies + HBM compute) wins there.
+
+/// Identifies a pool within a machine. By convention pool 0 is the fast
+/// space (HBM/MCDRAM) and pool 1 the slow one (DDR/pinned host memory).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PoolId(pub usize);
+
+/// The fast pool of every machine profile.
+pub const FAST: PoolId = PoolId(0);
+/// The slow pool of every machine profile.
+pub const SLOW: PoolId = PoolId(1);
+
+/// Static characteristics of one memory pool.
+#[derive(Clone, Debug)]
+pub struct PoolSpec {
+    pub name: &'static str,
+    /// Peak streaming bandwidth in bytes/second (aggregate).
+    pub bandwidth_bps: f64,
+    /// Unloaded access latency in seconds.
+    pub latency_s: f64,
+    /// Capacity in bytes (already scaled; see `gen::scale`).
+    pub capacity: u64,
+    /// Fraction of `capacity` usable by allocations before fragmentation
+    /// kills them — the paper observed allocations over ~11 GB failing on
+    /// the 16 GB MCDRAM (§4.1.1), i.e. ~0.7.
+    pub alloc_headroom: f64,
+    /// Maximum overlapped outstanding line requests (MLP limit). Sets the
+    /// random-access throughput: `max_outstanding * 64 / latency_s`.
+    pub max_outstanding: f64,
+    /// Fraction of peak bandwidth reachable by one thread; effective
+    /// bandwidth scales with concurrency up to the peak.
+    pub single_thread_bw_frac: f64,
+    /// Fraction of peak bandwidth sustained on scattered line-granular
+    /// (demand-miss) traffic — DRAM page-hit behaviour. DDR4 sustains
+    /// ~30% of peak on random 64 B lines; MCDRAM/HBM stacks handle
+    /// scattered traffic far better. Bulk copies are unaffected.
+    pub random_bw_frac: f64,
+}
+
+impl PoolSpec {
+    /// Usable bytes for data placement.
+    pub fn usable(&self) -> u64 {
+        (self.capacity as f64 * self.alloc_headroom) as u64
+    }
+
+    /// Effective streaming bandwidth at a given thread/occupancy count.
+    pub fn effective_bandwidth(&self, threads: usize) -> f64 {
+        let frac = (self.single_thread_bw_frac * threads as f64).min(1.0);
+        self.bandwidth_bps * frac
+    }
+
+    /// Effective bandwidth for scattered demand-line traffic.
+    pub fn effective_random_bandwidth(&self, threads: usize) -> f64 {
+        self.effective_bandwidth(threads) * self.random_bw_frac
+    }
+
+    /// Random-access throughput in lines/second (latency-bound regime).
+    pub fn random_lines_per_sec(&self) -> f64 {
+        self.max_outstanding / self.latency_s
+    }
+
+    /// Seconds to service `events` latency-bound line requests, fully
+    /// overlapped up to the MLP limit.
+    pub fn latency_seconds(&self, events: u64) -> f64 {
+        events as f64 * self.latency_s / self.max_outstanding
+    }
+}
+
+/// Per-pool traffic accumulated during one simulated run.
+#[derive(Clone, Debug, Default)]
+pub struct PoolTraffic {
+    /// 64 B lines fetched from the pool (demand reads + write-allocates).
+    pub lines_read: u64,
+    /// 64 B lines written back to the pool.
+    pub lines_written: u64,
+    /// Demand lines that continued a sequential run (line == prev+1) —
+    /// these stream at full DRAM bandwidth; the remainder pay the pool's
+    /// `random_bw_frac`. Long stencil rows (Elasticity: 16 consecutive
+    /// lines) therefore stay bandwidth-friendly on DDR, exactly the
+    /// spatial-locality effect of §3.2.
+    pub seq_lines: u64,
+    /// Accesses that paid the pool's latency (LLC misses to this pool).
+    pub latency_events: u64,
+    /// Bytes moved by explicit bulk copies (chunking `copy2Fast` etc.).
+    pub bulk_read_bytes: u64,
+    pub bulk_write_bytes: u64,
+}
+
+impl PoolTraffic {
+    pub fn demand_bytes(&self) -> u64 {
+        (self.lines_read + self.lines_written) * super::cache::LINE as u64
+    }
+
+    /// Demand bytes split into (sequential, random) components.
+    pub fn demand_split_bytes(&self) -> (u64, u64) {
+        let total = self.lines_read + self.lines_written;
+        let seq = self.seq_lines.min(total);
+        (seq * super::cache::LINE as u64, (total - seq) * super::cache::LINE as u64)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.demand_bytes() + self.bulk_read_bytes + self.bulk_write_bytes
+    }
+
+    pub fn merge(&mut self, other: &PoolTraffic) {
+        self.lines_read += other.lines_read;
+        self.lines_written += other.lines_written;
+        self.seq_lines += other.seq_lines;
+        self.latency_events += other.latency_events;
+        self.bulk_read_bytes += other.bulk_read_bytes;
+        self.bulk_write_bytes += other.bulk_write_bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> PoolSpec {
+        PoolSpec {
+            name: "test",
+            bandwidth_bps: 100.0e9,
+            latency_s: 100e-9,
+            capacity: 1 << 24,
+            alloc_headroom: 0.75,
+            max_outstanding: 50.0,
+            single_thread_bw_frac: 0.05,
+            random_bw_frac: 0.5,
+        }
+    }
+
+    #[test]
+    fn usable_respects_headroom() {
+        assert_eq!(pool().usable(), (1u64 << 24) * 3 / 4);
+    }
+
+    #[test]
+    fn bandwidth_saturates() {
+        let p = pool();
+        assert!((p.effective_bandwidth(1) - 5.0e9).abs() < 1.0);
+        assert_eq!(p.effective_bandwidth(64), 100.0e9);
+        assert_eq!(p.effective_bandwidth(1000), 100.0e9);
+    }
+
+    #[test]
+    fn latency_model() {
+        let p = pool();
+        // 50 outstanding / 100 ns => 5e8 lines/s.
+        assert!((p.random_lines_per_sec() - 5.0e8).abs() < 1.0);
+        // 1e6 events at 2 ns effective each = 2 ms.
+        assert!((p.latency_seconds(1_000_000) - 2.0e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn low_mlp_pool_is_latency_crippled() {
+        // NVLink-pinned-like: high-ish bandwidth but tiny MLP — its
+        // random-access byte rate is a small fraction of streaming.
+        let pinned = PoolSpec {
+            name: "pinned",
+            bandwidth_bps: 33.0e9,
+            latency_s: 1.3e-6,
+            capacity: 1 << 30,
+            alloc_headroom: 0.9,
+            max_outstanding: 24.0,
+            single_thread_bw_frac: 0.01,
+            random_bw_frac: 0.5,
+        };
+        let random_bps = pinned.random_lines_per_sec() * 64.0;
+        assert!(random_bps < 0.1 * pinned.bandwidth_bps);
+    }
+
+    #[test]
+    fn traffic_merge_and_bytes() {
+        let mut a = PoolTraffic { lines_read: 2, lines_written: 1, ..Default::default() };
+        let b = PoolTraffic { lines_read: 3, bulk_read_bytes: 128, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.lines_read, 5);
+        assert_eq!(a.demand_bytes(), 6 * 64);
+        assert_eq!(a.total_bytes(), 6 * 64 + 128);
+    }
+}

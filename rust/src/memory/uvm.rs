@@ -1,0 +1,170 @@
+//! NVIDIA Unified Virtual Memory model (§3.3): pages of managed
+//! allocations migrate on first GPU touch from host memory into HBM; when
+//! HBM's UVM arena is full, LRU pages are evicted back to the host. An
+//! access to a resident page behaves like HBM; a fault pays the fault
+//! latency plus the page transfer at host-link bandwidth. This reproduces
+//! the paper's observations that UVM ≈ HBM (minus overhead) while the
+//! working set fits, and degrades to pinned-memory speed once it does not.
+
+/// UVM page size (real CUDA migrates at 64 KB granularity on P100;
+/// values are scaled like every other capacity — see `arch.rs`).
+#[derive(Clone, Copy, Debug)]
+pub struct UvmSpec {
+    pub page_bytes: u64,
+    /// Bytes of HBM available to hold migrated pages.
+    pub hbm_arena: u64,
+    /// Page-fault handling overhead in seconds (driver + TLB shootdown).
+    pub fault_latency_s: f64,
+}
+
+/// Outcome of touching one address in managed memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UvmOutcome {
+    /// Page already resident in HBM.
+    Resident,
+    /// Page migrated in; one eviction may have occurred.
+    Fault { evicted: bool },
+}
+
+#[derive(Clone, Debug)]
+pub struct Uvm {
+    spec: UvmSpec,
+    /// page id -> LRU stamp (resident set). Page ids are global
+    /// (addr / page_bytes).
+    resident: std::collections::HashMap<u64, u64>,
+    clock: u64,
+    pub faults: u64,
+    pub evictions: u64,
+    pub hits: u64,
+}
+
+impl Uvm {
+    pub fn new(spec: UvmSpec) -> Self {
+        assert!(spec.page_bytes >= 64);
+        Self {
+            spec,
+            resident: std::collections::HashMap::new(),
+            clock: 0,
+            faults: 0,
+            evictions: 0,
+            hits: 0,
+        }
+    }
+
+    pub fn spec(&self) -> UvmSpec {
+        self.spec
+    }
+
+    fn max_pages(&self) -> usize {
+        (self.spec.hbm_arena / self.spec.page_bytes).max(1) as usize
+    }
+
+    /// Touch `addr`; returns what happened so the machine model can charge
+    /// the right cost.
+    pub fn touch(&mut self, addr: u64) -> UvmOutcome {
+        let page = addr / self.spec.page_bytes;
+        self.clock += 1;
+        if let Some(stamp) = self.resident.get_mut(&page) {
+            *stamp = self.clock;
+            self.hits += 1;
+            return UvmOutcome::Resident;
+        }
+        self.faults += 1;
+        let mut evicted = false;
+        if self.resident.len() >= self.max_pages() {
+            // Evict the LRU page.
+            let (&lru, _) = self
+                .resident
+                .iter()
+                .min_by_key(|(_, &stamp)| stamp)
+                .expect("resident nonempty");
+            self.resident.remove(&lru);
+            self.evictions += 1;
+            evicted = true;
+        }
+        self.resident.insert(page, self.clock);
+        UvmOutcome::Fault { evicted }
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident.len() as u64 * self.spec.page_bytes
+    }
+
+    pub fn fault_ratio(&self) -> f64 {
+        let t = self.hits + self.faults;
+        if t == 0 {
+            0.0
+        } else {
+            self.faults as f64 / t as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uvm(pages: u64) -> Uvm {
+        Uvm::new(UvmSpec {
+            page_bytes: 4096,
+            hbm_arena: pages * 4096,
+            fault_latency_s: 20e-6,
+        })
+    }
+
+    #[test]
+    fn first_touch_faults_then_resident() {
+        let mut u = uvm(4);
+        assert_eq!(u.touch(0), UvmOutcome::Fault { evicted: false });
+        assert_eq!(u.touch(100), UvmOutcome::Resident);
+        assert_eq!(u.touch(4096), UvmOutcome::Fault { evicted: false });
+        assert_eq!(u.faults, 2);
+        assert_eq!(u.hits, 1);
+    }
+
+    #[test]
+    fn lru_eviction_when_full() {
+        let mut u = uvm(2);
+        u.touch(0); // page 0
+        u.touch(4096); // page 1
+        u.touch(0); // page 0 now MRU
+        let out = u.touch(8192); // page 2 evicts page 1
+        assert_eq!(out, UvmOutcome::Fault { evicted: true });
+        assert_eq!(u.touch(0), UvmOutcome::Resident);
+        assert!(matches!(u.touch(4096), UvmOutcome::Fault { .. }));
+    }
+
+    #[test]
+    fn working_set_fits_no_thrash() {
+        let mut u = uvm(8);
+        for _ in 0..10 {
+            for p in 0..8u64 {
+                u.touch(p * 4096);
+            }
+        }
+        assert_eq!(u.faults, 8); // cold faults only
+        assert_eq!(u.evictions, 0);
+    }
+
+    #[test]
+    fn working_set_exceeds_thrashes() {
+        // 9 pages cycling through an 8-page arena with LRU = every touch
+        // faults after warmup (classic LRU cycling pathology — the paper's
+        // "UVM achieves only pinned performance" regime).
+        let mut u = uvm(8);
+        for _ in 0..5 {
+            for p in 0..9u64 {
+                u.touch(p * 4096);
+            }
+        }
+        assert!(u.fault_ratio() > 0.9, "ratio {}", u.fault_ratio());
+    }
+
+    #[test]
+    fn resident_bytes_tracks() {
+        let mut u = uvm(4);
+        u.touch(0);
+        u.touch(4096);
+        assert_eq!(u.resident_bytes(), 8192);
+    }
+}

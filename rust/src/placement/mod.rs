@@ -1,0 +1,137 @@
+//! Selective data placement (§3.2.1, §3.3 Table 3): policies that decide
+//! which structures of `C = A × B` go into the fast memory pool.
+//!
+//! The paper's DP method places only `B` — the irregularly-accessed
+//! structure — in HBM, because `A` and `C` stream and the accumulators
+//! live in cache. Table 3 additionally pins one structure at a time into
+//! the slow pool to show `B`'s placement dominates.
+
+use crate::kkmem::symbolic::{rowmap_from_sizes, symbolic};
+use crate::kkmem::{CompressedMatrix, Placement};
+use crate::memory::alloc::Location;
+use crate::memory::pool::{FAST, SLOW};
+use crate::sparse::Csr;
+
+/// Which structure of `C = A × B` a policy refers to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Structure {
+    A,
+    B,
+    C,
+}
+
+impl Structure {
+    pub const ALL: [Structure; 3] = [Structure::A, Structure::B, Structure::C];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Structure::A => "A",
+            Structure::B => "B",
+            Structure::C => "C",
+        }
+    }
+}
+
+/// Estimated sizes of the three structures (C from a symbolic pass).
+#[derive(Clone, Copy, Debug)]
+pub struct ProblemSizes {
+    pub a_bytes: u64,
+    pub b_bytes: u64,
+    pub c_bytes: u64,
+}
+
+impl ProblemSizes {
+    /// Measure A and B directly and C via the (uninstrumented) symbolic
+    /// phase — KKMEM always runs symbolic before numeric anyway.
+    pub fn measure(a: &Csr, b: &Csr) -> Self {
+        let comp = CompressedMatrix::compress(b);
+        let sizes = symbolic(a, &comp);
+        let rowmap = rowmap_from_sizes(&sizes);
+        let c_nnz = *rowmap.last().expect("rowmap nonempty") as u64;
+        Self {
+            a_bytes: a.size_bytes(),
+            b_bytes: b.size_bytes(),
+            c_bytes: (a.nrows as u64 + 1) * 8 + c_nnz * 12,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.a_bytes + self.b_bytes + self.c_bytes
+    }
+
+    pub fn of(&self, s: Structure) -> u64 {
+        match s {
+            Structure::A => self.a_bytes,
+            Structure::B => self.b_bytes,
+            Structure::C => self.c_bytes,
+        }
+    }
+}
+
+/// The paper's DP policy: put only `B` in fast memory (accumulator too —
+/// it is small and cache-resident), A and C in slow memory. Returns
+/// `None` when `B` does not fit the fast pool's usable capacity ("DP only
+/// works when B fits into HBM").
+pub fn dp_placement(sizes: &ProblemSizes, fast_usable: u64) -> Option<Placement> {
+    if sizes.b_bytes <= fast_usable {
+        Some(Placement {
+            a: Location::Pool(SLOW),
+            b: Location::Pool(FAST),
+            c: Location::Pool(SLOW),
+            acc: Location::Pool(FAST),
+        })
+    } else {
+        None
+    }
+}
+
+/// Table 3 experiment: pin exactly one structure into the slow pool,
+/// everything else fast.
+pub fn pin_one(which: Structure) -> Placement {
+    let mut p = Placement::uniform(Location::Pool(FAST));
+    match which {
+        Structure::A => p.a = Location::Pool(SLOW),
+        Structure::B => p.b = Location::Pool(SLOW),
+        Structure::C => p.c = Location::Pool(SLOW),
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_c_estimate_matches_reference() {
+        let a = crate::gen::rhs::random_csr(30, 20, 1, 4, 1);
+        let b = crate::gen::rhs::random_csr(20, 40, 1, 4, 2);
+        let sizes = ProblemSizes::measure(&a, &b);
+        let c = crate::sparse::ops::spgemm_reference(&a, &b);
+        assert_eq!(sizes.c_bytes, c.size_bytes());
+        assert_eq!(sizes.a_bytes, a.size_bytes());
+        assert_eq!(sizes.total(), a.size_bytes() + b.size_bytes() + c.size_bytes());
+    }
+
+    #[test]
+    fn dp_requires_b_to_fit() {
+        let sizes = ProblemSizes { a_bytes: 100, b_bytes: 50, c_bytes: 80 };
+        let p = dp_placement(&sizes, 64).unwrap();
+        assert_eq!(p.b, Location::Pool(FAST));
+        assert_eq!(p.a, Location::Pool(SLOW));
+        assert_eq!(p.c, Location::Pool(SLOW));
+        assert!(dp_placement(&sizes, 49).is_none());
+    }
+
+    #[test]
+    fn pin_one_places_exactly_one_slow() {
+        for s in Structure::ALL {
+            let p = pin_one(s);
+            let slow_count = [p.a, p.b, p.c]
+                .iter()
+                .filter(|&&l| l == Location::Pool(SLOW))
+                .count();
+            assert_eq!(slow_count, 1, "{}", s.name());
+            assert_eq!(p.acc, Location::Pool(FAST));
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Dense-block SpGEMM fast path: when a staged chunk pair is dense
+//! enough, densify it into fixed-shape tiles and run the AOT-compiled
+//! Pallas block kernel instead of the scalar hashmap kernel. This is the
+//! L2/L1 integration point: the same HLO the Python layers exported is
+//! executed from the coordinator's hot path.
+
+use super::client::BlockExecutor;
+use crate::sparse::csr::Csr;
+use crate::sparse::Dense;
+use anyhow::Result;
+
+/// Densify rows `[rlo, rhi)` x cols `[clo, clo+w)` of `m` into a
+/// row-major `rows x cols` f32 buffer (zero padded).
+pub fn densify_block(
+    m: &Csr,
+    rlo: usize,
+    rhi: usize,
+    clo: usize,
+    rows: usize,
+    cols: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * cols];
+    for (r, i) in (rlo..rhi.min(m.nrows)).enumerate() {
+        let (cidx, vals) = m.row(i);
+        for (&c, &v) in cidx.iter().zip(vals) {
+            let c = c as usize;
+            if c >= clo && c < clo + cols {
+                out[r * cols + (c - clo)] = v as f32;
+            }
+        }
+    }
+    let _ = rows; // rows only bounds the buffer; fringe rows stay zero
+    out
+}
+
+/// Multiply two sparse matrices through the AOT dense-block executable,
+/// tiling the product space by the artifact's chunk geometry. Intended
+/// for dense-ish chunk pairs (the planner gates on fill ratio); works for
+/// any input and is verified against the scalar path in tests.
+pub fn spgemm_via_blocks(exe: &BlockExecutor, a: &Csr, b: &Csr) -> Result<Csr> {
+    assert_eq!(a.ncols, b.nrows, "spgemm shape mismatch");
+    let (cm, ck, cn) = (exe.meta.m, exe.meta.k, exe.meta.n);
+    let mut c = Dense::zeros(a.nrows, b.ncols);
+    let mut c_tile = vec![0.0f32; cm * cn];
+    for rlo in (0..a.nrows).step_by(cm) {
+        let rhi = (rlo + cm).min(a.nrows);
+        for nlo in (0..b.ncols).step_by(cn) {
+            let ncols = cn.min(b.ncols - nlo);
+            c_tile.iter_mut().for_each(|v| *v = 0.0);
+            for klo in (0..a.ncols).step_by(ck) {
+                let a_blk = densify_block(a, rlo, rhi, klo, cm, ck);
+                let b_rhi = (klo + ck).min(b.nrows);
+                let b_blk = densify_block(b, klo, b_rhi, nlo, ck, cn);
+                c_tile = exe.matmul_fused(&a_blk, &b_blk, &c_tile)?;
+            }
+            for r in 0..(rhi - rlo) {
+                for j in 0..ncols {
+                    let v = c_tile[r * cn + j];
+                    if v != 0.0 {
+                        c.set(rlo + r, nlo + j, v as f64);
+                    }
+                }
+            }
+        }
+    }
+    Ok(c.to_csr())
+}
+
+/// Fill ratio gate used by the planner: dense-block execution pays off
+/// when the chunk pair's tiles are filled beyond this threshold
+/// (ablation: `mlmem bench --exp ablate-dense-path`).
+pub const DENSE_PATH_FILL_THRESHOLD: f64 = 0.25;
+
+/// Decide whether a chunk pair should take the dense path: the majority
+/// of *nonzeros* must sit in tiles above the fill threshold — this
+/// weights the decision by where the multiply work actually is (empty
+/// tiles cost nothing on either path).
+pub fn should_use_dense_path(a: &Csr, b: &Csr, tile: usize) -> bool {
+    nnz_in_dense_tiles_fraction(a, tile) > 0.5 && nnz_in_dense_tiles_fraction(b, tile) > 0.5
+}
+
+fn nnz_in_dense_tiles_fraction(m: &Csr, tile: usize) -> f64 {
+    let hist = crate::sparse::blocked::tile_nnz_histogram(m, tile);
+    let total: usize = hist.iter().flatten().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let threshold = (tile * tile) as f64 * DENSE_PATH_FILL_THRESHOLD;
+    let in_dense: usize = hist
+        .iter()
+        .flatten()
+        .filter(|&&n| n as f64 > threshold)
+        .sum();
+    in_dense as f64 / total as f64
+}
+
+/// Sparse fallback used when artifacts are absent — same signature, so
+/// examples can switch transparently.
+pub fn spgemm_scalar_fallback(a: &Csr, b: &Csr, threads: usize) -> Csr {
+    crate::kkmem::spgemm(
+        a,
+        b,
+        &crate::kkmem::SpgemmOptions { threads, ..Default::default() },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn densify_extracts_window() {
+        let m = Csr::new(
+            2,
+            4,
+            vec![0, 2, 3],
+            vec![0, 3, 2],
+            vec![1.0, 2.0, 3.0],
+        );
+        let blk = densify_block(&m, 0, 2, 2, 2, 2);
+        // window cols [2,4): row0 has (3)->2.0 at local col 1; row1 has
+        // (2)->3.0 at local col 0.
+        assert_eq!(blk, vec![0.0, 2.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn densify_pads_fringe() {
+        let m = Csr::identity(2);
+        let blk = densify_block(&m, 0, 2, 0, 4, 4);
+        assert_eq!(blk.len(), 16);
+        assert_eq!(blk[0], 1.0);
+        assert_eq!(blk[5], 1.0);
+        assert_eq!(blk.iter().filter(|&&v| v != 0.0).count(), 2);
+    }
+
+    #[test]
+    fn dense_path_gate() {
+        // A dense band matrix should pass the gate at small tile size.
+        let dense = crate::gen::rhs::banded(64, 64, 8, 4, 1);
+        let sparse = crate::gen::rhs::uniform_degree(64, 4096, 2, 2);
+        assert!(should_use_dense_path(&dense, &dense, 8));
+        assert!(!should_use_dense_path(&sparse, &sparse, 8));
+    }
+
+    #[test]
+    fn scalar_fallback_matches_reference() {
+        let a = crate::gen::rhs::random_csr(20, 20, 1, 4, 1);
+        let b = crate::gen::rhs::random_csr(20, 20, 1, 4, 2);
+        let c = spgemm_scalar_fallback(&a, &b, 2);
+        assert!(c.approx_eq(&crate::sparse::ops::spgemm_reference(&a, &b), 1e-12));
+    }
+
+    // Executor-dependent tests live in rust/tests/runtime_roundtrip.rs
+    // (they need `make artifacts` to have run).
+}

@@ -1,0 +1,168 @@
+//! PJRT runtime: load the AOT artifacts (HLO text emitted by
+//! `python/compile/aot.py`) and execute them on the CPU client. Python
+//! never runs on this path — the artifacts are compiled once at startup
+//! and executed from the coordinator's hot loop.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shape metadata written by `aot.py` (flat `key=value` lines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkMeta {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl ChunkMeta {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut m = None;
+        let mut k = None;
+        let mut n = None;
+        for line in text.lines() {
+            let Some((key, val)) = line.split_once('=') else {
+                continue;
+            };
+            let val = val.trim();
+            match key.trim() {
+                "chunk_m" => m = Some(val.parse().context("chunk_m")?),
+                "chunk_k" => k = Some(val.parse().context("chunk_k")?),
+                "chunk_n" => n = Some(val.parse().context("chunk_n")?),
+                "dtype" => {
+                    if val != "f32" {
+                        bail!("unsupported artifact dtype {val}");
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(Self {
+            m: m.context("missing chunk_m")?,
+            k: k.context("missing chunk_k")?,
+            n: n.context("missing chunk_n")?,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("meta.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+}
+
+/// The compiled chunk executables.
+pub struct BlockExecutor {
+    client: xla::PjRtClient,
+    mm: xla::PjRtLoadedExecutable,
+    mm_fused: xla::PjRtLoadedExecutable,
+    pub meta: ChunkMeta,
+}
+
+impl BlockExecutor {
+    /// Default artifact directory (repo-relative), overridable with
+    /// `MLMEM_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("MLMEM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// True if the AOT artifacts exist (callers degrade gracefully —
+    /// e.g. fall back to the scalar kernel — when they don't).
+    pub fn artifacts_present(dir: &Path) -> bool {
+        dir.join("block_mm.hlo.txt").exists()
+            && dir.join("block_mm_fused.hlo.txt").exists()
+            && dir.join("meta.txt").exists()
+    }
+
+    /// Load + compile both artifacts on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta = ChunkMeta::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))
+        };
+        Ok(Self {
+            mm: compile("block_mm.hlo.txt")?,
+            mm_fused: compile("block_mm_fused.hlo.txt")?,
+            client,
+            meta,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn literal(&self, data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        anyhow::ensure!(
+            data.len() == rows * cols,
+            "buffer length {} != {}x{}",
+            data.len(),
+            rows,
+            cols
+        );
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<f32>> {
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// `C = A @ B` on one staged chunk (row-major f32 buffers).
+    pub fn matmul(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.meta;
+        let la = self.literal(a, m.m, m.k)?;
+        let lb = self.literal(b, m.k, m.n)?;
+        self.run(&self.mm, &[la, lb])
+    }
+
+    /// `C = A @ B + C_prev` — the fused chunk subkernel.
+    pub fn matmul_fused(&self, a: &[f32], b: &[f32], c_prev: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.meta;
+        let la = self.literal(a, m.m, m.k)?;
+        let lb = self.literal(b, m.k, m.n)?;
+        let lc = self.literal(c_prev, m.m, m.n)?;
+        self.run(&self.mm_fused, &[la, lb, lc])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses() {
+        let m = ChunkMeta::parse("chunk_m=256\nchunk_k=128\nchunk_n=64\ndtype=f32\n").unwrap();
+        assert_eq!(m, ChunkMeta { m: 256, k: 128, n: 64 });
+    }
+
+    #[test]
+    fn meta_rejects_bad_dtype() {
+        assert!(ChunkMeta::parse("chunk_m=1\nchunk_k=1\nchunk_n=1\ndtype=f64\n").is_err());
+    }
+
+    #[test]
+    fn meta_requires_all_dims() {
+        assert!(ChunkMeta::parse("chunk_m=1\nchunk_k=1\n").is_err());
+    }
+
+    #[test]
+    fn artifacts_present_checks_files() {
+        assert!(!BlockExecutor::artifacts_present(Path::new("/definitely/not/here")));
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the HLO-text artifacts AOT-exported by the
+//! Python layers and executes them from Rust. See `client` for the
+//! loader and `block_exec` for the dense-block SpGEMM fast path.
+
+pub mod block_exec;
+pub mod client;
+
+pub use block_exec::{spgemm_via_blocks, DENSE_PATH_FILL_THRESHOLD};
+pub use client::{BlockExecutor, ChunkMeta};

@@ -1,0 +1,139 @@
+//! Tile (dense-block) extraction for the AOT fast path: when a chunk pair
+//! is dense enough, the coordinator densifies its tiles and runs the
+//! Pallas-compiled block matmul (see `runtime::block_exec`) instead of the
+//! scalar hashmap kernel. This is the TPU-side analogue of the paper's
+//! "give the structured case to the fastest functional unit" design.
+
+use super::csr::Csr;
+
+/// A dense tile of a sparse matrix: rows `[row0, row0+h)`, cols
+/// `[col0, col0+w)`, row-major `data` (zero-padded at the fringe).
+#[derive(Clone, Debug)]
+pub struct Tile {
+    pub row0: usize,
+    pub col0: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f32>,
+    /// Number of nonzeros actually present (fill = nnz / (h*w)).
+    pub nnz: usize,
+}
+
+impl Tile {
+    pub fn fill_ratio(&self) -> f64 {
+        if self.h * self.w == 0 {
+            0.0
+        } else {
+            self.nnz as f64 / (self.h * self.w) as f64
+        }
+    }
+}
+
+/// Extract the dense tile of `m` at tile coordinates (`ti`, `tj`) for a
+/// `ts x ts` tiling. Fringe tiles are zero-padded to the full `ts x ts`
+/// footprint so the AOT executable (fixed shapes) can run them unchanged.
+pub fn extract_tile(m: &Csr, ti: usize, tj: usize, ts: usize) -> Tile {
+    let row0 = ti * ts;
+    let col0 = tj * ts;
+    assert!(row0 < m.nrows, "tile row {ti} out of range");
+    assert!(col0 < m.ncols, "tile col {tj} out of range");
+    let h = ts.min(m.nrows - row0);
+    let w = ts.min(m.ncols - col0);
+    let mut data = vec![0.0f32; ts * ts];
+    let mut nnz = 0usize;
+    for r in 0..h {
+        let (cols, vals) = m.row(row0 + r);
+        for (&c, &v) in cols.iter().zip(vals) {
+            let c = c as usize;
+            if c >= col0 && c < col0 + w {
+                data[r * ts + (c - col0)] = v as f32;
+                nnz += 1;
+            }
+        }
+    }
+    Tile { row0, col0, h, w, data, nnz }
+}
+
+/// Per-tile nonzero counts for a `ts x ts` tiling: `counts[ti][tj]`.
+/// Used by the planner to decide which chunk pairs can take the dense
+/// fast path.
+pub fn tile_nnz_histogram(m: &Csr, ts: usize) -> Vec<Vec<usize>> {
+    let tr = m.nrows.div_ceil(ts);
+    let tc = m.ncols.div_ceil(ts);
+    let mut counts = vec![vec![0usize; tc]; tr];
+    for i in 0..m.nrows {
+        let (cols, _) = m.row(i);
+        for &c in cols {
+            counts[i / ts][c as usize / ts] += 1;
+        }
+    }
+    counts
+}
+
+/// Fraction of tiles whose fill ratio exceeds `threshold`.
+pub fn dense_tile_fraction(m: &Csr, ts: usize, threshold: f64) -> f64 {
+    let hist = tile_nnz_histogram(m, ts);
+    let total: usize = hist.iter().map(|r| r.len()).sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let dense = hist
+        .iter()
+        .flatten()
+        .filter(|&&nnz| nnz as f64 / (ts * ts) as f64 > threshold)
+        .count();
+    dense as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::dense::Dense;
+
+    fn m() -> Csr {
+        // 5x5 with a dense 2x2 corner and a lone far entry.
+        let d = Dense::from_rows(&[
+            &[1.0, 2.0, 0.0, 0.0, 0.0],
+            &[3.0, 4.0, 0.0, 0.0, 0.0],
+            &[0.0, 0.0, 0.0, 0.0, 0.0],
+            &[0.0, 0.0, 0.0, 0.0, 0.0],
+            &[0.0, 0.0, 0.0, 0.0, 9.0],
+        ]);
+        d.to_csr()
+    }
+
+    #[test]
+    fn extract_tile_contents() {
+        let t = extract_tile(&m(), 0, 0, 2);
+        assert_eq!((t.h, t.w), (2, 2));
+        assert_eq!(t.data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.nnz, 4);
+        assert_eq!(t.fill_ratio(), 1.0);
+    }
+
+    #[test]
+    fn fringe_tile_padded() {
+        // Tile size 2 over a 5x5: tile (2,2) covers only row/col 4.
+        let t = extract_tile(&m(), 2, 2, 2);
+        assert_eq!((t.h, t.w), (1, 1));
+        assert_eq!(t.data.len(), 4); // padded to ts*ts
+        assert_eq!(t.data[0], 9.0);
+        assert_eq!(t.nnz, 1);
+    }
+
+    #[test]
+    fn histogram_counts_all_nnz() {
+        let h = tile_nnz_histogram(&m(), 2);
+        let total: usize = h.iter().flatten().sum();
+        assert_eq!(total, m().nnz());
+        assert_eq!(h[0][0], 4);
+        assert_eq!(h[2][2], 1);
+    }
+
+    #[test]
+    fn dense_fraction() {
+        // 3x3 tile grid: one full tile (fill 1.0), one with fill 0.25.
+        let f = dense_tile_fraction(&m(), 2, 0.5);
+        assert!((f - 1.0 / 9.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,138 @@
+//! Coordinate-format matrices: the construction format for generators and
+//! MatrixMarket IO, converted once into CSR for all computation.
+
+use super::csr::{Csr, Idx};
+
+/// A COO triplet matrix. Duplicates are allowed and are summed on
+/// conversion to CSR (MatrixMarket semantics).
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rows: Vec<usize>,
+    pub cols: Vec<Idx>,
+    pub vals: Vec<f64>,
+}
+
+impl Coo {
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Self { nrows, ncols, rows: Vec::new(), cols: Vec::new(), vals: Vec::new() }
+    }
+
+    pub fn with_capacity(nrows: usize, ncols: usize, cap: usize) -> Self {
+        Self {
+            nrows,
+            ncols,
+            rows: Vec::with_capacity(cap),
+            cols: Vec::with_capacity(cap),
+            vals: Vec::with_capacity(cap),
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.nrows && j < self.ncols, "({i},{j}) out of bounds");
+        self.rows.push(i);
+        self.cols.push(j as Idx);
+        self.vals.push(v);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Convert to CSR via counting sort on rows, summing duplicates and
+    /// sorting columns within each row.
+    pub fn to_csr(&self) -> Csr {
+        let mut counts = vec![0usize; self.nrows + 1];
+        for &r in &self.rows {
+            counts[r + 1] += 1;
+        }
+        for i in 0..self.nrows {
+            counts[i + 1] += counts[i];
+        }
+        let rowmap_raw = counts.clone();
+        let mut entries = vec![0 as Idx; self.nnz()];
+        let mut values = vec![0.0f64; self.nnz()];
+        let mut cursor = rowmap_raw.clone();
+        for k in 0..self.nnz() {
+            let r = self.rows[k];
+            let pos = cursor[r];
+            cursor[r] += 1;
+            entries[pos] = self.cols[k];
+            values[pos] = self.vals[k];
+        }
+        // Sort within rows and merge duplicates.
+        let mut out_rowmap = vec![0usize; self.nrows + 1];
+        let mut out_entries = Vec::with_capacity(self.nnz());
+        let mut out_values = Vec::with_capacity(self.nnz());
+        for i in 0..self.nrows {
+            let lo = rowmap_raw[i];
+            let hi = rowmap_raw[i + 1];
+            let mut perm: Vec<usize> = (lo..hi).collect();
+            perm.sort_by_key(|&k| entries[k]);
+            let mut last: Option<Idx> = None;
+            for &k in &perm {
+                let c = entries[k];
+                if last == Some(c) {
+                    *out_values.last_mut().expect("nonempty") += values[k];
+                } else {
+                    out_entries.push(c);
+                    out_values.push(values[k]);
+                    last = Some(c);
+                }
+            }
+            out_rowmap[i + 1] = out_entries.len();
+        }
+        Csr::new(self.nrows, self.ncols, out_rowmap, out_entries, out_values)
+    }
+}
+
+impl From<&Csr> for Coo {
+    fn from(m: &Csr) -> Self {
+        let mut coo = Coo::with_capacity(m.nrows, m.ncols, m.nnz());
+        for i in 0..m.nrows {
+            let (cols, vals) = m.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                coo.push(i, c as usize, v);
+            }
+        }
+        coo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_csr_sorts_and_sums_duplicates() {
+        let mut c = Coo::new(2, 3);
+        c.push(1, 2, 1.0);
+        c.push(0, 1, 2.0);
+        c.push(1, 2, 3.0); // duplicate of (1,2)
+        c.push(1, 0, 4.0);
+        let m = c.to_csr();
+        m.validate().unwrap();
+        assert_eq!(m.nnz(), 3);
+        assert!(m.rows_sorted());
+        assert_eq!(m.get(1, 2), 4.0);
+        assert_eq!(m.get(1, 0), 4.0);
+        assert_eq!(m.get(0, 1), 2.0);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let c = Coo::new(3, 3);
+        let m = c.to_csr();
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.rowmap, vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn roundtrip_csr_coo_csr() {
+        let m = Csr::new(2, 3, vec![0, 2, 3], vec![0, 2, 1], vec![1.0, 2.0, 3.0]);
+        let back = Coo::from(&m).to_csr();
+        assert!(m.approx_eq(&back, 0.0));
+    }
+}

@@ -1,0 +1,306 @@
+//! Compressed Sparse Row matrices — the storage format KKMEM operates on
+//! (the paper stores all of A, B, C row-wise; the chunking algorithms rely
+//! on row-wise partitions being contiguous in this layout).
+
+/// Column-index type. `u32` matches KokkosKernels' default local ordinal
+/// and halves index traffic vs. `u64` — this matters because the memory
+/// simulator charges for every byte the kernel touches.
+pub type Idx = u32;
+
+/// A CSR matrix with `f64` values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// `rowmap[i]..rowmap[i+1]` is the entry range of row `i`
+    /// (length `nrows + 1`).
+    pub rowmap: Vec<usize>,
+    /// Column indices, row-major concatenated.
+    pub entries: Vec<Idx>,
+    /// Numeric values, parallel to `entries`.
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from parts, validating CSR invariants.
+    pub fn new(
+        nrows: usize,
+        ncols: usize,
+        rowmap: Vec<usize>,
+        entries: Vec<Idx>,
+        values: Vec<f64>,
+    ) -> Self {
+        let m = Self { nrows, ncols, rowmap, entries, values };
+        m.validate().expect("invalid CSR");
+        m
+    }
+
+    /// An `nrows x ncols` matrix with no nonzeros.
+    pub fn empty(nrows: usize, ncols: usize) -> Self {
+        Self {
+            nrows,
+            ncols,
+            rowmap: vec![0; nrows + 1],
+            entries: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Identity matrix.
+    pub fn identity(n: usize) -> Self {
+        Self {
+            nrows: n,
+            ncols: n,
+            rowmap: (0..=n).collect(),
+            entries: (0..n as Idx).collect(),
+            values: vec![1.0; n],
+        }
+    }
+
+    /// Check all structural invariants; used by tests and debug assertions.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rowmap.len() != self.nrows + 1 {
+            return Err(format!(
+                "rowmap len {} != nrows+1 {}",
+                self.rowmap.len(),
+                self.nrows + 1
+            ));
+        }
+        if self.rowmap[0] != 0 {
+            return Err("rowmap[0] != 0".into());
+        }
+        for i in 0..self.nrows {
+            if self.rowmap[i] > self.rowmap[i + 1] {
+                return Err(format!("rowmap not monotone at row {i}"));
+            }
+        }
+        let nnz = *self.rowmap.last().expect("rowmap nonempty");
+        if self.entries.len() != nnz || self.values.len() != nnz {
+            return Err(format!(
+                "entries/values len {}/{} != nnz {}",
+                self.entries.len(),
+                self.values.len(),
+                nnz
+            ));
+        }
+        if let Some(&bad) = self.entries.iter().find(|&&c| (c as usize) >= self.ncols) {
+            return Err(format!("column index {bad} out of bounds (ncols={})", self.ncols));
+        }
+        Ok(())
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        *self.rowmap.last().expect("rowmap nonempty")
+    }
+
+    #[inline]
+    pub fn row_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.rowmap[i]..self.rowmap[i + 1]
+    }
+
+    #[inline]
+    pub fn row_len(&self, i: usize) -> usize {
+        self.rowmap[i + 1] - self.rowmap[i]
+    }
+
+    /// (column indices, values) of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[Idx], &[f64]) {
+        let r = self.row_range(i);
+        (&self.entries[r.clone()], &self.values[r])
+    }
+
+    /// Bytes of the three arrays — what the simulator charges for
+    /// placement/copies (rowmap usize=8B, entries u32=4B, values f64=8B).
+    pub fn size_bytes(&self) -> u64 {
+        (self.rowmap.len() * 8 + self.entries.len() * 4 + self.values.len() * 8) as u64
+    }
+
+    /// Mean nonzeros per row (δ in the paper's notation).
+    pub fn avg_degree(&self) -> f64 {
+        if self.nrows == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.nrows as f64
+        }
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.nrows).map(|i| self.row_len(i)).max().unwrap_or(0)
+    }
+
+    /// Sort column indices (and values) within each row.
+    pub fn sort_rows(&mut self) {
+        for i in 0..self.nrows {
+            let r = self.row_range(i);
+            let mut perm: Vec<usize> = (r.clone()).collect();
+            perm.sort_by_key(|&k| self.entries[k]);
+            let ents: Vec<Idx> = perm.iter().map(|&k| self.entries[k]).collect();
+            let vals: Vec<f64> = perm.iter().map(|&k| self.values[k]).collect();
+            self.entries[r.clone()].copy_from_slice(&ents);
+            self.values[r].copy_from_slice(&vals);
+        }
+    }
+
+    /// True if every row has strictly increasing column indices.
+    pub fn rows_sorted(&self) -> bool {
+        (0..self.nrows).all(|i| {
+            let (cols, _) = self.row(i);
+            cols.windows(2).all(|w| w[0] < w[1])
+        })
+    }
+
+    /// Extract rows `[lo, hi)` as a new CSR (same ncols). This is the
+    /// physical `copy2Fast` of the chunking algorithms.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Csr {
+        assert!(lo <= hi && hi <= self.nrows, "bad row slice {lo}..{hi}");
+        let base = self.rowmap[lo];
+        let rowmap: Vec<usize> = self.rowmap[lo..=hi].iter().map(|&p| p - base).collect();
+        let er = self.rowmap[lo]..self.rowmap[hi];
+        Csr {
+            nrows: hi - lo,
+            ncols: self.ncols,
+            rowmap,
+            entries: self.entries[er.clone()].to_vec(),
+            values: self.values[er].to_vec(),
+        }
+    }
+
+    /// Value at (i, j) by scanning row i — test helper, not a hot path.
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (cols, vals) = self.row(i);
+        cols.iter()
+            .position(|&c| c as usize == j)
+            .map(|k| vals[k])
+            .unwrap_or(0.0)
+    }
+
+    /// Frobenius-ish comparison against another CSR (entry-wise within tol),
+    /// tolerant to different entry orderings and explicit zeros.
+    pub fn approx_eq(&self, other: &Csr, tol: f64) -> bool {
+        if self.nrows != other.nrows || self.ncols != other.ncols {
+            return false;
+        }
+        for i in 0..self.nrows {
+            let mut a: std::collections::BTreeMap<Idx, f64> = std::collections::BTreeMap::new();
+            let (c1, v1) = self.row(i);
+            for (&c, &v) in c1.iter().zip(v1) {
+                *a.entry(c).or_insert(0.0) += v;
+            }
+            let (c2, v2) = other.row(i);
+            for (&c, &v) in c2.iter().zip(v2) {
+                *a.entry(c).or_insert(0.0) -= v;
+            }
+            if a.values().any(|&d| d.abs() > tol) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csr {
+        // [1 0 2]
+        // [0 3 0]
+        Csr::new(2, 3, vec![0, 2, 3], vec![0, 2, 1], vec![1.0, 2.0, 3.0])
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let m = small();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row_len(0), 2);
+        assert_eq!(m.row(1), (&[1u32][..], &[3.0][..]));
+        assert_eq!(m.get(0, 2), 2.0);
+        assert_eq!(m.get(0, 1), 0.0);
+        assert!((m.avg_degree() - 1.5).abs() < 1e-12);
+        assert_eq!(m.max_degree(), 2);
+    }
+
+    #[test]
+    fn size_bytes_accounting() {
+        let m = small();
+        // rowmap 3*8 + entries 3*4 + values 3*8 = 24+12+24 = 60
+        assert_eq!(m.size_bytes(), 60);
+    }
+
+    #[test]
+    fn validate_catches_bad_rowmap() {
+        let bad = Csr {
+            nrows: 2,
+            ncols: 2,
+            rowmap: vec![0, 2, 1],
+            entries: vec![0, 1],
+            values: vec![1.0, 1.0],
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_oob_column() {
+        let bad = Csr {
+            nrows: 1,
+            ncols: 2,
+            rowmap: vec![0, 1],
+            entries: vec![5],
+            values: vec![1.0],
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn identity_works() {
+        let i = Csr::identity(4);
+        i.validate().unwrap();
+        assert_eq!(i.nnz(), 4);
+        assert_eq!(i.get(2, 2), 1.0);
+        assert_eq!(i.get(2, 3), 0.0);
+    }
+
+    #[test]
+    fn slice_rows_extracts() {
+        let m = small();
+        let s = m.slice_rows(1, 2);
+        assert_eq!(s.nrows, 1);
+        assert_eq!(s.nnz(), 1);
+        assert_eq!(s.get(0, 1), 3.0);
+        s.validate().unwrap();
+        // Full slice is identical.
+        assert_eq!(m.slice_rows(0, 2), m);
+        // Empty slice is valid.
+        let e = m.slice_rows(1, 1);
+        assert_eq!(e.nrows, 0);
+        e.validate().unwrap();
+    }
+
+    #[test]
+    fn sort_rows_sorts() {
+        let mut m = Csr::new(1, 4, vec![0, 3], vec![3, 0, 2], vec![1.0, 2.0, 3.0]);
+        assert!(!m.rows_sorted());
+        m.sort_rows();
+        assert!(m.rows_sorted());
+        assert_eq!(m.entries, vec![0, 2, 3]);
+        assert_eq!(m.values, vec![2.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn approx_eq_order_insensitive() {
+        let a = Csr::new(1, 3, vec![0, 2], vec![0, 2], vec![1.0, 2.0]);
+        let b = Csr::new(1, 3, vec![0, 2], vec![2, 0], vec![2.0, 1.0]);
+        assert!(a.approx_eq(&b, 1e-12));
+        let c = Csr::new(1, 3, vec![0, 2], vec![2, 0], vec![2.0, 1.5]);
+        assert!(!a.approx_eq(&c, 1e-12));
+    }
+
+    #[test]
+    fn approx_eq_handles_explicit_zero() {
+        let a = Csr::new(1, 3, vec![0, 1], vec![0], vec![1.0]);
+        let b = Csr::new(1, 3, vec![0, 2], vec![0, 1], vec![1.0, 0.0]);
+        assert!(a.approx_eq(&b, 1e-12));
+    }
+}

@@ -1,0 +1,132 @@
+//! Small dense matrices: the brute-force oracle that every sparse kernel is
+//! tested against, and the tile container for the AOT dense-block path.
+
+use super::csr::Csr;
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Dense {
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        Self { nrows, ncols, data: vec![0.0; nrows * ncols] }
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let nrows = rows.len();
+        let ncols = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut d = Self::zeros(nrows, ncols);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.len(), ncols, "ragged rows");
+            d.data[i * ncols..(i + 1) * ncols].copy_from_slice(r);
+        }
+        d
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.ncols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.ncols + j] = v;
+    }
+
+    #[inline]
+    pub fn add(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.ncols + j] += v;
+    }
+
+    /// Naive O(n^3) matmul — the oracle.
+    pub fn matmul(&self, other: &Dense) -> Dense {
+        assert_eq!(self.ncols, other.nrows, "shape mismatch");
+        let mut out = Dense::zeros(self.nrows, other.ncols);
+        for i in 0..self.nrows {
+            for k in 0..self.ncols {
+                let a = self.get(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.ncols {
+                    out.add(i, j, a * other.get(k, j));
+                }
+            }
+        }
+        out
+    }
+
+    pub fn approx_eq(&self, other: &Dense, tol: f64) -> bool {
+        self.nrows == other.nrows
+            && self.ncols == other.ncols
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= tol)
+    }
+
+    /// Drop explicit zeros into CSR form.
+    pub fn to_csr(&self) -> Csr {
+        let mut rowmap = vec![0usize; self.nrows + 1];
+        let mut entries = Vec::new();
+        let mut values = Vec::new();
+        for i in 0..self.nrows {
+            for j in 0..self.ncols {
+                let v = self.get(i, j);
+                if v != 0.0 {
+                    entries.push(j as u32);
+                    values.push(v);
+                }
+            }
+            rowmap[i + 1] = entries.len();
+        }
+        Csr::new(self.nrows, self.ncols, rowmap, entries, values)
+    }
+}
+
+impl From<&Csr> for Dense {
+    fn from(m: &Csr) -> Self {
+        let mut d = Dense::zeros(m.nrows, m.ncols);
+        for i in 0..m.nrows {
+            let (cols, vals) = m.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                d.add(i, c as usize, v); // `add` so duplicate entries sum
+            }
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Dense::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Dense::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c, Dense::from_rows(&[&[19.0, 22.0], &[43.0, 50.0]]));
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        let d = Dense::from_rows(&[&[0.0, 1.5, 0.0], &[2.5, 0.0, 0.0]]);
+        let m = d.to_csr();
+        assert_eq!(m.nnz(), 2);
+        let back = Dense::from(&m);
+        assert!(d.approx_eq(&back, 0.0));
+    }
+
+    #[test]
+    fn identity_times_anything() {
+        let i = Dense::from(&Csr::identity(3));
+        let x = Dense::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0], &[7.0, 8.0, 9.0]]);
+        assert!(i.matmul(&x).approx_eq(&x, 0.0));
+    }
+}

@@ -1,0 +1,13 @@
+//! Sparse-matrix substrate: CSR/COO storage, dense oracle, structural ops,
+//! MatrixMarket IO, and tile extraction for the AOT dense-block path.
+
+pub mod blocked;
+pub mod coo;
+pub mod csr;
+pub mod dense;
+pub mod io;
+pub mod ops;
+
+pub use coo::Coo;
+pub use csr::{Csr, Idx};
+pub use dense::Dense;

@@ -1,0 +1,254 @@
+//! Structural operations on CSR matrices: transpose, addition, triangular
+//! extraction, row permutation, and a reference row-wise SpGEMM used as the
+//! oracle for KKMEM.
+
+use super::csr::{Csr, Idx};
+
+/// Transpose (used to form `P = Rᵀ` in the multigrid triple product).
+pub fn transpose(m: &Csr) -> Csr {
+    let mut counts = vec![0usize; m.ncols + 1];
+    for &c in &m.entries {
+        counts[c as usize + 1] += 1;
+    }
+    for j in 0..m.ncols {
+        counts[j + 1] += counts[j];
+    }
+    let rowmap = counts.clone();
+    let mut cursor = counts;
+    let mut entries = vec![0 as Idx; m.nnz()];
+    let mut values = vec![0.0f64; m.nnz()];
+    for i in 0..m.nrows {
+        let (cols, vals) = m.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            let pos = cursor[c as usize];
+            cursor[c as usize] += 1;
+            entries[pos] = i as Idx;
+            values[pos] = v;
+        }
+    }
+    Csr::new(m.ncols, m.nrows, rowmap, entries, values)
+}
+
+/// C = A + B (same shape), merging sorted or unsorted rows.
+pub fn spadd(a: &Csr, b: &Csr) -> Csr {
+    assert_eq!((a.nrows, a.ncols), (b.nrows, b.ncols), "spadd shape mismatch");
+    let mut rowmap = vec![0usize; a.nrows + 1];
+    let mut entries: Vec<Idx> = Vec::with_capacity(a.nnz() + b.nnz());
+    let mut values: Vec<f64> = Vec::with_capacity(a.nnz() + b.nnz());
+    let mut acc: std::collections::BTreeMap<Idx, f64> = std::collections::BTreeMap::new();
+    for i in 0..a.nrows {
+        acc.clear();
+        let (ca, va) = a.row(i);
+        for (&c, &v) in ca.iter().zip(va) {
+            *acc.entry(c).or_insert(0.0) += v;
+        }
+        let (cb, vb) = b.row(i);
+        for (&c, &v) in cb.iter().zip(vb) {
+            *acc.entry(c).or_insert(0.0) += v;
+        }
+        for (&c, &v) in &acc {
+            entries.push(c);
+            values.push(v);
+        }
+        rowmap[i + 1] = entries.len();
+    }
+    Csr::new(a.nrows, a.ncols, rowmap, entries, values)
+}
+
+/// Strictly-lower-triangular part (diagonal excluded) — the `L` of the
+/// triangle-counting kernel.
+pub fn lower_triangle(m: &Csr) -> Csr {
+    assert_eq!(m.nrows, m.ncols, "lower_triangle needs square input");
+    let mut rowmap = vec![0usize; m.nrows + 1];
+    let mut entries = Vec::new();
+    let mut values = Vec::new();
+    for i in 0..m.nrows {
+        let (cols, vals) = m.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            if (c as usize) < i {
+                entries.push(c);
+                values.push(v);
+            }
+        }
+        rowmap[i + 1] = entries.len();
+    }
+    Csr::new(m.nrows, m.ncols, rowmap, entries, values)
+}
+
+/// Symmetric permutation `P·M·Pᵀ` given `perm[new] = old`
+/// (row `new` of the result is row `perm[new]` of `m`, columns relabelled
+/// by the inverse). Used for the degree-sort preprocessing of triangle
+/// counting.
+pub fn permute_symmetric(m: &Csr, perm: &[usize]) -> Csr {
+    assert_eq!(m.nrows, m.ncols);
+    assert_eq!(perm.len(), m.nrows);
+    let mut inv = vec![0usize; perm.len()];
+    for (new, &old) in perm.iter().enumerate() {
+        inv[old] = new;
+    }
+    let mut rowmap = vec![0usize; m.nrows + 1];
+    let mut entries = Vec::with_capacity(m.nnz());
+    let mut values = Vec::with_capacity(m.nnz());
+    for new_i in 0..m.nrows {
+        let old_i = perm[new_i];
+        let (cols, vals) = m.row(old_i);
+        let mut row: Vec<(Idx, f64)> = cols
+            .iter()
+            .zip(vals)
+            .map(|(&c, &v)| (inv[c as usize] as Idx, v))
+            .collect();
+        row.sort_by_key(|&(c, _)| c);
+        for (c, v) in row {
+            entries.push(c);
+            values.push(v);
+        }
+        rowmap[new_i + 1] = entries.len();
+    }
+    Csr::new(m.nrows, m.ncols, rowmap, entries, values)
+}
+
+/// Reference row-wise SpGEMM via a BTreeMap accumulator — the correctness
+/// oracle for KKMEM (slow but obviously right).
+pub fn spgemm_reference(a: &Csr, b: &Csr) -> Csr {
+    assert_eq!(a.ncols, b.nrows, "spgemm shape mismatch: {}x{} * {}x{}",
+        a.nrows, a.ncols, b.nrows, b.ncols);
+    let mut rowmap = vec![0usize; a.nrows + 1];
+    let mut entries: Vec<Idx> = Vec::new();
+    let mut values: Vec<f64> = Vec::new();
+    let mut acc: std::collections::BTreeMap<Idx, f64> = std::collections::BTreeMap::new();
+    for i in 0..a.nrows {
+        acc.clear();
+        let (acols, avals) = a.row(i);
+        for (&k, &av) in acols.iter().zip(avals) {
+            let (bcols, bvals) = b.row(k as usize);
+            for (&j, &bv) in bcols.iter().zip(bvals) {
+                *acc.entry(j).or_insert(0.0) += av * bv;
+            }
+        }
+        for (&c, &v) in &acc {
+            entries.push(c);
+            values.push(v);
+        }
+        rowmap[i + 1] = entries.len();
+    }
+    Csr::new(a.nrows, b.ncols, rowmap, entries, values)
+}
+
+/// Number of scalar multiply-adds a row-wise SpGEMM performs:
+/// `Σ_i Σ_{k∈A(i,:)} nnz(B(k,:))`. The paper's GFLOP counts are `2×` this.
+pub fn spgemm_flops(a: &Csr, b: &Csr) -> u64 {
+    let mut mults: u64 = 0;
+    for &k in &a.entries {
+        mults += b.row_len(k as usize) as u64;
+    }
+    2 * mults
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::dense::Dense;
+
+    fn sample() -> Csr {
+        Csr::new(
+            3,
+            3,
+            vec![0, 2, 3, 5],
+            vec![0, 2, 1, 0, 2],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0],
+        )
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = sample();
+        let tt = transpose(&transpose(&m));
+        assert!(m.approx_eq(&tt, 0.0));
+    }
+
+    #[test]
+    fn transpose_matches_dense() {
+        let m = sample();
+        let t = transpose(&m);
+        let d = Dense::from(&m);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(t.get(j, i), d.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn spadd_matches_dense() {
+        let a = sample();
+        let b = transpose(&sample());
+        let c = spadd(&a, &b);
+        let dc = Dense::from(&c);
+        let mut expect = Dense::from(&a);
+        let db = Dense::from(&b);
+        for i in 0..3 {
+            for j in 0..3 {
+                expect.add(i, j, db.get(i, j));
+            }
+        }
+        assert!(dc.approx_eq(&expect, 1e-12));
+    }
+
+    #[test]
+    fn lower_triangle_strict() {
+        let l = lower_triangle(&sample());
+        for i in 0..3 {
+            let (cols, _) = l.row(i);
+            assert!(cols.iter().all(|&c| (c as usize) < i));
+        }
+        assert_eq!(l.get(2, 0), 4.0);
+        assert_eq!(l.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn spgemm_reference_matches_dense() {
+        let a = sample();
+        let b = transpose(&sample());
+        let c = spgemm_reference(&a, &b);
+        c.validate().unwrap();
+        let expect = Dense::from(&a).matmul(&Dense::from(&b));
+        assert!(Dense::from(&c).approx_eq(&expect, 1e-12));
+    }
+
+    #[test]
+    fn spgemm_identity() {
+        let a = sample();
+        let i = Csr::identity(3);
+        assert!(spgemm_reference(&a, &i).approx_eq(&a, 1e-12));
+        assert!(spgemm_reference(&i, &a).approx_eq(&a, 1e-12));
+    }
+
+    #[test]
+    fn flops_count() {
+        let a = sample();
+        let i = Csr::identity(3);
+        // Each of A's 5 entries hits a length-1 row of I: 5 mults = 10 flops.
+        assert_eq!(spgemm_flops(&a, &i), 10);
+    }
+
+    #[test]
+    fn permute_symmetric_preserves_structure() {
+        let m = sample();
+        let perm = vec![2usize, 0, 1];
+        let p = permute_symmetric(&m, &perm);
+        p.validate().unwrap();
+        // p[new_i][new_j] == m[perm[new_i]][perm[new_j]]
+        let mut inv = vec![0usize; 3];
+        for (n, &o) in perm.iter().enumerate() {
+            inv[o] = n;
+        }
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(p.get(inv[i], inv[j]), m.get(i, j));
+            }
+        }
+        // Identity permutation is a no-op.
+        let idp = permute_symmetric(&m, &[0, 1, 2]);
+        assert!(idp.approx_eq(&m, 0.0));
+    }
+}

@@ -1,0 +1,12 @@
+//! Linear-algebra triangle counting (§4.1.2) — the Wolf et al. method:
+//! sort vertices by degree, take the strictly-lower-triangular `L` of the
+//! permuted adjacency matrix, and count `Σ (L·L) ∘ L` using KKMEM's
+//! compressed representation: for each row `i`, the mask is row `i` of
+//! `L` itself, and each neighbour row `L(k,:)` is ANDed against it —
+//! `L × compressed(L)` with a fused mask, no output matrix materialized.
+
+pub mod count;
+pub mod lower;
+
+pub use count::{tricount, tricount_sim, TriPlacement};
+pub use lower::degree_sorted_lower;

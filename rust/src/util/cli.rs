@@ -1,0 +1,265 @@
+//! A small declarative command-line parser (the offline build has no
+//! `clap`). Supports subcommands, `--flag value`, `--flag=value`, boolean
+//! switches, defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of one flag.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `None` => boolean switch; `Some(default)` => value flag.
+    pub default: Option<String>,
+    pub required: bool,
+}
+
+/// Declarative command spec: name, about text, flags.
+#[derive(Clone, Debug, Default)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+impl CommandSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, flags: Vec::new() }
+    }
+
+    /// Value flag with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            required: false,
+        });
+        self
+    }
+
+    /// Required value flag.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, required: true });
+        self
+    }
+
+    /// Boolean switch (default false).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, required: false });
+        self
+    }
+
+    fn is_switch(&self, name: &str) -> Option<bool> {
+        self.flags
+            .iter()
+            .find(|f| f.name == name)
+            .map(|f| f.default.is_none() && !f.required)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = writeln!(s, "\nFlags:");
+        for f in &self.flags {
+            let kind = if f.required {
+                "<required>".to_string()
+            } else if let Some(d) = &f.default {
+                format!("[default: {d}]")
+            } else {
+                "[switch]".to_string()
+            };
+            let _ = writeln!(s, "  --{:<18} {} {}", f.name, f.help, kind);
+        }
+        s
+    }
+
+    /// Parse `args` (not including the subcommand itself).
+    pub fn parse(&self, args: &[String]) -> Result<ParsedArgs, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut switches: BTreeMap<String, bool> = BTreeMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            let Some(stripped) = a.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument `{a}`\n{}", self.usage()));
+            };
+            let (name, inline_val) = match stripped.split_once('=') {
+                Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                None => (stripped.to_string(), None),
+            };
+            match self.is_switch(&name) {
+                None => {
+                    return Err(format!("unknown flag `--{name}`\n{}", self.usage()));
+                }
+                Some(true) => {
+                    if let Some(v) = inline_val {
+                        let b: bool = v
+                            .parse()
+                            .map_err(|_| format!("flag --{name} expects true/false, got `{v}`"))?;
+                        switches.insert(name, b);
+                    } else {
+                        switches.insert(name, true);
+                    }
+                    i += 1;
+                }
+                Some(false) => {
+                    let val = if let Some(v) = inline_val {
+                        v
+                    } else {
+                        i += 1;
+                        args.get(i)
+                            .cloned()
+                            .ok_or_else(|| format!("flag --{name} needs a value"))?
+                    };
+                    values.insert(name, val);
+                    i += 1;
+                }
+            }
+        }
+        // Defaults + required checks.
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                values.entry(f.name.to_string()).or_insert_with(|| d.clone());
+            } else if f.required && !values.contains_key(f.name) {
+                return Err(format!("missing required flag --{}\n{}", f.name, self.usage()));
+            }
+        }
+        Ok(ParsedArgs { values, switches })
+    }
+}
+
+/// Result of parsing: typed getters.
+#[derive(Clone, Debug)]
+pub struct ParsedArgs {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+}
+
+impl ParsedArgs {
+    pub fn str(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared/parsed"))
+    }
+
+    pub fn string(&self, name: &str) -> String {
+        self.str(name).to_string()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        self.str(name)
+            .parse()
+            .map_err(|e| format!("flag --{name}: expected integer: {e}"))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, String> {
+        self.str(name)
+            .parse()
+            .map_err(|e| format!("flag --{name}: expected integer: {e}"))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, String> {
+        self.str(name)
+            .parse()
+            .map_err(|e| format!("flag --{name}: expected float: {e}"))
+    }
+
+    /// Comma-separated list of values, e.g. `--sizes 1,2,4`.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().to_string())
+            .collect()
+    }
+
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, String> {
+        self.list(name)
+            .iter()
+            .map(|s| {
+                s.parse()
+                    .map_err(|e| format!("flag --{name}: expected integer list: {e}"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CommandSpec {
+        CommandSpec::new("test", "a test command")
+            .opt("size", "8", "problem size")
+            .req("input", "input path")
+            .switch("verbose", "noisy output")
+            .opt("names", "a,b", "name list")
+    }
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_defaults() {
+        let p = spec().parse(&argv(&["--input", "f.mtx"])).unwrap();
+        assert_eq!(p.str("size"), "8");
+        assert_eq!(p.usize("size").unwrap(), 8);
+        assert_eq!(p.str("input"), "f.mtx");
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_equals_form_and_switch() {
+        let p = spec()
+            .parse(&argv(&["--input=x", "--size=32", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.usize("size").unwrap(), 32);
+        assert!(p.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_is_error() {
+        assert!(spec().parse(&argv(&["--size", "4"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        let e = spec().parse(&argv(&["--input", "x", "--bogus", "1"])).unwrap_err();
+        assert!(e.contains("unknown flag"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let p = spec()
+            .parse(&argv(&["--input", "x", "--names", "p, q ,r"]))
+            .unwrap();
+        assert_eq!(p.list("names"), vec!["p", "q", "r"]);
+    }
+
+    #[test]
+    fn help_is_err_with_usage() {
+        let e = spec().parse(&argv(&["--help"])).unwrap_err();
+        assert!(e.contains("a test command"));
+        assert!(e.contains("--size"));
+    }
+
+    #[test]
+    fn switch_with_explicit_value() {
+        let p = spec().parse(&argv(&["--input", "x", "--verbose=false"])).unwrap();
+        assert!(!p.flag("verbose"));
+    }
+}

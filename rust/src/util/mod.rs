@@ -1,0 +1,12 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! PRNG, CLI parsing, table/CSV output, statistics, thread pool, timing,
+//! property-test framework, and a JSON writer.
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,223 @@
+//! A minimal property-based testing framework (no `proptest` crate in the
+//! offline vendor set). Provides value generators over a seeded RNG, a
+//! `check` runner that reports the failing seed, and integer/vec shrinking.
+//!
+//! Usage:
+//! ```no_run
+//! use mlmem_spgemm::util::proptest::{check, Gen};
+//! check("addition commutes", 100, |g: &mut Gen| {
+//!     let a = g.i64(-1000, 1000);
+//!     let b = g.i64(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Xoshiro256;
+
+/// Generator handle passed to each property iteration.
+pub struct Gen {
+    rng: Xoshiro256,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn from_seed(seed: u64) -> Self {
+        Self { rng: Xoshiro256::seed_from_u64(seed), case_seed: seed }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.usize_below(hi - lo + 1)
+    }
+
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.i64_range(lo, hi)
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.f64_range(lo, hi)
+    }
+
+    pub fn bool(&mut self, p_true: f64) -> bool {
+        self.rng.bernoulli(p_true)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.rng.usize_below(xs.len())]
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..len).map(|_| self.usize(lo, hi)).collect()
+    }
+
+    /// Access the raw RNG (for generators that need more control).
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` for `cases` iterations with distinct deterministic seeds.
+/// On panic, re-raises with the failing case seed in the message so the
+/// case can be replayed with [`replay`].
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    let base = env_seed().unwrap_or(0x5EED_0000);
+    for case in 0..cases {
+        let seed = base ^ ((case as u64) << 32) ^ 0x9E37_79B9;
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::from_seed(seed);
+            prop(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = panic_message(&payload);
+            panic!(
+                "property `{name}` failed at case {case} (replay seed: {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a property with an exact seed reported by [`check`].
+pub fn replay<F>(seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen),
+{
+    let mut g = Gen::from_seed(seed);
+    prop(&mut g);
+}
+
+fn env_seed() -> Option<u64> {
+    std::env::var("PROPTEST_SEED").ok().and_then(|s| {
+        let s = s.trim();
+        if let Some(hex) = s.strip_prefix("0x") {
+            u64::from_str_radix(hex, 16).ok()
+        } else {
+            s.parse().ok()
+        }
+    })
+}
+
+fn panic_message(payload: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+/// Shrink a failing `usize` input to the smallest value that still fails.
+/// `fails(x)` must be deterministic.
+pub fn shrink_usize(mut failing: usize, fails: impl Fn(usize) -> bool) -> usize {
+    debug_assert!(fails(failing));
+    // Binary descent towards zero.
+    loop {
+        let mut advanced = false;
+        for candidate in [failing / 2, failing.saturating_sub(1)] {
+            if candidate < failing && fails(candidate) {
+                failing = candidate;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            return failing;
+        }
+    }
+}
+
+/// Shrink a failing vector by removing chunks then individual elements.
+pub fn shrink_vec<T: Clone>(mut failing: Vec<T>, fails: impl Fn(&[T]) -> bool) -> Vec<T> {
+    debug_assert!(fails(&failing));
+    let mut chunk = failing.len() / 2;
+    while chunk >= 1 {
+        let mut i = 0;
+        while i + chunk <= failing.len() {
+            let mut candidate = failing.clone();
+            candidate.drain(i..i + chunk);
+            if fails(&candidate) {
+                failing = candidate;
+                // stay at same i: more may be removable here
+            } else {
+                i += 1;
+            }
+        }
+        chunk /= 2;
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse twice is identity", 50, |g| {
+            let len = g.usize(0, 20);
+            let v = g.vec_usize(len, 0, 100);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always fails", 3, |_g| {
+                panic!("boom");
+            });
+        });
+        let msg = panic_message(&r.unwrap_err());
+        assert!(msg.contains("replay seed"), "got: {msg}");
+        assert!(msg.contains("boom"));
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        check("usize range", 200, |g| {
+            let v = g.usize(3, 9);
+            assert!((3..=9).contains(&v));
+            let f = g.f64(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        });
+    }
+
+    #[test]
+    fn shrink_usize_finds_boundary() {
+        // Fails iff >= 17; shrinker should land exactly on 17.
+        let min = shrink_usize(1000, |x| x >= 17);
+        assert_eq!(min, 17);
+    }
+
+    #[test]
+    fn shrink_vec_minimizes() {
+        // Fails iff the vec contains a 7 — minimal failing case is [7].
+        let v = vec![1, 2, 7, 3, 7, 4];
+        let min = shrink_vec(v, |xs| xs.contains(&7));
+        assert_eq!(min, vec![7]);
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut vals = Vec::new();
+        replay(0xABCD, |g| vals.push(g.u64()));
+        let mut vals2 = Vec::new();
+        replay(0xABCD, |g| vals2.push(g.u64()));
+        assert_eq!(vals, vals2);
+    }
+}

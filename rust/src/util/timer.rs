@@ -1,0 +1,66 @@
+//! Monotonic wall-clock timing helpers for the native (non-simulated)
+//! performance benches.
+
+use std::time::{Duration, Instant};
+
+/// A simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Run `f` once and return (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_secs())
+}
+
+/// Benchmark `f`: `warmup` unmeasured runs then `reps` measured runs,
+/// returning per-run seconds. The closure receives the rep index so callers
+/// can rotate inputs and defeat value caching.
+pub fn bench_runs(warmup: usize, reps: usize, mut f: impl FnMut(usize)) -> Vec<f64> {
+    for i in 0..warmup {
+        f(i);
+    }
+    (0..reps)
+        .map(|i| {
+            let t = Timer::start();
+            f(i);
+            t.elapsed_secs()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_result() {
+        let (v, secs) = time_it(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn bench_runs_counts() {
+        let mut calls = 0usize;
+        let samples = bench_runs(2, 5, |_| calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(samples.len(), 5);
+    }
+}

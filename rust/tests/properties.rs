@@ -1,0 +1,229 @@
+//! Cross-module property tests (our `util::proptest` mini-framework):
+//! the invariants DESIGN.md §6 commits to, exercised on randomized
+//! inputs with deterministic, replayable seeds.
+
+use mlmem_spgemm::chunk::partition::{csr_prefix_bytes, is_partition, partition_balanced, range_bytes};
+use mlmem_spgemm::chunk::{gpu_chunked_sim, knl_chunked_sim};
+use mlmem_spgemm::gen::rhs::{banded, random_csr, uniform_degree};
+use mlmem_spgemm::gen::scale::ScaleFactor;
+use mlmem_spgemm::kkmem::{spgemm, spgemm_sim, AccKind, Placement, SpgemmOptions};
+use mlmem_spgemm::memory::arch::{knl, p100, GpuMode, KnlMode};
+use mlmem_spgemm::memory::MemSim;
+use mlmem_spgemm::sparse::ops::{spgemm_reference, transpose};
+use mlmem_spgemm::sparse::Csr;
+use mlmem_spgemm::util::proptest::{check, Gen};
+
+fn gen_csr(g: &mut Gen, max_n: usize) -> Csr {
+    let nrows = g.usize(1, max_n);
+    let ncols = g.usize(1, max_n);
+    let max_deg = g.usize(0, 8.min(ncols));
+    random_csr(nrows, ncols, 0, max_deg, g.u64())
+}
+
+fn gen_pair(g: &mut Gen, max_n: usize) -> (Csr, Csr) {
+    let m = g.usize(1, max_n);
+    let k = g.usize(1, max_n);
+    let n = g.usize(1, max_n);
+    let da = g.usize(0, 6.min(k));
+    let db = g.usize(0, 6.min(n));
+    (
+        random_csr(m, k, 0, da, g.u64()),
+        random_csr(k, n, 0, db, g.u64()),
+    )
+}
+
+#[test]
+fn prop_native_spgemm_matches_reference_all_acc_kinds() {
+    check("native spgemm == reference", 40, |g| {
+        let (a, b) = gen_pair(g, 40);
+        let expect = spgemm_reference(&a, &b);
+        let acc = *g.pick(&[AccKind::Hash, AccKind::Dense, AccKind::TwoLevel]);
+        let threads = g.usize(1, 6);
+        let opts = SpgemmOptions { acc, threads, ..Default::default() };
+        let c = spgemm(&a, &b, &opts);
+        assert!(c.approx_eq(&expect, 1e-10), "acc {} threads {threads}", acc.name());
+        c.validate().unwrap();
+    });
+}
+
+#[test]
+fn prop_simulated_spgemm_matches_reference() {
+    check("simulated spgemm == reference", 15, |g| {
+        let (a, b) = gen_pair(g, 30);
+        let expect = spgemm_reference(&a, &b);
+        let scale = ScaleFactor::default();
+        let arch = if g.bool(0.5) {
+            knl(KnlMode::Ddr, 256, scale)
+        } else {
+            p100(GpuMode::Hbm, scale)
+        };
+        let mut sim = MemSim::new(arch.spec.clone());
+        let prod = spgemm_sim(
+            &mut sim,
+            &a,
+            &b,
+            Placement::uniform(arch.default_loc),
+            &SpgemmOptions::default(),
+        )
+        .expect("small problems always fit");
+        assert!(prod.c.approx_eq(&expect, 1e-10));
+        let rep = sim.finish();
+        assert!(rep.seconds >= 0.0 && rep.gflops >= 0.0);
+        assert!(rep.l1_miss_pct <= 100.0 && rep.l2_miss_pct <= 100.0);
+    });
+}
+
+#[test]
+fn prop_knl_chunked_equals_unchunked_any_budget() {
+    check("knl chunked == reference", 15, |g| {
+        let (a, b) = gen_pair(g, 30);
+        let expect = spgemm_reference(&a, &b);
+        let budget = g.usize(64, (b.size_bytes() as usize).max(65)) as u64;
+        let arch = knl(KnlMode::Ddr, 256, ScaleFactor::default());
+        let mut sim = MemSim::new(arch.spec);
+        let p = knl_chunked_sim(&mut sim, &a, &b, budget, &SpgemmOptions::default())
+            .expect("fits DDR");
+        assert!(p.c.approx_eq(&expect, 1e-10), "budget {budget}");
+    });
+}
+
+#[test]
+fn prop_gpu_chunked_equals_unchunked_any_budget() {
+    check("gpu chunked == reference", 15, |g| {
+        let (a, b) = gen_pair(g, 30);
+        let expect = spgemm_reference(&a, &b);
+        let total = (a.size_bytes() + b.size_bytes()) as usize;
+        let budget = g.usize(1024, (2 * total).max(1025)) as u64;
+        let arch = p100(GpuMode::Pinned, ScaleFactor::default());
+        let mut sim = MemSim::new(arch.spec);
+        let p = gpu_chunked_sim(&mut sim, &a, &b, budget, &SpgemmOptions::default())
+            .expect("fits host");
+        assert!(p.c.approx_eq(&expect, 1e-10), "budget {budget}");
+        assert!(p.copied_bytes > 0);
+    });
+}
+
+#[test]
+fn prop_partition_tiles_and_respects_budget() {
+    check("partition invariants", 60, |g| {
+        let m = gen_csr(g, 60);
+        let prefix = csr_prefix_bytes(&m);
+        let total = prefix[m.nrows].max(1);
+        let budget = g.usize(16, 2 * total as usize) as u64;
+        let parts = partition_balanced(&prefix, budget);
+        assert!(is_partition(&parts, m.nrows));
+        for &(lo, hi) in &parts {
+            // Single oversized rows are allowed their own part.
+            if hi - lo > 1 {
+                assert!(
+                    range_bytes(&prefix, lo, hi) <= budget,
+                    "part {lo}..{hi} over budget {budget}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_transpose_involution_and_spgemm_transpose_identity() {
+    check("(AB)^T == B^T A^T", 30, |g| {
+        let (a, b) = gen_pair(g, 25);
+        let ab_t = transpose(&spgemm_reference(&a, &b));
+        let bt_at = spgemm_reference(&transpose(&b), &transpose(&a));
+        assert!(ab_t.approx_eq(&bt_at, 1e-10));
+        let m = gen_csr(g, 25);
+        assert!(transpose(&transpose(&m)).approx_eq(&m, 0.0));
+    });
+}
+
+#[test]
+fn prop_matrixmarket_roundtrip() {
+    check("matrixmarket roundtrip", 20, |g| {
+        let m = gen_csr(g, 30);
+        let dir = std::env::temp_dir().join("mlmem_prop_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("m{}.mtx", g.case_seed));
+        mlmem_spgemm::sparse::io::write_matrix_market(&m, &path).unwrap();
+        let back = mlmem_spgemm::sparse::io::read_matrix_market(&path).unwrap();
+        assert!(m.approx_eq(&back, 1e-12));
+        let _ = std::fs::remove_file(path);
+    });
+}
+
+#[test]
+fn prop_tricount_matches_naive() {
+    check("tricount == naive", 20, |g| {
+        let n = g.usize(3, 50);
+        let p = g.f64(0.05, 0.4);
+        let adj = mlmem_spgemm::gen::graphs::erdos_renyi(n, p, g.u64());
+        let expect = mlmem_spgemm::tricount::count::tricount_naive(&adj);
+        let l = mlmem_spgemm::tricount::degree_sorted_lower(&adj);
+        let lc = mlmem_spgemm::kkmem::CompressedMatrix::compress(&l);
+        let threads = g.usize(1, 4);
+        assert_eq!(mlmem_spgemm::tricount::tricount(&l, &lc, threads), expect);
+    });
+}
+
+#[test]
+fn prop_gpu_hbm_never_slower_than_pinned() {
+    check("HBM >= pinned on GPU", 10, |g| {
+        // Irregular inputs with enough work that the model is stable.
+        let n = g.usize(100, 300);
+        let a = uniform_degree(n, n, g.usize(2, 6), g.u64());
+        let b = uniform_degree(n, n, g.usize(2, 6), g.u64());
+        let scale = ScaleFactor::default();
+        let run = |mode: GpuMode| {
+            let arch = p100(mode, scale);
+            let mut sim = MemSim::new(arch.spec.clone());
+            spgemm_sim(
+                &mut sim,
+                &a,
+                &b,
+                Placement::uniform(arch.default_loc),
+                &SpgemmOptions::default(),
+            )
+            .expect("fits");
+            sim.finish().gflops
+        };
+        let hbm = run(GpuMode::Hbm);
+        let pin = run(GpuMode::Pinned);
+        assert!(hbm >= pin, "HBM {hbm} < pinned {pin}");
+    });
+}
+
+#[test]
+fn prop_banded_products_stay_banded() {
+    check("band conv width", 20, |g| {
+        let n = g.usize(20, 80);
+        let bw1 = g.usize(1, 4);
+        let bw2 = g.usize(1, 4);
+        let a = banded(n, n, 3, bw1, g.u64());
+        let b = banded(n, n, 3, bw2, g.u64());
+        let c = spgemm_reference(&a, &b);
+        // Band of a product is at most the sum of bands (+ spread slack
+        // from the diagonal mapping).
+        let max_band = (bw1 + bw2 + 2) as i64;
+        for i in 0..c.nrows {
+            let (cols, _) = c.row(i);
+            for &cc in cols {
+                assert!(
+                    (cc as i64 - i as i64).abs() <= max_band,
+                    "entry ({i},{cc}) outside band {max_band}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_symbolic_sizes_match_numeric() {
+    check("symbolic == numeric sizes", 30, |g| {
+        let (a, b) = gen_pair(g, 35);
+        let comp = mlmem_spgemm::kkmem::CompressedMatrix::compress(&b);
+        let sizes = mlmem_spgemm::kkmem::symbolic::symbolic(&a, &comp);
+        let c = spgemm_reference(&a, &b);
+        for i in 0..c.nrows {
+            assert_eq!(sizes[i], c.row_len(i), "row {i}");
+        }
+    });
+}

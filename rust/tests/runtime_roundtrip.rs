@@ -1,0 +1,66 @@
+//! Integration: the python-AOT → rust-PJRT round trip. Requires
+//! `make artifacts` to have produced `artifacts/` (skips politely
+//! otherwise so `cargo test` works on a fresh clone).
+
+use mlmem_spgemm::runtime::{spgemm_via_blocks, BlockExecutor};
+use mlmem_spgemm::sparse::ops::spgemm_reference;
+
+fn executor() -> Option<BlockExecutor> {
+    let dir = BlockExecutor::default_dir();
+    if !BlockExecutor::artifacts_present(&dir) {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(BlockExecutor::load(&dir).expect("artifacts present but failed to load"))
+}
+
+#[test]
+fn aot_matmul_matches_native() {
+    let Some(exe) = executor() else { return };
+    let m = exe.meta;
+    let mut rng = mlmem_spgemm::util::rng::Xoshiro256::seed_from_u64(42);
+    let a: Vec<f32> = (0..m.m * m.k).map(|_| rng.f64_range(-1.0, 1.0) as f32).collect();
+    let b: Vec<f32> = (0..m.k * m.n).map(|_| rng.f64_range(-1.0, 1.0) as f32).collect();
+    let c = exe.matmul(&a, &b).expect("execute");
+    // Spot-check a handful of entries against a scalar dot product.
+    for &(i, j) in &[(0usize, 0usize), (1, 5), (37, 200), (m.m - 1, m.n - 1)] {
+        let expect: f32 = (0..m.k).map(|kk| a[i * m.k + kk] * b[kk * m.n + j]).sum();
+        let got = c[i * m.n + j];
+        assert!(
+            (got - expect).abs() <= 1e-3 * expect.abs().max(1.0),
+            "C[{i},{j}] = {got}, expect {expect}"
+        );
+    }
+}
+
+#[test]
+fn aot_fused_adds_prev() {
+    let Some(exe) = executor() else { return };
+    let m = exe.meta;
+    let a = vec![0.0f32; m.m * m.k];
+    let b = vec![0.0f32; m.k * m.n];
+    let c_prev: Vec<f32> = (0..m.m * m.n).map(|i| i as f32 * 0.25).collect();
+    let c = exe.matmul_fused(&a, &b, &c_prev).expect("execute");
+    assert_eq!(c, c_prev, "0 @ 0 + C must be C");
+}
+
+#[test]
+fn block_spgemm_matches_scalar_path() {
+    let Some(exe) = executor() else { return };
+    // A sparse product executed entirely through the dense-block AOT
+    // path must equal the KKMEM scalar result.
+    let a = mlmem_spgemm::gen::rhs::banded(300, 300, 6, 8, 1);
+    let b = mlmem_spgemm::gen::rhs::banded(300, 300, 6, 8, 2);
+    let via_blocks = spgemm_via_blocks(&exe, &a, &b).expect("block path");
+    let reference = spgemm_reference(&a, &b);
+    assert!(
+        via_blocks.approx_eq(&reference, 1e-3),
+        "dense-block product diverges from reference"
+    );
+}
+
+#[test]
+fn executor_reports_platform() {
+    let Some(exe) = executor() else { return };
+    assert_eq!(exe.platform(), "cpu");
+}

@@ -1,0 +1,192 @@
+//! System-level integration tests: the paper's qualitative claims end to
+//! end (the same assertions EXPERIMENTS.md reports), coordinator failure
+//! injection, and the CLI binary itself.
+
+use mlmem_spgemm::bench::experiments::{
+    run_gpu, run_gpu_chunk, run_knl, run_knl_dp, Mul, ProblemCache,
+};
+use mlmem_spgemm::coordinator::{PlannerOptions, Policy, SpgemmService};
+use mlmem_spgemm::gen::scale::ScaleFactor;
+use mlmem_spgemm::memory::arch::{knl, p100, GpuMode, KnlMode};
+use mlmem_spgemm::prelude::*;
+use std::sync::Arc;
+
+fn problems() -> (ProblemCache, ScaleFactor) {
+    (ProblemCache::default(), ScaleFactor::default())
+}
+
+/// Paper claim (Figures 3/4): at 64 threads KKMEM is not bandwidth
+/// bound on DDR; with hyperthreads the Laplace R×A gap opens.
+#[test]
+fn claim_knl_gap_opens_with_hyperthreads() {
+    let (mut cache, s) = problems();
+    let p = cache.get(Domain::Laplace3D, 2.0, s).clone();
+    let (a, b) = Mul::RxA.operands(&p);
+    let ddr64 = run_knl(a, b, KnlMode::Ddr, 64, s).unwrap();
+    let hbm64 = run_knl(a, b, KnlMode::Hbm, 64, s).unwrap();
+    let ddr256 = run_knl(a, b, KnlMode::Ddr, 256, s).unwrap();
+    let hbm256 = run_knl(a, b, KnlMode::Hbm, 256, s).unwrap();
+    assert!(
+        (hbm64.gflops - ddr64.gflops).abs() / hbm64.gflops < 0.05,
+        "64T should be compute-bound: HBM {} vs DDR {}",
+        hbm64.gflops,
+        ddr64.gflops
+    );
+    assert!(
+        hbm256.gflops > 1.15 * ddr256.gflops,
+        "256T gap expected: HBM {} vs DDR {}",
+        hbm256.gflops,
+        ddr256.gflops
+    );
+}
+
+/// Paper claim (§3.2): the DDR/HBM gap shrinks with operand density.
+#[test]
+fn claim_gap_shrinks_with_density() {
+    let (mut cache, s) = problems();
+    let mut gap = |d: Domain| {
+        let p = cache.get(d, 2.0, s).clone();
+        let (a, b) = Mul::RxA.operands(&p);
+        let ddr = run_knl(a, b, KnlMode::Ddr, 256, s).unwrap();
+        let hbm = run_knl(a, b, KnlMode::Hbm, 256, s).unwrap();
+        hbm.gflops / ddr.gflops
+    };
+    let laplace = gap(Domain::Laplace3D);
+    let elasticity = gap(Domain::Elasticity);
+    assert!(
+        laplace > elasticity,
+        "Laplace gap {laplace:.2} should exceed Elasticity gap {elasticity:.2}"
+    );
+    assert!(elasticity < 1.1, "dense RxA should be compute-bound, gap {elasticity:.2}");
+}
+
+/// Paper claim (Figures 3/4): cache mode recovers HBM performance.
+#[test]
+fn claim_cache_mode_recovers_hbm() {
+    let (mut cache, s) = problems();
+    let p = cache.get(Domain::Laplace3D, 2.0, s).clone();
+    let (a, b) = Mul::RxA.operands(&p);
+    let hbm = run_knl(a, b, KnlMode::Hbm, 256, s).unwrap();
+    let c16 = run_knl(a, b, KnlMode::Cache16, 256, s).unwrap();
+    assert!(
+        c16.gflops > 0.9 * hbm.gflops,
+        "Cache16 {} should approach HBM {}",
+        c16.gflops,
+        hbm.gflops
+    );
+}
+
+/// Paper claim (Figures 9/10): DP recovers most of the DDR drop when B
+/// fits fast memory.
+#[test]
+fn claim_dp_recovers_ddr_drop() {
+    let (mut cache, s) = problems();
+    let p = cache.get(Domain::Laplace3D, 2.0, s).clone();
+    let (a, b) = Mul::RxA.operands(&p);
+    let ddr = run_knl(a, b, KnlMode::Ddr, 256, s).unwrap();
+    let dp = run_knl_dp(a, b, 256, s).unwrap();
+    let hbm = run_knl(a, b, KnlMode::Hbm, 256, s).unwrap();
+    assert!(dp.gflops >= ddr.gflops, "DP {} < DDR {}", dp.gflops, ddr.gflops);
+    assert!(dp.gflops > 0.9 * hbm.gflops, "DP {} vs HBM {}", dp.gflops, hbm.gflops);
+}
+
+/// Paper claim (Table 3 / §3.3): pinned memory collapses GPU SpGEMM and
+/// chunking wins big factors back.
+#[test]
+fn claim_gpu_chunking_beats_pinned() {
+    let (mut cache, s) = problems();
+    let p = cache.get(Domain::Brick3D, 4.0, s).clone();
+    let (a, b) = Mul::RxA.operands(&p);
+    let hbm = run_gpu(a, b, GpuMode::Hbm, s).unwrap();
+    let pin = run_gpu(a, b, GpuMode::Pinned, s).unwrap();
+    assert!(hbm.gflops > 7.0 * pin.gflops, "HBM {} vs pinned {}", hbm.gflops, pin.gflops);
+    let (_, chunk) = run_gpu_chunk(a, b, 16.0, s).unwrap();
+    assert!(
+        chunk.gflops > 3.0 * pin.gflops,
+        "Chunk16 {} should beat pinned {} by a large factor",
+        chunk.gflops,
+        pin.gflops
+    );
+    assert!(chunk.gflops < hbm.gflops, "copies must cost something");
+}
+
+/// Paper claim (§3.3): UVM sits between HBM and pinned while the problem
+/// fits device memory.
+#[test]
+fn claim_uvm_between_hbm_and_pinned() {
+    let (mut cache, s) = problems();
+    let p = cache.get(Domain::Brick3D, 4.0, s).clone();
+    let (a, b) = Mul::AxP.operands(&p);
+    let hbm = run_gpu(a, b, GpuMode::Hbm, s).unwrap().gflops;
+    let uvm = run_gpu(a, b, GpuMode::Uvm, s).unwrap().gflops;
+    let pin = run_gpu(a, b, GpuMode::Pinned, s).unwrap().gflops;
+    assert!(pin < uvm && uvm < hbm, "expected pinned {pin} < UVM {uvm} < HBM {hbm}");
+}
+
+/// Failure injection: jobs whose structures cannot fit any pool fail
+/// cleanly through the service (no panic, metrics updated).
+#[test]
+fn service_reports_failed_jobs() {
+    // A tiny scaled machine (DDR ~ 1.5 MiB usable) and a matrix far
+    // bigger than that.
+    let scale = ScaleFactor::new(64 * 1024);
+    let arch = Arc::new(knl(KnlMode::Ddr, 64, scale));
+    let a = Arc::new(mlmem_spgemm::gen::rhs::uniform_degree(3000, 3000, 16, 1));
+    // A alone is ~600 KiB; A + B + C exceed the ~1.4 MiB usable DDR.
+    assert!(a.size_bytes() > 512 * 1024);
+    let svc = SpgemmService::new(1, 8, PlannerOptions::default());
+    let h = svc
+        .submit_spgemm(Arc::clone(&a), a, arch, Policy::Flat)
+        .unwrap();
+    let err = match h.wait() {
+        Ok(_) => panic!("job must fail"),
+        Err(e) => e,
+    };
+    assert!(err.message.contains("does not fit"));
+    let (_, done, failed, _) = svc.metrics.snapshot();
+    assert_eq!((done, failed), (0, 1));
+}
+
+/// The GPU planner handles a mixed batch without loss.
+#[test]
+fn service_mixed_gpu_batch() {
+    let s = ScaleFactor::default();
+    let arch = Arc::new(p100(GpuMode::Pinned, s));
+    let svc = SpgemmService::new(2, 32, PlannerOptions::default());
+    let mut handles = Vec::new();
+    for seed in 0..6 {
+        let a = Arc::new(mlmem_spgemm::gen::rhs::random_csr(80, 80, 1, 5, seed));
+        let b = Arc::new(mlmem_spgemm::gen::rhs::random_csr(80, 80, 1, 5, seed + 10));
+        handles.push(svc.submit_spgemm(a, b, Arc::clone(&arch), Policy::Auto).unwrap());
+    }
+    for h in handles {
+        let r = h.wait().expect("ok");
+        assert!(r.report.gflops > 0.0);
+    }
+}
+
+/// The CLI binary runs an experiment end to end.
+#[test]
+fn cli_bench_quick_runs() {
+    let exe = env!("CARGO_BIN_EXE_mlmem");
+    let out = std::process::Command::new(exe)
+        .args(["bench", "--exp", "table1,profiles", "--quick", "--out-dir", ""])
+        .output()
+        .expect("spawn mlmem");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("Table 1"));
+    assert!(stdout.contains("MCDRAM"));
+}
+
+/// The CLI rejects unknown flags with usage help.
+#[test]
+fn cli_rejects_unknown() {
+    let exe = env!("CARGO_BIN_EXE_mlmem");
+    let out = std::process::Command::new(exe)
+        .args(["bench", "--bogus", "1"])
+        .output()
+        .expect("spawn mlmem");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown flag"));
+}
