@@ -1,0 +1,19 @@
+# Convenience targets; the tier-1 gate is `cargo build --release && cargo test -q`.
+
+.PHONY: build test bench artifacts fmt
+
+build:
+	cargo build --release
+
+test: build
+	cargo test -q
+
+bench:
+	cargo bench --bench pipeline
+
+fmt:
+	cargo fmt --check
+
+# AOT-export the Pallas block kernels (requires jax; see python/compile/aot.py).
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts

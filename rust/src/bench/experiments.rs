@@ -3,6 +3,7 @@
 //! for every machine mode the paper benchmarks.
 
 use crate::chunk::{gpu_chunked_sim, knl_chunked_sim, ChunkedProduct};
+use crate::engine::{gpu_pipelined_sim, knl_pipelined_sim};
 use crate::gen::multigrid::MgProblem;
 use crate::gen::scale::{grid_for_bytes, ScaleFactor};
 use crate::gen::stencil::Domain;
@@ -95,6 +96,41 @@ pub fn run_knl_chunk(
     let mut sim = MemSim::new(arch.spec.clone());
     let budget = scale.gb(budget_gb);
     match knl_chunked_sim(&mut sim, a, b, budget, &SpgemmOptions::default()) {
+        Ok(p) => Some((p, sim.finish())),
+        Err(_) => None,
+    }
+}
+
+/// KNL pipelined (double-buffered) chunked run with a fast budget in
+/// paper-GB — the overlap counterpart of [`run_knl_chunk`].
+pub fn run_knl_pipelined(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    budget_gb: f64,
+    scale: ScaleFactor,
+) -> Option<(ChunkedProduct, SimReport)> {
+    let arch = knl(KnlMode::Ddr, threads, scale);
+    let mut sim = MemSim::new(arch.spec.clone());
+    let budget = scale.gb(budget_gb);
+    match knl_pipelined_sim(&mut sim, a, b, budget, &SpgemmOptions::default()) {
+        Ok(p) => Some((p, sim.finish())),
+        Err(_) => None,
+    }
+}
+
+/// GPU pipelined (double-buffered) chunked run with a fast budget in
+/// paper-GB — the overlap counterpart of [`run_gpu_chunk`].
+pub fn run_gpu_pipelined(
+    a: &Csr,
+    b: &Csr,
+    budget_gb: f64,
+    scale: ScaleFactor,
+) -> Option<(ChunkedProduct, SimReport)> {
+    let arch = p100(GpuMode::Pinned, scale);
+    let mut sim = MemSim::new(arch.spec.clone());
+    let budget = scale.gb(budget_gb);
+    match gpu_pipelined_sim(&mut sim, a, b, budget, &SpgemmOptions::default()) {
         Ok(p) => Some((p, sim.finish())),
         Err(_) => None,
     }
@@ -199,6 +235,19 @@ mod tests {
         let (cp2, rep2) = run_gpu_chunk(a, b, 8.0, s).unwrap();
         assert!(cp2.mults > 0);
         assert!(rep2.copy_seconds > 0.0);
+    }
+
+    #[test]
+    fn pipelined_runners_match_serial_products() {
+        let p = small_problem();
+        let s = ScaleFactor::default();
+        let (a, b) = Mul::RxA.operands(&p);
+        let (serial, _) = run_knl_chunk(a, b, 256, 0.002, s).unwrap();
+        let (piped, _) = run_knl_pipelined(a, b, 256, 0.002, s).unwrap();
+        assert!(piped.c.approx_eq(&serial.c, 1e-10));
+        let (gs, _) = run_gpu_chunk(a, b, 0.002, s).unwrap();
+        let (gp, _) = run_gpu_pipelined(a, b, 0.002, s).unwrap();
+        assert!(gp.c.approx_eq(&gs.c, 1e-10));
     }
 
     #[test]

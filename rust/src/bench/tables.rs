@@ -267,6 +267,63 @@ pub fn ablate_overlap(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
     t
 }
 
+/// Measured serial-vs-pipelined chunk execution (the engine-layer
+/// successor of [`ablate_overlap`]'s estimate): the same chunked
+/// multiplications run through the serial drivers and the
+/// double-buffered executor, on both machines.
+pub fn pipeline_overlap(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
+    use super::experiments::{
+        run_gpu_chunk, run_gpu_pipelined, run_knl_chunk, run_knl_pipelined,
+    };
+    let gb = cfg.sizes_gb.last().copied().unwrap_or(4.0);
+    let mut t = Table::new(&[
+        "problem",
+        "mult",
+        "KNL Chunk8",
+        "KNL Pipe8",
+        "gain",
+        "GPU Chunk16",
+        "GPU Pipe16",
+        "gain",
+    ])
+    .with_title("Pipelined chunk engine: measured serial vs double-buffered GFLOP/s");
+    let gain = |s: &Option<(crate::chunk::ChunkedProduct, crate::memory::SimReport)>,
+                p: &Option<(crate::chunk::ChunkedProduct, crate::memory::SimReport)>| {
+        match (s, p) {
+            (Some((_, sr)), Some((_, pr))) if pr.seconds > 0.0 => {
+                format!("{:.2}x", sr.seconds / pr.seconds)
+            }
+            _ => "-".into(),
+        }
+    };
+    let gf = |o: &Option<(crate::chunk::ChunkedProduct, crate::memory::SimReport)>| {
+        o.as_ref()
+            .map(|(_, rep)| format!("{:.2}", rep.gflops))
+            .unwrap_or_else(|| "-".into())
+    };
+    for domain in Domain::ALL {
+        for mul in [Mul::RxA, Mul::AxP] {
+            let p = cache.get(domain, gb, cfg.scale).clone();
+            let (a, b) = mul.operands(&p);
+            let ks = run_knl_chunk(a, b, 256, 8.0, cfg.scale);
+            let kp = run_knl_pipelined(a, b, 256, 8.0, cfg.scale);
+            let gs = run_gpu_chunk(a, b, 16.0, cfg.scale);
+            let gp = run_gpu_pipelined(a, b, 16.0, cfg.scale);
+            t.row(&[
+                domain.name().to_string(),
+                mul.name().to_string(),
+                gf(&ks),
+                gf(&kp),
+                gain(&ks, &kp),
+                gf(&gs),
+                gf(&gp),
+                gain(&gs, &gp),
+            ]);
+        }
+    }
+    t
+}
+
 /// Sanity table: P100 profile — not in the paper, prints the machine
 /// parameters used (documentation aid).
 pub fn machine_profiles(cfg: &BenchConfig) -> Table {
@@ -339,5 +396,13 @@ mod tests {
         assert_eq!(ablate_compression(&cfg, &mut cache).n_rows(), 8);
         assert_eq!(ablate_overlap(&cfg, &mut cache).n_rows(), 8);
         assert_eq!(machine_profiles(&cfg).n_rows(), 4);
+    }
+
+    #[test]
+    fn pipeline_table_runs() {
+        let (cfg, mut cache) = quick();
+        let t = pipeline_overlap(&cfg, &mut cache);
+        assert_eq!(t.n_rows(), 8);
+        assert!(t.render().contains("Pipe8"));
     }
 }

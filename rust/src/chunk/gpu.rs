@@ -17,10 +17,11 @@ use crate::memory::machine::{MemSim, MemTracer, RegionId};
 use crate::memory::pool::{FAST, SLOW};
 use crate::sparse::csr::{Csr, Idx};
 
-type CsrRegions = (RegionId, RegionId, RegionId);
+/// The (rowmap, entries, values) region triple of one staged CSR.
+pub(crate) type CsrRegions = (RegionId, RegionId, RegionId);
 
 /// Vertically stack row-blocks into one CSR.
-fn vstack(blocks: &[Csr], ncols: usize) -> Csr {
+pub(crate) fn vstack(blocks: &[Csr], ncols: usize) -> Csr {
     let nrows: usize = blocks.iter().map(|b| b.nrows).sum();
     let nnz: usize = blocks.iter().map(|b| b.nnz()).sum();
     let mut rowmap = Vec::with_capacity(nrows + 1);
@@ -40,7 +41,7 @@ fn vstack(blocks: &[Csr], ncols: usize) -> Csr {
 }
 
 /// C-row byte prefix from symbolic sizes.
-fn c_prefix_from_sizes(sizes: &[usize]) -> Vec<u64> {
+pub(crate) fn c_prefix_from_sizes(sizes: &[usize]) -> Vec<u64> {
     let mut p = vec![0u64; sizes.len() + 1];
     for (i, &s) in sizes.iter().enumerate() {
         p[i + 1] = p[i] + 8 + 12 * s as u64;
@@ -48,13 +49,13 @@ fn c_prefix_from_sizes(sizes: &[usize]) -> Vec<u64> {
     p
 }
 
-struct Staged {
-    regions: CsrRegions,
-    csr: Csr,
+pub(crate) struct Staged {
+    pub(crate) regions: CsrRegions,
+    pub(crate) csr: Csr,
 }
 
 /// Stage a row slice of `m` into the fast pool, charging the bulk copy.
-fn stage_slice(
+pub(crate) fn stage_slice(
     sim: &mut MemSim,
     name: &str,
     m: &Csr,
@@ -72,10 +73,79 @@ fn stage_slice(
     Ok(Staged { regions, csr: slice })
 }
 
-fn free_regions(sim: &mut MemSim, r: CsrRegions) {
+/// Like [`stage_slice`] but issued on the simulator's overlap stream:
+/// the transfer proceeds concurrently with kernel work until the next
+/// `overlap_barrier` (double-buffered staging).
+pub(crate) fn stage_slice_async(
+    sim: &mut MemSim,
+    name: &str,
+    m: &Csr,
+    src: CsrRegions,
+    lo: usize,
+    hi: usize,
+) -> Result<Staged, AllocError> {
+    let slice = m.slice_rows(lo, hi);
+    let regions = alloc_csr_regions(sim, name, &slice, Location::Pool(FAST))?;
+    sim.bulk_copy_async(src.0, regions.0, (slice.nrows as u64 + 1) * 8);
+    if slice.nnz() > 0 {
+        sim.bulk_copy_async(src.1, regions.1, slice.nnz() as u64 * 4);
+        sim.bulk_copy_async(src.2, regions.2, slice.nnz() as u64 * 8);
+    }
+    Ok(Staged { regions, csr: slice })
+}
+
+pub(crate) fn free_regions(sim: &mut MemSim, r: CsrRegions) {
     sim.free(r.0);
     sim.free(r.1);
     sim.free(r.2);
+}
+
+/// One fused block multiplication `C_block = FA × FB + prev` — the inner
+/// kernel shared by the serial and pipelined GPU drivers.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_block(
+    sim: &mut MemSim,
+    acc: &mut PooledAcc,
+    out: &mut Vec<(Idx, f64)>,
+    fa: &Staged,
+    fb: &Staged,
+    fc_reg: CsrRegions,
+    range: (usize, usize),
+    prev: Option<&Csr>,
+    mults: &mut u64,
+    ncols: usize,
+) -> Csr {
+    let lay = Layout {
+        a_rowmap: fa.regions.0,
+        a_entries: fa.regions.1,
+        a_values: fa.regions.2,
+        b_rowmap: fb.regions.0,
+        b_entries: fb.regions.1,
+        b_values: fb.regions.2,
+        c_rowmap: fc_reg.0,
+        c_entries: fc_reg.1,
+        c_values: fc_reg.2,
+        acc: 0,
+        // Previous partial is read from the same fast block (in-place
+        // update model).
+        c_prev_rowmap: fc_reg.0,
+        c_prev_entries: fc_reg.1,
+        c_prev_values: fc_reg.2,
+    };
+    let nrows = fa.csr.nrows;
+    let mut rowmap = vec![0usize; nrows + 1];
+    let mut entries: Vec<Idx> = Vec::new();
+    let mut values: Vec<f64> = Vec::new();
+    for li in 0..nrows {
+        *mults += fused_numeric_row(sim, &lay, &fa.csr, &fb.csr, range, prev, li, acc, out);
+        sim.write(lay.c_rowmap, (li as u64 + 1) * 8, 8);
+        let pos = entries.len();
+        entries.resize(pos + out.len(), 0);
+        values.resize(pos + out.len(), 0.0);
+        emit_row(sim, &lay, pos, out, &mut entries, &mut values);
+        rowmap[li + 1] = entries.len();
+    }
+    Csr::new(nrows, ncols, rowmap, entries, values)
 }
 
 /// Run the Algorithm 4 planner for this multiplication.
@@ -144,51 +214,6 @@ pub fn gpu_chunked_sim(
     let mut mults = 0u64;
     let mut copied_bytes = 0u64;
     let mut out: Vec<(Idx, f64)> = Vec::new();
-
-    let run_block = |sim: &mut MemSim,
-                     acc: &mut PooledAcc,
-                     out: &mut Vec<(Idx, f64)>,
-                     fa: &Staged,
-                     fb: &Staged,
-                     fc_reg: CsrRegions,
-                     range: (usize, usize),
-                     prev: Option<&Csr>,
-                     mults: &mut u64|
-     -> Csr {
-        let lay = Layout {
-            a_rowmap: fa.regions.0,
-            a_entries: fa.regions.1,
-            a_values: fa.regions.2,
-            b_rowmap: fb.regions.0,
-            b_entries: fb.regions.1,
-            b_values: fb.regions.2,
-            c_rowmap: fc_reg.0,
-            c_entries: fc_reg.1,
-            c_values: fc_reg.2,
-            acc: 0,
-            // Previous partial is read from the same fast block (in-place
-            // update model).
-            c_prev_rowmap: fc_reg.0,
-            c_prev_entries: fc_reg.1,
-            c_prev_values: fc_reg.2,
-        };
-        let nrows = fa.csr.nrows;
-        let mut rowmap = vec![0usize; nrows + 1];
-        let mut entries: Vec<Idx> = Vec::new();
-        let mut values: Vec<f64> = Vec::new();
-        for li in 0..nrows {
-            *mults +=
-                fused_numeric_row(sim, &lay, &fa.csr, &fb.csr, range, prev, li, acc, out);
-            sim.write(lay.c_rowmap, (li as u64 + 1) * 8, 8);
-            let pos = entries.len();
-            entries.resize(pos + out.len(), 0);
-            values.resize(pos + out.len(), 0.0);
-            emit_row(sim, &lay, pos, out, &mut entries, &mut values);
-            rowmap[li + 1] = entries.len();
-        }
-        Csr::new(nrows, b.ncols, rowmap, entries, values)
-    };
-
     let mut block_results: Vec<Csr> = Vec::with_capacity(plan.p_ac.len());
     match plan.algo {
         GpuChunkAlgo::AcResident => {
@@ -222,6 +247,7 @@ pub fn gpu_chunked_sim(
                         (blo, bhi),
                         partial.as_ref(),
                         &mut mults,
+                        b.ncols,
                     );
                     partial = Some(new_partial);
                     free_regions(sim, fb.regions);
@@ -278,6 +304,7 @@ pub fn gpu_chunked_sim(
                         (blo, bhi),
                         partials[ai].as_ref(),
                         &mut mults,
+                        b.ncols,
                     );
                     // Partial streams back out every pass.
                     sim.bulk_copy(fc.1, c_reg.1, new_partial.nnz() as u64 * 4);

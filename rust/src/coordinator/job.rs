@@ -24,9 +24,14 @@ pub enum Policy {
     /// Selective data placement when the irregular structure fits fast
     /// memory, falling back to Flat.
     DataPlacement,
-    /// Chunk through fast memory with the given staging budget.
+    /// Chunk through fast memory with the given staging budget (serial
+    /// staging, as the paper measures).
     Chunked { fast_budget: u64 },
-    /// Planner chooses: Flat if all fits fast, DP if B fits, else chunked.
+    /// Double-buffered chunking: staging transfers overlap chunk compute
+    /// (`None` budget = the fast pool's usable capacity).
+    Pipelined { fast_budget: Option<u64> },
+    /// Planner chooses: Flat if all fits fast, DP if B fits, else
+    /// pipelined chunking.
     Auto,
 }
 
@@ -47,6 +52,7 @@ pub enum Decision {
     DataPlacement,
     ChunkedKnl { parts: usize },
     ChunkedGpu { parts_ac: usize, parts_b: usize },
+    Pipelined { parts_ac: usize, parts_b: usize },
 }
 
 impl Decision {
@@ -58,6 +64,9 @@ impl Decision {
             Decision::ChunkedKnl { parts } => format!("chunked-knl({parts})"),
             Decision::ChunkedGpu { parts_ac, parts_b } => {
                 format!("chunked-gpu({parts_ac}x{parts_b})")
+            }
+            Decision::Pipelined { parts_ac, parts_b } => {
+                format!("pipelined({parts_ac}x{parts_b})")
             }
         }
     }
@@ -101,6 +110,10 @@ mod tests {
         assert_eq!(
             Decision::ChunkedGpu { parts_ac: 2, parts_b: 4 }.name(),
             "chunked-gpu(2x4)"
+        );
+        assert_eq!(
+            Decision::Pipelined { parts_ac: 1, parts_b: 3 }.name(),
+            "pipelined(1x3)"
         );
     }
 

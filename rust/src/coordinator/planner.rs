@@ -1,24 +1,27 @@
 //! The placement/chunking planner: encodes the paper's decision structure
-//! as a runtime policy. Given a job and its machine, choose between flat
-//! placement, selective data placement, and the chunked algorithms —
-//! exactly the decision a production KNL/GPU deployment of KKMEM makes
-//! per multiplication.
+//! as a runtime policy and executes every SpGEMM job through the unified
+//! [`Engine`](crate::engine::Engine) trait — exactly the decision a
+//! production KNL/GPU deployment of KKMEM makes per multiplication, now
+//! with the double-buffered pipelined executor available as a policy.
 
 use super::job::{Decision, Job, JobError, JobKind, JobResult, Policy};
-use crate::chunk::{gpu_chunked_sim, knl_chunked_sim};
-use crate::kkmem::{spgemm_sim, Placement, SpgemmOptions};
-use crate::memory::alloc::Location;
+use crate::engine::{
+    Engine, GpuChunkEngine, KnlChunkEngine, PipelinedChunkEngine, Problem, SimEngine,
+};
+use crate::kkmem::CompressedMatrix;
+use crate::kkmem::Placement;
 use crate::memory::arch::MachineKind;
+use crate::memory::alloc::Location;
 use crate::memory::pool::FAST;
 use crate::memory::MemSim;
 use crate::placement::{dp_placement, ProblemSizes};
 use crate::tricount::{degree_sorted_lower, tricount_sim, TriPlacement};
-use crate::kkmem::CompressedMatrix;
+use std::sync::Arc;
 
 /// Options the executor applies to every job.
 #[derive(Clone, Copy, Debug)]
 pub struct PlannerOptions {
-    pub spgemm: SpgemmOptions,
+    pub spgemm: crate::kkmem::SpgemmOptions,
     /// Staging budget for Auto-mode chunking (defaults to the fast pool's
     /// usable capacity at execution time).
     pub auto_chunk_budget: Option<u64>,
@@ -26,7 +29,7 @@ pub struct PlannerOptions {
 
 impl Default for PlannerOptions {
     fn default() -> Self {
-        Self { spgemm: SpgemmOptions::default(), auto_chunk_budget: None }
+        Self { spgemm: crate::kkmem::SpgemmOptions::default(), auto_chunk_budget: None }
     }
 }
 
@@ -42,6 +45,17 @@ fn err(job: &Job, m: impl std::fmt::Display) -> JobError {
     JobError { id: job.id, message: m.to_string() }
 }
 
+/// What shape of decision to record once the engine reports back (the
+/// partition counts are only known after the run).
+enum DecisionFlavor {
+    FlatDefault,
+    FlatFast,
+    DataPlacement,
+    ChunkedKnl,
+    ChunkedGpu,
+    Pipelined,
+}
+
 fn execute_spgemm(
     job: &Job,
     a: &crate::sparse::Csr,
@@ -50,89 +64,107 @@ fn execute_spgemm(
 ) -> Result<JobResult, JobError> {
     let arch = &job.arch;
     let fast_usable = arch.spec.pools[FAST.0].usable();
-    let sizes = ProblemSizes::measure(a, b);
     let acc_slack = 1 << 16; // accumulator + staging slack
-    let (decision, placement_or_chunk): (Decision, Option<Placement>) = match job.policy {
-        Policy::Flat => (Decision::FlatDefault, Some(Placement::uniform(arch.default_loc))),
-        Policy::DataPlacement => match dp_placement(&sizes, fast_usable.saturating_sub(acc_slack))
-        {
-            Some(p) => (Decision::DataPlacement, Some(p)),
-            None => (Decision::FlatDefault, Some(Placement::uniform(arch.default_loc))),
+    let spgemm_opts = opts.spgemm;
+
+    let (engine, flavor): (Box<dyn Engine>, DecisionFlavor) = match job.policy {
+        Policy::Flat => (
+            Box::new(SimEngine::flat(Arc::clone(arch), spgemm_opts)),
+            DecisionFlavor::FlatDefault,
+        ),
+        Policy::DataPlacement => {
+            let sizes = ProblemSizes::measure(a, b);
+            match dp_placement(&sizes, fast_usable.saturating_sub(acc_slack)) {
+                Some(p) => (
+                    Box::new(SimEngine::with_placement(Arc::clone(arch), spgemm_opts, p)),
+                    DecisionFlavor::DataPlacement,
+                ),
+                None => (
+                    Box::new(SimEngine::flat(Arc::clone(arch), spgemm_opts)),
+                    DecisionFlavor::FlatDefault,
+                ),
+            }
+        }
+        Policy::Chunked { fast_budget } => match arch.kind {
+            MachineKind::Knl => (
+                Box::new(KnlChunkEngine::new(
+                    Arc::clone(arch),
+                    spgemm_opts,
+                    Some(fast_budget),
+                )),
+                DecisionFlavor::ChunkedKnl,
+            ),
+            MachineKind::Gpu => (
+                Box::new(GpuChunkEngine::new(
+                    Arc::clone(arch),
+                    spgemm_opts,
+                    Some(fast_budget),
+                )),
+                DecisionFlavor::ChunkedGpu,
+            ),
         },
-        Policy::Chunked { .. } => (placeholder_chunk_decision(arch), None),
+        Policy::Pipelined { fast_budget } => (
+            Box::new(PipelinedChunkEngine::new(Arc::clone(arch), spgemm_opts, fast_budget)),
+            DecisionFlavor::Pipelined,
+        ),
         Policy::Auto => {
+            let sizes = ProblemSizes::measure(a, b);
             if sizes.total() + acc_slack <= fast_usable {
-                (Decision::FlatFast, Some(Placement::uniform(Location::Pool(FAST))))
+                (
+                    Box::new(SimEngine::with_placement(
+                        Arc::clone(arch),
+                        spgemm_opts,
+                        Placement::uniform(Location::Pool(FAST)),
+                    )),
+                    DecisionFlavor::FlatFast,
+                )
             } else if let Some(p) =
                 dp_placement(&sizes, fast_usable.saturating_sub(acc_slack))
             {
-                (Decision::DataPlacement, Some(p))
+                (
+                    Box::new(SimEngine::with_placement(Arc::clone(arch), spgemm_opts, p)),
+                    DecisionFlavor::DataPlacement,
+                )
             } else {
-                (placeholder_chunk_decision(arch), None)
+                (
+                    Box::new(PipelinedChunkEngine::new(
+                        Arc::clone(arch),
+                        spgemm_opts,
+                        opts.auto_chunk_budget,
+                    )),
+                    DecisionFlavor::Pipelined,
+                )
             }
         }
     };
 
-    let mut sim = MemSim::new(arch.spec.clone());
-    match placement_or_chunk {
-        Some(placement) => {
-            let prod = spgemm_sim(&mut sim, a, b, placement, &opts.spgemm)
-                .map_err(|e| err(job, e))?;
-            let report = sim.finish();
-            Ok(JobResult {
-                id: job.id,
-                decision,
-                report,
-                c_nrows: prod.c.nrows,
-                c_nnz: prod.c.nnz(),
-                triangles: None,
-            })
-        }
-        None => {
-            let budget = match job.policy {
-                Policy::Chunked { fast_budget } => fast_budget,
-                _ => opts.auto_chunk_budget.unwrap_or(fast_usable),
-            };
-            match arch.kind {
-                MachineKind::Knl => {
-                    let p = knl_chunked_sim(&mut sim, a, b, budget, &opts.spgemm)
-                        .map_err(|e| err(job, e))?;
-                    let report = sim.finish();
-                    Ok(JobResult {
-                        id: job.id,
-                        decision: Decision::ChunkedKnl { parts: p.n_parts_b },
-                        report,
-                        c_nrows: p.c.nrows,
-                        c_nnz: p.c.nnz(),
-                        triangles: None,
-                    })
-                }
-                MachineKind::Gpu => {
-                    let p = gpu_chunked_sim(&mut sim, a, b, budget, &opts.spgemm)
-                        .map_err(|e| err(job, e))?;
-                    let report = sim.finish();
-                    Ok(JobResult {
-                        id: job.id,
-                        decision: Decision::ChunkedGpu {
-                            parts_ac: p.n_parts_ac,
-                            parts_b: p.n_parts_b,
-                        },
-                        report,
-                        c_nrows: p.c.nrows,
-                        c_nnz: p.c.nnz(),
-                        triangles: None,
-                    })
-                }
-            }
-        }
-    }
-}
-
-fn placeholder_chunk_decision(arch: &crate::memory::arch::Arch) -> Decision {
-    match arch.kind {
-        MachineKind::Knl => Decision::ChunkedKnl { parts: 0 },
-        MachineKind::Gpu => Decision::ChunkedGpu { parts_ac: 0, parts_b: 0 },
-    }
+    let problem = Problem::new(a, b);
+    let rep = engine.execute(&problem).map_err(|e| err(job, e))?;
+    let decision = match flavor {
+        DecisionFlavor::FlatDefault => Decision::FlatDefault,
+        DecisionFlavor::FlatFast => Decision::FlatFast,
+        DecisionFlavor::DataPlacement => Decision::DataPlacement,
+        DecisionFlavor::ChunkedKnl => Decision::ChunkedKnl { parts: rep.n_parts_b },
+        DecisionFlavor::ChunkedGpu => Decision::ChunkedGpu {
+            parts_ac: rep.n_parts_ac,
+            parts_b: rep.n_parts_b,
+        },
+        DecisionFlavor::Pipelined => Decision::Pipelined {
+            parts_ac: rep.n_parts_ac,
+            parts_b: rep.n_parts_b,
+        },
+    };
+    let report = rep
+        .sim
+        .ok_or_else(|| err(job, "engine produced no simulated report"))?;
+    Ok(JobResult {
+        id: job.id,
+        decision,
+        report,
+        c_nrows: rep.c.nrows,
+        c_nnz: rep.c.nnz(),
+        triangles: None,
+    })
 }
 
 fn execute_tricount(
@@ -201,10 +233,10 @@ mod tests {
     }
 
     #[test]
-    fn auto_large_b_triggers_dp_or_chunk() {
+    fn auto_large_b_triggers_dp_or_pipelined_chunking() {
         // B bigger than the fast pool's usable 11.2 MiB (16 MiB * 0.7)
-        // forces past FlatFast and DP into chunking; banded structure
-        // keeps C small enough for DDR.
+        // forces past FlatFast and DP into the pipelined chunk engine;
+        // banded structure keeps C small enough for DDR.
         let arch = knl(KnlMode::Ddr, 256, ScaleFactor::default());
         let n = 380_000;
         let a = Arc::new(crate::gen::rhs::banded(n, n, 2, 2, 1));
@@ -218,8 +250,8 @@ mod tests {
         };
         let r = execute(&job, &PlannerOptions::default()).unwrap();
         match r.decision {
-            Decision::ChunkedKnl { parts } => assert!(parts >= 2, "parts {parts}"),
-            other => panic!("expected chunked, got {other:?}"),
+            Decision::Pipelined { parts_b, .. } => assert!(parts_b >= 2, "parts {parts_b}"),
+            other => panic!("expected pipelined, got {other:?}"),
         }
     }
 
@@ -235,6 +267,18 @@ mod tests {
             }
             other => panic!("expected gpu chunked, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn explicit_pipelined_policy_runs() {
+        let arch = knl(KnlMode::Ddr, 256, ScaleFactor::default());
+        let job = spgemm_job(6, arch, Policy::Pipelined { fast_budget: Some(1 << 13) }, 60);
+        let r = execute(&job, &PlannerOptions::default()).unwrap();
+        match r.decision {
+            Decision::Pipelined { parts_b, .. } => assert!(parts_b >= 1),
+            other => panic!("expected pipelined, got {other:?}"),
+        }
+        assert!(r.report.gflops > 0.0);
     }
 
     #[test]

@@ -1,0 +1,161 @@
+//! Serial chunk engines: the paper's measured drivers (Algorithm 1 on
+//! KNL, Algorithms 2–4 on the GPU) behind the [`Engine`] trait. Staging
+//! copies are serial with compute — the baseline the pipelined engine is
+//! judged against.
+
+use super::{Engine, EngineError, EngineReport, ExecPlan, Problem};
+use crate::chunk::knl::ChunkedProduct;
+use crate::chunk::partition::{csr_prefix_bytes, partition_balanced};
+use crate::chunk::{gpu_chunked_sim, knl_chunked_sim};
+use crate::kkmem::SpgemmOptions;
+use crate::memory::alloc::AllocError;
+use crate::memory::arch::Arch;
+use crate::memory::pool::FAST;
+use crate::memory::MemSim;
+use crate::sparse::Csr;
+use crate::util::timer::Timer;
+use std::sync::Arc;
+
+/// The serial chunk drivers share everything but the simulated driver
+/// function; one signature covers both.
+type ChunkDriver =
+    fn(&mut MemSim, &Csr, &Csr, u64, &SpgemmOptions) -> Result<ChunkedProduct, AllocError>;
+
+fn effective_budget(arch: &Arch, fast_budget: Option<u64>) -> u64 {
+    let usable = arch.spec.pools[FAST.0].usable();
+    fast_budget.unwrap_or(usable).min(usable).max(1)
+}
+
+fn estimate_b_parts(p: &Problem, budget: u64) -> usize {
+    let prefix = csr_prefix_bytes(p.b);
+    partition_balanced(&prefix, budget.max(1)).len()
+}
+
+/// Shared run body for the serial chunk engines.
+fn run_chunked(
+    name: &'static str,
+    arch: &Arch,
+    opts: &SpgemmOptions,
+    driver: ChunkDriver,
+    p: &Problem,
+    plan: &ExecPlan,
+) -> Result<EngineReport, EngineError> {
+    let ExecPlan::Chunked { fast_budget, pipelined: false, .. } = plan else {
+        return Err(EngineError::new(format!("{name} engine got an incompatible plan")));
+    };
+    let t = Timer::start();
+    let mut sim = MemSim::new(arch.spec.clone());
+    let prod = driver(&mut sim, p.a, p.b, *fast_budget, opts).map_err(EngineError::from)?;
+    Ok(EngineReport {
+        engine: name,
+        c: prod.c,
+        mults: prod.mults,
+        sim: Some(sim.finish()),
+        wall_seconds: t.elapsed_secs(),
+        n_parts_ac: prod.n_parts_ac,
+        n_parts_b: prod.n_parts_b,
+        copied_bytes: prod.copied_bytes,
+    })
+}
+
+/// Algorithm 1 (KNL B-chunking) as an engine.
+pub struct KnlChunkEngine {
+    arch: Arc<Arch>,
+    opts: SpgemmOptions,
+    fast_budget: Option<u64>,
+}
+
+impl KnlChunkEngine {
+    pub fn new(arch: Arc<Arch>, opts: SpgemmOptions, fast_budget: Option<u64>) -> Self {
+        Self { arch, opts, fast_budget }
+    }
+}
+
+impl Engine for KnlChunkEngine {
+    fn name(&self) -> &'static str {
+        "knl-chunk"
+    }
+
+    fn plan(&self, p: &Problem) -> Result<ExecPlan, EngineError> {
+        let budget = effective_budget(&self.arch, self.fast_budget);
+        Ok(ExecPlan::Chunked {
+            fast_budget: budget,
+            pipelined: false,
+            est_parts: estimate_b_parts(p, budget),
+        })
+    }
+
+    fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, EngineError> {
+        run_chunked(self.name(), &self.arch, &self.opts, knl_chunked_sim, p, plan)
+    }
+}
+
+/// Algorithms 2–4 (GPU 2D chunking) as an engine.
+pub struct GpuChunkEngine {
+    arch: Arc<Arch>,
+    opts: SpgemmOptions,
+    fast_budget: Option<u64>,
+}
+
+impl GpuChunkEngine {
+    pub fn new(arch: Arc<Arch>, opts: SpgemmOptions, fast_budget: Option<u64>) -> Self {
+        Self { arch, opts, fast_budget }
+    }
+}
+
+impl Engine for GpuChunkEngine {
+    fn name(&self) -> &'static str {
+        "gpu-chunk"
+    }
+
+    fn plan(&self, p: &Problem) -> Result<ExecPlan, EngineError> {
+        let budget = effective_budget(&self.arch, self.fast_budget);
+        Ok(ExecPlan::Chunked {
+            fast_budget: budget,
+            pipelined: false,
+            est_parts: estimate_b_parts(p, budget),
+        })
+    }
+
+    fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, EngineError> {
+        run_chunked(self.name(), &self.arch, &self.opts, gpu_chunked_sim, p, plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::scale::ScaleFactor;
+    use crate::memory::arch::{knl, p100, GpuMode, KnlMode};
+    use crate::sparse::ops::spgemm_reference;
+
+    #[test]
+    fn knl_chunk_engine_chunks_and_matches() {
+        let a = crate::gen::rhs::random_csr(50, 40, 1, 6, 1);
+        let b = crate::gen::rhs::random_csr(40, 60, 1, 6, 2);
+        let arch = Arc::new(knl(KnlMode::Ddr, 256, ScaleFactor::default()));
+        let eng =
+            KnlChunkEngine::new(arch, SpgemmOptions::default(), Some(b.size_bytes() / 4));
+        let p = Problem::new(&a, &b);
+        let plan = eng.plan(&p).unwrap();
+        let ExecPlan::Chunked { est_parts, .. } = &plan else { panic!("plan kind") };
+        assert!(*est_parts >= 3);
+        let rep = eng.run(&p, &plan).unwrap();
+        assert!(rep.c.approx_eq(&spgemm_reference(&a, &b), 1e-12));
+        assert_eq!(rep.n_parts_b, *est_parts);
+        assert!(rep.copied_bytes > 0);
+        assert!(rep.sim.unwrap().copy_seconds > 0.0);
+    }
+
+    #[test]
+    fn gpu_chunk_engine_matches_reference() {
+        let a = crate::gen::rhs::random_csr(60, 50, 1, 6, 3);
+        let b = crate::gen::rhs::random_csr(50, 70, 1, 6, 4);
+        let arch = Arc::new(p100(GpuMode::Pinned, ScaleFactor::default()));
+        let budget = (a.size_bytes() + b.size_bytes()) / 4;
+        let eng = GpuChunkEngine::new(arch, SpgemmOptions::default(), Some(budget));
+        let rep = eng.execute(&Problem::new(&a, &b)).unwrap();
+        assert!(rep.c.approx_eq(&spgemm_reference(&a, &b), 1e-12));
+        assert!(rep.n_parts_ac > 1 || rep.n_parts_b > 1);
+    }
+}

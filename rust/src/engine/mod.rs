@@ -1,0 +1,293 @@
+//! The unified execution layer: every way this crate can run a sparse
+//! multiplication — native threads, the flat machine simulator, the
+//! serial KNL/GPU chunk drivers, and the pipelined (double-buffered)
+//! chunk executor — sits behind one [`Engine`] trait the coordinator can
+//! plan, schedule, and batch against.
+//!
+//! The split mirrors KokkosKernels' handle/execute design: [`Engine::plan`]
+//! inspects a [`Problem`] and commits to an [`ExecPlan`] (placement,
+//! budgets, chunk counts) without doing numeric work; [`Engine::run`]
+//! executes that plan and returns an [`EngineReport`] carrying the
+//! product, the simulated report (when the engine simulates), and the
+//! staging statistics. `execute` chains the two.
+
+pub mod chunked;
+pub mod native;
+pub mod pipelined;
+pub mod sim;
+
+use crate::kkmem::{Placement, SpgemmOptions};
+use crate::memory::alloc::AllocError;
+use crate::memory::arch::Arch;
+use crate::memory::SimReport;
+use crate::sparse::Csr;
+use std::sync::Arc;
+
+pub use chunked::{GpuChunkEngine, KnlChunkEngine};
+pub use native::{pipelined_spgemm_native, NativeEngine};
+pub use pipelined::{gpu_pipelined_sim, knl_pipelined_sim, PipelinedChunkEngine};
+pub use sim::SimEngine;
+
+/// One multiplication `C = A × B` as the engines see it.
+pub struct Problem<'a> {
+    pub a: &'a Csr,
+    pub b: &'a Csr,
+}
+
+impl<'a> Problem<'a> {
+    pub fn new(a: &'a Csr, b: &'a Csr) -> Self {
+        assert_eq!(a.ncols, b.nrows, "spgemm shape mismatch");
+        Self { a, b }
+    }
+}
+
+/// What an engine decided to do for a problem — produced by
+/// [`Engine::plan`], consumed by [`Engine::run`], and recorded by the
+/// coordinator for observability.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ExecPlan {
+    /// Native threaded execution (no simulation).
+    Native { threads: usize, chunked: bool },
+    /// One simulated run with a per-structure placement.
+    Placed { placement: Placement },
+    /// Chunked through fast memory with a staging budget. `pipelined`
+    /// selects the double-buffered executor; `est_parts` is the planner's
+    /// B-partition estimate (the driver may refine it).
+    Chunked { fast_budget: u64, pipelined: bool, est_parts: usize },
+}
+
+impl ExecPlan {
+    /// Short human-readable label for logs and tables.
+    pub fn label(&self) -> String {
+        match self {
+            ExecPlan::Native { threads, chunked: false } => format!("native({threads}T)"),
+            ExecPlan::Native { threads, chunked: true } => {
+                format!("native-pipelined({threads}T)")
+            }
+            ExecPlan::Placed { .. } => "placed".to_string(),
+            ExecPlan::Chunked { pipelined: false, est_parts, .. } => {
+                format!("chunked(~{est_parts})")
+            }
+            ExecPlan::Chunked { pipelined: true, est_parts, .. } => {
+                format!("pipelined(~{est_parts})")
+            }
+        }
+    }
+}
+
+/// Result of one engine execution.
+pub struct EngineReport {
+    /// The engine that produced this report.
+    pub engine: &'static str,
+    /// The product matrix.
+    pub c: Csr,
+    /// Scalar multiplications performed.
+    pub mults: u64,
+    /// The machine-simulator report (None for native engines).
+    pub sim: Option<SimReport>,
+    /// Host wall-clock seconds spent executing.
+    pub wall_seconds: f64,
+    /// Chunk partition counts (1×1 for unchunked runs).
+    pub n_parts_ac: usize,
+    pub n_parts_b: usize,
+    /// Bytes moved by explicit staging copies.
+    pub copied_bytes: u64,
+}
+
+impl EngineReport {
+    /// Simulated seconds when available, wall seconds otherwise.
+    pub fn seconds(&self) -> f64 {
+        self.sim.as_ref().map(|r| r.seconds).unwrap_or(self.wall_seconds)
+    }
+}
+
+/// Error from planning or execution.
+#[derive(Clone, Debug)]
+pub struct EngineError {
+    pub message: String,
+}
+
+impl EngineError {
+    pub fn new(message: impl Into<String>) -> Self {
+        Self { message: message.into() }
+    }
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+impl From<AllocError> for EngineError {
+    fn from(e: AllocError) -> Self {
+        EngineError::new(e.to_string())
+    }
+}
+
+/// The unified execution abstraction.
+pub trait Engine: Send + Sync {
+    /// Engine identifier (stable; used in tables and service logs).
+    fn name(&self) -> &'static str;
+
+    /// Inspect the problem and commit to an execution plan. No numeric
+    /// work happens here; symbolic/sizing passes are allowed.
+    fn plan(&self, p: &Problem) -> Result<ExecPlan, EngineError>;
+
+    /// Execute a plan produced by [`plan`](Self::plan) on this engine.
+    fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, EngineError>;
+
+    /// Plan then run.
+    fn execute(&self, p: &Problem) -> Result<EngineReport, EngineError> {
+        let plan = self.plan(p)?;
+        self.run(p, &plan)
+    }
+}
+
+/// The engines selectable from the CLI and the coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Real threads, no simulation (`kkmem::spgemm`).
+    Native,
+    /// Flat simulated run on the machine's default placement.
+    Sim,
+    /// Serial KNL B-chunking (Algorithm 1) under the simulator.
+    KnlChunk,
+    /// Serial GPU 2D chunking (Algorithms 2–4) under the simulator.
+    GpuChunk,
+    /// Double-buffered chunk executor (KNL or GPU by machine kind).
+    Pipelined,
+}
+
+impl EngineKind {
+    pub const ALL: [EngineKind; 5] = [
+        EngineKind::Native,
+        EngineKind::Sim,
+        EngineKind::KnlChunk,
+        EngineKind::GpuChunk,
+        EngineKind::Pipelined,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Native => "native",
+            EngineKind::Sim => "sim",
+            EngineKind::KnlChunk => "knl-chunk",
+            EngineKind::GpuChunk => "gpu-chunk",
+            EngineKind::Pipelined => "pipelined",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Some(EngineKind::Native),
+            "sim" | "simulated" => Some(EngineKind::Sim),
+            "knl-chunk" | "knl_chunk" | "knlchunk" => Some(EngineKind::KnlChunk),
+            "gpu-chunk" | "gpu_chunk" | "gpuchunk" => Some(EngineKind::GpuChunk),
+            "pipelined" | "pipeline" | "double-buffered" => Some(EngineKind::Pipelined),
+            _ => None,
+        }
+    }
+
+    /// Build the engine for a machine profile. `fast_budget` bounds the
+    /// chunk staging arena (None = the fast pool's usable capacity);
+    /// chunk engines reject machines of the wrong family.
+    pub fn build(
+        &self,
+        arch: Arc<Arch>,
+        opts: SpgemmOptions,
+        fast_budget: Option<u64>,
+    ) -> Result<Box<dyn Engine>, EngineError> {
+        use crate::memory::arch::MachineKind;
+        match self {
+            // A budget selects the chunked path with prefetch staging; a
+            // budget larger than B degenerates to one chunk (≈ flat).
+            EngineKind::Native => Ok(Box::new(match fast_budget {
+                Some(b) => NativeEngine::pipelined(opts, b),
+                None => NativeEngine::new(opts),
+            })),
+            EngineKind::Sim => Ok(Box::new(SimEngine::flat(arch, opts))),
+            EngineKind::KnlChunk => {
+                if arch.kind != MachineKind::Knl {
+                    return Err(EngineError::new(format!(
+                        "knl-chunk engine needs a KNL machine, got {}",
+                        arch.spec.name
+                    )));
+                }
+                Ok(Box::new(KnlChunkEngine::new(arch, opts, fast_budget)))
+            }
+            EngineKind::GpuChunk => {
+                if arch.kind != MachineKind::Gpu {
+                    return Err(EngineError::new(format!(
+                        "gpu-chunk engine needs a GPU machine, got {}",
+                        arch.spec.name
+                    )));
+                }
+                Ok(Box::new(GpuChunkEngine::new(arch, opts, fast_budget)))
+            }
+            EngineKind::Pipelined => {
+                Ok(Box::new(PipelinedChunkEngine::new(arch, opts, fast_budget)))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::scale::ScaleFactor;
+    use crate::memory::arch::{knl, p100, GpuMode, KnlMode};
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in EngineKind::ALL {
+            assert_eq!(EngineKind::parse(k.name()), Some(k), "{}", k.name());
+        }
+        assert_eq!(EngineKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn chunk_engines_check_machine_family() {
+        let knl_arch = Arc::new(knl(KnlMode::Ddr, 64, ScaleFactor::default()));
+        let gpu_arch = Arc::new(p100(GpuMode::Pinned, ScaleFactor::default()));
+        let opts = SpgemmOptions::default();
+        assert!(EngineKind::KnlChunk
+            .build(Arc::clone(&gpu_arch), opts, None)
+            .is_err());
+        assert!(EngineKind::GpuChunk
+            .build(Arc::clone(&knl_arch), opts, None)
+            .is_err());
+        for k in EngineKind::ALL {
+            let arch = if k == EngineKind::GpuChunk {
+                Arc::clone(&gpu_arch)
+            } else {
+                Arc::clone(&knl_arch)
+            };
+            assert!(k.build(arch, opts, None).is_ok(), "{}", k.name());
+        }
+    }
+
+    #[test]
+    fn every_engine_executes_a_small_problem() {
+        let a = crate::gen::rhs::random_csr(40, 30, 1, 5, 1);
+        let b = crate::gen::rhs::random_csr(30, 50, 1, 5, 2);
+        let expect = crate::sparse::ops::spgemm_reference(&a, &b);
+        let p = Problem::new(&a, &b);
+        let knl_arch = Arc::new(knl(KnlMode::Ddr, 64, ScaleFactor::default()));
+        let gpu_arch = Arc::new(p100(GpuMode::Pinned, ScaleFactor::default()));
+        for k in EngineKind::ALL {
+            let arch = if k == EngineKind::GpuChunk {
+                Arc::clone(&gpu_arch)
+            } else {
+                Arc::clone(&knl_arch)
+            };
+            let eng = k.build(arch, SpgemmOptions::default(), None).unwrap();
+            let rep = eng.execute(&p).unwrap_or_else(|e| panic!("{}: {e}", k.name()));
+            assert!(rep.c.approx_eq(&expect, 1e-10), "{}", k.name());
+            assert!(rep.mults > 0, "{}", k.name());
+            assert_eq!(rep.engine, eng.name());
+        }
+    }
+}

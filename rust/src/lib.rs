@@ -5,18 +5,21 @@
 //! Wolf, Rajamanickam — Sandia, 2018) as a three-layer Rust + JAX/Pallas
 //! system:
 //!
-//! * **Layer 3 (this crate)** — the KKMEM SpGEMM engine, selective data
+//! * **Layer 3 (this crate)** — the KKMEM SpGEMM kernels, selective data
 //!   placement, the KNL/GPU chunking algorithms, a multilevel-memory
 //!   architecture simulator (the paper's KNL and P100 testbeds are not
 //!   available, so their memory subsystems are simulated; see DESIGN.md),
-//!   a job coordinator, and the benchmark harness that regenerates every
-//!   table and figure of the paper.
+//!   the unified [`engine`] execution layer (native / simulated / chunked
+//!   / pipelined double-buffered drivers behind one trait), a job
+//!   coordinator that schedules engines, and the benchmark harness that
+//!   regenerates every table and figure of the paper.
 //! * **Layer 2/1 (build-time Python)** — a JAX model + Pallas block-matmul
 //!   kernel AOT-lowered to HLO text, loaded and executed from Rust via the
 //!   PJRT CPU client (`runtime`), used as the dense-block fast path.
 //!
 //! Quickstart: see `examples/quickstart.rs` and `README.md`.
 
+pub mod engine;
 pub mod gen;
 pub mod kkmem;
 pub mod memory;

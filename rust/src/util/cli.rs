@@ -177,6 +177,21 @@ impl ParsedArgs {
             .map_err(|e| format!("flag --{name}: expected float: {e}"))
     }
 
+    /// Parse an enumerated flag through a `parse` function, reporting the
+    /// allowed values on failure — e.g.
+    /// `p.choice("engine", EngineKind::parse, "native|sim|pipelined")`.
+    pub fn choice<T>(
+        &self,
+        name: &str,
+        parse: impl Fn(&str) -> Option<T>,
+        allowed: &str,
+    ) -> Result<T, String> {
+        let raw = self.str(name);
+        parse(raw).ok_or_else(|| {
+            format!("flag --{name}: expected one of {allowed}, got `{raw}`")
+        })
+    }
+
     /// Comma-separated list of values, e.g. `--sizes 1,2,4`.
     pub fn list(&self, name: &str) -> Vec<String> {
         self.str(name)
@@ -261,5 +276,19 @@ mod tests {
     fn switch_with_explicit_value() {
         let p = spec().parse(&argv(&["--input", "x", "--verbose=false"])).unwrap();
         assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn choice_parses_and_reports_allowed() {
+        let parse = |s: &str| match s {
+            "red" => Some(1u8),
+            "blue" => Some(2u8),
+            _ => None,
+        };
+        let p = spec().parse(&argv(&["--input", "red"])).unwrap();
+        assert_eq!(p.choice("input", parse, "red|blue").unwrap(), 1);
+        let p = spec().parse(&argv(&["--input", "green"])).unwrap();
+        let e = p.choice("input", parse, "red|blue").unwrap_err();
+        assert!(e.contains("red|blue") && e.contains("green"));
     }
 }

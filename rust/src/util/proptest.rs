@@ -63,6 +63,31 @@ impl Gen {
     pub fn rng(&mut self) -> &mut Xoshiro256 {
         &mut self.rng
     }
+
+    /// Random CSR with dimensions and degrees up to `max_n` / `max_deg`.
+    pub fn csr(&mut self, max_n: usize, max_deg: usize) -> crate::sparse::Csr {
+        let nrows = self.usize(1, max_n);
+        let ncols = self.usize(1, max_n);
+        let deg = self.usize(0, max_deg.min(ncols));
+        crate::gen::rhs::random_csr(nrows, ncols, 0, deg, self.u64())
+    }
+
+    /// Random conformable pair `(A: m×k, B: k×n)` for SpGEMM properties.
+    pub fn csr_pair(
+        &mut self,
+        max_n: usize,
+        max_deg: usize,
+    ) -> (crate::sparse::Csr, crate::sparse::Csr) {
+        let m = self.usize(1, max_n);
+        let k = self.usize(1, max_n);
+        let n = self.usize(1, max_n);
+        let da = self.usize(0, max_deg.min(k));
+        let db = self.usize(0, max_deg.min(n));
+        (
+            crate::gen::rhs::random_csr(m, k, 0, da, self.u64()),
+            crate::gen::rhs::random_csr(k, n, 0, db, self.u64()),
+        )
+    }
 }
 
 /// Run `prop` for `cases` iterations with distinct deterministic seeds.
@@ -210,6 +235,18 @@ mod tests {
         let v = vec![1, 2, 7, 3, 7, 4];
         let min = shrink_vec(v, |xs| xs.contains(&7));
         assert_eq!(min, vec![7]);
+    }
+
+    #[test]
+    fn csr_generators_produce_valid_conformable_matrices() {
+        check("csr generators valid", 30, |g| {
+            let m = g.csr(20, 5);
+            m.validate().unwrap();
+            let (a, b) = g.csr_pair(20, 5);
+            a.validate().unwrap();
+            b.validate().unwrap();
+            assert_eq!(a.ncols, b.nrows);
+        });
     }
 
     #[test]

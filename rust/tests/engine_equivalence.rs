@@ -1,0 +1,179 @@
+//! Engine-equivalence suite: every engine behind the unified `Engine`
+//! trait must produce the same sorted CSR product as the dense reference
+//! across random, stencil, and power-law inputs — and the pipelined
+//! GPU-chunk engine must beat the serial chunk driver on a problem whose
+//! B exceeds the fast pool, with an identical product (the PR's
+//! acceptance criterion).
+
+use mlmem_spgemm::chunk::gpu_chunked_sim;
+use mlmem_spgemm::engine::{gpu_pipelined_sim, Engine, EngineKind, Problem};
+use mlmem_spgemm::gen::rhs::{random_csr, uniform_degree};
+use mlmem_spgemm::gen::scale::ScaleFactor;
+use mlmem_spgemm::kkmem::SpgemmOptions;
+use mlmem_spgemm::memory::arch::{knl, p100, GpuMode, KnlMode};
+use mlmem_spgemm::memory::{MemSim, FAST};
+use mlmem_spgemm::sparse::ops::spgemm_reference;
+use mlmem_spgemm::sparse::Csr;
+use mlmem_spgemm::util::proptest::{check, Gen};
+use std::sync::Arc;
+
+/// Run every engine kind on (a, b) and assert all sorted products are
+/// structurally identical and numerically equal to the dense reference.
+fn assert_engines_agree(a: &Csr, b: &Csr, label: &str) {
+    let mut reference = spgemm_reference(a, b);
+    reference.sort_rows();
+    let knl_arch = Arc::new(knl(KnlMode::Ddr, 256, ScaleFactor::default()));
+    let gpu_arch = Arc::new(p100(GpuMode::Pinned, ScaleFactor::default()));
+    // A budget that forces real chunking on the chunk engines.
+    let budget = (b.size_bytes() / 3).max(256);
+    let problem = Problem::new(a, b);
+    let mut products: Vec<(String, Csr)> = Vec::new();
+    for kind in EngineKind::ALL {
+        let archs: Vec<Arc<_>> = match kind {
+            EngineKind::KnlChunk => vec![Arc::clone(&knl_arch)],
+            EngineKind::GpuChunk => vec![Arc::clone(&gpu_arch)],
+            // The pipelined engine has a KNL and a GPU flavour: run both.
+            EngineKind::Pipelined => vec![Arc::clone(&knl_arch), Arc::clone(&gpu_arch)],
+            _ => vec![Arc::clone(&knl_arch)],
+        };
+        for arch in archs {
+            let name = format!("{}@{}", kind.name(), arch.spec.name);
+            let eng = kind
+                .build(arch, SpgemmOptions::default(), Some(budget))
+                .unwrap_or_else(|e| panic!("{label}/{name}: build: {e}"));
+            let rep = eng
+                .execute(&problem)
+                .unwrap_or_else(|e| panic!("{label}/{name}: {e}"));
+            let mut c = rep.c;
+            c.sort_rows();
+            assert!(
+                c.approx_eq(&reference, 1e-9),
+                "{label}/{name}: product diverges from reference"
+            );
+            products.push((name, c));
+        }
+    }
+    // All engines share the symbolic structure: sorted rowmaps and column
+    // sets must be *identical*, values equal to fp-reassociation noise.
+    let (first_name, first) = &products[0];
+    for (name, c) in &products[1..] {
+        assert_eq!(
+            c.rowmap, first.rowmap,
+            "{label}: rowmap of {name} != {first_name}"
+        );
+        assert_eq!(
+            c.entries, first.entries,
+            "{label}: entries of {name} != {first_name}"
+        );
+        for (i, (v, w)) in c.values.iter().zip(&first.values).enumerate() {
+            assert!(
+                (v - w).abs() <= 1e-9 * w.abs().max(1.0),
+                "{label}: value[{i}] of {name} = {v} vs {first_name} = {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn engines_agree_on_random_inputs() {
+    check("engines agree (random)", 6, |g: &mut Gen| {
+        let m = g.usize(10, 50);
+        let k = g.usize(10, 50);
+        let n = g.usize(10, 50);
+        let a = random_csr(m, k, 1, 6, g.u64());
+        let b = random_csr(k, n, 1, 6, g.u64());
+        assert_engines_agree(&a, &b, "random");
+    });
+}
+
+#[test]
+fn engines_agree_on_stencil_inputs() {
+    let g = mlmem_spgemm::gen::stencil::Grid::new(6, 6, 6);
+    let a = mlmem_spgemm::gen::stencil::laplace3d(g);
+    assert_engines_agree(&a, &a, "laplace3d");
+    let g2 = mlmem_spgemm::gen::stencil::Grid::new(5, 5, 5);
+    let brick = mlmem_spgemm::gen::stencil::brick3d(g2);
+    assert_engines_agree(&brick, &brick, "brick3d");
+}
+
+#[test]
+fn engines_agree_on_power_law_inputs() {
+    // RMAT with graph500 parameters: heavy-tailed, hub-dominated rows —
+    // the skew that stresses accumulators and partitioners.
+    let adj = mlmem_spgemm::gen::graphs::graph500(6, 8, 42);
+    assert_engines_agree(&adj, &adj, "rmat-aa");
+    let rect = uniform_degree(adj.ncols, 40, 3, 7);
+    assert_engines_agree(&adj, &rect, "rmat-rect");
+}
+
+/// Acceptance criterion: on a problem whose B exceeds the fast pool's
+/// usable capacity, the pipelined GPU-chunk engine simulates strictly
+/// faster than the serial chunk driver while producing the same product.
+#[test]
+fn pipelined_gpu_beats_serial_when_b_exceeds_fast_pool() {
+    let a = uniform_degree(1000, 100_000, 64, 1);
+    let b = uniform_degree(100_000, 500, 16, 2);
+    let scale = ScaleFactor::default();
+    let arch = p100(GpuMode::Pinned, scale);
+    let fast_usable = arch.spec.pools[FAST.0].usable();
+    assert!(
+        b.size_bytes() > fast_usable,
+        "precondition: B ({} B) must exceed the fast pool's usable {} B",
+        b.size_bytes(),
+        fast_usable
+    );
+    let opts = SpgemmOptions::default();
+
+    let mut serial_sim = MemSim::new(arch.spec.clone());
+    let serial = gpu_chunked_sim(&mut serial_sim, &a, &b, u64::MAX, &opts).unwrap();
+    let serial_rep = serial_sim.finish();
+
+    let mut pipe_sim = MemSim::new(arch.spec.clone());
+    let piped = gpu_pipelined_sim(&mut pipe_sim, &a, &b, u64::MAX, &opts).unwrap();
+    let pipe_rep = pipe_sim.finish();
+
+    // Identical product (sorted structure equal, values to fp noise).
+    let mut cs = serial.c.clone();
+    cs.sort_rows();
+    let mut cp = piped.c.clone();
+    cp.sort_rows();
+    assert_eq!(cs.rowmap, cp.rowmap);
+    assert_eq!(cs.entries, cp.entries);
+    assert!(cp.approx_eq(&cs, 1e-9));
+
+    // Strictly lower simulated time, with real transfer time hidden.
+    assert!(
+        pipe_rep.seconds < serial_rep.seconds,
+        "pipelined {} s !< serial {} s",
+        pipe_rep.seconds,
+        serial_rep.seconds
+    );
+    let hidden = pipe_rep.async_copy_seconds - pipe_rep.overlap_stall_seconds;
+    assert!(hidden > 0.0, "no transfer time was hidden");
+    // The serial driver exposes every staging copy; the pipelined one
+    // must expose strictly less copy+stall time in total.
+    assert!(
+        pipe_rep.copy_seconds + pipe_rep.overlap_stall_seconds
+            < serial_rep.copy_seconds,
+        "exposed transfer time did not shrink: {} + {} vs {}",
+        pipe_rep.copy_seconds,
+        pipe_rep.overlap_stall_seconds,
+        serial_rep.copy_seconds
+    );
+}
+
+/// The pipelined engine through the `Engine` trait reports its chunking.
+#[test]
+fn pipelined_engine_reports_parts_and_sim() {
+    let a = uniform_degree(200, 4000, 16, 3);
+    let b = uniform_degree(4000, 200, 8, 4);
+    let arch = Arc::new(knl(KnlMode::Ddr, 256, ScaleFactor::default()));
+    let eng = EngineKind::Pipelined
+        .build(arch, SpgemmOptions::default(), Some(b.size_bytes() / 4))
+        .unwrap();
+    let rep = eng.execute(&Problem::new(&a, &b)).unwrap();
+    assert!(rep.n_parts_b >= 3, "got {} parts", rep.n_parts_b);
+    assert!(rep.copied_bytes >= b.size_bytes());
+    let sim = rep.sim.expect("simulated engine");
+    assert!(sim.async_copy_seconds > 0.0);
+}

@@ -104,6 +104,38 @@ fn prop_gpu_chunked_equals_unchunked_any_budget() {
 }
 
 #[test]
+fn prop_all_engines_produce_identical_sorted_products() {
+    use mlmem_spgemm::engine::{Engine, EngineKind, Problem};
+    check("all engines agree", 8, |g| {
+        let (a, b) = g.csr_pair(30, 5);
+        let mut expect = spgemm_reference(&a, &b);
+        expect.sort_rows();
+        let knl_arch = std::sync::Arc::new(knl(KnlMode::Ddr, 256, ScaleFactor::default()));
+        let gpu_arch = std::sync::Arc::new(p100(GpuMode::Pinned, ScaleFactor::default()));
+        let budget = (b.size_bytes() / 2).max(512);
+        let problem = Problem::new(&a, &b);
+        for kind in EngineKind::ALL {
+            let arch = if kind == EngineKind::GpuChunk {
+                std::sync::Arc::clone(&gpu_arch)
+            } else {
+                std::sync::Arc::clone(&knl_arch)
+            };
+            let eng = kind
+                .build(arch, SpgemmOptions::default(), Some(budget))
+                .expect("engine builds");
+            let rep = eng
+                .execute(&problem)
+                .unwrap_or_else(|e| panic!("{}: {e}", kind.name()));
+            let mut c = rep.c;
+            c.sort_rows();
+            assert_eq!(c.rowmap, expect.rowmap, "{}", kind.name());
+            assert_eq!(c.entries, expect.entries, "{}", kind.name());
+            assert!(c.approx_eq(&expect, 1e-9), "{}", kind.name());
+        }
+    });
+}
+
+#[test]
 fn prop_partition_tiles_and_respects_budget() {
     check("partition invariants", 60, |g| {
         let m = gen_csr(g, 60);

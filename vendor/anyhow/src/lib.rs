@@ -1,0 +1,196 @@
+//! Minimal offline stand-in for the `anyhow` crate, providing the subset
+//! this workspace uses: [`Error`], [`Result`], the [`Context`] extension
+//! trait, and the `anyhow!` / `bail!` / `ensure!` macros. Semantics match
+//! `anyhow` where they overlap: `Error` is a cheap opaque error value that
+//! any `std::error::Error` converts into via `?`, and context layers
+//! render as a "Caused by" chain in `{:?}`.
+
+use std::fmt;
+
+/// Opaque error type: a message plus an optional chain of causes.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), cause: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: context.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.cause.as_deref();
+        }
+        out.into_iter()
+    }
+
+    /// The outermost (most recently attached) message.
+    pub fn root_message(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.cause.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// Like real `anyhow`, `Error` deliberately does NOT implement
+// `std::error::Error`; that is what makes this blanket conversion
+// coherent (and lets `?` convert any std error into `Error`).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = Vec::new();
+        chain.push(e.to_string());
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in chain.into_iter().rev() {
+            err = Some(Error { msg, cause: err.map(Box::new) });
+        }
+        err.expect("chain nonempty")
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let n: u32 = s.parse().context("parsing number")?;
+        ensure!(n < 100, "number {n} too large");
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("42").unwrap(), 42);
+        let e = parse("nope").unwrap_err();
+        assert_eq!(e.to_string(), "parsing number");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        let e = parse("200").unwrap_err();
+        assert_eq!(e.to_string(), "number 200 too large");
+        fn fails() -> Result<()> {
+            bail!("boom {}", 7);
+        }
+        assert_eq!(fails().unwrap_err().to_string(), "boom 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<u32, std::num::ParseIntError> = "5".parse();
+        let got = ok.with_context(|| "never rendered").unwrap();
+        assert_eq!(got, 5);
+    }
+
+    #[test]
+    fn chain_preserves_order() {
+        let e = Error::msg("inner").context("mid").context("outer");
+        let msgs: Vec<&str> = e.chain().collect();
+        assert_eq!(msgs, vec!["outer", "mid", "inner"]);
+    }
+}
