@@ -162,6 +162,26 @@ pub fn run_gpu_chunk(
     }
 }
 
+/// Execute one multiplication through the coordinator under an explicit
+/// policy (or `Policy::Auto`) — the `planner` experiment's probe. `None`
+/// = the configuration did not fit/complete, the paper's missing point.
+pub fn run_policy_job(
+    a: &std::sync::Arc<Csr>,
+    b: &std::sync::Arc<Csr>,
+    arch: &std::sync::Arc<Arch>,
+    policy: crate::coordinator::Policy,
+    id: u64,
+) -> Option<crate::coordinator::JobResult> {
+    use std::sync::Arc;
+    let job = crate::coordinator::Job {
+        id,
+        kind: crate::coordinator::JobKind::Spgemm { a: Arc::clone(a), b: Arc::clone(b) },
+        arch: Arc::clone(arch),
+        policy,
+    };
+    crate::coordinator::execute(&job, &crate::coordinator::PlannerOptions::default()).ok()
+}
+
 /// Format an optional GFLOP/s outcome ("-" for missing points, as the
 /// paper leaves gaps for runs that did not fit/complete).
 pub fn fmt_gflops(o: &RunOutcome) -> String {

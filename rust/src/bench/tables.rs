@@ -324,6 +324,108 @@ pub fn pipeline_overlap(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
     t
 }
 
+/// The `planner` experiment: prediction accuracy and regret of the
+/// predictive Auto planner across the random / stencil / power-law /
+/// banded sweep on KNL-DDR. For each input, every explicit policy runs
+/// alongside `Policy::Auto`; the table reports the policy times, which
+/// candidate Auto chose, its predicted-vs-actual error, and the regret
+/// against the best explicit policy (0% = Auto matched the best).
+pub fn planner_accuracy(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
+    use super::experiments::run_policy_job;
+    use crate::coordinator::{JobResult, Policy};
+    use crate::memory::pool::FAST;
+    use crate::sparse::Csr;
+    use std::sync::Arc;
+
+    let arch = Arc::new(knl(KnlMode::Ddr, 256, cfg.scale));
+    let fast_usable = arch.spec.pools[FAST.0].usable();
+    let gb = cfg.sizes_gb.last().copied().unwrap_or(4.0);
+    let target = cfg.scale.gb(gb);
+
+    let mut inputs: Vec<(String, Arc<Csr>, Arc<Csr>)> = Vec::new();
+    for (domain, mul) in [(Domain::Laplace3D, Mul::RxA), (Domain::Elasticity, Mul::AxP)] {
+        let p = cache.get(domain, gb, cfg.scale).clone();
+        let (a, b) = mul.operands(&p);
+        inputs.push((
+            format!("{}-{}", domain.name(), mul.name()),
+            Arc::new(a.clone()),
+            Arc::new(b.clone()),
+        ));
+    }
+    // Random: uniform degree-8 square matrices at the A-size target.
+    let n_rand = ((target / 104).max(64)) as usize;
+    inputs.push((
+        "random-d8".into(),
+        Arc::new(uniform_degree(n_rand, n_rand, 8, cfg.seed)),
+        Arc::new(uniform_degree(n_rand, n_rand, 8, cfg.seed + 1)),
+    ));
+    // Power-law: Graph500 RMAT adjacency squared.
+    let g = Arc::new(crate::gen::graphs::graph500(cfg.graph_scale, 8, cfg.seed));
+    inputs.push(("powerlaw-g500".into(), Arc::clone(&g), g));
+    // Banded: narrow band, the shape of the planner regression tests.
+    let n_band = ((target / 68).max(64)) as usize;
+    inputs.push((
+        "banded".into(),
+        Arc::new(crate::gen::rhs::banded(n_band, n_band, 2, 2, cfg.seed)),
+        Arc::new(crate::gen::rhs::banded(n_band, n_band, 2, 2, cfg.seed + 1)),
+    ));
+
+    let run = |a: &Arc<Csr>, b: &Arc<Csr>, policy: Policy, id: u64| -> Option<JobResult> {
+        run_policy_job(a, b, &arch, policy, id)
+    };
+    let secs = |r: &Option<JobResult>| r.as_ref().map(|x| x.report.seconds);
+    let fmt = |s: Option<f64>| s.map(|v| format!("{v:.5}")).unwrap_or_else(|| "-".into());
+
+    let mut t = Table::new(&[
+        "input", "flat", "dp", "chunk", "pipe", "auto", "decision", "pred s", "err%",
+        "regret%",
+    ])
+    .with_title("Auto planner: prediction accuracy and regret (KNL-DDR 256T, seconds)");
+    for (i, (name, a, b)) in inputs.iter().enumerate() {
+        let base = i as u64 * 8;
+        let flat = run(a, b, Policy::Flat, base);
+        let dp = run(a, b, Policy::DataPlacement, base + 1);
+        let chunk = run(a, b, Policy::Chunked { fast_budget: fast_usable }, base + 2);
+        let pipe = run(a, b, Policy::Pipelined { fast_budget: None }, base + 3);
+        let auto = run(a, b, Policy::Auto, base + 4);
+        let best = [&flat, &dp, &chunk, &pipe]
+            .iter()
+            .filter_map(|r| secs(r))
+            .fold(f64::INFINITY, f64::min);
+        let (decision, pred, err, regret) = match &auto {
+            Some(r) => (
+                r.decision.name(),
+                r.predicted
+                    .as_ref()
+                    .map(|p| format!("{:.5}", p.total_seconds()))
+                    .unwrap_or_else(|| "-".into()),
+                r.prediction_error()
+                    .map(|e| format!("{:+.1}", e * 100.0))
+                    .unwrap_or_else(|| "-".into()),
+                if best.is_finite() && best > 0.0 {
+                    format!("{:+.1}", (r.report.seconds / best - 1.0) * 100.0)
+                } else {
+                    "-".into()
+                },
+            ),
+            None => ("-".into(), "-".into(), "-".into(), "-".into()),
+        };
+        t.row(&[
+            name.clone(),
+            fmt(secs(&flat)),
+            fmt(secs(&dp)),
+            fmt(secs(&chunk)),
+            fmt(secs(&pipe)),
+            fmt(secs(&auto)),
+            decision,
+            pred,
+            err,
+            regret,
+        ]);
+    }
+    t
+}
+
 /// Sanity table: P100 profile — not in the paper, prints the machine
 /// parameters used (documentation aid).
 pub fn machine_profiles(cfg: &BenchConfig) -> Table {
@@ -404,5 +506,16 @@ mod tests {
         let t = pipeline_overlap(&cfg, &mut cache);
         assert_eq!(t.n_rows(), 8);
         assert!(t.render().contains("Pipe8"));
+    }
+
+    #[test]
+    fn planner_table_reports_all_inputs() {
+        let (cfg, mut cache) = quick();
+        let t = planner_accuracy(&cfg, &mut cache);
+        assert_eq!(t.n_rows(), 5);
+        let r = t.render();
+        assert!(r.contains("regret"));
+        assert!(r.contains("banded"));
+        assert!(r.contains("powerlaw-g500"));
     }
 }

@@ -4,7 +4,7 @@
 //! resident while A/C blocks stream (Algorithm 3). Loop order and
 //! partition sizes come from the Algorithm 4 heuristic.
 
-use super::heuristic::{plan_gpu_chunks_sized, GpuChunkAlgo, GpuChunkPlan};
+use super::heuristic::{plan_gpu_chunks_with, GpuChunkAlgo, GpuChunkPlan};
 use super::knl::ChunkedProduct;
 use super::partition::{csr_prefix_bytes, range_bytes, sum_prefixes};
 use crate::kkmem::mempool::PooledAcc;
@@ -148,8 +148,16 @@ pub(crate) fn run_block(
     Csr::new(nrows, ncols, rowmap, entries, values)
 }
 
-/// Run the Algorithm 4 planner for this multiplication.
-pub fn plan_for(sim: &MemSim, a: &Csr, b: &Csr, fast_budget: u64, acc_bytes: u64) -> (GpuChunkPlan, Vec<usize>) {
+/// Run the Algorithm 4 planner for this multiplication. `force` pins the
+/// loop order (candidate enumeration); `None` lets the heuristic choose.
+pub fn plan_for(
+    sim: &MemSim,
+    a: &Csr,
+    b: &Csr,
+    fast_budget: u64,
+    acc_bytes: u64,
+    force: Option<GpuChunkAlgo>,
+) -> (GpuChunkPlan, Vec<usize>) {
     let b_comp = CompressedMatrix::compress(b);
     let sizes = symbolic(a, &b_comp);
     let a_prefix = csr_prefix_bytes(a);
@@ -161,12 +169,13 @@ pub fn plan_for(sim: &MemSim, a: &Csr, b: &Csr, fast_budget: u64, acc_bytes: u64
         .min(fast_budget)
         .saturating_sub(acc_bytes)
         .max(1);
-    let plan = plan_gpu_chunks_sized(
+    let plan = plan_gpu_chunks_with(
         &ac_prefix,
         &b_prefix,
         a_prefix[a.nrows],
         c_prefix[a.nrows],
         usable,
+        force,
     );
     (plan, sizes)
 }
@@ -180,6 +189,20 @@ pub fn gpu_chunked_sim(
     fast_budget: u64,
     opts: &SpgemmOptions,
 ) -> Result<ChunkedProduct, AllocError> {
+    gpu_chunked_sim_forced(sim, a, b, fast_budget, opts, None)
+}
+
+/// [`gpu_chunked_sim`] with the loop order pinned — how the coordinator
+/// runs the candidate order its cost model scored rather than the one
+/// Algorithm 4's copy heuristic would pick.
+pub fn gpu_chunked_sim_forced(
+    sim: &mut MemSim,
+    a: &Csr,
+    b: &Csr,
+    fast_budget: u64,
+    opts: &SpgemmOptions,
+    force: Option<GpuChunkAlgo>,
+) -> Result<ChunkedProduct, AllocError> {
     assert_eq!(a.ncols, b.nrows, "spgemm shape mismatch");
     sim.set_compute_efficiency(crate::memory::machine::lane_efficiency(
         a.avg_degree(),
@@ -191,7 +214,7 @@ pub fn gpu_chunked_sim(
         opts.acc.footprint_bytes(row_ub, b.ncols),
         acc_wrap,
     );
-    let (plan, c_sizes) = plan_for(sim, a, b, fast_budget, acc_bytes);
+    let (plan, c_sizes) = plan_for(sim, a, b, fast_budget, acc_bytes, force);
     let c_prefix = c_prefix_from_sizes(&c_sizes);
 
     // Host (slow) residents.

@@ -37,15 +37,17 @@ pub struct GpuChunkPlan {
 }
 
 /// Paper's copy-cost model for Algorithm 2 (AC outer):
-/// `size(A) + size(C) + size(B)·‖P_AC‖`.
+/// `size(A) + size(C) + size(B)·‖P_AC‖`. Saturating: unscaled paper-GB
+/// sizes times pass counts can exceed `u64::MAX`.
 pub fn cost_ac_resident(a: u64, b: u64, c: u64, n_ac: usize) -> u64 {
-    a + c + b * n_ac as u64
+    a.saturating_add(c).saturating_add(b.saturating_mul(n_ac as u64))
 }
 
 /// Paper's copy-cost model for Algorithm 3 (B outer):
-/// `size(B) + size(A)·‖P_B‖ + size(C)·(‖P_B‖ − 1)`.
+/// `size(B) + size(A)·‖P_B‖ + size(C)·(‖P_B‖ − 1)`. Saturating, as above.
 pub fn cost_b_resident(a: u64, b: u64, c: u64, n_b: usize) -> u64 {
-    b + a * n_b as u64 + c * (n_b as u64).saturating_sub(1)
+    b.saturating_add(a.saturating_mul(n_b as u64))
+        .saturating_add(c.saturating_mul((n_b as u64).saturating_sub(1)))
 }
 
 fn max_part_bytes(prefix: &[u64], parts: &[(usize, usize)]) -> u64 {
@@ -56,8 +58,13 @@ fn max_part_bytes(prefix: &[u64], parts: &[(usize, usize)]) -> u64 {
         .unwrap_or(0)
 }
 
-/// Algorithm 4. `ac_prefix` is the combined A+C row-byte prefix,
-/// `b_prefix` B's row-byte prefix, `fast_bytes` the usable fast capacity.
+/// Algorithm 4 as published: approximate half/half A-C split and the
+/// paper's `size(A) + 2·size(C)` vs `size(B)` condition deciding who
+/// gets the big portion. Kept as the paper-literal reference; production
+/// paths plan through [`plan_gpu_chunks_with`], which budgets each loop
+/// order for itself and compares exact costs. `ac_prefix` is the
+/// combined A+C row-byte prefix, `b_prefix` B's row-byte prefix,
+/// `fast_bytes` the usable fast capacity.
 pub fn plan_gpu_chunks(
     ac_prefix: &[u64],
     b_prefix: &[u64],
@@ -78,8 +85,7 @@ pub fn plan_gpu_chunks(
         // the leftover.
         let leftover = fast_bytes - size_b;
         let p_ac = partition_balanced(ac_prefix, leftover.max(1));
-        let cost = cost_b_resident(split_a(ac_prefix), size_b, split_c(ac_prefix), 1)
-            .min(u64::MAX);
+        let cost = cost_b_resident(split_a(ac_prefix), size_b, split_c(ac_prefix), 1);
         return GpuChunkPlan {
             algo: GpuChunkAlgo::BResident,
             p_ac,
@@ -107,17 +113,9 @@ pub fn plan_gpu_chunks(
     let a_bytes = split_a(ac_prefix);
     let c_bytes = split_c(ac_prefix);
     let (p_ac, p_b) = if a_bytes + 2 * c_bytes > size_b {
-        let p_ac = partition_balanced(ac_prefix, big);
-        let used = max_part_bytes(ac_prefix, &p_ac);
-        let b_budget = (fast_bytes - used.min(fast_bytes - 1)).max(small);
-        let p_b = partition_balanced(b_prefix, b_budget);
-        (p_ac, p_b)
+        partitions_for(GpuChunkAlgo::AcResident, ac_prefix, b_prefix, fast_bytes, big, small)
     } else {
-        let p_b = partition_balanced(b_prefix, big);
-        let used = max_part_bytes(b_prefix, &p_b);
-        let ac_budget = (fast_bytes - used.min(fast_bytes - 1)).max(small);
-        let p_ac = partition_balanced(ac_prefix, ac_budget);
-        (p_ac, p_b)
+        partitions_for(GpuChunkAlgo::BResident, ac_prefix, b_prefix, fast_bytes, big, small)
     };
     let cost1 = cost_ac_resident(a_bytes, size_b, c_bytes, p_ac.len());
     let cost2 = cost_b_resident(a_bytes, size_b, c_bytes, p_b.len());
@@ -149,6 +147,35 @@ fn split_c(ac_prefix: &[u64]) -> u64 {
     ac_prefix[ac_prefix.len() - 1] - split_a(ac_prefix)
 }
 
+/// Partition pair for a committed loop order: the resident side gets the
+/// big (75%) portion so its pass count is minimized, the streamed side
+/// whatever remains next to the largest resident part.
+fn partitions_for(
+    algo: GpuChunkAlgo,
+    ac_prefix: &[u64],
+    b_prefix: &[u64],
+    fast_bytes: u64,
+    big: u64,
+    small: u64,
+) -> (Vec<(usize, usize)>, Vec<(usize, usize)>) {
+    match algo {
+        GpuChunkAlgo::AcResident => {
+            let p_ac = partition_balanced(ac_prefix, big.max(1));
+            let used = max_part_bytes(ac_prefix, &p_ac);
+            let b_budget = (fast_bytes - used.min(fast_bytes - 1)).max(small);
+            let p_b = partition_balanced(b_prefix, b_budget.max(1));
+            (p_ac, p_b)
+        }
+        GpuChunkAlgo::BResident => {
+            let p_b = partition_balanced(b_prefix, big.max(1));
+            let used = max_part_bytes(b_prefix, &p_b);
+            let ac_budget = (fast_bytes - used.min(fast_bytes - 1)).max(small);
+            let p_ac = partition_balanced(ac_prefix, ac_budget.max(1));
+            (p_ac, p_b)
+        }
+    }
+}
+
 /// Like [`plan_gpu_chunks`] but with exact A and C byte totals for the
 /// cost model (the partitioning still uses the combined prefix).
 pub fn plan_gpu_chunks_sized(
@@ -158,26 +185,49 @@ pub fn plan_gpu_chunks_sized(
     c_bytes: u64,
     fast_bytes: u64,
 ) -> GpuChunkPlan {
-    let mut plan = plan_gpu_chunks(ac_prefix, b_prefix, fast_bytes);
+    plan_gpu_chunks_with(ac_prefix, b_prefix, a_bytes, c_bytes, fast_bytes, None)
+}
+
+/// The exact-size planner, optionally pinned to one loop order (`force`)
+/// so callers can enumerate both as separate candidates. Each candidate
+/// order is budgeted *for itself* — its resident side gets the big
+/// portion — before the copy costs are compared, so an exact-size flip
+/// can no longer ship partitions that were derived for the other order
+/// (the old bug: the flipped-to order inherited the rejected order's
+/// budget split and ran with its resident side in the small portion).
+pub fn plan_gpu_chunks_with(
+    ac_prefix: &[u64],
+    b_prefix: &[u64],
+    a_bytes: u64,
+    c_bytes: u64,
+    fast_bytes: u64,
+    force: Option<GpuChunkAlgo>,
+) -> GpuChunkPlan {
     let size_b = b_prefix[b_prefix.len() - 1];
-    let cost1 = cost_ac_resident(a_bytes, size_b, c_bytes, plan.p_ac.len());
-    let cost2 = cost_b_resident(a_bytes, size_b, c_bytes, plan.p_b.len());
-    // Re-decide with exact sizes unless a whole-fit case pinned the algo.
-    let b_whole = plan.p_b.len() == 1 && size_b < (fast_bytes as f64 * 0.75) as u64;
-    let ac_whole = plan.p_ac.len() == 1
-        && ac_prefix[ac_prefix.len() - 1] < (fast_bytes as f64 * 0.75) as u64;
-    if !b_whole && !ac_whole {
-        plan.algo = if cost1 <= cost2 {
-            GpuChunkAlgo::AcResident
-        } else {
-            GpuChunkAlgo::BResident
+    let big = (fast_bytes as f64 * 0.75) as u64;
+    let small = fast_bytes - big;
+    let candidate = |algo: GpuChunkAlgo| {
+        let (p_ac, p_b) = partitions_for(algo, ac_prefix, b_prefix, fast_bytes, big, small);
+        let cost = match algo {
+            GpuChunkAlgo::AcResident => {
+                cost_ac_resident(a_bytes, size_b, c_bytes, p_ac.len())
+            }
+            GpuChunkAlgo::BResident => cost_b_resident(a_bytes, size_b, c_bytes, p_b.len()),
         };
-    }
-    plan.predicted_copy_bytes = match plan.algo {
-        GpuChunkAlgo::AcResident => cost1,
-        GpuChunkAlgo::BResident => cost2,
+        GpuChunkPlan { algo, p_ac, p_b, predicted_copy_bytes: cost }
     };
-    plan
+    match force {
+        Some(algo) => candidate(algo),
+        None => {
+            let ac = candidate(GpuChunkAlgo::AcResident);
+            let b = candidate(GpuChunkAlgo::BResident);
+            if ac.predicted_copy_bytes <= b.predicted_copy_bytes {
+                ac
+            } else {
+                b
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -256,21 +306,53 @@ mod tests {
     }
 
     #[test]
-    fn sized_variant_uses_exact_costs() {
+    fn sized_variant_picks_self_budgeted_cheaper_order() {
+        // Whichever order the exact-size planner picks, its cost under its
+        // OWN budget split must not exceed the rejected order's cost under
+        // that order's own split — the re-derivation the old flip skipped.
         let ac = prefix(100, 100);
         let b = prefix(100, 100);
-        // Extremely skewed split: A tiny, C huge → recopying C every B
-        // pass (BResident) is expensive → prefer AcResident.
-        let plan = plan_gpu_chunks_sized(&ac, &b, 100, 9900, 2000);
-        assert_eq!(plan.algo, GpuChunkAlgo::AcResident);
-        // Opposite: A huge, C tiny → streaming A per B pass is the cost;
-        // compare against streaming B per AC pass.
-        let plan2 = plan_gpu_chunks_sized(&ac, &b, 9900, 100, 2000);
-        let c1 = cost_ac_resident(9900, 10000, 100, plan2.p_ac.len());
-        let c2 = cost_b_resident(9900, 10000, 100, plan2.p_b.len());
-        match plan2.algo {
-            GpuChunkAlgo::AcResident => assert!(c1 <= c2),
-            GpuChunkAlgo::BResident => assert!(c2 <= c1),
+        for (a_bytes, c_bytes) in [(100u64, 9900u64), (9900, 100), (5000, 5000)] {
+            let plan = plan_gpu_chunks_sized(&ac, &b, a_bytes, c_bytes, 2000);
+            let other = match plan.algo {
+                GpuChunkAlgo::AcResident => GpuChunkAlgo::BResident,
+                GpuChunkAlgo::BResident => GpuChunkAlgo::AcResident,
+            };
+            let alt = plan_gpu_chunks_with(&ac, &b, a_bytes, c_bytes, 2000, Some(other));
+            assert!(
+                plan.predicted_copy_bytes <= alt.predicted_copy_bytes,
+                "a={a_bytes} c={c_bytes}: {} {} !<= {} {}",
+                plan.algo.name(),
+                plan.predicted_copy_bytes,
+                alt.algo.name(),
+                alt.predicted_copy_bytes
+            );
+            assert!(is_partition(&plan.p_ac, 100) && is_partition(&plan.p_b, 100));
         }
+    }
+
+    #[test]
+    fn forced_order_budgets_its_own_resident_side() {
+        // Regression for the mis-budgeted flip: a committed loop order must
+        // give the big portion to ITS resident side, so the resident side
+        // always ends up with no more parts than the streamed side.
+        let ac = prefix(100, 100);
+        let b = prefix(100, 100);
+        let p1 =
+            plan_gpu_chunks_with(&ac, &b, 5000, 5000, 2000, Some(GpuChunkAlgo::AcResident));
+        assert_eq!(p1.algo, GpuChunkAlgo::AcResident);
+        assert!(p1.p_ac.len() < p1.p_b.len(), "{} !< {}", p1.p_ac.len(), p1.p_b.len());
+        let p2 =
+            plan_gpu_chunks_with(&ac, &b, 5000, 5000, 2000, Some(GpuChunkAlgo::BResident));
+        assert_eq!(p2.algo, GpuChunkAlgo::BResident);
+        assert!(p2.p_b.len() < p2.p_ac.len(), "{} !< {}", p2.p_b.len(), p2.p_ac.len());
+    }
+
+    #[test]
+    fn cost_models_saturate_instead_of_overflowing() {
+        // Unscaled paper-GB sizes times pass counts used to overflow u64.
+        let huge = u64::MAX / 2;
+        assert_eq!(cost_ac_resident(huge, huge, huge, 1000), u64::MAX);
+        assert_eq!(cost_b_resident(huge, huge, huge, 1000), u64::MAX);
     }
 }

@@ -2,6 +2,7 @@
 //! multiplication (or triangle count), a machine profile, and a policy;
 //! the result carries the product summary plus the simulated report.
 
+use crate::engine::CostEstimate;
 use crate::memory::arch::Arch;
 use crate::memory::SimReport;
 use crate::sparse::Csr;
@@ -72,6 +73,15 @@ impl Decision {
     }
 }
 
+/// One scored candidate plan from the Auto planner, kept so
+/// mispredictions are observable after the fact.
+#[derive(Clone, Debug)]
+pub struct CandidateScore {
+    /// Human-readable candidate label (engine + plan).
+    pub label: String,
+    pub predicted: CostEstimate,
+}
+
 /// Result of a completed job.
 pub struct JobResult {
     pub id: u64,
@@ -82,6 +92,25 @@ pub struct JobResult {
     pub c_nnz: usize,
     /// Triangle count for TriCount jobs.
     pub triangles: Option<u64>,
+    /// Cost prediction for the plan that ran (None when the job kind has
+    /// no cost model, e.g. triangle counting).
+    pub predicted: Option<CostEstimate>,
+    /// Every candidate `Policy::Auto` scored before committing (empty for
+    /// explicit policies).
+    pub candidates: Vec<CandidateScore>,
+}
+
+impl JobResult {
+    /// Signed relative prediction error of the executed plan:
+    /// `(predicted − actual) / actual`.
+    pub fn prediction_error(&self) -> Option<f64> {
+        let p = self.predicted.as_ref()?;
+        if self.report.seconds > 0.0 {
+            Some((p.total_seconds() - self.report.seconds) / self.report.seconds)
+        } else {
+            None
+        }
+    }
 }
 
 /// Error from planning or execution.

@@ -6,6 +6,6 @@ pub mod job;
 pub mod planner;
 pub mod service;
 
-pub use job::{Decision, Job, JobError, JobKind, JobResult, Policy};
-pub use planner::{execute, PlannerOptions};
+pub use job::{CandidateScore, Decision, Job, JobError, JobKind, JobResult, Policy};
+pub use planner::{execute, explain_spgemm, ExplainRow, PlannerOptions};
 pub use service::{JobHandle, Metrics, SpgemmService};

@@ -1,12 +1,22 @@
 //! The placement/chunking planner: encodes the paper's decision structure
 //! as a runtime policy and executes every SpGEMM job through the unified
 //! [`Engine`](crate::engine::Engine) trait — exactly the decision a
-//! production KNL/GPU deployment of KKMEM makes per multiplication, now
-//! with the double-buffered pipelined executor available as a policy.
+//! production KNL/GPU deployment of KKMEM makes per multiplication.
+//!
+//! `Policy::Auto` is predictive: it enumerates every candidate plan the
+//! machine supports — flat-fast, DP placement, flat-default, serial
+//! KNL/GPU chunking, pipelined chunking (both GPU loop orders) — scores
+//! each through [`Engine::predict`]'s symbolic roofline, and runs the
+//! argmin. The prediction and the full candidate table are recorded in
+//! [`JobResult`] so mispredictions are observable, and
+//! [`explain_spgemm`] additionally *runs* every candidate to report
+//! predicted vs actual (the CLI's `--explain`).
 
-use super::job::{Decision, Job, JobError, JobKind, JobResult, Policy};
+use super::job::{CandidateScore, Decision, Job, JobError, JobKind, JobResult, Policy};
+use crate::chunk::heuristic::GpuChunkAlgo;
 use crate::engine::{
-    Engine, GpuChunkEngine, KnlChunkEngine, PipelinedChunkEngine, Problem, SimEngine,
+    CostEstimate, Engine, ExecPlan, GpuChunkEngine, KnlChunkEngine, PipelinedChunkEngine,
+    Problem, SimEngine,
 };
 use crate::kkmem::CompressedMatrix;
 use crate::kkmem::Placement;
@@ -15,6 +25,7 @@ use crate::memory::alloc::Location;
 use crate::memory::pool::FAST;
 use crate::memory::MemSim;
 use crate::placement::{dp_placement, ProblemSizes};
+use crate::sparse::Csr;
 use crate::tricount::{degree_sorted_lower, tricount_sim, TriPlacement};
 use std::sync::Arc;
 
@@ -45,8 +56,14 @@ fn err(job: &Job, m: impl std::fmt::Display) -> JobError {
     JobError { id: job.id, message: m.to_string() }
 }
 
+/// Accumulator + staging slack reserved before a placement is declared
+/// to fit the fast pool — shared by the Auto candidate gates and the
+/// explicit DataPlacement policy so the two can never disagree.
+const ACC_SLACK: u64 = 1 << 16;
+
 /// What shape of decision to record once the engine reports back (the
 /// partition counts are only known after the run).
+#[derive(Clone, Copy)]
 enum DecisionFlavor {
     FlatDefault,
     FlatFast,
@@ -56,104 +73,247 @@ enum DecisionFlavor {
     Pipelined,
 }
 
+impl DecisionFlavor {
+    fn decision(self, rep: &crate::engine::EngineReport) -> Decision {
+        match self {
+            DecisionFlavor::FlatDefault => Decision::FlatDefault,
+            DecisionFlavor::FlatFast => Decision::FlatFast,
+            DecisionFlavor::DataPlacement => Decision::DataPlacement,
+            DecisionFlavor::ChunkedKnl => Decision::ChunkedKnl { parts: rep.n_parts_b },
+            DecisionFlavor::ChunkedGpu => Decision::ChunkedGpu {
+                parts_ac: rep.n_parts_ac,
+                parts_b: rep.n_parts_b,
+            },
+            DecisionFlavor::Pipelined => Decision::Pipelined {
+                parts_ac: rep.n_parts_ac,
+                parts_b: rep.n_parts_b,
+            },
+        }
+    }
+}
+
+/// One enumerated candidate: a built engine, its committed plan, and the
+/// symbolic cost prediction the planner ranks it by.
+struct Candidate {
+    label: String,
+    engine: Box<dyn Engine>,
+    flavor: DecisionFlavor,
+    plan: ExecPlan,
+    est: CostEstimate,
+}
+
+fn push_candidate(
+    out: &mut Vec<Candidate>,
+    label: impl Into<String>,
+    engine: Box<dyn Engine>,
+    flavor: DecisionFlavor,
+    problem: &Problem,
+) {
+    // A candidate that cannot plan or predict is silently dropped — the
+    // remaining candidates still cover the problem (flat-default always
+    // plans).
+    if let Ok(plan) = engine.plan(problem) {
+        if let Ok(est) = engine.predict(problem, &plan) {
+            out.push(Candidate { label: label.into(), engine, flavor, plan, est });
+        }
+    }
+}
+
+/// Enumerate every plan `Policy::Auto` considers for this problem on this
+/// machine, each with its cost prediction. Ordered cheapest-to-build
+/// first so predicted ties resolve toward the simpler plan.
+fn spgemm_candidates(
+    arch: &Arc<crate::memory::arch::Arch>,
+    a: &Csr,
+    b: &Csr,
+    opts: &PlannerOptions,
+) -> Vec<Candidate> {
+    let fast_usable = arch.spec.pools[FAST.0].usable();
+    let spgemm_opts = opts.spgemm;
+    let sizes = ProblemSizes::measure(a, b);
+    let problem = Problem::new(a, b);
+    let mut out = Vec::new();
+    if sizes.total() + ACC_SLACK <= fast_usable {
+        push_candidate(
+            &mut out,
+            "flat-fast",
+            Box::new(SimEngine::with_placement(
+                Arc::clone(arch),
+                spgemm_opts,
+                Placement::uniform(Location::Pool(FAST)),
+            )),
+            DecisionFlavor::FlatFast,
+            &problem,
+        );
+    }
+    if let Some(p) = dp_placement(&sizes, fast_usable.saturating_sub(ACC_SLACK)) {
+        push_candidate(
+            &mut out,
+            "data-placement",
+            Box::new(SimEngine::with_placement(Arc::clone(arch), spgemm_opts, p)),
+            DecisionFlavor::DataPlacement,
+            &problem,
+        );
+    }
+    push_candidate(
+        &mut out,
+        "flat-default",
+        Box::new(SimEngine::flat(Arc::clone(arch), spgemm_opts)),
+        DecisionFlavor::FlatDefault,
+        &problem,
+    );
+    let budget = opts.auto_chunk_budget;
+    match arch.kind {
+        MachineKind::Knl => {
+            push_candidate(
+                &mut out,
+                "chunked-knl",
+                Box::new(KnlChunkEngine::new(Arc::clone(arch), spgemm_opts, budget)),
+                DecisionFlavor::ChunkedKnl,
+                &problem,
+            );
+            push_candidate(
+                &mut out,
+                "pipelined-knl",
+                Box::new(PipelinedChunkEngine::new(Arc::clone(arch), spgemm_opts, budget)),
+                DecisionFlavor::Pipelined,
+                &problem,
+            );
+        }
+        MachineKind::Gpu => {
+            for (tag, algo) in [
+                ("AC-res", GpuChunkAlgo::AcResident),
+                ("B-res", GpuChunkAlgo::BResident),
+            ] {
+                push_candidate(
+                    &mut out,
+                    format!("chunked-gpu[{tag}]"),
+                    Box::new(
+                        GpuChunkEngine::new(Arc::clone(arch), spgemm_opts, budget)
+                            .with_algo(algo),
+                    ),
+                    DecisionFlavor::ChunkedGpu,
+                    &problem,
+                );
+                push_candidate(
+                    &mut out,
+                    format!("pipelined-gpu[{tag}]"),
+                    Box::new(
+                        PipelinedChunkEngine::new(Arc::clone(arch), spgemm_opts, budget)
+                            .with_algo(algo),
+                    ),
+                    DecisionFlavor::Pipelined,
+                    &problem,
+                );
+            }
+        }
+    }
+    out
+}
+
+/// First strict minimum of the predictions: compute-bound problems make
+/// several candidates predict *exactly* equal totals, and the candidate
+/// list is ordered simplest-first, so ties must resolve to the earliest
+/// entry (flat-fast over a chunked plan with identical predicted time).
+fn argmin_candidate(cands: &[Candidate]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, c) in cands.iter().enumerate() {
+        let t = c.est.total_seconds();
+        if best.map_or(true, |(_, bt)| t < bt) {
+            best = Some((i, t));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
 fn execute_spgemm(
     job: &Job,
-    a: &crate::sparse::Csr,
-    b: &crate::sparse::Csr,
+    a: &Csr,
+    b: &Csr,
     opts: &PlannerOptions,
 ) -> Result<JobResult, JobError> {
     let arch = &job.arch;
     let fast_usable = arch.spec.pools[FAST.0].usable();
-    let acc_slack = 1 << 16; // accumulator + staging slack
     let spgemm_opts = opts.spgemm;
+    let problem = Problem::new(a, b);
 
-    let (engine, flavor): (Box<dyn Engine>, DecisionFlavor) = match job.policy {
-        Policy::Flat => (
-            Box::new(SimEngine::flat(Arc::clone(arch), spgemm_opts)),
-            DecisionFlavor::FlatDefault,
-        ),
-        Policy::DataPlacement => {
-            let sizes = ProblemSizes::measure(a, b);
-            match dp_placement(&sizes, fast_usable.saturating_sub(acc_slack)) {
-                Some(p) => (
-                    Box::new(SimEngine::with_placement(Arc::clone(arch), spgemm_opts, p)),
-                    DecisionFlavor::DataPlacement,
-                ),
-                None => (
+    let (engine, flavor, plan, predicted, candidates): (
+        Box<dyn Engine>,
+        DecisionFlavor,
+        ExecPlan,
+        Option<CostEstimate>,
+        Vec<CandidateScore>,
+    ) = match job.policy {
+        Policy::Auto => {
+            let cands = spgemm_candidates(arch, a, b, opts);
+            let best = argmin_candidate(&cands)
+                .ok_or_else(|| err(job, "no execution candidate fits this machine"))?;
+            let scores = cands
+                .iter()
+                .map(|c| CandidateScore { label: c.label.clone(), predicted: c.est })
+                .collect();
+            let chosen = cands.into_iter().nth(best).expect("argmin index valid");
+            (chosen.engine, chosen.flavor, chosen.plan, Some(chosen.est), scores)
+        }
+        policy => {
+            let (engine, flavor): (Box<dyn Engine>, DecisionFlavor) = match policy {
+                Policy::Flat => (
                     Box::new(SimEngine::flat(Arc::clone(arch), spgemm_opts)),
                     DecisionFlavor::FlatDefault,
                 ),
-            }
-        }
-        Policy::Chunked { fast_budget } => match arch.kind {
-            MachineKind::Knl => (
-                Box::new(KnlChunkEngine::new(
-                    Arc::clone(arch),
-                    spgemm_opts,
-                    Some(fast_budget),
-                )),
-                DecisionFlavor::ChunkedKnl,
-            ),
-            MachineKind::Gpu => (
-                Box::new(GpuChunkEngine::new(
-                    Arc::clone(arch),
-                    spgemm_opts,
-                    Some(fast_budget),
-                )),
-                DecisionFlavor::ChunkedGpu,
-            ),
-        },
-        Policy::Pipelined { fast_budget } => (
-            Box::new(PipelinedChunkEngine::new(Arc::clone(arch), spgemm_opts, fast_budget)),
-            DecisionFlavor::Pipelined,
-        ),
-        Policy::Auto => {
-            let sizes = ProblemSizes::measure(a, b);
-            if sizes.total() + acc_slack <= fast_usable {
-                (
-                    Box::new(SimEngine::with_placement(
-                        Arc::clone(arch),
-                        spgemm_opts,
-                        Placement::uniform(Location::Pool(FAST)),
-                    )),
-                    DecisionFlavor::FlatFast,
-                )
-            } else if let Some(p) =
-                dp_placement(&sizes, fast_usable.saturating_sub(acc_slack))
-            {
-                (
-                    Box::new(SimEngine::with_placement(Arc::clone(arch), spgemm_opts, p)),
-                    DecisionFlavor::DataPlacement,
-                )
-            } else {
-                (
+                Policy::DataPlacement => {
+                    let sizes = ProblemSizes::measure(a, b);
+                    match dp_placement(&sizes, fast_usable.saturating_sub(ACC_SLACK)) {
+                        Some(p) => (
+                            Box::new(SimEngine::with_placement(
+                                Arc::clone(arch),
+                                spgemm_opts,
+                                p,
+                            )),
+                            DecisionFlavor::DataPlacement,
+                        ),
+                        None => (
+                            Box::new(SimEngine::flat(Arc::clone(arch), spgemm_opts)),
+                            DecisionFlavor::FlatDefault,
+                        ),
+                    }
+                }
+                Policy::Chunked { fast_budget } => match arch.kind {
+                    MachineKind::Knl => (
+                        Box::new(KnlChunkEngine::new(
+                            Arc::clone(arch),
+                            spgemm_opts,
+                            Some(fast_budget),
+                        )),
+                        DecisionFlavor::ChunkedKnl,
+                    ),
+                    MachineKind::Gpu => (
+                        Box::new(GpuChunkEngine::new(
+                            Arc::clone(arch),
+                            spgemm_opts,
+                            Some(fast_budget),
+                        )),
+                        DecisionFlavor::ChunkedGpu,
+                    ),
+                },
+                Policy::Pipelined { fast_budget } => (
                     Box::new(PipelinedChunkEngine::new(
                         Arc::clone(arch),
                         spgemm_opts,
-                        opts.auto_chunk_budget,
+                        fast_budget,
                     )),
                     DecisionFlavor::Pipelined,
-                )
-            }
+                ),
+                Policy::Auto => unreachable!("handled above"),
+            };
+            let plan = engine.plan(&problem).map_err(|e| err(job, e))?;
+            let predicted = engine.predict(&problem, &plan).ok();
+            (engine, flavor, plan, predicted, Vec::new())
         }
     };
 
-    let problem = Problem::new(a, b);
-    let rep = engine.execute(&problem).map_err(|e| err(job, e))?;
-    let decision = match flavor {
-        DecisionFlavor::FlatDefault => Decision::FlatDefault,
-        DecisionFlavor::FlatFast => Decision::FlatFast,
-        DecisionFlavor::DataPlacement => Decision::DataPlacement,
-        DecisionFlavor::ChunkedKnl => Decision::ChunkedKnl { parts: rep.n_parts_b },
-        DecisionFlavor::ChunkedGpu => Decision::ChunkedGpu {
-            parts_ac: rep.n_parts_ac,
-            parts_b: rep.n_parts_b,
-        },
-        DecisionFlavor::Pipelined => Decision::Pipelined {
-            parts_ac: rep.n_parts_ac,
-            parts_b: rep.n_parts_b,
-        },
-    };
+    let rep = engine.run(&problem, &plan).map_err(|e| err(job, e))?;
+    let decision = flavor.decision(&rep);
     let report = rep
         .sim
         .ok_or_else(|| err(job, "engine produced no simulated report"))?;
@@ -164,7 +324,55 @@ fn execute_spgemm(
         c_nrows: rep.c.nrows,
         c_nnz: rep.c.nnz(),
         triangles: None,
+        predicted,
+        candidates,
     })
+}
+
+/// One row of the `--explain` table: a candidate's prediction next to its
+/// measured (simulated) outcome.
+pub struct ExplainRow {
+    pub label: String,
+    pub predicted: CostEstimate,
+    /// Simulated seconds from actually running the candidate.
+    pub actual_seconds: f64,
+    /// Partition counts the run settled on.
+    pub parts: (usize, usize),
+    /// True for the candidate `Policy::Auto` would select (argmin of the
+    /// predictions).
+    pub chosen: bool,
+}
+
+/// Score *and run* every Auto candidate for one multiplication — the
+/// slow, fully observable version of `Policy::Auto` behind the CLI's
+/// `--explain` flag. Candidates whose run fails (e.g. a placement that
+/// does not fit) are reported with a NaN actual.
+pub fn explain_spgemm(
+    a: &Csr,
+    b: &Csr,
+    arch: &Arc<crate::memory::arch::Arch>,
+    opts: &PlannerOptions,
+) -> Vec<ExplainRow> {
+    let cands = spgemm_candidates(arch, a, b, opts);
+    let chosen = argmin_candidate(&cands);
+    let problem = Problem::new(a, b);
+    cands
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            let (actual_seconds, parts) = match c.engine.run(&problem, &c.plan) {
+                Ok(rep) => (rep.seconds(), (rep.n_parts_ac, rep.n_parts_b)),
+                Err(_) => (f64::NAN, (0, 0)),
+            };
+            ExplainRow {
+                label: c.label.clone(),
+                predicted: c.est,
+                actual_seconds,
+                parts,
+                chosen: Some(i) == chosen,
+            }
+        })
+        .collect()
 }
 
 fn execute_tricount(
@@ -207,6 +415,8 @@ fn execute_tricount(
         c_nrows: 0,
         c_nnz: 0,
         triangles: Some(triangles),
+        predicted: None,
+        candidates: Vec::new(),
     })
 }
 
@@ -230,13 +440,20 @@ mod tests {
         let r = execute(&job, &PlannerOptions::default()).unwrap();
         assert_eq!(r.decision, Decision::FlatFast);
         assert!(r.c_nnz > 0);
+        // Auto records its prediction and the scored candidate table.
+        let p = r.predicted.expect("auto records a prediction");
+        assert!(p.total_seconds() > 0.0);
+        assert!(r.candidates.len() >= 3, "{} candidates", r.candidates.len());
+        assert!(r.candidates.iter().any(|c| c.label == "flat-fast"));
     }
 
     #[test]
-    fn auto_large_b_triggers_dp_or_pipelined_chunking() {
+    fn auto_large_b_scores_chunk_candidates() {
         // B bigger than the fast pool's usable 11.2 MiB (16 MiB * 0.7)
-        // forces past FlatFast and DP into the pipelined chunk engine;
-        // banded structure keeps C small enough for DDR.
+        // rules out FlatFast and DP; the cost model then decides between
+        // flat-default and the two chunk plans (a banded product is cheap
+        // enough per flop that staying flat can legitimately win — the
+        // C-dominated crossover is pinned in rust/tests/planner_auto.rs).
         let arch = knl(KnlMode::Ddr, 256, ScaleFactor::default());
         let n = 380_000;
         let a = Arc::new(crate::gen::rhs::banded(n, n, 2, 2, 1));
@@ -250,16 +467,23 @@ mod tests {
         };
         let r = execute(&job, &PlannerOptions::default()).unwrap();
         match r.decision {
-            Decision::Pipelined { parts_b, .. } => assert!(parts_b >= 2, "parts {parts_b}"),
-            other => panic!("expected pipelined, got {other:?}"),
+            Decision::FlatDefault => {}
+            Decision::Pipelined { parts_b, .. } | Decision::ChunkedKnl { parts: parts_b } => {
+                assert!(parts_b >= 2, "parts {parts_b}")
+            }
+            other => panic!("B cannot stay fast, got {other:?}"),
         }
+        // Every chunk flavour was scored against the flat plan.
+        assert!(r.candidates.iter().any(|c| c.label == "flat-default"));
+        assert!(r.candidates.iter().any(|c| c.label == "chunked-knl"));
+        assert!(r.candidates.iter().any(|c| c.label == "pipelined-knl"));
+        assert!(!r.candidates.iter().any(|c| c.label == "flat-fast"));
     }
 
     #[test]
     fn explicit_chunked_gpu() {
         let arch = p100(GpuMode::Pinned, ScaleFactor::default());
-        let mut job = spgemm_job(3, arch, Policy::Chunked { fast_budget: 1 << 14 }, 80);
-        job.policy = Policy::Chunked { fast_budget: 1 << 14 };
+        let job = spgemm_job(3, arch, Policy::Chunked { fast_budget: 1 << 14 }, 80);
         let r = execute(&job, &PlannerOptions::default()).unwrap();
         match r.decision {
             Decision::ChunkedGpu { parts_ac, parts_b } => {
@@ -267,6 +491,9 @@ mod tests {
             }
             other => panic!("expected gpu chunked, got {other:?}"),
         }
+        // Explicit policies also record their engine's prediction.
+        assert!(r.predicted.is_some());
+        assert!(r.candidates.is_empty());
     }
 
     #[test]
@@ -279,6 +506,31 @@ mod tests {
             other => panic!("expected pipelined, got {other:?}"),
         }
         assert!(r.report.gflops > 0.0);
+    }
+
+    #[test]
+    fn explain_scores_and_runs_every_candidate() {
+        let arch = Arc::new(knl(KnlMode::Ddr, 64, ScaleFactor::default()));
+        let a = crate::gen::rhs::random_csr(60, 60, 1, 6, 9);
+        let b = crate::gen::rhs::random_csr(60, 60, 1, 6, 10);
+        let rows = explain_spgemm(&a, &b, &arch, &PlannerOptions::default());
+        assert!(rows.len() >= 3, "{} rows", rows.len());
+        assert_eq!(rows.iter().filter(|r| r.chosen).count(), 1);
+        for r in &rows {
+            assert!(
+                r.actual_seconds.is_finite() && r.actual_seconds > 0.0,
+                "{}: no actual",
+                r.label
+            );
+            assert!(r.predicted.total_seconds() > 0.0, "{}: no prediction", r.label);
+        }
+        // The chosen row carries the minimum predicted total.
+        let min_pred = rows
+            .iter()
+            .map(|r| r.predicted.total_seconds())
+            .fold(f64::INFINITY, f64::min);
+        let chosen = rows.iter().find(|r| r.chosen).unwrap();
+        assert_eq!(chosen.predicted.total_seconds(), min_pred);
     }
 
     #[test]

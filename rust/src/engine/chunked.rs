@@ -3,23 +3,20 @@
 //! copies are serial with compute — the baseline the pipelined engine is
 //! judged against.
 
+use super::cost::{gpu_chunked_estimate, knl_chunked_estimate, CostEstimate, ProblemShape};
 use super::{Engine, EngineError, EngineReport, ExecPlan, Problem};
+use crate::chunk::gpu::gpu_chunked_sim_forced;
+use crate::chunk::heuristic::GpuChunkAlgo;
 use crate::chunk::knl::ChunkedProduct;
+use crate::chunk::knl_chunked_sim;
 use crate::chunk::partition::{csr_prefix_bytes, partition_balanced};
-use crate::chunk::{gpu_chunked_sim, knl_chunked_sim};
 use crate::kkmem::SpgemmOptions;
 use crate::memory::alloc::AllocError;
 use crate::memory::arch::Arch;
 use crate::memory::pool::FAST;
 use crate::memory::MemSim;
-use crate::sparse::Csr;
 use crate::util::timer::Timer;
 use std::sync::Arc;
-
-/// The serial chunk drivers share everything but the simulated driver
-/// function; one signature covers both.
-type ChunkDriver =
-    fn(&mut MemSim, &Csr, &Csr, u64, &SpgemmOptions) -> Result<ChunkedProduct, AllocError>;
 
 fn effective_budget(arch: &Arch, fast_budget: Option<u64>) -> u64 {
     let usable = arch.spec.pools[FAST.0].usable();
@@ -31,21 +28,17 @@ fn estimate_b_parts(p: &Problem, budget: u64) -> usize {
     partition_balanced(&prefix, budget.max(1)).len()
 }
 
-/// Shared run body for the serial chunk engines.
-fn run_chunked(
+/// Shared run body for every chunk engine (serial and pipelined): time
+/// the driver against a fresh simulator and fold its product plus the
+/// finished report into one [`EngineReport`].
+pub(super) fn chunk_report(
     name: &'static str,
     arch: &Arch,
-    opts: &SpgemmOptions,
-    driver: ChunkDriver,
-    p: &Problem,
-    plan: &ExecPlan,
+    driver: impl FnOnce(&mut MemSim) -> Result<ChunkedProduct, AllocError>,
 ) -> Result<EngineReport, EngineError> {
-    let ExecPlan::Chunked { fast_budget, pipelined: false, .. } = plan else {
-        return Err(EngineError::new(format!("{name} engine got an incompatible plan")));
-    };
     let t = Timer::start();
     let mut sim = MemSim::new(arch.spec.clone());
-    let prod = driver(&mut sim, p.a, p.b, *fast_budget, opts).map_err(EngineError::from)?;
+    let prod = driver(&mut sim).map_err(EngineError::from)?;
     Ok(EngineReport {
         engine: name,
         c: prod.c,
@@ -82,24 +75,47 @@ impl Engine for KnlChunkEngine {
             fast_budget: budget,
             pipelined: false,
             est_parts: estimate_b_parts(p, budget),
+            gpu_algo: None,
         })
     }
 
+    fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<CostEstimate, EngineError> {
+        let ExecPlan::Chunked { fast_budget, pipelined: false, .. } = plan else {
+            return Err(EngineError::new("knl-chunk engine got an incompatible plan"));
+        };
+        let shape = ProblemShape::measure(p, &self.opts, &self.arch.spec);
+        Ok(knl_chunked_estimate(&self.arch.spec, &shape, *fast_budget, false))
+    }
+
     fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, EngineError> {
-        run_chunked(self.name(), &self.arch, &self.opts, knl_chunked_sim, p, plan)
+        let ExecPlan::Chunked { fast_budget, pipelined: false, .. } = plan else {
+            return Err(EngineError::new("knl-chunk engine got an incompatible plan"));
+        };
+        chunk_report(self.name(), &self.arch, |sim| {
+            knl_chunked_sim(sim, p.a, p.b, *fast_budget, &self.opts)
+        })
     }
 }
 
-/// Algorithms 2–4 (GPU 2D chunking) as an engine.
+/// Algorithms 2–4 (GPU 2D chunking) as an engine. `force_algo` pins the
+/// loop order so the coordinator can score both orders as separate
+/// candidates; `None` defers to the Algorithm 4 heuristic.
 pub struct GpuChunkEngine {
     arch: Arc<Arch>,
     opts: SpgemmOptions,
     fast_budget: Option<u64>,
+    force_algo: Option<GpuChunkAlgo>,
 }
 
 impl GpuChunkEngine {
     pub fn new(arch: Arc<Arch>, opts: SpgemmOptions, fast_budget: Option<u64>) -> Self {
-        Self { arch, opts, fast_budget }
+        Self { arch, opts, fast_budget, force_algo: None }
+    }
+
+    /// Pin the GPU loop order (candidate enumeration).
+    pub fn with_algo(mut self, algo: GpuChunkAlgo) -> Self {
+        self.force_algo = Some(algo);
+        self
     }
 }
 
@@ -114,11 +130,27 @@ impl Engine for GpuChunkEngine {
             fast_budget: budget,
             pipelined: false,
             est_parts: estimate_b_parts(p, budget),
+            gpu_algo: self.force_algo,
         })
     }
 
+    fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<CostEstimate, EngineError> {
+        let ExecPlan::Chunked { fast_budget, pipelined: false, gpu_algo, .. } = plan else {
+            return Err(EngineError::new("gpu-chunk engine got an incompatible plan"));
+        };
+        let shape = ProblemShape::measure(p, &self.opts, &self.arch.spec);
+        let (_, est) =
+            gpu_chunked_estimate(&self.arch.spec, &shape, *fast_budget, false, *gpu_algo);
+        Ok(est)
+    }
+
     fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, EngineError> {
-        run_chunked(self.name(), &self.arch, &self.opts, gpu_chunked_sim, p, plan)
+        let ExecPlan::Chunked { fast_budget, pipelined: false, gpu_algo, .. } = plan else {
+            return Err(EngineError::new("gpu-chunk engine got an incompatible plan"));
+        };
+        chunk_report(self.name(), &self.arch, |sim| {
+            gpu_chunked_sim_forced(sim, p.a, p.b, *fast_budget, &self.opts, *gpu_algo)
+        })
     }
 }
 

@@ -12,10 +12,12 @@
 //! staging statistics. `execute` chains the two.
 
 pub mod chunked;
+pub mod cost;
 pub mod native;
 pub mod pipelined;
 pub mod sim;
 
+use crate::chunk::heuristic::GpuChunkAlgo;
 use crate::kkmem::{Placement, SpgemmOptions};
 use crate::memory::alloc::AllocError;
 use crate::memory::arch::Arch;
@@ -24,20 +26,27 @@ use crate::sparse::Csr;
 use std::sync::Arc;
 
 pub use chunked::{GpuChunkEngine, KnlChunkEngine};
+pub use cost::{CostEstimate, ProblemShape};
 pub use native::{pipelined_spgemm_native, NativeEngine};
-pub use pipelined::{gpu_pipelined_sim, knl_pipelined_sim, PipelinedChunkEngine};
+pub use pipelined::{
+    gpu_pipelined_sim, gpu_pipelined_sim_forced, knl_pipelined_sim, PipelinedChunkEngine,
+};
 pub use sim::SimEngine;
 
-/// One multiplication `C = A × B` as the engines see it.
+/// One multiplication `C = A × B` as the engines see it. Carries a lazy
+/// cache of the machine-independent symbolic summary so that scoring
+/// many candidate plans against one problem (`Policy::Auto`) runs the
+/// expensive symbolic pass once, not once per candidate.
 pub struct Problem<'a> {
     pub a: &'a Csr,
     pub b: &'a Csr,
+    pub(crate) shape_core: std::cell::OnceCell<cost::ShapeCore>,
 }
 
 impl<'a> Problem<'a> {
     pub fn new(a: &'a Csr, b: &'a Csr) -> Self {
         assert_eq!(a.ncols, b.nrows, "spgemm shape mismatch");
-        Self { a, b }
+        Self { a, b, shape_core: std::cell::OnceCell::new() }
     }
 }
 
@@ -52,8 +61,15 @@ pub enum ExecPlan {
     Placed { placement: Placement },
     /// Chunked through fast memory with a staging budget. `pipelined`
     /// selects the double-buffered executor; `est_parts` is the planner's
-    /// B-partition estimate (the driver may refine it).
-    Chunked { fast_budget: u64, pipelined: bool, est_parts: usize },
+    /// B-partition estimate (the driver may refine it); `gpu_algo` pins
+    /// the GPU loop order when the planner scored a specific one (`None`
+    /// lets Algorithm 4 choose; ignored on KNL machines).
+    Chunked {
+        fast_budget: u64,
+        pipelined: bool,
+        est_parts: usize,
+        gpu_algo: Option<GpuChunkAlgo>,
+    },
 }
 
 impl ExecPlan {
@@ -65,11 +81,13 @@ impl ExecPlan {
                 format!("native-pipelined({threads}T)")
             }
             ExecPlan::Placed { .. } => "placed".to_string(),
-            ExecPlan::Chunked { pipelined: false, est_parts, .. } => {
-                format!("chunked(~{est_parts})")
-            }
-            ExecPlan::Chunked { pipelined: true, est_parts, .. } => {
-                format!("pipelined(~{est_parts})")
+            ExecPlan::Chunked { pipelined, est_parts, gpu_algo, .. } => {
+                let base = if *pipelined { "pipelined" } else { "chunked" };
+                match gpu_algo {
+                    Some(GpuChunkAlgo::AcResident) => format!("{base}(~{est_parts},AC-res)"),
+                    Some(GpuChunkAlgo::BResident) => format!("{base}(~{est_parts},B-res)"),
+                    None => format!("{base}(~{est_parts})"),
+                }
             }
         }
     }
@@ -135,6 +153,12 @@ pub trait Engine: Send + Sync {
     /// Inspect the problem and commit to an execution plan. No numeric
     /// work happens here; symbolic/sizing passes are allowed.
     fn plan(&self, p: &Problem) -> Result<ExecPlan, EngineError>;
+
+    /// Predict what running `plan` on this engine will cost — evaluated
+    /// symbolically from the same roofline primitives `MemSim::finish`
+    /// uses, without executing an access stream. Cheap enough for the
+    /// coordinator to score every candidate plan before committing.
+    fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<CostEstimate, EngineError>;
 
     /// Execute a plan produced by [`plan`](Self::plan) on this engine.
     fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, EngineError>;
@@ -284,7 +308,16 @@ mod tests {
                 Arc::clone(&knl_arch)
             };
             let eng = k.build(arch, SpgemmOptions::default(), None).unwrap();
-            let rep = eng.execute(&p).unwrap_or_else(|e| panic!("{}: {e}", k.name()));
+            let plan = eng.plan(&p).unwrap_or_else(|e| panic!("{}: plan: {e}", k.name()));
+            let est = eng
+                .predict(&p, &plan)
+                .unwrap_or_else(|e| panic!("{}: predict: {e}", k.name()));
+            assert!(
+                est.total_seconds().is_finite() && est.total_seconds() >= 0.0,
+                "{}: bad estimate",
+                k.name()
+            );
+            let rep = eng.run(&p, &plan).unwrap_or_else(|e| panic!("{}: {e}", k.name()));
             assert!(rep.c.approx_eq(&expect, 1e-10), "{}", k.name());
             assert!(rep.mults > 0, "{}", k.name());
             assert_eq!(rep.engine, eng.name());

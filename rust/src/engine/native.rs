@@ -51,6 +51,19 @@ impl Engine for NativeEngine {
         })
     }
 
+    fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<super::CostEstimate, EngineError> {
+        let ExecPlan::Native { threads, .. } = plan else {
+            return Err(EngineError::new("native engine got a non-native plan"));
+        };
+        // No machine profile to roofline against: an order-of-magnitude
+        // wall-clock guess from the flop count at a nominal per-thread
+        // scalar-kernel rate. Never compared against simulated engines.
+        const NATIVE_FLOPS_PER_THREAD: f64 = 1e9;
+        let flops = spgemm_flops(p.a, p.b);
+        let threads = (*threads).max(1) as f64;
+        Ok(super::CostEstimate::unstaged(flops as f64 / (threads * NATIVE_FLOPS_PER_THREAD)))
+    }
+
     fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, EngineError> {
         let ExecPlan::Native { chunked, .. } = plan else {
             return Err(EngineError::new("native engine got a non-native plan"));

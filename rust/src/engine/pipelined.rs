@@ -42,7 +42,6 @@ use crate::memory::arch::{Arch, MachineKind};
 use crate::memory::machine::{MemSim, MemTracer};
 use crate::memory::pool::{FAST, SLOW};
 use crate::sparse::csr::{Csr, Idx};
-use crate::util::timer::Timer;
 use std::sync::Arc;
 
 /// Largest part of a row-range partition under a byte prefix.
@@ -257,6 +256,19 @@ pub fn gpu_pipelined_sim(
     fast_budget: u64,
     opts: &SpgemmOptions,
 ) -> Result<ChunkedProduct, AllocError> {
+    gpu_pipelined_sim_forced(sim, a, b, fast_budget, opts, None)
+}
+
+/// [`gpu_pipelined_sim`] with the loop order pinned (see
+/// [`crate::chunk::gpu::gpu_chunked_sim_forced`]).
+pub fn gpu_pipelined_sim_forced(
+    sim: &mut MemSim,
+    a: &Csr,
+    b: &Csr,
+    fast_budget: u64,
+    opts: &SpgemmOptions,
+    force: Option<GpuChunkAlgo>,
+) -> Result<ChunkedProduct, AllocError> {
     assert_eq!(a.ncols, b.nrows, "spgemm shape mismatch");
     sim.set_compute_efficiency(crate::memory::machine::lane_efficiency(
         a.avg_degree(),
@@ -265,7 +277,7 @@ pub fn gpu_pipelined_sim(
     let row_ub = max_row_upper_bound(a, b);
     let acc_wrap = acc_trace_wrap(sim);
     let acc_bytes = acc_region_bytes(opts.acc.footprint_bytes(row_ub, b.ncols), acc_wrap);
-    let (mut plan, c_sizes) = plan_for(sim, a, b, fast_budget, acc_bytes);
+    let (mut plan, c_sizes) = plan_for(sim, a, b, fast_budget, acc_bytes, force);
     if plan.p_ac.len() * plan.p_b.len() <= 1 {
         // Whole problem fits the fast pool: nothing to pipeline.
         return gpu_chunked_sim(sim, a, b, fast_budget, opts);
@@ -502,15 +514,23 @@ pub fn gpu_pipelined_sim(
 }
 
 /// The double-buffered chunk engine: KNL or GPU flavour by machine kind.
+/// `force_algo` pins the GPU loop order for candidate enumeration.
 pub struct PipelinedChunkEngine {
     arch: Arc<Arch>,
     opts: SpgemmOptions,
     fast_budget: Option<u64>,
+    force_algo: Option<GpuChunkAlgo>,
 }
 
 impl PipelinedChunkEngine {
     pub fn new(arch: Arc<Arch>, opts: SpgemmOptions, fast_budget: Option<u64>) -> Self {
-        Self { arch, opts, fast_budget }
+        Self { arch, opts, fast_budget, force_algo: None }
+    }
+
+    /// Pin the GPU loop order (ignored on KNL machines).
+    pub fn with_algo(mut self, algo: GpuChunkAlgo) -> Self {
+        self.force_algo = Some(algo);
+        self
     }
 
     fn budget(&self) -> u64 {
@@ -533,33 +553,48 @@ impl Engine for PipelinedChunkEngine {
         let usable = self.arch.spec.pools[FAST.0].usable();
         let cut = budget.min((usable / 2).max(1));
         let est_parts = partition_balanced(&prefix, cut.max(1)).len();
-        Ok(ExecPlan::Chunked { fast_budget: budget, pipelined: true, est_parts })
+        Ok(ExecPlan::Chunked {
+            fast_budget: budget,
+            pipelined: true,
+            est_parts,
+            gpu_algo: self.force_algo,
+        })
+    }
+
+    fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<super::CostEstimate, EngineError> {
+        let ExecPlan::Chunked { fast_budget, pipelined: true, gpu_algo, .. } = plan else {
+            return Err(EngineError::new("pipelined engine got an incompatible plan"));
+        };
+        let shape = super::ProblemShape::measure(p, &self.opts, &self.arch.spec);
+        Ok(match self.arch.kind {
+            MachineKind::Knl => super::cost::knl_chunked_estimate(
+                &self.arch.spec,
+                &shape,
+                *fast_budget,
+                true,
+            ),
+            MachineKind::Gpu => {
+                super::cost::gpu_chunked_estimate(
+                    &self.arch.spec,
+                    &shape,
+                    *fast_budget,
+                    true,
+                    *gpu_algo,
+                )
+                .1
+            }
+        })
     }
 
     fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, EngineError> {
-        let ExecPlan::Chunked { fast_budget, pipelined: true, .. } = plan else {
+        let ExecPlan::Chunked { fast_budget, pipelined: true, gpu_algo, .. } = plan else {
             return Err(EngineError::new("pipelined engine got an incompatible plan"));
         };
-        let t = Timer::start();
-        let mut sim = MemSim::new(self.arch.spec.clone());
-        let prod = match self.arch.kind {
-            MachineKind::Knl => {
-                knl_pipelined_sim(&mut sim, p.a, p.b, *fast_budget, &self.opts)
-            }
+        super::chunked::chunk_report(self.name(), &self.arch, |sim| match self.arch.kind {
+            MachineKind::Knl => knl_pipelined_sim(sim, p.a, p.b, *fast_budget, &self.opts),
             MachineKind::Gpu => {
-                gpu_pipelined_sim(&mut sim, p.a, p.b, *fast_budget, &self.opts)
+                gpu_pipelined_sim_forced(sim, p.a, p.b, *fast_budget, &self.opts, *gpu_algo)
             }
-        }
-        .map_err(EngineError::from)?;
-        Ok(EngineReport {
-            engine: self.name(),
-            c: prod.c,
-            mults: prod.mults,
-            sim: Some(sim.finish()),
-            wall_seconds: t.elapsed_secs(),
-            n_parts_ac: prod.n_parts_ac,
-            n_parts_b: prod.n_parts_b,
-            copied_bytes: prod.copied_bytes,
         })
     }
 }

@@ -2,6 +2,7 @@
 //! with a per-structure placement (the paper's flat HBM/DDR/pinned/UVM
 //! modes and the selective-data-placement overlay).
 
+use super::cost::{placed_estimate, CostEstimate, ProblemShape};
 use super::{Engine, EngineError, EngineReport, ExecPlan, Problem};
 use crate::kkmem::{spgemm_sim, Placement, SpgemmOptions};
 use crate::memory::arch::Arch;
@@ -36,6 +37,14 @@ impl Engine for SimEngine {
 
     fn plan(&self, _p: &Problem) -> Result<ExecPlan, EngineError> {
         Ok(ExecPlan::Placed { placement: self.placement })
+    }
+
+    fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<CostEstimate, EngineError> {
+        let ExecPlan::Placed { placement } = plan else {
+            return Err(EngineError::new("sim engine got a non-placement plan"));
+        };
+        let shape = ProblemShape::measure(p, &self.opts, &self.arch.spec);
+        Ok(placed_estimate(&self.arch.spec, &shape, placement))
     }
 
     fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, EngineError> {

@@ -165,7 +165,12 @@ fn cmd_spgemm(argv: &[String]) -> Result<(), String> {
             "staging budget in paper-GB ('' = engine default; for native, \
              setting it selects the prefetch-chunked path)",
         )
-        .opt("scale-denom", "1024", "capacity scale denominator");
+        .opt("scale-denom", "1024", "capacity scale denominator")
+        .switch(
+            "explain",
+            "score every Auto-planner candidate (predicted vs actual) instead of \
+             running one engine",
+        );
     let p = spec.parse(argv)?;
     let scale = scale_from(&p)?;
     let domain = p.choice("domain", Domain::parse, "laplace|bigstar|brick|elasticity")?;
@@ -205,6 +210,9 @@ fn cmd_spgemm(argv: &[String]) -> Result<(), String> {
         "" => None,
         _ => Some(scale.gb(p.f64("budget-gb")?)),
     };
+    if p.flag("explain") {
+        return explain_spgemm_cmd(a, b, arch, budget);
+    }
     let engine = kind
         .build(Arc::new(arch), opts, budget)
         .map_err(|e| e.to_string())?;
@@ -228,6 +236,67 @@ fn cmd_spgemm(argv: &[String]) -> Result<(), String> {
             rep.wall_seconds,
             2.0 * rep.mults as f64 / rep.wall_seconds.max(1e-12) / 1e9
         ),
+    }
+    Ok(())
+}
+
+/// `spgemm --explain`: score every Auto candidate, run each, and print
+/// the predicted-vs-actual table the cost model is judged by.
+fn explain_spgemm_cmd(
+    a: &mlmem_spgemm::sparse::Csr,
+    b: &mlmem_spgemm::sparse::Csr,
+    arch: Arch,
+    budget: Option<u64>,
+) -> Result<(), String> {
+    use mlmem_spgemm::util::table::Table;
+    let arch = Arc::new(arch);
+    let opts = PlannerOptions { auto_chunk_budget: budget, ..Default::default() };
+    let rows = mlmem_spgemm::coordinator::explain_spgemm(a, b, &arch, &opts);
+    if rows.is_empty() {
+        return Err("no execution candidate fits this machine".into());
+    }
+    let mut t = Table::new(&[
+        "candidate",
+        "passes",
+        "pred kernel",
+        "pred copy",
+        "pred stall",
+        "pred total",
+        "actual",
+        "err%",
+        "auto",
+    ])
+    .with_title(format!("Auto-planner candidates on {}", arch.spec.name));
+    for r in &rows {
+        let pred = r.predicted.total_seconds();
+        let (actual, err) = if r.actual_seconds.is_finite() && r.actual_seconds > 0.0 {
+            (
+                format!("{:.6}", r.actual_seconds),
+                format!("{:+.1}", (pred - r.actual_seconds) / r.actual_seconds * 100.0),
+            )
+        } else {
+            ("-".to_string(), "-".to_string())
+        };
+        t.row(&[
+            r.label.clone(),
+            format!("{}x{} ({})", r.parts.0, r.parts.1, r.predicted.passes),
+            format!("{:.6}", r.predicted.kernel_seconds),
+            format!("{:.6}", r.predicted.copy_seconds),
+            format!("{:.6}", r.predicted.stall_seconds),
+            format!("{pred:.6}"),
+            actual,
+            err,
+            if r.chosen { "<-- argmin".to_string() } else { String::new() },
+        ]);
+    }
+    t.print();
+    if let Some(chosen) = rows.iter().find(|r| r.chosen) {
+        println!(
+            "\nAuto would run `{}`: predicted {:.6}s, simulated {:.6}s",
+            chosen.label,
+            chosen.predicted.total_seconds(),
+            chosen.actual_seconds
+        );
     }
     Ok(())
 }
@@ -297,12 +366,19 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     }
     for h in handles {
         let r = h.wait().map_err(|e| e.to_string())?;
+        let pred = match (r.predicted.as_ref(), r.prediction_error()) {
+            (Some(p), Some(e)) => {
+                format!("  pred {:.5}s ({:+.0}%)", p.total_seconds(), e * 100.0)
+            }
+            _ => String::new(),
+        };
         println!(
-            "job {:>3}: {:<18} {:>8.2} GF/s  C nnz {}",
+            "job {:>3}: {:<18} {:>8.2} GF/s  C nnz {}{}",
             r.id,
             r.decision.name(),
             r.report.gflops,
-            r.c_nnz
+            r.c_nnz,
+            pred
         );
     }
     let (sub, done, failed, rejected) = svc.metrics.snapshot();

@@ -124,6 +124,41 @@ impl MachineSpec {
     pub fn slow(&self) -> &PoolSpec {
         &self.pools[SLOW.0]
     }
+
+    /// The roofline's compute leg: seconds of pure arithmetic for `flops`
+    /// at a workload lane efficiency. This is the same formula
+    /// [`MemSim::finish`] applies to the traced counters, exposed so cost
+    /// predictors can evaluate it symbolically without an access stream.
+    pub fn compute_seconds(&self, flops: u64, efficiency: f64) -> f64 {
+        flops as f64 / (self.compute_rate() * efficiency.clamp(0.05, 1.0))
+    }
+
+    /// The roofline's memory leg for one pool: sequential traffic streams
+    /// at full bandwidth, scattered traffic at the pool's random-access
+    /// rate, and the result is bounded below by the MLP-limited latency
+    /// term — the pool is bandwidth- or latency-bound, whichever is worse.
+    pub fn pool_kernel_seconds(
+        &self,
+        pool: usize,
+        seq_bytes: u64,
+        rand_bytes: u64,
+        latency_events: u64,
+    ) -> f64 {
+        let p = &self.pools[pool];
+        let t_bw = seq_bytes as f64 / p.effective_bandwidth(self.threads)
+            + rand_bytes as f64 / p.effective_random_bandwidth(self.threads);
+        t_bw.max(p.latency_seconds(latency_events))
+    }
+
+    /// Transfer seconds of one bulk (DMA) copy between two pools: the
+    /// read and write sides of a memcpy pipeline overlap, so the slower
+    /// side plus one transfer latency bounds the copy. The same formula
+    /// [`MemSim::bulk_copy`] charges, exposed for symbolic prediction.
+    pub fn bulk_copy_seconds(&self, src: PoolId, dst: PoolId, bytes: u64) -> f64 {
+        let t_src = bytes as f64 / self.pools[src.0].effective_bandwidth(self.threads);
+        let t_dst = bytes as f64 / self.pools[dst.0].effective_bandwidth(self.threads);
+        t_src.max(t_dst) + self.pools[src.0].latency_s
+    }
 }
 
 /// Result of a simulated run.
@@ -248,10 +283,7 @@ impl MemSim {
         let (sp, dp) = (self.loc_pool(src), self.loc_pool(dst));
         self.traffic[sp.0].bulk_read_bytes += bytes;
         self.traffic[dp.0].bulk_write_bytes += bytes;
-        let threads = self.spec.threads;
-        let t_src = bytes as f64 / self.alloc.pool(sp).effective_bandwidth(threads);
-        let t_dst = bytes as f64 / self.alloc.pool(dp).effective_bandwidth(threads);
-        t_src.max(t_dst) + self.alloc.pool(sp).latency_s
+        self.spec.bulk_copy_seconds(sp, dp, bytes)
     }
 
     /// Bulk copy (the chunking algorithms' `copy2Fast`/`copy2Slow`):
@@ -447,19 +479,17 @@ impl MemSim {
     /// overlap accounting. Monotone in both counters, so stage diffs
     /// between barriers sum exactly to the final kernel time.
     fn kernel_parts(&self) -> (f64, f64) {
-        let threads = self.spec.threads;
-        let compute_seconds =
-            self.flops as f64 / (self.spec.compute_rate() * self.compute_efficiency);
+        let compute_seconds = self.spec.compute_seconds(self.flops, self.compute_efficiency);
         let mut mem_seconds: f64 = 0.0;
-        for (i, pool) in self.spec.pools.iter().enumerate() {
+        for i in 0..self.spec.pools.len() {
             let t = &self.traffic[i];
-            // Sequential-run demand lines stream at full bandwidth; the
-            // scattered remainder sees the pool's random-access rate.
             let (seq_bytes, rand_bytes) = t.demand_split_bytes();
-            let t_bw = seq_bytes as f64 / pool.effective_bandwidth(threads)
-                + rand_bytes as f64 / pool.effective_random_bandwidth(threads);
-            let t_lat = pool.latency_seconds(t.latency_events);
-            mem_seconds = mem_seconds.max(t_bw.max(t_lat));
+            mem_seconds = mem_seconds.max(self.spec.pool_kernel_seconds(
+                i,
+                seq_bytes,
+                rand_bytes,
+                t.latency_events,
+            ));
         }
         (compute_seconds, mem_seconds)
     }

@@ -1,0 +1,149 @@
+//! Predictive Auto-planner suite: the DESIGN.md §4 regression (serial
+//! chunking must win the C-dominated budget band) plus a property that
+//! Auto's simulated time never trails the best explicit policy by more
+//! than a small tolerance.
+
+use mlmem_spgemm::coordinator::{
+    execute, explain_spgemm, Decision, Job, JobKind, JobResult, PlannerOptions, Policy,
+};
+use mlmem_spgemm::gen::rhs::uniform_degree;
+use mlmem_spgemm::gen::scale::ScaleFactor;
+use mlmem_spgemm::memory::arch::{knl, Arch, KnlMode};
+use mlmem_spgemm::memory::FAST;
+use mlmem_spgemm::sparse::Csr;
+use mlmem_spgemm::util::proptest::{check, Gen};
+use std::sync::Arc;
+
+fn run_policy(a: &Arc<Csr>, b: &Arc<Csr>, arch: &Arc<Arch>, policy: Policy, id: u64) -> JobResult {
+    let job = Job {
+        id,
+        kind: JobKind::Spgemm { a: Arc::clone(a), b: Arc::clone(b) },
+        arch: Arc::clone(arch),
+        policy,
+    };
+    execute(&job, &PlannerOptions::default())
+        .unwrap_or_else(|e| panic!("policy {policy:?}: {e}"))
+}
+
+/// The DESIGN.md §4 defect, pinned: a C-dominated KNL problem whose B
+/// sits in the budget band where the pipelined executor's `usable/2` cut
+/// doubles the pass count. Each extra pass reprocesses the large partial
+/// C from DDR, which costs far more than the overlapped B staging saves,
+/// so serial `Chunked` simulates faster — and the predictive Auto planner
+/// must now select it (the old Auto hardwired `Pipelined`).
+#[test]
+fn auto_selects_serial_chunking_on_c_dominated_band() {
+    // Shrink the fast pool so the regression runs at test size: usable
+    // becomes 0.7 * 2 MiB = ~1.43 MiB.
+    let mut arch = knl(KnlMode::Ddr, 256, ScaleFactor::default());
+    arch.spec.pools[FAST.0].capacity = 2 * 1024 * 1024;
+    let arch = Arc::new(arch);
+    let usable = arch.spec.pools[FAST.0].usable();
+
+    // A: 1000×7600, degree 38; B: 7600×60000, degree 30. The wide, nearly
+    // collision-free product has ~1.1M nonzeros (~13.5 MB): C dominates
+    // both operands by an order of magnitude. B is ~2.8 MB — just under
+    // two fast-pool budgets, so the serial cut gives 2 passes while the
+    // pipelined usable/2 cut gives 4, and each extra pass reprocesses the
+    // 13.5 MB partial from DDR against a ~31 µs staged-copy saving.
+    let a = Arc::new(uniform_degree(1000, 7_600, 38, 11));
+    let b = Arc::new(uniform_degree(7_600, 60_000, 30, 12));
+    let b_bytes = b.size_bytes();
+    assert!(
+        b_bytes > usable && b_bytes < 2 * usable,
+        "construction drifted: B = {b_bytes}, usable = {usable}"
+    );
+
+    let auto = run_policy(&a, &b, &arch, Policy::Auto, 1);
+    let serial = run_policy(&a, &b, &arch, Policy::Chunked { fast_budget: usable }, 2);
+    let piped = run_policy(&a, &b, &arch, Policy::Pipelined { fast_budget: None }, 3);
+
+    // The pipelined cut really did add passes, and really did lose.
+    let (serial_parts, piped_parts) = match (&serial.decision, &piped.decision) {
+        (Decision::ChunkedKnl { parts }, Decision::Pipelined { parts_b, .. }) => {
+            (*parts, *parts_b)
+        }
+        other => panic!("unexpected explicit decisions: {other:?}"),
+    };
+    assert!(piped_parts > serial_parts, "{piped_parts} !> {serial_parts}");
+    assert!(
+        serial.report.seconds < piped.report.seconds,
+        "defect premise gone: serial {} !< pipelined {}",
+        serial.report.seconds,
+        piped.report.seconds
+    );
+
+    // The fix: Auto predicts the crossover and picks the serial plan.
+    match auto.decision {
+        Decision::ChunkedKnl { parts } => assert_eq!(parts, serial_parts),
+        other => panic!("Auto picked {other:?} instead of serial chunking"),
+    }
+    assert!(
+        auto.report.seconds <= piped.report.seconds,
+        "Auto {} !<= pipelined {}",
+        auto.report.seconds,
+        piped.report.seconds
+    );
+    // Identical plan -> identical simulated time (same driver, same cut).
+    let rel = (auto.report.seconds - serial.report.seconds).abs() / serial.report.seconds;
+    assert!(rel < 1e-9, "Auto did not run the serial plan it chose (rel {rel})");
+    // Prediction and the scored table are recorded for observability.
+    assert!(auto.predicted.is_some());
+    assert!(auto.candidates.iter().any(|c| c.label == "chunked-knl"));
+    assert!(auto.candidates.iter().any(|c| c.label == "pipelined-knl"));
+}
+
+/// On the same C-dominated input, `--explain`'s backing function must
+/// run every candidate and report finite predicted-vs-actual pairs, with
+/// the argmin marked.
+#[test]
+fn explain_covers_the_regression_candidates() {
+    let mut arch = knl(KnlMode::Ddr, 256, ScaleFactor::default());
+    arch.spec.pools[FAST.0].capacity = 2 * 1024 * 1024;
+    let arch = Arc::new(arch);
+    let a = uniform_degree(300, 5_000, 40, 13);
+    let b = uniform_degree(5_000, 20_000, 20, 14);
+    let rows = explain_spgemm(&a, &b, &arch, &PlannerOptions::default());
+    assert!(rows.len() >= 3, "{} candidates", rows.len());
+    assert_eq!(rows.iter().filter(|r| r.chosen).count(), 1);
+    for r in &rows {
+        assert!(r.predicted.total_seconds() > 0.0, "{}", r.label);
+        assert!(
+            r.actual_seconds.is_finite() && r.actual_seconds > 0.0,
+            "{} did not run",
+            r.label
+        );
+    }
+}
+
+/// Property: Auto is never worse than the best explicit policy by more
+/// than 5%. On problems that fit the fast pool Auto additionally has the
+/// flat-fast plan available, so it usually wins outright; the tolerance
+/// absorbs prediction error elsewhere.
+#[test]
+fn prop_auto_within_tolerance_of_best_explicit() {
+    check("auto_beats_explicit_policies", 12, |g: &mut Gen| {
+        let arch = Arc::new(knl(KnlMode::Ddr, 64, ScaleFactor::default()));
+        let (a, b) = g.csr_pair(80, 8);
+        let (a, b) = (Arc::new(a), Arc::new(b));
+        let usable = arch.spec.pools[FAST.0].usable();
+        let auto = run_policy(&a, &b, &arch, Policy::Auto, 1);
+        let explicit = [
+            run_policy(&a, &b, &arch, Policy::Flat, 2),
+            run_policy(&a, &b, &arch, Policy::DataPlacement, 3),
+            run_policy(&a, &b, &arch, Policy::Chunked { fast_budget: usable }, 4),
+            run_policy(&a, &b, &arch, Policy::Pipelined { fast_budget: None }, 5),
+        ];
+        let best = explicit
+            .iter()
+            .map(|r| r.report.seconds)
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            auto.report.seconds <= best * 1.05,
+            "Auto {} > best explicit {} * 1.05 (decision {})",
+            auto.report.seconds,
+            best,
+            auto.decision.name()
+        );
+    });
+}
