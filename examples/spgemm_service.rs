@@ -1,12 +1,14 @@
-//! Serving example: run the L3 coordinator as a batch service — many
-//! concurrent SpGEMM jobs with Auto policy (the planner picks flat/DP/
-//! chunked per job), reporting per-job decisions plus latency and
-//! throughput, like a Trilinos-style deployment would see.
+//! Serving example: run the L3 coordinator as a batch service through
+//! the session-handle API — register shared operands once, submit many
+//! concurrent SpGEMM jobs with Auto policy (the planner picks
+//! flat/DP/chunked per job), and report per-job decisions plus latency,
+//! throughput, and the registry's symbolic-pass amortization, like a
+//! Trilinos-style deployment would see.
 //!
 //! Run: `cargo run --release --example spgemm_service`
 
 use mlmem_spgemm::bench::experiments::{Mul, ProblemCache};
-use mlmem_spgemm::coordinator::{PlannerOptions, Policy, SpgemmService};
+use mlmem_spgemm::coordinator::{MatrixHandle, Session};
 use mlmem_spgemm::gen::scale::ScaleFactor;
 use mlmem_spgemm::memory::arch::{knl, KnlMode};
 use mlmem_spgemm::prelude::*;
@@ -17,32 +19,37 @@ use std::time::Instant;
 fn main() {
     let scale = ScaleFactor::default();
     let arch = Arc::new(knl(KnlMode::Ddr, 256, scale));
-    let svc = SpgemmService::new(4, 64, PlannerOptions::default());
+    let session = Session::builder(arch).workers(4).max_pending(64).build();
     let mut cache = ProblemCache::default();
 
-    // A mixed batch: every domain, both multiplications, two sizes.
-    let mut jobs = Vec::new();
+    // A mixed batch: every domain, both multiplications, two sizes —
+    // each distinct operand registered exactly once, then multiplied
+    // twice (the second round rides the cached symbolic summaries).
+    let mut jobs: Vec<(&str, &str, f64, MatrixHandle, MatrixHandle)> = Vec::new();
     for domain in Domain::ALL {
         for mul in [Mul::RxA, Mul::AxP] {
             for gb in [0.5, 1.0] {
                 let p = cache.get(domain, gb, scale).clone();
                 let (a, b) = mul.operands(&p);
-                jobs.push((domain.name(), mul.name(), gb, a.clone(), b.clone()));
+                let ha = session.register(Arc::new(a.clone()));
+                let hb = session.register(Arc::new(b.clone()));
+                jobs.push((domain.name(), mul.name(), gb, ha, hb));
             }
         }
     }
+    let rounds = 2;
 
-    println!("submitting {} jobs to 4 workers...", jobs.len());
+    println!("submitting {} jobs ({rounds} rounds) to 4 workers...", jobs.len() * rounds);
     let wall = Instant::now();
     let mut handles = Vec::new();
     let mut submit_times = Vec::new();
-    for (domain, mul, gb, a, b) in jobs {
-        let t0 = Instant::now();
-        let h = svc
-            .submit_spgemm(Arc::new(a), Arc::new(b), Arc::clone(&arch), Policy::Auto)
-            .expect("queue has room");
-        submit_times.push((h.id, domain, mul, gb, t0));
-        handles.push(h);
+    for _ in 0..rounds {
+        for &(domain, mul, gb, ha, hb) in &jobs {
+            let t0 = Instant::now();
+            let h = session.spgemm(ha, hb).expect("queue has room");
+            submit_times.push((h.id, domain, mul, gb, t0));
+            handles.push(h);
+        }
     }
 
     let mut latencies = Vec::new();
@@ -62,11 +69,30 @@ fn main() {
         );
     }
     let total = wall.elapsed().as_secs_f64();
-    let (sub, done, failed, rejected) = svc.metrics.snapshot();
+    let m = session.metrics();
     let s = Summary::of(&latencies);
-    println!("\n== service summary ==");
-    println!("jobs          : {done}/{sub} done, {failed} failed, {rejected} rejected");
-    println!("wall time     : {total:.2}s  ({:.1} jobs/s)", done as f64 / total);
+    println!("\n== session summary ==");
+    println!(
+        "jobs          : {}/{} done, {} failed, {} rejected, {} cancelled",
+        m.completed, m.submitted, m.failed, m.rejected, m.cancelled
+    );
+    println!(
+        "decisions     : {} flat-default, {} flat-fast, {} DP, {} chunked, {} pipelined",
+        m.decisions.flat_default,
+        m.decisions.flat_fast,
+        m.decisions.data_placement,
+        m.decisions.chunked,
+        m.decisions.pipelined
+    );
+    println!(
+        "wall time     : {total:.2}s  ({:.1} jobs/s)",
+        m.completed as f64 / total
+    );
     println!("latency       : median {:.3}s  p-max {:.3}s", s.median, s.max);
-    println!("simulated agg : {:.2} GFLOP/s", svc.aggregate_gflops());
+    println!(
+        "registry      : {} symbolic passes for {} jobs (round 2 fully cached)",
+        session.symbolic_passes(),
+        m.completed
+    );
+    println!("simulated agg : {:.2} GFLOP/s", session.aggregate_gflops());
 }

@@ -173,12 +173,12 @@ pub fn run_policy_job(
     id: u64,
 ) -> Option<crate::coordinator::JobResult> {
     use std::sync::Arc;
-    let job = crate::coordinator::Job {
+    let job = crate::coordinator::Job::new(
         id,
-        kind: crate::coordinator::JobKind::Spgemm { a: Arc::clone(a), b: Arc::clone(b) },
-        arch: Arc::clone(arch),
+        crate::coordinator::JobKind::Spgemm { a: Arc::clone(a), b: Arc::clone(b) },
+        Arc::clone(arch),
         policy,
-    };
+    );
     crate::coordinator::execute(&job, &crate::coordinator::PlannerOptions::default()).ok()
 }
 

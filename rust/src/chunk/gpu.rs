@@ -11,6 +11,7 @@ use crate::kkmem::mempool::PooledAcc;
 use crate::kkmem::numeric::{emit_row, fused_numeric_row, Layout};
 use crate::kkmem::spgemm::{alloc_csr_regions, alloc_csr_regions_sized};
 use crate::kkmem::symbolic::{max_row_upper_bound, symbolic};
+use crate::error::MlmemError;
 use crate::kkmem::{CompressedMatrix, SpgemmOptions};
 use crate::memory::alloc::{AllocError, Location};
 use crate::memory::machine::{MemSim, MemTracer, RegionId};
@@ -188,7 +189,7 @@ pub fn gpu_chunked_sim(
     b: &Csr,
     fast_budget: u64,
     opts: &SpgemmOptions,
-) -> Result<ChunkedProduct, AllocError> {
+) -> Result<ChunkedProduct, MlmemError> {
     gpu_chunked_sim_forced(sim, a, b, fast_budget, opts, None)
 }
 
@@ -202,7 +203,7 @@ pub fn gpu_chunked_sim_forced(
     fast_budget: u64,
     opts: &SpgemmOptions,
     force: Option<GpuChunkAlgo>,
-) -> Result<ChunkedProduct, AllocError> {
+) -> Result<ChunkedProduct, MlmemError> {
     assert_eq!(a.ncols, b.nrows, "spgemm shape mismatch");
     sim.set_compute_efficiency(crate::memory::machine::lane_efficiency(
         a.avg_degree(),
@@ -242,6 +243,7 @@ pub fn gpu_chunked_sim_forced(
         GpuChunkAlgo::AcResident => {
             // Algorithm 2: outer AC, inner B.
             for (ai, &(alo, ahi)) in plan.p_ac.iter().enumerate() {
+                sim.checkpoint()?;
                 let fa = stage_slice(sim, &format!("FA.{ai}"), a, a_reg, alo, ahi)?;
                 copied_bytes += fa.csr.size_bytes();
                 let c_block_bytes = range_bytes(&c_prefix, alo, ahi) + 8;
@@ -258,6 +260,7 @@ pub fn gpu_chunked_sim_forced(
                 copied_bytes += (ahi - alo + 1) as u64 * 8;
                 let mut partial: Option<Csr> = None;
                 for (bi, &(blo, bhi)) in plan.p_b.iter().enumerate() {
+                    sim.checkpoint()?;
                     let fb = stage_slice(sim, &format!("FB.{ai}.{bi}"), b, b_reg, blo, bhi)?;
                     copied_bytes += fb.csr.size_bytes();
                     let new_partial = run_block(
@@ -290,9 +293,11 @@ pub fn gpu_chunked_sim_forced(
             // Algorithm 3: outer B, inner AC.
             let mut partials: Vec<Option<Csr>> = vec![None; plan.p_ac.len()];
             for (bi, &(blo, bhi)) in plan.p_b.iter().enumerate() {
+                sim.checkpoint()?;
                 let fb = stage_slice(sim, &format!("FB.{bi}"), b, b_reg, blo, bhi)?;
                 copied_bytes += fb.csr.size_bytes();
                 for (ai, &(alo, ahi)) in plan.p_ac.iter().enumerate() {
+                    sim.checkpoint()?;
                     let fa = stage_slice(sim, &format!("FA.{bi}.{ai}"), a, a_reg, alo, ahi)?;
                     copied_bytes += fa.csr.size_bytes();
                     let c_block_nnz: usize = c_sizes[alo..ahi].iter().sum();

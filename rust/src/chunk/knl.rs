@@ -5,12 +5,13 @@
 //! `C` stay in DDR; only `B` chunks are staged.
 
 use super::partition::{csr_prefix_bytes, partition_balanced};
+use crate::error::MlmemError;
 use crate::kkmem::mempool::PooledAcc;
 use crate::kkmem::numeric::{emit_row, fused_numeric_row, Layout};
 use crate::kkmem::spgemm::{alloc_csr_regions, alloc_csr_regions_sized};
 use crate::kkmem::symbolic::{max_row_upper_bound, rowmap_from_sizes, symbolic};
 use crate::kkmem::{CompressedMatrix, SpgemmOptions};
-use crate::memory::alloc::{AllocError, Location};
+use crate::memory::alloc::Location;
 use crate::memory::machine::{MemSim, MemTracer};
 use crate::memory::pool::{FAST, SLOW};
 use crate::sparse::csr::{Csr, Idx};
@@ -27,14 +28,17 @@ pub struct ChunkedProduct {
 
 /// Simulated Algorithm 1. `fast_budget` is the staging budget in the fast
 /// pool (the paper limits it to 8 GB of the 16 GB MCDRAM because larger
-/// arenas hit fragmentation, §4.1).
+/// arenas hit fragmentation, §4.1). The simulator's attached
+/// [`JobControl`](crate::error::JobControl) is observed at every pass
+/// boundary, so a cancelled or deadline-expired job stops after the
+/// chunk in flight.
 pub fn knl_chunked_sim(
     sim: &mut MemSim,
     a: &Csr,
     b: &Csr,
     fast_budget: u64,
     opts: &SpgemmOptions,
-) -> Result<ChunkedProduct, AllocError> {
+) -> Result<ChunkedProduct, MlmemError> {
     assert_eq!(a.ncols, b.nrows, "spgemm shape mismatch");
     sim.set_compute_efficiency(crate::memory::machine::lane_efficiency(
         a.avg_degree(),
@@ -77,6 +81,7 @@ pub fn knl_chunked_sim(
     let mut copied_bytes = 0u64;
     let mut c_regions = [c_cur, c_prev];
     for (pass, &(lo, hi)) in parts.iter().enumerate() {
+        sim.checkpoint()?;
         // copy2Fast(B, B_rp)
         let slice = b.slice_rows(lo, hi);
         let (fb_rm, fb_en, fb_va) =

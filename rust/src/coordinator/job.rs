@@ -43,6 +43,16 @@ pub struct Job {
     pub kind: JobKind,
     pub arch: Arc<Arch>,
     pub policy: Policy,
+    /// Attach the product matrix to the [`JobResult`] instead of
+    /// dropping it (off by default: results of a service batch should
+    /// not pin every product in memory).
+    pub keep_product: bool,
+}
+
+impl Job {
+    pub fn new(id: u64, kind: JobKind, arch: Arc<Arch>, policy: Policy) -> Self {
+        Self { id, kind, arch, policy, keep_product: false }
+    }
 }
 
 /// What the planner decided to do (recorded for observability).
@@ -83,13 +93,18 @@ pub struct CandidateScore {
 }
 
 /// Result of a completed job.
+#[derive(Debug)]
 pub struct JobResult {
     pub id: u64,
     pub decision: Decision,
     pub report: SimReport,
-    /// Product summary (the matrix itself is dropped unless small).
+    /// Product summary (the matrix itself is dropped unless the job
+    /// asked to keep it).
     pub c_nrows: usize,
     pub c_nnz: usize,
+    /// The product matrix when the job was submitted with
+    /// `keep_product` (None otherwise, and always None for TriCount).
+    pub c: Option<Csr>,
     /// Triangle count for TriCount jobs.
     pub triangles: Option<u64>,
     /// Cost prediction for the plan that ran (None when the job kind has
@@ -113,21 +128,6 @@ impl JobResult {
     }
 }
 
-/// Error from planning or execution.
-#[derive(Debug)]
-pub struct JobError {
-    pub id: u64,
-    pub message: String,
-}
-
-impl std::fmt::Display for JobError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "job {}: {}", self.id, self.message)
-    }
-}
-
-impl std::error::Error for JobError {}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,9 +146,4 @@ mod tests {
         );
     }
 
-    #[test]
-    fn job_error_display() {
-        let e = JobError { id: 7, message: "does not fit".into() };
-        assert_eq!(e.to_string(), "job 7: does not fit");
-    }
 }

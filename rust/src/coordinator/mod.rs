@@ -1,11 +1,16 @@
 //! L3 coordination: job specifications, the placement/chunking planner
-//! (the paper's decision procedure as a runtime policy), and a
-//! backpressured multi-worker service front-end.
+//! (the paper's decision procedure as a runtime policy), and the
+//! session-handle service front-end — an operand registry amortizing the
+//! symbolic pass across jobs, admission control, priority lanes, and a
+//! non-blocking job lifecycle with typed errors
+//! ([`MlmemError`](crate::error::MlmemError)).
 
 pub mod job;
 pub mod planner;
 pub mod service;
+pub mod session;
 
-pub use job::{CandidateScore, Decision, Job, JobError, JobKind, JobResult, Policy};
+pub use job::{CandidateScore, Decision, Job, JobKind, JobResult, Policy};
 pub use planner::{execute, explain_spgemm, ExplainRow, PlannerOptions};
-pub use service::{JobHandle, Metrics, SpgemmService};
+pub use service::{DecisionCounts, JobHandle, Metrics, MetricsSnapshot};
+pub use session::{MatrixHandle, Session, SessionBuilder, SubmitOptions};

@@ -12,8 +12,9 @@
 //! [`explain_spgemm`] additionally *runs* every candidate to report
 //! predicted vs actual (the CLI's `--explain`).
 
-use super::job::{CandidateScore, Decision, Job, JobError, JobKind, JobResult, Policy};
+use super::job::{CandidateScore, Decision, Job, JobKind, JobResult, Policy};
 use crate::chunk::heuristic::GpuChunkAlgo;
+use crate::error::MlmemError;
 use crate::engine::{
     CostEstimate, Engine, ExecPlan, GpuChunkEngine, KnlChunkEngine, PipelinedChunkEngine,
     Problem, SimEngine,
@@ -45,15 +46,23 @@ impl Default for PlannerOptions {
 }
 
 /// Execute one job to completion (plan + run under the simulator).
-pub fn execute(job: &Job, opts: &PlannerOptions) -> Result<JobResult, JobError> {
+///
+/// Builds a fresh [`Problem`] per call; a
+/// [`Session`](crate::coordinator::Session) instead runs the spgemm path
+/// with a problem whose symbolic summary and control token are
+/// pre-seeded from its registry.
+pub fn execute(job: &Job, opts: &PlannerOptions) -> Result<JobResult, MlmemError> {
     match &job.kind {
-        JobKind::Spgemm { a, b } => execute_spgemm(job, a, b, opts),
+        JobKind::Spgemm { a, b } => {
+            let problem = Problem::try_new(a, b)?;
+            execute_spgemm(job, &problem, opts)
+        }
         JobKind::TriCount { adj } => execute_tricount(job, adj, opts),
     }
 }
 
-fn err(job: &Job, m: impl std::fmt::Display) -> JobError {
-    JobError { id: job.id, message: m.to_string() }
+fn planner_err(job: &Job, m: impl std::fmt::Display) -> MlmemError {
+    MlmemError::Planner(format!("job {}: {m}", job.id))
 }
 
 /// Accumulator + staging slack reserved before a placement is declared
@@ -121,17 +130,18 @@ fn push_candidate(
 
 /// Enumerate every plan `Policy::Auto` considers for this problem on this
 /// machine, each with its cost prediction. Ordered cheapest-to-build
-/// first so predicted ties resolve toward the simpler plan.
+/// first so predicted ties resolve toward the simpler plan. Takes the
+/// caller's [`Problem`] so every candidate's `predict` shares one cached
+/// symbolic summary (possibly pre-seeded by a session registry).
 fn spgemm_candidates(
     arch: &Arc<crate::memory::arch::Arch>,
-    a: &Csr,
-    b: &Csr,
+    problem: &Problem,
     opts: &PlannerOptions,
 ) -> Vec<Candidate> {
+    let (a, b) = (problem.a, problem.b);
     let fast_usable = arch.spec.pools[FAST.0].usable();
     let spgemm_opts = opts.spgemm;
     let sizes = ProblemSizes::measure(a, b);
-    let problem = Problem::new(a, b);
     let mut out = Vec::new();
     if sizes.total() + ACC_SLACK <= fast_usable {
         push_candidate(
@@ -143,7 +153,7 @@ fn spgemm_candidates(
                 Placement::uniform(Location::Pool(FAST)),
             )),
             DecisionFlavor::FlatFast,
-            &problem,
+            problem,
         );
     }
     if let Some(p) = dp_placement(&sizes, fast_usable.saturating_sub(ACC_SLACK)) {
@@ -152,7 +162,7 @@ fn spgemm_candidates(
             "data-placement",
             Box::new(SimEngine::with_placement(Arc::clone(arch), spgemm_opts, p)),
             DecisionFlavor::DataPlacement,
-            &problem,
+            problem,
         );
     }
     push_candidate(
@@ -160,7 +170,7 @@ fn spgemm_candidates(
         "flat-default",
         Box::new(SimEngine::flat(Arc::clone(arch), spgemm_opts)),
         DecisionFlavor::FlatDefault,
-        &problem,
+        problem,
     );
     let budget = opts.auto_chunk_budget;
     match arch.kind {
@@ -170,14 +180,14 @@ fn spgemm_candidates(
                 "chunked-knl",
                 Box::new(KnlChunkEngine::new(Arc::clone(arch), spgemm_opts, budget)),
                 DecisionFlavor::ChunkedKnl,
-                &problem,
+                problem,
             );
             push_candidate(
                 &mut out,
                 "pipelined-knl",
                 Box::new(PipelinedChunkEngine::new(Arc::clone(arch), spgemm_opts, budget)),
                 DecisionFlavor::Pipelined,
-                &problem,
+                problem,
             );
         }
         MachineKind::Gpu => {
@@ -193,7 +203,7 @@ fn spgemm_candidates(
                             .with_algo(algo),
                     ),
                     DecisionFlavor::ChunkedGpu,
-                    &problem,
+                    problem,
                 );
                 push_candidate(
                     &mut out,
@@ -203,7 +213,7 @@ fn spgemm_candidates(
                             .with_algo(algo),
                     ),
                     DecisionFlavor::Pipelined,
-                    &problem,
+                    problem,
                 );
             }
         }
@@ -226,16 +236,19 @@ fn argmin_candidate(cands: &[Candidate]) -> Option<usize> {
     best.map(|(i, _)| i)
 }
 
-fn execute_spgemm(
+/// Execute one SpGEMM job against a caller-built [`Problem`]. The
+/// problem carries the (possibly registry-seeded) symbolic-summary cache
+/// and the job-control token; `job.kind` is ignored in favor of the
+/// problem's operands.
+pub(crate) fn execute_spgemm(
     job: &Job,
-    a: &Csr,
-    b: &Csr,
+    problem: &Problem,
     opts: &PlannerOptions,
-) -> Result<JobResult, JobError> {
+) -> Result<JobResult, MlmemError> {
+    let (a, b) = (problem.a, problem.b);
     let arch = &job.arch;
     let fast_usable = arch.spec.pools[FAST.0].usable();
     let spgemm_opts = opts.spgemm;
-    let problem = Problem::new(a, b);
 
     let (engine, flavor, plan, predicted, candidates): (
         Box<dyn Engine>,
@@ -245,9 +258,9 @@ fn execute_spgemm(
         Vec<CandidateScore>,
     ) = match job.policy {
         Policy::Auto => {
-            let cands = spgemm_candidates(arch, a, b, opts);
+            let cands = spgemm_candidates(arch, problem, opts);
             let best = argmin_candidate(&cands)
-                .ok_or_else(|| err(job, "no execution candidate fits this machine"))?;
+                .ok_or_else(|| planner_err(job, "no execution candidate fits this machine"))?;
             let scores = cands
                 .iter()
                 .map(|c| CandidateScore { label: c.label.clone(), predicted: c.est })
@@ -306,23 +319,27 @@ fn execute_spgemm(
                 ),
                 Policy::Auto => unreachable!("handled above"),
             };
-            let plan = engine.plan(&problem).map_err(|e| err(job, e))?;
-            let predicted = engine.predict(&problem, &plan).ok();
+            let plan = engine.plan(problem)?;
+            let predicted = engine.predict(problem, &plan).ok();
             (engine, flavor, plan, predicted, Vec::new())
         }
     };
 
-    let rep = engine.run(&problem, &plan).map_err(|e| err(job, e))?;
+    // Typed errors pass through untouched so `Cancelled`,
+    // `DeadlineExceeded`, and `Alloc` stay matchable at the handle.
+    let rep = engine.run(problem, &plan)?;
     let decision = flavor.decision(&rep);
     let report = rep
         .sim
-        .ok_or_else(|| err(job, "engine produced no simulated report"))?;
+        .ok_or_else(|| planner_err(job, "engine produced no simulated report"))?;
+    let (c_nrows, c_nnz) = (rep.c.nrows, rep.c.nnz());
     Ok(JobResult {
         id: job.id,
         decision,
         report,
-        c_nrows: rep.c.nrows,
-        c_nnz: rep.c.nnz(),
+        c_nrows,
+        c_nnz,
+        c: job.keep_product.then(|| rep.c),
         triangles: None,
         predicted,
         candidates,
@@ -353,9 +370,9 @@ pub fn explain_spgemm(
     arch: &Arc<crate::memory::arch::Arch>,
     opts: &PlannerOptions,
 ) -> Vec<ExplainRow> {
-    let cands = spgemm_candidates(arch, a, b, opts);
-    let chosen = argmin_candidate(&cands);
     let problem = Problem::new(a, b);
+    let cands = spgemm_candidates(arch, &problem, opts);
+    let chosen = argmin_candidate(&cands);
     cands
         .iter()
         .enumerate()
@@ -379,7 +396,7 @@ fn execute_tricount(
     job: &Job,
     adj: &crate::sparse::Csr,
     _opts: &PlannerOptions,
-) -> Result<JobResult, JobError> {
+) -> Result<JobResult, MlmemError> {
     let arch = &job.arch;
     let l = degree_sorted_lower(adj);
     let lc = CompressedMatrix::compress(&l);
@@ -406,7 +423,7 @@ fn execute_tricount(
         Decision::FlatDefault
     };
     let (triangles, _ops) =
-        tricount_sim(&mut sim, &l, &lc, placement).map_err(|e| err(job, e))?;
+        tricount_sim(&mut sim, &l, &lc, placement).map_err(MlmemError::from)?;
     let report = sim.finish();
     Ok(JobResult {
         id: job.id,
@@ -414,6 +431,7 @@ fn execute_tricount(
         report,
         c_nrows: 0,
         c_nnz: 0,
+        c: None,
         triangles: Some(triangles),
         predicted: None,
         candidates: Vec::new(),
@@ -430,7 +448,7 @@ mod tests {
     fn spgemm_job(id: u64, arch: crate::memory::arch::Arch, policy: Policy, n: usize) -> Job {
         let a = Arc::new(crate::gen::rhs::random_csr(n, n, 1, 6, id));
         let b = Arc::new(crate::gen::rhs::random_csr(n, n, 1, 6, id + 100));
-        Job { id, kind: JobKind::Spgemm { a, b }, arch: Arc::new(arch), policy }
+        Job::new(id, JobKind::Spgemm { a, b }, Arc::new(arch), policy)
     }
 
     #[test]
@@ -459,12 +477,7 @@ mod tests {
         let a = Arc::new(crate::gen::rhs::banded(n, n, 2, 2, 1));
         let b = Arc::new(crate::gen::rhs::banded(n, n, 2, 2, 2));
         assert!(b.size_bytes() > 11 * 1024 * 1024, "B = {}", b.size_bytes());
-        let job = Job {
-            id: 2,
-            kind: JobKind::Spgemm { a, b },
-            arch: Arc::new(arch),
-            policy: Policy::Auto,
-        };
+        let job = Job::new(2, JobKind::Spgemm { a, b }, Arc::new(arch), Policy::Auto);
         let r = execute(&job, &PlannerOptions::default()).unwrap();
         match r.decision {
             Decision::FlatDefault => {}
@@ -548,12 +561,8 @@ mod tests {
         let lc = CompressedMatrix::compress(&l);
         let expect = crate::tricount::tricount(&l, &lc, 2);
         let arch = knl(KnlMode::Ddr, 64, ScaleFactor::default());
-        let job = Job {
-            id: 5,
-            kind: JobKind::TriCount { adj },
-            arch: Arc::new(arch),
-            policy: Policy::DataPlacement,
-        };
+        let job =
+            Job::new(5, JobKind::TriCount { adj }, Arc::new(arch), Policy::DataPlacement);
         let r = execute(&job, &PlannerOptions::default()).unwrap();
         assert_eq!(r.triangles, Some(expect));
         assert_eq!(r.decision, Decision::DataPlacement);

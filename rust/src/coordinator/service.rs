@@ -1,213 +1,259 @@
-//! The SpGEMM service: a leader that accepts jobs, applies backpressure,
-//! executes them on a worker pool, and exposes aggregate metrics. This is
-//! the L3 "coordination" face of the library — what a Trilinos-style
-//! deployment would embed to run many multiplications against one
-//! machine's memory configuration.
+//! Service-side plumbing shared by [`Session`](super::Session): the
+//! aggregate metrics with a named snapshot, and the non-blocking job
+//! handle lifecycle (`try_wait` / `wait_timeout` / cancellation). The
+//! old blocking-only `SpgemmService` front-end was replaced by the
+//! session-handle API in `coordinator::session`.
 
-use super::job::{Job, JobError, JobKind, JobResult, Policy};
-use super::planner::{execute, PlannerOptions};
-use crate::memory::arch::Arch;
-use crate::sparse::Csr;
-use crate::util::threadpool::WorkerPool;
+use super::job::{Decision, JobResult};
+use crate::error::{JobControl, MlmemError};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::mpsc;
+use std::time::Duration;
 
-/// Aggregate service metrics.
+/// Aggregate service counters (lock-free; updated by workers).
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
     pub failed: AtomicU64,
     pub rejected: AtomicU64,
+    /// Jobs that stopped at a chunk boundary via cancellation or an
+    /// expired deadline (not counted as `failed`).
+    pub cancelled: AtomicU64,
     /// Total simulated time across completed jobs (nanoseconds).
     pub sim_time_ns: AtomicU64,
     /// Total simulated flops across completed jobs.
     pub flops: AtomicU64,
+    dec_flat_default: AtomicU64,
+    dec_flat_fast: AtomicU64,
+    dec_data_placement: AtomicU64,
+    dec_chunked: AtomicU64,
+    dec_pipelined: AtomicU64,
+}
+
+/// Per-decision completion counts — which plans the planner actually ran.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecisionCounts {
+    pub flat_default: u64,
+    pub flat_fast: u64,
+    pub data_placement: u64,
+    /// Serial chunking, both machine families.
+    pub chunked: u64,
+    pub pipelined: u64,
+}
+
+/// Named snapshot of the service counters at one instant (replaces the
+/// old positional `(submitted, completed, failed, rejected)` tuple).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected: u64,
+    pub cancelled: u64,
+    /// Jobs submitted but not yet finished when the snapshot was taken.
+    pub queue_depth: u64,
+    pub decisions: DecisionCounts,
 }
 
 impl Metrics {
-    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
-        (
-            self.submitted.load(Ordering::SeqCst),
-            self.completed.load(Ordering::SeqCst),
-            self.failed.load(Ordering::SeqCst),
-            self.rejected.load(Ordering::SeqCst),
-        )
-    }
-}
-
-/// Handle for an in-flight job.
-pub struct JobHandle {
-    pub id: u64,
-    rx: mpsc::Receiver<Result<JobResult, JobError>>,
-}
-
-impl JobHandle {
-    /// Block until the job finishes.
-    pub fn wait(self) -> Result<JobResult, JobError> {
-        self.rx
-            .recv()
-            .unwrap_or_else(|_| Err(JobError { id: self.id, message: "worker dropped".into() }))
-    }
-}
-
-/// The service.
-pub struct SpgemmService {
-    pool: WorkerPool,
-    opts: PlannerOptions,
-    next_id: AtomicU64,
-    /// Backpressure: reject submissions beyond this many queued jobs.
-    max_pending: usize,
-    pub metrics: Arc<Metrics>,
-}
-
-impl SpgemmService {
-    pub fn new(workers: usize, max_pending: usize, opts: PlannerOptions) -> Self {
-        Self {
-            pool: WorkerPool::new(workers),
-            opts,
-            next_id: AtomicU64::new(1),
-            max_pending,
-            metrics: Arc::new(Metrics::default()),
+    /// Snapshot every counter; the caller supplies the live queue depth
+    /// (the worker pool owns that number).
+    pub fn snapshot(&self, queue_depth: usize) -> MetricsSnapshot {
+        let load = |c: &AtomicU64| c.load(Ordering::SeqCst);
+        MetricsSnapshot {
+            submitted: load(&self.submitted),
+            completed: load(&self.completed),
+            failed: load(&self.failed),
+            rejected: load(&self.rejected),
+            cancelled: load(&self.cancelled),
+            queue_depth: queue_depth as u64,
+            decisions: DecisionCounts {
+                flat_default: load(&self.dec_flat_default),
+                flat_fast: load(&self.dec_flat_fast),
+                data_placement: load(&self.dec_data_placement),
+                chunked: load(&self.dec_chunked),
+                pipelined: load(&self.dec_pipelined),
+            },
         }
     }
 
-    /// Submit a SpGEMM job. Returns `Err` with the job back when the
-    /// queue is full (backpressure).
-    pub fn submit_spgemm(
-        &self,
-        a: Arc<Csr>,
-        b: Arc<Csr>,
-        arch: Arc<Arch>,
-        policy: Policy,
-    ) -> Result<JobHandle, &'static str> {
-        self.submit_kind(JobKind::Spgemm { a, b }, arch, policy)
-    }
-
-    /// Submit a triangle-count job.
-    pub fn submit_tricount(
-        &self,
-        adj: Arc<Csr>,
-        arch: Arc<Arch>,
-        policy: Policy,
-    ) -> Result<JobHandle, &'static str> {
-        self.submit_kind(JobKind::TriCount { adj }, arch, policy)
-    }
-
-    fn submit_kind(
-        &self,
-        kind: JobKind,
-        arch: Arc<Arch>,
-        policy: Policy,
-    ) -> Result<JobHandle, &'static str> {
-        if self.pool.pending() >= self.max_pending {
-            self.metrics.rejected.fetch_add(1, Ordering::SeqCst);
-            return Err("queue full");
+    /// Classify a completed job's outcome into the right counters.
+    pub(crate) fn record_outcome(&self, result: &Result<JobResult, MlmemError>) {
+        match result {
+            Ok(r) => {
+                self.completed.fetch_add(1, Ordering::SeqCst);
+                self.sim_time_ns
+                    .fetch_add((r.report.seconds * 1e9) as u64, Ordering::SeqCst);
+                self.flops.fetch_add(r.report.flops, Ordering::SeqCst);
+                self.record_decision(&r.decision);
+            }
+            Err(MlmemError::Cancelled | MlmemError::DeadlineExceeded) => {
+                self.cancelled.fetch_add(1, Ordering::SeqCst);
+            }
+            Err(_) => {
+                self.failed.fetch_add(1, Ordering::SeqCst);
+            }
         }
-        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        self.metrics.submitted.fetch_add(1, Ordering::SeqCst);
-        let job = Job { id, kind, arch, policy };
-        let opts = self.opts;
-        let metrics = Arc::clone(&self.metrics);
-        let (tx, rx) = mpsc::channel();
-        // Guard against worker panics poisoning the response channel.
-        let tx = Mutex::new(Some(tx));
-        self.pool.submit(move || {
-            let result = execute(&job, &opts);
-            match &result {
-                Ok(r) => {
-                    metrics.completed.fetch_add(1, Ordering::SeqCst);
-                    metrics
-                        .sim_time_ns
-                        .fetch_add((r.report.seconds * 1e9) as u64, Ordering::SeqCst);
-                    metrics.flops.fetch_add(r.report.flops, Ordering::SeqCst);
-                }
-                Err(_) => {
-                    metrics.failed.fetch_add(1, Ordering::SeqCst);
-                }
-            }
-            if let Some(tx) = tx.lock().expect("tx lock").take() {
-                let _ = tx.send(result);
-            }
-        });
-        Ok(JobHandle { id, rx })
     }
 
-    /// Wait for all queued jobs to complete.
-    pub fn drain(&self) {
-        self.pool.wait_idle();
+    fn record_decision(&self, d: &Decision) {
+        let counter = match d {
+            Decision::FlatDefault => &self.dec_flat_default,
+            Decision::FlatFast => &self.dec_flat_fast,
+            Decision::DataPlacement => &self.dec_data_placement,
+            Decision::ChunkedKnl { .. } | Decision::ChunkedGpu { .. } => &self.dec_chunked,
+            Decision::Pipelined { .. } => &self.dec_pipelined,
+        };
+        counter.fetch_add(1, Ordering::SeqCst);
     }
 
     /// Aggregate simulated GFLOP/s across completed jobs.
     pub fn aggregate_gflops(&self) -> f64 {
-        let ns = self.metrics.sim_time_ns.load(Ordering::SeqCst);
+        let ns = self.sim_time_ns.load(Ordering::SeqCst);
         if ns == 0 {
             return 0.0;
         }
-        self.metrics.flops.load(Ordering::SeqCst) as f64 / (ns as f64 * 1e-9) / 1e9
+        self.flops.load(Ordering::SeqCst) as f64 / (ns as f64 * 1e-9) / 1e9
+    }
+}
+
+/// Handle for an in-flight job: blocking wait, non-blocking polls, and
+/// cooperative cancellation. A worker that dies without reporting (panic
+/// or pool teardown) surfaces as [`MlmemError::WorkerLost`] — distinct
+/// from the job itself failing.
+pub struct JobHandle {
+    pub id: u64,
+    control: JobControl,
+    rx: mpsc::Receiver<Result<JobResult, MlmemError>>,
+    finished: bool,
+}
+
+impl JobHandle {
+    pub(crate) fn new(
+        id: u64,
+        control: JobControl,
+        rx: mpsc::Receiver<Result<JobResult, MlmemError>>,
+    ) -> Self {
+        Self { id, control, rx, finished: false }
+    }
+
+    /// Request cooperative cancellation: the job (queued or running)
+    /// observes the flag at its next chunk boundary and finishes with
+    /// [`MlmemError::Cancelled`].
+    pub fn cancel(&self) {
+        self.control.cancel();
+    }
+
+    /// The job's control token (e.g. to share one cancellation flag
+    /// across a batch).
+    pub fn control(&self) -> &JobControl {
+        &self.control
+    }
+
+    /// Block until the job finishes. If the outcome was already taken by
+    /// [`try_wait`](Self::try_wait) / [`wait_timeout`](Self::wait_timeout)
+    /// this reports a `Planner` error rather than fabricating
+    /// [`MlmemError::WorkerLost`] for a job that completed.
+    pub fn wait(self) -> Result<JobResult, MlmemError> {
+        if self.finished {
+            return Err(MlmemError::Planner(format!(
+                "job {}: outcome already taken from this handle",
+                self.id
+            )));
+        }
+        self.rx.recv().unwrap_or(Err(MlmemError::WorkerLost))
+    }
+
+    /// Non-blocking poll: `Some(outcome)` exactly once when the job has
+    /// finished, `None` while it is still queued or running (and after
+    /// the outcome was already taken).
+    pub fn try_wait(&mut self) -> Option<Result<JobResult, MlmemError>> {
+        if self.finished {
+            return None;
+        }
+        match self.rx.try_recv() {
+            Ok(r) => {
+                self.finished = true;
+                Some(r)
+            }
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                self.finished = true;
+                Some(Err(MlmemError::WorkerLost))
+            }
+        }
+    }
+
+    /// Bounded wait: like [`try_wait`](Self::try_wait) but blocks up to
+    /// `timeout` for the outcome. `None` means the job is still in
+    /// flight (the job itself is *not* affected — pair with
+    /// [`cancel`](Self::cancel) to abandon it).
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Option<Result<JobResult, MlmemError>> {
+        if self.finished {
+            return None;
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => {
+                self.finished = true;
+                Some(r)
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                self.finished = true;
+                Some(Err(MlmemError::WorkerLost))
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gen::scale::ScaleFactor;
-    use crate::memory::arch::{knl, KnlMode};
 
-    fn arch() -> Arc<Arch> {
-        Arc::new(knl(KnlMode::Ddr, 64, ScaleFactor::default()))
-    }
-
-    fn mat(seed: u64) -> Arc<Csr> {
-        Arc::new(crate::gen::rhs::random_csr(60, 60, 1, 5, seed))
+    #[test]
+    fn dropped_worker_is_worker_lost_not_job_failure() {
+        let (tx, rx) = mpsc::channel();
+        drop(tx); // the worker died before reporting
+        let mut h = JobHandle::new(7, JobControl::new(), rx);
+        let out = h.try_wait().expect("dead worker yields an outcome");
+        assert!(matches!(out, Err(MlmemError::WorkerLost)));
+        // The outcome is delivered exactly once; a later blocking wait
+        // reports the programming error, not a second WorkerLost.
+        assert!(h.try_wait().is_none());
+        assert!(matches!(h.wait(), Err(MlmemError::Planner(_))));
     }
 
     #[test]
-    fn submits_and_completes_jobs() {
-        let svc = SpgemmService::new(2, 64, PlannerOptions::default());
-        let handles: Vec<_> = (0..6)
-            .map(|i| {
-                svc.submit_spgemm(mat(i), mat(i + 50), arch(), Policy::Auto)
-                    .expect("queue has room")
-            })
-            .collect();
-        for h in handles {
-            let r = h.wait().expect("job ok");
-            assert!(r.c_nnz > 0);
-            assert!(r.report.gflops > 0.0);
-        }
-        let (sub, done, failed, rejected) = svc.metrics.snapshot();
-        assert_eq!((sub, done, failed, rejected), (6, 6, 0, 0));
-        assert!(svc.aggregate_gflops() > 0.0);
+    fn wait_timeout_returns_none_while_pending() {
+        let (tx, rx) = mpsc::channel::<Result<JobResult, MlmemError>>();
+        let mut h = JobHandle::new(1, JobControl::new(), rx);
+        assert!(h.wait_timeout(Duration::from_millis(1)).is_none());
+        assert!(h.try_wait().is_none());
+        drop(tx);
+        assert!(matches!(
+            h.wait_timeout(Duration::from_millis(1)),
+            Some(Err(MlmemError::WorkerLost))
+        ));
     }
 
     #[test]
-    fn backpressure_rejects_when_full() {
-        // One worker, queue cap 1: the second/third submission while the
-        // first runs must eventually hit "queue full".
-        let svc = SpgemmService::new(1, 1, PlannerOptions::default());
-        let mut rejected = 0;
-        let mut handles = Vec::new();
-        for i in 0..20 {
-            match svc.submit_spgemm(mat(i), mat(i + 100), arch(), Policy::Auto) {
-                Ok(h) => handles.push(h),
-                Err(_) => rejected += 1,
-            }
-        }
-        svc.drain();
-        assert!(rejected > 0, "expected backpressure rejections");
-        assert_eq!(svc.metrics.rejected.load(Ordering::SeqCst), rejected);
+    fn snapshot_classifies_outcomes() {
+        let m = Metrics::default();
+        m.record_outcome(&Err(MlmemError::Cancelled));
+        m.record_outcome(&Err(MlmemError::DeadlineExceeded));
+        m.record_outcome(&Err(MlmemError::Planner("boom".into())));
+        let s = m.snapshot(3);
+        assert_eq!((s.cancelled, s.failed, s.completed), (2, 1, 0));
+        assert_eq!(s.queue_depth, 3);
     }
 
     #[test]
-    fn mixed_job_kinds() {
-        let svc = SpgemmService::new(2, 16, PlannerOptions::default());
-        let adj = Arc::new(crate::gen::graphs::erdos_renyi(40, 0.25, 1));
-        let h1 = svc.submit_tricount(Arc::clone(&adj), arch(), Policy::Auto).unwrap();
-        let h2 = svc.submit_spgemm(mat(1), mat(2), arch(), Policy::Flat).unwrap();
-        let r1 = h1.wait().unwrap();
-        let r2 = h2.wait().unwrap();
-        assert!(r1.triangles.is_some());
-        assert!(r2.triangles.is_none());
+    fn cancel_flips_the_shared_control() {
+        let (_tx, rx) = mpsc::channel::<Result<JobResult, MlmemError>>();
+        let h = JobHandle::new(2, JobControl::new(), rx);
+        assert_eq!(h.id, 2);
+        h.cancel();
+        assert!(h.control().is_cancelled());
     }
 }

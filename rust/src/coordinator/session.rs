@@ -1,0 +1,553 @@
+//! The session-handle public API: a builder-constructed [`Session`]
+//! binds a machine profile, planner options, a worker pool with priority
+//! lanes, and admission limits — and owns an **operand registry**.
+//! Registering a matrix returns a cheap [`MatrixHandle`]; the session
+//! caches the per-matrix symbolic summary (compressed form, byte
+//! prefixes) and the per-pair shape core behind it, so repeated
+//! multiplications against registered operands never repeat the
+//! symbolic pass. This is the KokkosKernels handle discipline (Deveci
+//! et al. 2018) hoisted from per-call to session lifetime: exactly what
+//! a service multiplying shared operands under heavy traffic needs.
+//!
+//! Jobs come back as [`JobHandle`]s with a full lifecycle — blocking
+//! [`wait`](JobHandle::wait), non-blocking
+//! [`try_wait`](JobHandle::try_wait) /
+//! [`wait_timeout`](JobHandle::wait_timeout), cooperative
+//! [`cancel`](JobHandle::cancel), and per-job deadlines — all failing
+//! with the crate-wide typed [`MlmemError`].
+//!
+//! ```
+//! use mlmem_spgemm::coordinator::Session;
+//! use mlmem_spgemm::gen::rhs::random_csr;
+//! use mlmem_spgemm::gen::scale::ScaleFactor;
+//! use mlmem_spgemm::memory::arch::{knl, KnlMode};
+//! use std::sync::Arc;
+//!
+//! let arch = Arc::new(knl(KnlMode::Ddr, 64, ScaleFactor::default()));
+//! let session = Session::builder(arch).workers(2).max_pending(8).build();
+//! let a = session.register(Arc::new(random_csr(40, 40, 1, 4, 1)));
+//! let b = session.register(Arc::new(random_csr(40, 40, 1, 4, 2)));
+//! let first = session.spgemm(a, b).unwrap().wait().unwrap();
+//! assert!(first.c_nnz > 0);
+//! // The second multiply reuses the cached symbolic summary.
+//! let second = session.spgemm(a, b).unwrap().wait().unwrap();
+//! assert_eq!(second.c_nnz, first.c_nnz);
+//! assert_eq!(session.symbolic_passes(), 1);
+//! ```
+
+use super::job::{Job, JobKind, JobResult, Policy};
+use super::planner::{self, PlannerOptions};
+use super::service::{JobHandle, Metrics, MetricsSnapshot};
+use crate::engine::cost::ShapeCore;
+use crate::engine::{EngineKind, EngineReport, ExecPlan, Problem};
+use crate::error::{JobControl, MlmemError};
+use crate::kkmem::{CompressedMatrix, SpgemmOptions};
+use crate::memory::arch::{Arch, MachineKind};
+use crate::memory::{Location, FAST, SLOW};
+use crate::sparse::Csr;
+use crate::util::threadpool::{Priority, WorkerPool};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+/// Cheap copyable reference to a matrix registered with a [`Session`].
+/// Handles are session-scoped: using one on a different session yields
+/// [`MlmemError::UnknownHandle`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct MatrixHandle {
+    pub(crate) id: u64,
+}
+
+/// Per-submission knobs; `Default` is the session's policy, normal
+/// priority, no deadline, product dropped.
+#[derive(Clone, Debug, Default)]
+pub struct SubmitOptions {
+    /// Override the session's default policy for this job.
+    pub policy: Option<Policy>,
+    /// Queue lane: `High` jumps queued `Normal` jobs.
+    pub priority: Priority,
+    /// Deadline measured from submission; observed at chunk boundaries,
+    /// so an expired job finishes with [`MlmemError::DeadlineExceeded`].
+    pub deadline: Option<Duration>,
+    /// Share a caller-owned control token (e.g. one cancel flag across a
+    /// batch). A deadline in `self.deadline` still applies on top.
+    pub control: Option<JobControl>,
+    /// Attach the product matrix to the [`JobResult`].
+    pub keep_product: bool,
+}
+
+/// One registered operand: the matrix plus the cached per-matrix
+/// symbolic summary and its last-known placement residency.
+struct Operand {
+    matrix: Arc<Csr>,
+    /// Compressed form, built on first use as a right-hand side and
+    /// reused across every pair this operand appears in.
+    compressed: Mutex<Option<Arc<CompressedMatrix>>>,
+    /// Coarse last-known residency from the most recent executed plan
+    /// (`None` until a job ran against this operand).
+    residency: Mutex<Option<Location>>,
+}
+
+impl Operand {
+    fn compressed_form(&self) -> Arc<CompressedMatrix> {
+        let mut slot = self.compressed.lock().expect("compressed poisoned");
+        match &*slot {
+            Some(c) => Arc::clone(c),
+            None => {
+                let c = Arc::new(CompressedMatrix::compress(&self.matrix));
+                *slot = Some(Arc::clone(&c));
+                c
+            }
+        }
+    }
+}
+
+/// State shared with the worker closures.
+struct Shared {
+    metrics: Metrics,
+    /// Pair-level shape cores keyed by `(a_handle, b_handle)` — the
+    /// session-lifetime home of the amortization `engine::Problem` only
+    /// held for one call.
+    pair_cache: Mutex<HashMap<(u64, u64), Arc<ShapeCore>>>,
+    /// Symbolic passes actually computed (cache misses). The registry
+    /// reuse tests pin this.
+    symbolic_passes: AtomicU64,
+}
+
+impl Shared {
+    /// Fetch-or-compute the pair's shape core. The pass runs *outside*
+    /// the cache lock so first-time passes of distinct pairs proceed in
+    /// parallel across workers; two workers racing the same uncached
+    /// pair may both compute (each counted), with the first insert
+    /// winning the cache.
+    fn shape_core_for(&self, key: (u64, u64), a: &Operand, b: &Operand) -> Arc<ShapeCore> {
+        if let Some(core) = self.pair_cache.lock().expect("pair cache poisoned").get(&key) {
+            return Arc::clone(core);
+        }
+        self.symbolic_passes.fetch_add(1, Ordering::SeqCst);
+        let comp = b.compressed_form();
+        let core = Arc::new(ShapeCore::with_compression(&a.matrix, &b.matrix, &comp));
+        let mut cache = self.pair_cache.lock().expect("pair cache poisoned");
+        Arc::clone(cache.entry(key).or_insert(core))
+    }
+}
+
+/// Builder for [`Session`]; see the module docs for the full picture.
+pub struct SessionBuilder {
+    arch: Arc<Arch>,
+    opts: PlannerOptions,
+    workers: usize,
+    max_pending: usize,
+    default_policy: Policy,
+}
+
+impl SessionBuilder {
+    pub fn new(arch: Arc<Arch>) -> Self {
+        Self {
+            arch,
+            opts: PlannerOptions::default(),
+            workers: 4,
+            max_pending: 64,
+            default_policy: Policy::Auto,
+        }
+    }
+
+    /// Executor worker threads (min 1).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    /// Admission limit: submissions are rejected while this many jobs
+    /// are queued or running.
+    pub fn max_pending(mut self, n: usize) -> Self {
+        self.max_pending = n.max(1);
+        self
+    }
+
+    pub fn planner(mut self, opts: PlannerOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Policy applied when a submission does not override it
+    /// (default: `Policy::Auto`).
+    pub fn default_policy(mut self, policy: Policy) -> Self {
+        self.default_policy = policy;
+        self
+    }
+
+    pub fn build(self) -> Session {
+        Session {
+            arch: self.arch,
+            opts: self.opts,
+            default_policy: self.default_policy,
+            max_pending: self.max_pending,
+            pool: WorkerPool::new(self.workers),
+            next_job: AtomicU64::new(1),
+            next_handle: AtomicU64::new(1),
+            operands: Mutex::new(HashMap::new()),
+            shared: Arc::new(Shared {
+                metrics: Metrics::default(),
+                pair_cache: Mutex::new(HashMap::new()),
+                symbolic_passes: AtomicU64::new(0),
+            }),
+        }
+    }
+}
+
+/// The library-facing service front-end; see the module docs.
+pub struct Session {
+    arch: Arc<Arch>,
+    opts: PlannerOptions,
+    default_policy: Policy,
+    max_pending: usize,
+    pool: WorkerPool,
+    next_job: AtomicU64,
+    next_handle: AtomicU64,
+    operands: Mutex<HashMap<u64, Arc<Operand>>>,
+    shared: Arc<Shared>,
+}
+
+impl Session {
+    pub fn builder(arch: Arc<Arch>) -> SessionBuilder {
+        SessionBuilder::new(arch)
+    }
+
+    /// Register a matrix, returning a handle valid for this session.
+    /// The per-matrix symbolic summary is cached behind the handle and
+    /// reused by every job it participates in.
+    pub fn register(&self, matrix: Arc<Csr>) -> MatrixHandle {
+        let id = self.next_handle.fetch_add(1, Ordering::SeqCst);
+        let operand = Arc::new(Operand {
+            matrix,
+            compressed: Mutex::new(None),
+            residency: Mutex::new(None),
+        });
+        self.operands.lock().expect("registry poisoned").insert(id, operand);
+        MatrixHandle { id }
+    }
+
+    /// The registered matrix behind a handle.
+    pub fn operand(&self, h: MatrixHandle) -> Result<Arc<Csr>, MlmemError> {
+        Ok(Arc::clone(&self.resolve(h)?.matrix))
+    }
+
+    /// Coarse last-known placement residency of a registered operand
+    /// (`None` until a job ran against it).
+    pub fn residency(&self, h: MatrixHandle) -> Option<Location> {
+        let op = self.resolve(h).ok()?;
+        let loc = *op.residency.lock().expect("residency poisoned");
+        loc
+    }
+
+    /// Symbolic passes computed so far — stays flat while jobs hit the
+    /// registry's pair cache.
+    pub fn symbolic_passes(&self) -> u64 {
+        self.shared.symbolic_passes.load(Ordering::SeqCst)
+    }
+
+    /// Submit `C = A × B` with the session defaults.
+    pub fn spgemm(&self, a: MatrixHandle, b: MatrixHandle) -> Result<JobHandle, MlmemError> {
+        self.spgemm_with(a, b, SubmitOptions::default())
+    }
+
+    /// Submit `C = A × B` with per-job policy/priority/deadline.
+    pub fn spgemm_with(
+        &self,
+        a: MatrixHandle,
+        b: MatrixHandle,
+        options: SubmitOptions,
+    ) -> Result<JobHandle, MlmemError> {
+        let oa = self.resolve(a)?;
+        let ob = self.resolve(b)?;
+        if oa.matrix.ncols != ob.matrix.nrows {
+            return Err(MlmemError::ShapeMismatch {
+                a: (oa.matrix.nrows, oa.matrix.ncols),
+                b: (ob.matrix.nrows, ob.matrix.ncols),
+            });
+        }
+        let kind = JobKind::Spgemm {
+            a: Arc::clone(&oa.matrix),
+            b: Arc::clone(&ob.matrix),
+        };
+        self.submit(kind, options, move |job, control, opts, shared| {
+            let core = shared.shape_core_for((a.id, b.id), &oa, &ob);
+            let problem = Problem::try_new(&oa.matrix, &ob.matrix)?
+                .with_shape_core(core)
+                .with_control(control.clone());
+            let result = planner::execute_spgemm(job, &problem, opts);
+            if let Ok(r) = &result {
+                record_residency(&job.arch, &oa, &ob, r);
+            }
+            result
+        })
+    }
+
+    /// Submit a triangle count over a registered adjacency matrix.
+    pub fn tricount(&self, adj: MatrixHandle) -> Result<JobHandle, MlmemError> {
+        self.tricount_with(adj, SubmitOptions::default())
+    }
+
+    pub fn tricount_with(
+        &self,
+        adj: MatrixHandle,
+        options: SubmitOptions,
+    ) -> Result<JobHandle, MlmemError> {
+        let op = self.resolve(adj)?;
+        let kind = JobKind::TriCount { adj: Arc::clone(&op.matrix) };
+        // Triangle counting runs one fused kernel (no chunk boundaries);
+        // the control is observed once, before the run.
+        self.submit(kind, options, |job, _control, opts, _shared| {
+            planner::execute(job, opts)
+        })
+    }
+
+    /// Shared submission path: admission control, id/metrics accounting,
+    /// worker dispatch, handle construction.
+    fn submit<F>(
+        &self,
+        kind: JobKind,
+        options: SubmitOptions,
+        run: F,
+    ) -> Result<JobHandle, MlmemError>
+    where
+        F: FnOnce(&Job, &JobControl, &PlannerOptions, &Shared) -> Result<JobResult, MlmemError>
+            + Send
+            + 'static,
+    {
+        let pending = self.pool.pending();
+        if pending >= self.max_pending {
+            self.shared.metrics.rejected.fetch_add(1, Ordering::SeqCst);
+            return Err(MlmemError::AdmissionRejected {
+                pending,
+                max_pending: self.max_pending,
+            });
+        }
+        let id = self.next_job.fetch_add(1, Ordering::SeqCst);
+        self.shared.metrics.submitted.fetch_add(1, Ordering::SeqCst);
+        let control = match (options.control, options.deadline) {
+            // The merged token shares the caller's cancellation flag and
+            // takes the tighter deadline.
+            (Some(c), Some(d)) => c.deadline_in(d),
+            (Some(c), None) => c,
+            (None, Some(d)) => JobControl::with_deadline(d),
+            (None, None) => JobControl::new(),
+        };
+        let mut job = Job::new(
+            id,
+            kind,
+            Arc::clone(&self.arch),
+            options.policy.unwrap_or(self.default_policy),
+        );
+        job.keep_product = options.keep_product;
+        let opts = self.opts;
+        let shared = Arc::clone(&self.shared);
+        let worker_control = control.clone();
+        let (tx, rx) = mpsc::channel();
+        self.pool.submit_with(options.priority, move || {
+            let result = worker_control
+                .checkpoint()
+                .and_then(|()| run(&job, &worker_control, &opts, &shared));
+            shared.metrics.record_outcome(&result);
+            let _ = tx.send(result);
+        });
+        Ok(JobHandle::new(id, control, rx))
+    }
+
+    /// Synchronously run one multiplication through an explicit engine
+    /// (the CLI's `spgemm --engine ...` path). Reuses the registry's
+    /// cached symbolic summary like the asynchronous path; does not
+    /// touch the job metrics.
+    pub fn execute_engine(
+        &self,
+        kind: EngineKind,
+        a: MatrixHandle,
+        b: MatrixHandle,
+        engine_opts: SpgemmOptions,
+        fast_budget: Option<u64>,
+    ) -> Result<(ExecPlan, EngineReport), MlmemError> {
+        let oa = self.resolve(a)?;
+        let ob = self.resolve(b)?;
+        if oa.matrix.ncols != ob.matrix.nrows {
+            return Err(MlmemError::ShapeMismatch {
+                a: (oa.matrix.nrows, oa.matrix.ncols),
+                b: (ob.matrix.nrows, ob.matrix.ncols),
+            });
+        }
+        let engine = kind.build(Arc::clone(&self.arch), engine_opts, fast_budget)?;
+        let core = self.shared.shape_core_for((a.id, b.id), &oa, &ob);
+        let problem =
+            Problem::try_new(&oa.matrix, &ob.matrix)?.with_shape_core(core);
+        let plan = engine.plan(&problem)?;
+        let report = engine.run(&problem, &plan)?;
+        Ok((plan, report))
+    }
+
+    /// Wait for all queued jobs to complete.
+    pub fn drain(&self) {
+        self.pool.wait_idle();
+    }
+
+    /// Named snapshot of the service counters, including live queue
+    /// depth and per-decision counts.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot(self.pool.pending())
+    }
+
+    /// Aggregate simulated GFLOP/s across completed jobs.
+    pub fn aggregate_gflops(&self) -> f64 {
+        self.shared.metrics.aggregate_gflops()
+    }
+
+    fn resolve(&self, h: MatrixHandle) -> Result<Arc<Operand>, MlmemError> {
+        self.operands
+            .lock()
+            .expect("registry poisoned")
+            .get(&h.id)
+            .map(Arc::clone)
+            .ok_or(MlmemError::UnknownHandle(h.id))
+    }
+}
+
+/// Record the coarse residency the executed plan implies for each
+/// operand — what "where did my matrix end up" observability needs
+/// without keeping the simulator alive.
+fn record_residency(arch: &Arch, oa: &Operand, ob: &Operand, r: &JobResult) {
+    use super::job::Decision;
+    let fast = Location::Pool(FAST);
+    let slow = Location::Pool(SLOW);
+    let (a_loc, b_loc) = match &r.decision {
+        Decision::FlatDefault => (arch.default_loc, arch.default_loc),
+        Decision::FlatFast => (fast, fast),
+        // DP's headline move is B into fast memory; A streams from its
+        // default location.
+        Decision::DataPlacement => (arch.default_loc, fast),
+        // Algorithm 1 keeps A (and C) in the slow pool and stages B
+        // chunks through fast memory.
+        Decision::ChunkedKnl { .. } => (slow, fast),
+        // The GPU drivers stage both sides through fast memory.
+        Decision::ChunkedGpu { .. } => (fast, fast),
+        Decision::Pipelined { .. } => match arch.kind {
+            MachineKind::Knl => (slow, fast),
+            MachineKind::Gpu => (fast, fast),
+        },
+    };
+    *oa.residency.lock().expect("residency poisoned") = Some(a_loc);
+    *ob.residency.lock().expect("residency poisoned") = Some(b_loc);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::scale::ScaleFactor;
+    use crate::memory::arch::{knl, KnlMode};
+
+    fn arch() -> Arc<Arch> {
+        Arc::new(knl(KnlMode::Ddr, 64, ScaleFactor::default()))
+    }
+
+    fn mat(seed: u64) -> Arc<Csr> {
+        Arc::new(crate::gen::rhs::random_csr(60, 60, 1, 5, seed))
+    }
+
+    #[test]
+    fn submits_and_completes_jobs() {
+        let session = Session::builder(arch()).workers(2).max_pending(64).build();
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                let a = session.register(mat(i));
+                let b = session.register(mat(i + 50));
+                session.spgemm(a, b).expect("queue has room")
+            })
+            .collect();
+        for h in handles {
+            let r = h.wait().expect("job ok");
+            assert!(r.c_nnz > 0);
+            assert!(r.report.gflops > 0.0);
+        }
+        // `wait` returns at result delivery; drain past the worker's
+        // bookkeeping tail so the queue-depth read is exact.
+        session.drain();
+        let m = session.metrics();
+        assert_eq!((m.submitted, m.completed, m.failed, m.rejected), (6, 6, 0, 0));
+        assert_eq!(m.queue_depth, 0);
+        assert!(session.aggregate_gflops() > 0.0);
+        // Six distinct pairs: six symbolic passes, all cached now.
+        assert_eq!(session.symbolic_passes(), 6);
+    }
+
+    #[test]
+    fn mixed_job_kinds() {
+        let session = Session::builder(arch()).workers(2).max_pending(16).build();
+        let adj = session.register(Arc::new(crate::gen::graphs::erdos_renyi(40, 0.25, 1)));
+        let a = session.register(mat(1));
+        let b = session.register(mat(2));
+        let h1 = session.tricount(adj).unwrap();
+        let h2 = session
+            .spgemm_with(a, b, SubmitOptions { policy: Some(Policy::Flat), ..Default::default() })
+            .unwrap();
+        let r1 = h1.wait().unwrap();
+        let r2 = h2.wait().unwrap();
+        assert!(r1.triangles.is_some());
+        assert!(r2.triangles.is_none());
+        let m = session.metrics();
+        assert_eq!(m.decisions.flat_default, 1);
+    }
+
+    #[test]
+    fn unknown_and_mismatched_handles_are_typed() {
+        let session = Session::builder(arch()).build();
+        let a = session.register(mat(1));
+        let bogus = MatrixHandle { id: 999 };
+        assert!(matches!(
+            session.spgemm(a, bogus),
+            Err(MlmemError::UnknownHandle(999))
+        ));
+        let tall = session.register(Arc::new(crate::gen::rhs::random_csr(10, 7, 1, 3, 9)));
+        assert!(matches!(
+            session.spgemm(tall, a),
+            Err(MlmemError::ShapeMismatch { .. })
+        ));
+        // Neither error consumed a job id or a submitted slot.
+        assert_eq!(session.metrics().submitted, 0);
+    }
+
+    #[test]
+    fn residency_tracks_last_plan() {
+        let session = Session::builder(arch()).workers(1).build();
+        let a = session.register(mat(3));
+        let b = session.register(mat(4));
+        assert_eq!(session.residency(a), None);
+        session
+            .spgemm_with(a, b, SubmitOptions { policy: Some(Policy::Flat), ..Default::default() })
+            .unwrap()
+            .wait()
+            .unwrap();
+        // Flat on a DDR-default KNL: both operands at the default pool.
+        assert_eq!(session.residency(a), Some(session.arch.default_loc));
+        assert_eq!(session.residency(b), Some(session.arch.default_loc));
+    }
+
+    #[test]
+    fn pre_cancelled_control_short_circuits() {
+        let session = Session::builder(arch()).workers(1).build();
+        let a = session.register(mat(5));
+        let b = session.register(mat(6));
+        let control = JobControl::new();
+        control.cancel();
+        let h = session
+            .spgemm_with(
+                a,
+                b,
+                SubmitOptions { control: Some(control), ..Default::default() },
+            )
+            .unwrap();
+        assert!(matches!(h.wait(), Err(MlmemError::Cancelled)));
+        let m = session.metrics();
+        assert_eq!((m.cancelled, m.failed), (1, 0));
+        // The cancelled job computed nothing, including its symbolic pass.
+        assert_eq!(session.symbolic_passes(), 0);
+    }
+}

@@ -4,14 +4,14 @@
 //! judged against.
 
 use super::cost::{gpu_chunked_estimate, knl_chunked_estimate, CostEstimate, ProblemShape};
-use super::{Engine, EngineError, EngineReport, ExecPlan, Problem};
+use super::{Engine, EngineReport, ExecPlan, Problem};
 use crate::chunk::gpu::gpu_chunked_sim_forced;
 use crate::chunk::heuristic::GpuChunkAlgo;
 use crate::chunk::knl::ChunkedProduct;
 use crate::chunk::knl_chunked_sim;
 use crate::chunk::partition::{csr_prefix_bytes, partition_balanced};
+use crate::error::{JobControl, MlmemError};
 use crate::kkmem::SpgemmOptions;
-use crate::memory::alloc::AllocError;
 use crate::memory::arch::Arch;
 use crate::memory::pool::FAST;
 use crate::memory::MemSim;
@@ -29,16 +29,19 @@ fn estimate_b_parts(p: &Problem, budget: u64) -> usize {
 }
 
 /// Shared run body for every chunk engine (serial and pipelined): time
-/// the driver against a fresh simulator and fold its product plus the
-/// finished report into one [`EngineReport`].
+/// the driver against a fresh simulator (carrying the job's control
+/// token, so the driver's chunk-boundary checkpoints can trip) and fold
+/// its product plus the finished report into one [`EngineReport`].
 pub(super) fn chunk_report(
     name: &'static str,
     arch: &Arch,
-    driver: impl FnOnce(&mut MemSim) -> Result<ChunkedProduct, AllocError>,
-) -> Result<EngineReport, EngineError> {
+    control: &JobControl,
+    driver: impl FnOnce(&mut MemSim) -> Result<ChunkedProduct, MlmemError>,
+) -> Result<EngineReport, MlmemError> {
     let t = Timer::start();
     let mut sim = MemSim::new(arch.spec.clone());
-    let prod = driver(&mut sim).map_err(EngineError::from)?;
+    sim.set_control(control.clone());
+    let prod = driver(&mut sim)?;
     Ok(EngineReport {
         engine: name,
         c: prod.c,
@@ -69,7 +72,7 @@ impl Engine for KnlChunkEngine {
         "knl-chunk"
     }
 
-    fn plan(&self, p: &Problem) -> Result<ExecPlan, EngineError> {
+    fn plan(&self, p: &Problem) -> Result<ExecPlan, MlmemError> {
         let budget = effective_budget(&self.arch, self.fast_budget);
         Ok(ExecPlan::Chunked {
             fast_budget: budget,
@@ -79,19 +82,23 @@ impl Engine for KnlChunkEngine {
         })
     }
 
-    fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<CostEstimate, EngineError> {
+    fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<CostEstimate, MlmemError> {
         let ExecPlan::Chunked { fast_budget, pipelined: false, .. } = plan else {
-            return Err(EngineError::new("knl-chunk engine got an incompatible plan"));
+            return Err(MlmemError::Planner(
+                "knl-chunk engine got an incompatible plan".into(),
+            ));
         };
         let shape = ProblemShape::measure(p, &self.opts, &self.arch.spec);
         Ok(knl_chunked_estimate(&self.arch.spec, &shape, *fast_budget, false))
     }
 
-    fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, EngineError> {
+    fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, MlmemError> {
         let ExecPlan::Chunked { fast_budget, pipelined: false, .. } = plan else {
-            return Err(EngineError::new("knl-chunk engine got an incompatible plan"));
+            return Err(MlmemError::Planner(
+                "knl-chunk engine got an incompatible plan".into(),
+            ));
         };
-        chunk_report(self.name(), &self.arch, |sim| {
+        chunk_report(self.name(), &self.arch, &p.control, |sim| {
             knl_chunked_sim(sim, p.a, p.b, *fast_budget, &self.opts)
         })
     }
@@ -124,7 +131,7 @@ impl Engine for GpuChunkEngine {
         "gpu-chunk"
     }
 
-    fn plan(&self, p: &Problem) -> Result<ExecPlan, EngineError> {
+    fn plan(&self, p: &Problem) -> Result<ExecPlan, MlmemError> {
         let budget = effective_budget(&self.arch, self.fast_budget);
         Ok(ExecPlan::Chunked {
             fast_budget: budget,
@@ -134,9 +141,11 @@ impl Engine for GpuChunkEngine {
         })
     }
 
-    fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<CostEstimate, EngineError> {
+    fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<CostEstimate, MlmemError> {
         let ExecPlan::Chunked { fast_budget, pipelined: false, gpu_algo, .. } = plan else {
-            return Err(EngineError::new("gpu-chunk engine got an incompatible plan"));
+            return Err(MlmemError::Planner(
+                "gpu-chunk engine got an incompatible plan".into(),
+            ));
         };
         let shape = ProblemShape::measure(p, &self.opts, &self.arch.spec);
         let (_, est) =
@@ -144,11 +153,13 @@ impl Engine for GpuChunkEngine {
         Ok(est)
     }
 
-    fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, EngineError> {
+    fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, MlmemError> {
         let ExecPlan::Chunked { fast_budget, pipelined: false, gpu_algo, .. } = plan else {
-            return Err(EngineError::new("gpu-chunk engine got an incompatible plan"));
+            return Err(MlmemError::Planner(
+                "gpu-chunk engine got an incompatible plan".into(),
+            ));
         };
-        chunk_report(self.name(), &self.arch, |sim| {
+        chunk_report(self.name(), &self.arch, &p.control, |sim| {
             gpu_chunked_sim_forced(sim, p.a, p.b, *fast_budget, &self.opts, *gpu_algo)
         })
     }

@@ -66,8 +66,12 @@ impl CostEstimate {
 /// The machine-independent part of a problem's symbolic summary — the
 /// expensive piece (B compression + symbolic pass), computed once per
 /// [`Problem`] and cached there so every candidate's `predict` reuses it.
-/// Prefixes are behind `Arc` so per-candidate [`ProblemShape`]s share
-/// them instead of cloning O(nrows) vectors.
+/// A [`Session`](crate::coordinator::Session) hoists the cache to
+/// session lifetime: its operand registry pre-seeds the cell via
+/// `Problem::with_shape_core`, so repeated jobs against registered
+/// matrices never repeat the pass. Prefixes are behind `Arc` so
+/// per-candidate [`ProblemShape`]s share them instead of cloning
+/// O(nrows) vectors.
 pub(crate) struct ShapeCore {
     a_bytes: u64,
     b_bytes: u64,
@@ -80,20 +84,30 @@ pub(crate) struct ShapeCore {
 }
 
 impl ShapeCore {
-    fn compute(p: &Problem) -> Self {
-        let comp = CompressedMatrix::compress(p.b);
-        let sizes = symbolic(p.a, &comp);
+    pub(crate) fn compute(a: &crate::sparse::Csr, b: &crate::sparse::Csr) -> Self {
+        Self::with_compression(a, b, &CompressedMatrix::compress(b))
+    }
+
+    /// Build the summary from an already-compressed B — the per-matrix
+    /// piece a session registry caches and reuses across different
+    /// left-hand sides.
+    pub(crate) fn with_compression(
+        a: &crate::sparse::Csr,
+        b: &crate::sparse::Csr,
+        comp: &CompressedMatrix,
+    ) -> Self {
+        let sizes = symbolic(a, comp);
         let c_prefix = c_prefix_from_sizes(&sizes);
-        let a_prefix = csr_prefix_bytes(p.a);
+        let a_prefix = csr_prefix_bytes(a);
         let ac_prefix = sum_prefixes(&a_prefix, &c_prefix);
-        let b_prefix = csr_prefix_bytes(p.b);
+        let b_prefix = csr_prefix_bytes(b);
         Self {
-            a_bytes: a_prefix[p.a.nrows],
-            b_bytes: b_prefix[p.b.nrows],
-            c_bytes: c_prefix[p.a.nrows],
-            mults: crate::sparse::ops::spgemm_flops(p.a, p.b) / 2,
-            efficiency: lane_efficiency(p.a.avg_degree(), p.b.avg_degree()),
-            row_ub: max_row_upper_bound(p.a, p.b),
+            a_bytes: a_prefix[a.nrows],
+            b_bytes: b_prefix[b.nrows],
+            c_bytes: c_prefix[a.nrows],
+            mults: crate::sparse::ops::spgemm_flops(a, b) / 2,
+            efficiency: lane_efficiency(a.avg_degree(), b.avg_degree()),
+            row_ub: max_row_upper_bound(a, b),
             b_prefix: std::sync::Arc::new(b_prefix),
             ac_prefix: std::sync::Arc::new(ac_prefix),
         }
@@ -122,7 +136,7 @@ pub struct ProblemShape {
 
 impl ProblemShape {
     pub fn measure(p: &Problem, opts: &SpgemmOptions, spec: &MachineSpec) -> Self {
-        let core = p.shape_core.get_or_init(|| ShapeCore::compute(p));
+        let core = p.shape_core();
         // Same wrap window `kkmem::spgemm::acc_trace_wrap` derives from a
         // live simulator: half the representative L1.
         let wrap = ((spec.l1.size_bytes as u64 / 2) / LINE * LINE).max(LINE);

@@ -18,8 +18,8 @@ pub mod pipelined;
 pub mod sim;
 
 use crate::chunk::heuristic::GpuChunkAlgo;
+use crate::error::{JobControl, MlmemError};
 use crate::kkmem::{Placement, SpgemmOptions};
-use crate::memory::alloc::AllocError;
 use crate::memory::arch::Arch;
 use crate::memory::SimReport;
 use crate::sparse::Csr;
@@ -36,17 +36,60 @@ pub use sim::SimEngine;
 /// One multiplication `C = A × B` as the engines see it. Carries a lazy
 /// cache of the machine-independent symbolic summary so that scoring
 /// many candidate plans against one problem (`Policy::Auto`) runs the
-/// expensive symbolic pass once, not once per candidate.
+/// expensive symbolic pass once, not once per candidate — and a
+/// [`Session`](crate::coordinator::Session) pre-seeds the cell from its
+/// operand registry so repeated jobs never repeat the pass at all. The
+/// attached [`JobControl`] is polled by the chunk drivers at chunk
+/// boundaries, making long staged runs cancellable mid-flight.
 pub struct Problem<'a> {
     pub a: &'a Csr,
     pub b: &'a Csr,
-    pub(crate) shape_core: std::cell::OnceCell<cost::ShapeCore>,
+    /// Cooperative cancellation/deadline token for this run (defaults
+    /// to a token that never trips).
+    pub control: JobControl,
+    pub(crate) shape_core: std::cell::OnceCell<Arc<cost::ShapeCore>>,
 }
 
 impl<'a> Problem<'a> {
+    /// Panicking constructor for call sites that validated shapes
+    /// already; see [`Problem::try_new`] for the typed-error path.
     pub fn new(a: &'a Csr, b: &'a Csr) -> Self {
-        assert_eq!(a.ncols, b.nrows, "spgemm shape mismatch");
-        Self { a, b, shape_core: std::cell::OnceCell::new() }
+        Self::try_new(a, b).expect("spgemm shape mismatch")
+    }
+
+    /// `Err(ShapeMismatch)` when `A.ncols != B.nrows`.
+    pub fn try_new(a: &'a Csr, b: &'a Csr) -> Result<Self, MlmemError> {
+        if a.ncols != b.nrows {
+            return Err(MlmemError::ShapeMismatch {
+                a: (a.nrows, a.ncols),
+                b: (b.nrows, b.ncols),
+            });
+        }
+        Ok(Self {
+            a,
+            b,
+            control: JobControl::default(),
+            shape_core: std::cell::OnceCell::new(),
+        })
+    }
+
+    /// Attach a cancellation/deadline token observed at chunk boundaries.
+    pub fn with_control(mut self, control: JobControl) -> Self {
+        self.control = control;
+        self
+    }
+
+    /// Pre-seed the cached symbolic summary (the session registry's
+    /// amortization path). A no-op when the cell is already filled.
+    pub(crate) fn with_shape_core(self, core: Arc<cost::ShapeCore>) -> Self {
+        let _ = self.shape_core.set(core);
+        self
+    }
+
+    /// Force (and cache) the machine-independent symbolic summary.
+    pub(crate) fn shape_core(&self) -> &Arc<cost::ShapeCore> {
+        self.shape_core
+            .get_or_init(|| Arc::new(cost::ShapeCore::compute(self.a, self.b)))
     }
 }
 
@@ -94,6 +137,7 @@ impl ExecPlan {
 }
 
 /// Result of one engine execution.
+#[derive(Debug)]
 pub struct EngineReport {
     /// The engine that produced this report.
     pub engine: &'static str,
@@ -119,52 +163,29 @@ impl EngineReport {
     }
 }
 
-/// Error from planning or execution.
-#[derive(Clone, Debug)]
-pub struct EngineError {
-    pub message: String,
-}
-
-impl EngineError {
-    pub fn new(message: impl Into<String>) -> Self {
-        Self { message: message.into() }
-    }
-}
-
-impl std::fmt::Display for EngineError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{}", self.message)
-    }
-}
-
-impl std::error::Error for EngineError {}
-
-impl From<AllocError> for EngineError {
-    fn from(e: AllocError) -> Self {
-        EngineError::new(e.to_string())
-    }
-}
-
-/// The unified execution abstraction.
+/// The unified execution abstraction. All methods fail with the
+/// crate-wide [`MlmemError`]: plan/compat failures surface as
+/// `Planner`, simulated allocations that do not fit as `Alloc`, and a
+/// tripped [`JobControl`] as `Cancelled` / `DeadlineExceeded`.
 pub trait Engine: Send + Sync {
     /// Engine identifier (stable; used in tables and service logs).
     fn name(&self) -> &'static str;
 
     /// Inspect the problem and commit to an execution plan. No numeric
     /// work happens here; symbolic/sizing passes are allowed.
-    fn plan(&self, p: &Problem) -> Result<ExecPlan, EngineError>;
+    fn plan(&self, p: &Problem) -> Result<ExecPlan, MlmemError>;
 
     /// Predict what running `plan` on this engine will cost — evaluated
     /// symbolically from the same roofline primitives `MemSim::finish`
     /// uses, without executing an access stream. Cheap enough for the
     /// coordinator to score every candidate plan before committing.
-    fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<CostEstimate, EngineError>;
+    fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<CostEstimate, MlmemError>;
 
     /// Execute a plan produced by [`plan`](Self::plan) on this engine.
-    fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, EngineError>;
+    fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, MlmemError>;
 
     /// Plan then run.
-    fn execute(&self, p: &Problem) -> Result<EngineReport, EngineError> {
+    fn execute(&self, p: &Problem) -> Result<EngineReport, MlmemError> {
         let plan = self.plan(p)?;
         self.run(p, &plan)
     }
@@ -223,7 +244,7 @@ impl EngineKind {
         arch: Arc<Arch>,
         opts: SpgemmOptions,
         fast_budget: Option<u64>,
-    ) -> Result<Box<dyn Engine>, EngineError> {
+    ) -> Result<Box<dyn Engine>, MlmemError> {
         use crate::memory::arch::MachineKind;
         match self {
             // A budget selects the chunked path with prefetch staging; a
@@ -235,7 +256,7 @@ impl EngineKind {
             EngineKind::Sim => Ok(Box::new(SimEngine::flat(arch, opts))),
             EngineKind::KnlChunk => {
                 if arch.kind != MachineKind::Knl {
-                    return Err(EngineError::new(format!(
+                    return Err(MlmemError::Planner(format!(
                         "knl-chunk engine needs a KNL machine, got {}",
                         arch.spec.name
                     )));
@@ -244,7 +265,7 @@ impl EngineKind {
             }
             EngineKind::GpuChunk => {
                 if arch.kind != MachineKind::Gpu {
-                    return Err(EngineError::new(format!(
+                    return Err(MlmemError::Planner(format!(
                         "gpu-chunk engine needs a GPU machine, got {}",
                         arch.spec.name
                     )));

@@ -4,8 +4,9 @@
 //! cold memory) while the compute thread multiplies the current one:
 //! the host-side analogue of the double-buffered simulator executor.
 
-use super::{Engine, EngineError, EngineReport, ExecPlan, Problem};
+use super::{Engine, EngineReport, ExecPlan, Problem};
 use crate::chunk::knl::ChunkedProduct;
+use crate::error::MlmemError;
 use crate::chunk::partition::{csr_prefix_bytes, partition_balanced};
 use crate::kkmem::mempool::PooledAcc;
 use crate::kkmem::numeric::{fused_numeric_row, Layout};
@@ -41,7 +42,7 @@ impl Engine for NativeEngine {
         "native"
     }
 
-    fn plan(&self, _p: &Problem) -> Result<ExecPlan, EngineError> {
+    fn plan(&self, _p: &Problem) -> Result<ExecPlan, MlmemError> {
         let chunked = self.chunk_budget.is_some();
         Ok(ExecPlan::Native {
             // The chunked path computes on one thread with one prefetch
@@ -51,9 +52,9 @@ impl Engine for NativeEngine {
         })
     }
 
-    fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<super::CostEstimate, EngineError> {
+    fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<super::CostEstimate, MlmemError> {
         let ExecPlan::Native { threads, .. } = plan else {
-            return Err(EngineError::new("native engine got a non-native plan"));
+            return Err(MlmemError::Planner("native engine got a non-native plan".into()));
         };
         // No machine profile to roofline against: an order-of-magnitude
         // wall-clock guess from the flop count at a nominal per-thread
@@ -64,10 +65,13 @@ impl Engine for NativeEngine {
         Ok(super::CostEstimate::unstaged(flops as f64 / (threads * NATIVE_FLOPS_PER_THREAD)))
     }
 
-    fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, EngineError> {
+    fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, MlmemError> {
         let ExecPlan::Native { chunked, .. } = plan else {
-            return Err(EngineError::new("native engine got a non-native plan"));
+            return Err(MlmemError::Planner("native engine got a non-native plan".into()));
         };
+        // Native runs have no simulator to carry the token; observe it
+        // once before committing the threads.
+        p.control.checkpoint()?;
         let t = Timer::start();
         let (c, mults, n_parts_b, copied_bytes) = if *chunked {
             let budget = self.chunk_budget.unwrap_or(u64::MAX);

@@ -20,7 +20,7 @@
 //! The native analogue (prefetch thread) is
 //! [`super::native::pipelined_spgemm_native`].
 
-use super::{Engine, EngineError, EngineReport, ExecPlan, Problem};
+use super::{Engine, EngineReport, ExecPlan, Problem};
 use crate::chunk::gpu::{
     c_prefix_from_sizes, free_regions, gpu_chunked_sim, plan_for, run_block, stage_slice,
     stage_slice_async, CsrRegions, Staged,
@@ -36,6 +36,7 @@ use crate::kkmem::spgemm::{
     acc_region_bytes, acc_trace_wrap, alloc_csr_regions, alloc_csr_regions_sized,
 };
 use crate::kkmem::symbolic::{max_row_upper_bound, rowmap_from_sizes, symbolic};
+use crate::error::MlmemError;
 use crate::kkmem::{CompressedMatrix, SpgemmOptions};
 use crate::memory::alloc::{AllocError, Location};
 use crate::memory::arch::{Arch, MachineKind};
@@ -63,7 +64,7 @@ pub fn knl_pipelined_sim(
     b: &Csr,
     fast_budget: u64,
     opts: &SpgemmOptions,
-) -> Result<ChunkedProduct, AllocError> {
+) -> Result<ChunkedProduct, MlmemError> {
     assert_eq!(a.ncols, b.nrows, "spgemm shape mismatch");
     sim.set_compute_efficiency(crate::memory::machine::lane_efficiency(
         a.avg_degree(),
@@ -114,6 +115,7 @@ pub fn knl_pipelined_sim(
     let (lo0, hi0) = parts[0];
     let mut staged: Option<Staged> = Some(stage_slice(sim, "FastB.0", b, b_src, lo0, hi0)?);
     for (pass, &(lo, hi)) in parts.iter().enumerate() {
+        sim.checkpoint()?;
         let cur = match staged.take() {
             Some(s) => s,
             // Prefetch was skipped last pass (no room for two buffers —
@@ -255,7 +257,7 @@ pub fn gpu_pipelined_sim(
     b: &Csr,
     fast_budget: u64,
     opts: &SpgemmOptions,
-) -> Result<ChunkedProduct, AllocError> {
+) -> Result<ChunkedProduct, MlmemError> {
     gpu_pipelined_sim_forced(sim, a, b, fast_budget, opts, None)
 }
 
@@ -268,7 +270,7 @@ pub fn gpu_pipelined_sim_forced(
     fast_budget: u64,
     opts: &SpgemmOptions,
     force: Option<GpuChunkAlgo>,
-) -> Result<ChunkedProduct, AllocError> {
+) -> Result<ChunkedProduct, MlmemError> {
     assert_eq!(a.ncols, b.nrows, "spgemm shape mismatch");
     sim.set_compute_efficiency(crate::memory::machine::lane_efficiency(
         a.avg_degree(),
@@ -338,6 +340,7 @@ pub fn gpu_pipelined_sim_forced(
         GpuChunkAlgo::AcResident => {
             // Algorithm 2: outer AC resident, inner B double-buffered.
             for (ai, &(alo, ahi)) in plan.p_ac.iter().enumerate() {
+                sim.checkpoint()?;
                 let fa = stage_slice(sim, &format!("FA.{ai}"), a, a_reg, alo, ahi)?;
                 copied_bytes += fa.csr.size_bytes();
                 let c_block_nnz: usize = c_sizes[alo..ahi].iter().sum();
@@ -362,6 +365,7 @@ pub fn gpu_pipelined_sim_forced(
                     bhi0,
                 )?);
                 for (bi, &(blo, bhi)) in plan.p_b.iter().enumerate() {
+                    sim.checkpoint()?;
                     let fb = match staged_b.take() {
                         Some(s) => s,
                         // Prefetch skipped (no room): serial staging.
@@ -422,6 +426,7 @@ pub fn gpu_pipelined_sim_forced(
             // Algorithm 3: outer B resident, inner A/C double-buffered.
             let mut partials: Vec<Option<Csr>> = vec![None; plan.p_ac.len()];
             for (bi, &(blo, bhi)) in plan.p_b.iter().enumerate() {
+                sim.checkpoint()?;
                 let fb = stage_slice(sim, &format!("FB.{bi}"), b, b_reg, blo, bhi)?;
                 copied_bytes += fb.csr.size_bytes();
                 let mut staged_pair = Some(stage_ac_pair(
@@ -437,6 +442,7 @@ pub fn gpu_pipelined_sim_forced(
                     false,
                 )?);
                 for (ai, _) in plan.p_ac.iter().enumerate() {
+                    sim.checkpoint()?;
                     let (fa, fc, pair_copied) = match staged_pair.take() {
                         Some(x) => x,
                         // Prefetch skipped (no room): serial staging.
@@ -544,7 +550,7 @@ impl Engine for PipelinedChunkEngine {
         "pipelined"
     }
 
-    fn plan(&self, p: &Problem) -> Result<ExecPlan, EngineError> {
+    fn plan(&self, p: &Problem) -> Result<ExecPlan, MlmemError> {
         let budget = self.budget();
         let prefix = csr_prefix_bytes(p.b);
         // Same cut rule as `knl_pipelined_sim`: the serial partition
@@ -561,9 +567,11 @@ impl Engine for PipelinedChunkEngine {
         })
     }
 
-    fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<super::CostEstimate, EngineError> {
+    fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<super::CostEstimate, MlmemError> {
         let ExecPlan::Chunked { fast_budget, pipelined: true, gpu_algo, .. } = plan else {
-            return Err(EngineError::new("pipelined engine got an incompatible plan"));
+            return Err(MlmemError::Planner(
+                "pipelined engine got an incompatible plan".into(),
+            ));
         };
         let shape = super::ProblemShape::measure(p, &self.opts, &self.arch.spec);
         Ok(match self.arch.kind {
@@ -586,11 +594,16 @@ impl Engine for PipelinedChunkEngine {
         })
     }
 
-    fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, EngineError> {
+    fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, MlmemError> {
         let ExecPlan::Chunked { fast_budget, pipelined: true, gpu_algo, .. } = plan else {
-            return Err(EngineError::new("pipelined engine got an incompatible plan"));
+            return Err(MlmemError::Planner(
+                "pipelined engine got an incompatible plan".into(),
+            ));
         };
-        super::chunked::chunk_report(self.name(), &self.arch, |sim| match self.arch.kind {
+        super::chunked::chunk_report(self.name(), &self.arch, &p.control, |sim| match self
+            .arch
+            .kind
+        {
             MachineKind::Knl => knl_pipelined_sim(sim, p.a, p.b, *fast_budget, &self.opts),
             MachineKind::Gpu => {
                 gpu_pipelined_sim_forced(sim, p.a, p.b, *fast_budget, &self.opts, *gpu_algo)

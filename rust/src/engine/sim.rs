@@ -3,7 +3,8 @@
 //! modes and the selective-data-placement overlay).
 
 use super::cost::{placed_estimate, CostEstimate, ProblemShape};
-use super::{Engine, EngineError, EngineReport, ExecPlan, Problem};
+use super::{Engine, EngineReport, ExecPlan, Problem};
+use crate::error::MlmemError;
 use crate::kkmem::{spgemm_sim, Placement, SpgemmOptions};
 use crate::memory::arch::Arch;
 use crate::memory::MemSim;
@@ -35,26 +36,29 @@ impl Engine for SimEngine {
         "sim"
     }
 
-    fn plan(&self, _p: &Problem) -> Result<ExecPlan, EngineError> {
+    fn plan(&self, _p: &Problem) -> Result<ExecPlan, MlmemError> {
         Ok(ExecPlan::Placed { placement: self.placement })
     }
 
-    fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<CostEstimate, EngineError> {
+    fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<CostEstimate, MlmemError> {
         let ExecPlan::Placed { placement } = plan else {
-            return Err(EngineError::new("sim engine got a non-placement plan"));
+            return Err(MlmemError::Planner("sim engine got a non-placement plan".into()));
         };
         let shape = ProblemShape::measure(p, &self.opts, &self.arch.spec);
         Ok(placed_estimate(&self.arch.spec, &shape, placement))
     }
 
-    fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, EngineError> {
+    fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, MlmemError> {
         let ExecPlan::Placed { placement } = plan else {
-            return Err(EngineError::new("sim engine got a non-placement plan"));
+            return Err(MlmemError::Planner("sim engine got a non-placement plan".into()));
         };
+        // A flat run is one "chunk": the control is observed once, up
+        // front (there is no later boundary to stop at).
+        p.control.checkpoint()?;
         let t = Timer::start();
         let mut sim = MemSim::new(self.arch.spec.clone());
         let prod = spgemm_sim(&mut sim, p.a, p.b, *placement, &self.opts)
-            .map_err(EngineError::from)?;
+            .map_err(MlmemError::from)?;
         Ok(EngineReport {
             engine: self.name(),
             c: prod.c,
@@ -109,6 +113,7 @@ mod tests {
         let arch = Arc::new(knl(KnlMode::Hbm, 64, ScaleFactor::default()));
         let eng = SimEngine::flat(arch, SpgemmOptions::default());
         let err = eng.execute(&Problem::new(&a, &a)).unwrap_err();
-        assert!(err.message.contains("does not fit"));
+        assert!(matches!(err, MlmemError::Alloc(_)), "{err:?}");
+        assert!(err.to_string().contains("does not fit"));
     }
 }

@@ -1,0 +1,208 @@
+//! Crate-wide typed errors and the cooperative job-control token.
+//!
+//! Every failure the library can surface — shape mismatches at
+//! submission, admission-control rejections, simulated allocations that
+//! do not fit a pool, planner/engine failures, cooperative cancellation,
+//! expired deadlines, and lost workers — converges into [`MlmemError`],
+//! so callers match on variants instead of scraping strings. The
+//! [`JobControl`] token lives here too because two of the variants
+//! (`Cancelled`, `DeadlineExceeded`) are *produced* by it: the chunk
+//! drivers poll the token at chunk boundaries through
+//! [`MemSim::checkpoint`](crate::memory::MemSim::checkpoint), which is
+//! what makes a long staged multiplication abandonable mid-flight.
+
+use crate::memory::alloc::AllocError;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The crate-wide error type. `AllocError`, the engines' planning/run
+/// failures, and the CLI's argument errors all converge here.
+#[derive(Clone, Debug)]
+#[non_exhaustive]
+pub enum MlmemError {
+    /// `A.ncols != B.nrows` at submission time. Tuples are
+    /// `(nrows, ncols)` of each operand.
+    ShapeMismatch { a: (usize, usize), b: (usize, usize) },
+    /// Admission control rejected the submission: `pending` jobs were
+    /// already queued or running against a limit of `max_pending`.
+    AdmissionRejected { pending: usize, max_pending: usize },
+    /// A simulated allocation did not fit its pool.
+    Alloc(AllocError),
+    /// Planning or execution failed: engine/machine family mismatch, no
+    /// viable candidate plan, an incompatible plan handed to an engine.
+    Planner(String),
+    /// The job observed its cancellation flag at a chunk boundary.
+    Cancelled,
+    /// The job observed its expired deadline at a chunk boundary.
+    DeadlineExceeded,
+    /// The worker executing the job disappeared (panicked or was torn
+    /// down) without reporting a result.
+    WorkerLost,
+    /// A [`MatrixHandle`](crate::coordinator::MatrixHandle) that was
+    /// never registered with the session it was used on.
+    UnknownHandle(u64),
+    /// Invalid command-line arguments (the CLI's string errors converge
+    /// into this variant).
+    Cli(String),
+}
+
+impl std::fmt::Display for MlmemError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MlmemError::ShapeMismatch { a, b } => write!(
+                f,
+                "spgemm shape mismatch: A is {}x{}, B is {}x{}",
+                a.0, a.1, b.0, b.1
+            ),
+            MlmemError::AdmissionRejected { pending, max_pending } => write!(
+                f,
+                "admission rejected: {pending} jobs pending >= limit {max_pending}"
+            ),
+            MlmemError::Alloc(e) => write!(f, "{e}"),
+            MlmemError::Planner(m) => write!(f, "{m}"),
+            MlmemError::Cancelled => write!(f, "job cancelled"),
+            MlmemError::DeadlineExceeded => write!(f, "job deadline exceeded"),
+            MlmemError::WorkerLost => {
+                write!(f, "worker lost before reporting a result")
+            }
+            MlmemError::UnknownHandle(id) => {
+                write!(f, "matrix handle {id} is not registered with this session")
+            }
+            MlmemError::Cli(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for MlmemError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MlmemError::Alloc(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<AllocError> for MlmemError {
+    fn from(e: AllocError) -> Self {
+        MlmemError::Alloc(e)
+    }
+}
+
+impl From<String> for MlmemError {
+    fn from(m: String) -> Self {
+        MlmemError::Cli(m)
+    }
+}
+
+/// Cooperative cancellation + deadline token shared between a
+/// [`JobHandle`](crate::coordinator::JobHandle) and the worker executing
+/// the job. Cancellation is a flag flip; the running job observes it at
+/// its next chunk boundary (every staged pass of the chunk drivers calls
+/// [`checkpoint`](JobControl::checkpoint) through the simulator), so a
+/// multi-chunk multiplication stops after the pass in flight rather than
+/// running to completion. A default token never trips.
+#[derive(Clone, Debug, Default)]
+pub struct JobControl {
+    cancelled: Arc<AtomicBool>,
+    deadline: Option<Instant>,
+}
+
+impl JobControl {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A control that trips [`MlmemError::DeadlineExceeded`] once
+    /// `timeout` has elapsed from now.
+    pub fn with_deadline(timeout: Duration) -> Self {
+        Self {
+            cancelled: Arc::default(),
+            deadline: Instant::now().checked_add(timeout),
+        }
+    }
+
+    /// A token sharing this token's cancellation flag, with a (possibly
+    /// tighter) deadline `timeout` from now — how a session composes a
+    /// caller-owned cancel flag with a per-job deadline.
+    pub fn deadline_in(&self, timeout: Duration) -> Self {
+        let new = Instant::now().checked_add(timeout);
+        let deadline = match (self.deadline, new) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        Self { cancelled: Arc::clone(&self.cancelled), deadline }
+    }
+
+    /// Request cooperative cancellation; the running job observes it at
+    /// its next chunk boundary.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::SeqCst)
+    }
+
+    /// `Err(Cancelled)` / `Err(DeadlineExceeded)` when the job should
+    /// stop; cancellation wins when both apply.
+    pub fn checkpoint(&self) -> Result<(), MlmemError> {
+        if self.is_cancelled() {
+            return Err(MlmemError::Cancelled);
+        }
+        if let Some(d) = self.deadline {
+            if Instant::now() >= d {
+                return Err(MlmemError::DeadlineExceeded);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_control_never_trips() {
+        let c = JobControl::new();
+        assert!(c.checkpoint().is_ok());
+        assert!(!c.is_cancelled());
+    }
+
+    #[test]
+    fn cancel_trips_checkpoint_across_clones() {
+        let c = JobControl::new();
+        let seen_by_worker = c.clone();
+        c.cancel();
+        assert!(matches!(
+            seen_by_worker.checkpoint(),
+            Err(MlmemError::Cancelled)
+        ));
+    }
+
+    #[test]
+    fn zero_deadline_trips_immediately() {
+        let c = JobControl::with_deadline(Duration::ZERO);
+        assert!(matches!(c.checkpoint(), Err(MlmemError::DeadlineExceeded)));
+    }
+
+    #[test]
+    fn cancellation_wins_over_deadline() {
+        let c = JobControl::with_deadline(Duration::ZERO);
+        c.cancel();
+        assert!(matches!(c.checkpoint(), Err(MlmemError::Cancelled)));
+    }
+
+    #[test]
+    fn display_and_conversions() {
+        let e = MlmemError::ShapeMismatch { a: (3, 4), b: (5, 6) };
+        assert_eq!(e.to_string(), "spgemm shape mismatch: A is 3x4, B is 5x6");
+        let e: MlmemError = "bad flag".to_string().into();
+        assert!(matches!(e, MlmemError::Cli(_)));
+        let alloc = AllocError { pool: "MCDRAM", requested: 10, available: 5 };
+        let e = MlmemError::from(alloc);
+        assert!(e.to_string().contains("does not fit"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -20,6 +20,7 @@
 //! Quickstart: see `examples/quickstart.rs` and `README.md`.
 
 pub mod engine;
+pub mod error;
 pub mod gen;
 pub mod kkmem;
 pub mod memory;
@@ -35,8 +36,13 @@ pub mod util;
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;
 
+pub use coordinator::{JobHandle, MatrixHandle, MetricsSnapshot, Session, SessionBuilder};
+pub use error::{JobControl, MlmemError};
+
 /// Convenience re-exports for examples and integration tests.
 pub mod prelude {
+    pub use crate::coordinator::{Policy, Session, SessionBuilder};
+    pub use crate::error::MlmemError;
     pub use crate::gen::{Domain, Grid, MgProblem, ScaleFactor};
     pub use crate::sparse::{Csr, Dense};
 }

@@ -10,8 +10,9 @@
 use mlmem_spgemm::bench::experiments::{Mul, ProblemCache};
 use mlmem_spgemm::bench::figures::BenchConfig;
 use mlmem_spgemm::bench::{run_and_report, EXPERIMENTS};
-use mlmem_spgemm::coordinator::{PlannerOptions, Policy, SpgemmService};
-use mlmem_spgemm::engine::{Engine, EngineKind, Problem};
+use mlmem_spgemm::coordinator::{MatrixHandle, PlannerOptions, Session};
+use mlmem_spgemm::engine::EngineKind;
+use mlmem_spgemm::error::MlmemError;
 use mlmem_spgemm::gen::scale::ScaleFactor;
 use mlmem_spgemm::gen::stencil::Domain;
 use mlmem_spgemm::gen::{graphs::GraphKind, MgProblem};
@@ -20,6 +21,7 @@ use mlmem_spgemm::memory::arch::{knl, p100, Arch, GpuMode, KnlMode};
 use mlmem_spgemm::memory::{MemSim, SimReport};
 use mlmem_spgemm::tricount::{degree_sorted_lower, tricount_sim, TriPlacement};
 use mlmem_spgemm::util::cli::{CommandSpec, ParsedArgs};
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::process::ExitCode;
 use std::sync::Arc;
@@ -40,7 +42,7 @@ fn main() -> ExitCode {
             print_usage();
             Ok(())
         }
-        other => Err(format!("unknown command `{other}`\n")),
+        other => Err(MlmemError::Cli(format!("unknown command `{other}`\n"))),
     };
     match result {
         Ok(()) => ExitCode::SUCCESS,
@@ -69,7 +71,7 @@ fn scale_from(p: &ParsedArgs) -> Result<ScaleFactor, String> {
     Ok(ScaleFactor::new(p.u64("scale-denom")?))
 }
 
-fn cmd_bench(argv: &[String]) -> Result<(), String> {
+fn cmd_bench(argv: &[String]) -> Result<(), MlmemError> {
     let spec = CommandSpec::new("bench", "regenerate the paper's tables and figures")
         .opt("exp", "all", "experiment ids (comma list) or `all`")
         .opt("sizes", "1,2,4,8,16,32", "A sizes in paper-GB")
@@ -92,7 +94,7 @@ fn cmd_bench(argv: &[String]) -> Result<(), String> {
     }
     let out = p.string("out-dir");
     let out_dir = (!out.is_empty()).then(|| PathBuf::from(out));
-    run_and_report(&p.list("exp"), &cfg, out_dir.as_deref())
+    Ok(run_and_report(&p.list("exp"), &cfg, out_dir.as_deref())?)
 }
 
 fn parse_machine(p: &ParsedArgs, threads: usize, scale: ScaleFactor) -> Result<Arch, String> {
@@ -146,7 +148,7 @@ fn print_report(rep: &SimReport) {
     }
 }
 
-fn cmd_spgemm(argv: &[String]) -> Result<(), String> {
+fn cmd_spgemm(argv: &[String]) -> Result<(), MlmemError> {
     let spec = CommandSpec::new("spgemm", "one multiplication with a full report")
         .opt("domain", "laplace", "laplace|bigstar|brick|elasticity")
         .opt("mul", "rxa", "rxa|axp")
@@ -177,7 +179,7 @@ fn cmd_spgemm(argv: &[String]) -> Result<(), String> {
     let mul = match p.str("mul") {
         "rxa" => Mul::RxA,
         "axp" => Mul::AxP,
-        other => return Err(format!("bad --mul `{other}`")),
+        other => return Err(MlmemError::Cli(format!("bad --mul `{other}`"))),
     };
     let kind = p.choice(
         "engine",
@@ -187,7 +189,12 @@ fn cmd_spgemm(argv: &[String]) -> Result<(), String> {
     let arch = parse_machine(&p, p.usize("threads")?, scale)?;
     let mut cache = ProblemCache::default();
     let prob: MgProblem = cache.get(domain, p.f64("size-gb")?, scale).clone();
-    let (a, b) = mul.operands(&prob);
+    // Move the operands out of the (already cloned) problem instead of
+    // deep-copying them again for the session registry.
+    let (a, b) = match mul {
+        Mul::AxP => (prob.a, prob.p),
+        Mul::RxA => (prob.r, prob.a),
+    };
     println!(
         "{} {}: A {}x{} nnz {}  B {}x{} nnz {}",
         domain.name(),
@@ -211,14 +218,14 @@ fn cmd_spgemm(argv: &[String]) -> Result<(), String> {
         _ => Some(scale.gb(p.f64("budget-gb")?)),
     };
     if p.flag("explain") {
-        return explain_spgemm_cmd(a, b, arch, budget);
+        return explain_spgemm_cmd(&a, &b, arch, budget);
     }
-    let engine = kind
-        .build(Arc::new(arch), opts, budget)
-        .map_err(|e| e.to_string())?;
-    let problem = Problem::new(a, b);
-    let plan = engine.plan(&problem).map_err(|e| e.to_string())?;
-    let rep = engine.run(&problem, &plan).map_err(|e| e.to_string())?;
+    // Drive the run through a session: the registry caches the symbolic
+    // summary, and failures surface as typed `MlmemError`s.
+    let session = Session::builder(Arc::new(arch)).workers(1).build();
+    let ha = session.register(Arc::new(a));
+    let hb = session.register(Arc::new(b));
+    let (plan, rep) = session.execute_engine(kind, ha, hb, opts, budget)?;
     println!("engine         : {} [{}]", rep.engine, plan.label());
     if rep.n_parts_ac * rep.n_parts_b > 1 {
         println!(
@@ -247,13 +254,15 @@ fn explain_spgemm_cmd(
     b: &mlmem_spgemm::sparse::Csr,
     arch: Arch,
     budget: Option<u64>,
-) -> Result<(), String> {
+) -> Result<(), MlmemError> {
     use mlmem_spgemm::util::table::Table;
     let arch = Arc::new(arch);
     let opts = PlannerOptions { auto_chunk_budget: budget, ..Default::default() };
     let rows = mlmem_spgemm::coordinator::explain_spgemm(a, b, &arch, &opts);
     if rows.is_empty() {
-        return Err("no execution candidate fits this machine".into());
+        return Err(MlmemError::Planner(
+            "no execution candidate fits this machine".into(),
+        ));
     }
     let mut t = Table::new(&[
         "candidate",
@@ -301,7 +310,7 @@ fn explain_spgemm_cmd(
     Ok(())
 }
 
-fn cmd_tricount(argv: &[String]) -> Result<(), String> {
+fn cmd_tricount(argv: &[String]) -> Result<(), MlmemError> {
     let spec = CommandSpec::new("tricount", "triangle counting on a generated graph")
         .opt("graph", "g500", "g500|twitter|uk2005")
         .opt("graph-scale", "13", "log2 vertex count")
@@ -337,8 +346,8 @@ fn cmd_tricount(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_serve(argv: &[String]) -> Result<(), String> {
-    let spec = CommandSpec::new("serve", "run the coordinator service over a job batch")
+fn cmd_serve(argv: &[String]) -> Result<(), MlmemError> {
+    let spec = CommandSpec::new("serve", "run the session coordinator over a job batch")
         .opt("jobs", "16", "number of multiplications to submit")
         .opt("workers", "4", "executor worker threads")
         .opt("machine", "knl", "knl|gpu")
@@ -350,22 +359,37 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     let scale = scale_from(&p)?;
     let arch = Arc::new(parse_machine(&p, p.usize("threads")?, scale)?);
     let jobs = p.usize("jobs")?;
-    let svc = SpgemmService::new(p.usize("workers")?, jobs * 2, PlannerOptions::default());
+    let session = Session::builder(arch)
+        .workers(p.usize("workers")?)
+        .max_pending(jobs * 2)
+        .build();
     let mut cache = ProblemCache::default();
     let size = p.f64("size-gb")?;
     let wall = std::time::Instant::now();
+    // Register each distinct operand pair once; repeated (domain, mul)
+    // jobs share the handles, so the session's registry amortizes the
+    // symbolic pass across the batch.
+    let mut registered: HashMap<(usize, usize), (MatrixHandle, MatrixHandle)> = HashMap::new();
     let mut handles = Vec::new();
     for i in 0..jobs {
-        let domain = Domain::ALL[i % Domain::ALL.len()];
-        let prob = cache.get(domain, size, scale).clone();
-        let (a, b) = if i % 2 == 0 { Mul::RxA } else { Mul::AxP }.operands(&prob);
-        let h = svc
-            .submit_spgemm(Arc::new(a.clone()), Arc::new(b.clone()), Arc::clone(&arch), Policy::Auto)
-            .map_err(|e| e.to_string())?;
-        handles.push(h);
+        let key = (i % Domain::ALL.len(), i % 2);
+        let (ha, hb) = match registered.get(&key) {
+            Some(&pair) => pair,
+            None => {
+                let prob = cache.get(Domain::ALL[key.0], size, scale).clone();
+                let (a, b) = if key.1 == 0 { Mul::RxA } else { Mul::AxP }.operands(&prob);
+                let pair = (
+                    session.register(Arc::new(a.clone())),
+                    session.register(Arc::new(b.clone())),
+                );
+                registered.insert(key, pair);
+                pair
+            }
+        };
+        handles.push(session.spgemm(ha, hb)?);
     }
     for h in handles {
-        let r = h.wait().map_err(|e| e.to_string())?;
+        let r = h.wait()?;
         let pred = match (r.predicted.as_ref(), r.prediction_error()) {
             (Some(p), Some(e)) => {
                 format!("  pred {:.5}s ({:+.0}%)", p.total_seconds(), e * 100.0)
@@ -381,17 +405,24 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
             pred
         );
     }
-    let (sub, done, failed, rejected) = svc.metrics.snapshot();
+    let m = session.metrics();
     println!(
-        "\n{done}/{sub} jobs done ({failed} failed, {rejected} rejected) in {:.2}s wall; \
-         aggregate simulated {:.2} GFLOP/s",
+        "\n{}/{} jobs done ({} failed, {} rejected, {} cancelled) in {:.2}s wall; \
+         aggregate simulated {:.2} GFLOP/s; {} symbolic passes for {} jobs",
+        m.completed,
+        m.submitted,
+        m.failed,
+        m.rejected,
+        m.cancelled,
         wall.elapsed().as_secs_f64(),
-        svc.aggregate_gflops()
+        session.aggregate_gflops(),
+        session.symbolic_passes(),
+        jobs
     );
     Ok(())
 }
 
-fn cmd_info(argv: &[String]) -> Result<(), String> {
+fn cmd_info(argv: &[String]) -> Result<(), MlmemError> {
     let spec = CommandSpec::new("info", "machine profiles + artifact status")
         .opt("scale-denom", "1024", "capacity scale denominator");
     let p = spec.parse(argv)?;

@@ -39,6 +39,7 @@ use super::cache::{Cache, CacheSpec, LINE};
 use super::mcdram_cache::McdramCache;
 use super::pool::{PoolId, PoolSpec, PoolTraffic, FAST, SLOW};
 use super::uvm::{Uvm, UvmOutcome, UvmSpec};
+use crate::error::{JobControl, MlmemError};
 
 /// Region handle used by instrumented kernels.
 pub type RegionId = usize;
@@ -213,6 +214,10 @@ pub struct MemSim {
     /// structure can use (short rows waste vector lanes — why the paper's
     /// Laplace plateaus near 2 GFLOP/s while Elasticity reaches 5).
     compute_efficiency: f64,
+    /// Cooperative cancellation/deadline token the chunk drivers poll at
+    /// chunk boundaries via [`MemSim::checkpoint`]. Defaults to a token
+    /// that never trips.
+    control: JobControl,
 }
 
 impl MemSim {
@@ -239,7 +244,22 @@ impl MemSim {
             overlap_stall_seconds: 0.0,
             flops: 0,
             compute_efficiency: 1.0,
+            control: JobControl::default(),
         }
+    }
+
+    /// Attach the job's cancellation/deadline token; chunk drivers
+    /// observe it at every chunk boundary through [`MemSim::checkpoint`].
+    pub fn set_control(&mut self, control: JobControl) {
+        self.control = control;
+    }
+
+    /// Poll the attached [`JobControl`]: `Err(Cancelled)` /
+    /// `Err(DeadlineExceeded)` when the run should stop. Chunk drivers
+    /// call this at the top of every staged pass so an abandoned job
+    /// stops after the chunk in flight instead of running to completion.
+    pub fn checkpoint(&self) -> Result<(), MlmemError> {
+        self.control.checkpoint()
     }
 
     /// Record a demand line touch on a pool, classifying sequential runs.

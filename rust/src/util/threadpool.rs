@@ -3,9 +3,9 @@
 //! row-partitioning model KKMEM uses on KNL — plus a persistent pool for
 //! the coordinator's executor.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 /// Run `f(chunk_start, chunk_end, thread_idx)` over `[0, n)` split into
@@ -103,42 +103,77 @@ where
     slots.into_iter().map(|o| o.expect("missing result")).collect()
 }
 
-/// A persistent FIFO worker pool executing boxed jobs — backs the
-/// coordinator's executor.
-pub struct WorkerPool {
-    tx: Option<mpsc::Sender<Job>>,
-    handles: Vec<thread::JoinHandle<()>>,
-    queued: Arc<AtomicUsize>,
+/// Scheduling lane for the persistent worker pool: `High` jobs are
+/// always dequeued before `Normal` ones (within a lane, FIFO). This is
+/// the coordinator's priority lane — latency-sensitive submissions jump
+/// the batch traffic without preempting a job already running.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Priority {
+    High,
+    #[default]
+    Normal,
 }
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// The two-lane queue workers pop from: high lane drains first.
+#[derive(Default)]
+struct Lanes {
+    high: VecDeque<Job>,
+    normal: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// A persistent worker pool executing boxed jobs from a two-lane
+/// priority queue — backs the coordinator's executor.
+pub struct WorkerPool {
+    shared: Arc<(Mutex<Lanes>, Condvar)>,
+    handles: Vec<thread::JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
 impl WorkerPool {
     pub fn new(workers: usize) -> Self {
         let workers = workers.max(1);
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let shared: Arc<(Mutex<Lanes>, Condvar)> =
+            Arc::new((Mutex::new(Lanes::default()), Condvar::new()));
         let queued = Arc::new(AtomicUsize::new(0));
         let handles = (0..workers)
             .map(|_| {
-                let rx = Arc::clone(&rx);
+                let shared = Arc::clone(&shared);
                 let queued = Arc::clone(&queued);
                 thread::spawn(move || loop {
                     let job = {
-                        let guard = rx.lock().expect("rx poisoned");
-                        guard.recv()
+                        let (lock, cvar) = &*shared;
+                        let mut lanes = lock.lock().expect("lanes poisoned");
+                        loop {
+                            // Drain remaining jobs even after shutdown so
+                            // dropping the pool keeps the old
+                            // finish-what-was-queued semantics.
+                            let next = match lanes.high.pop_front() {
+                                Some(j) => Some(j),
+                                None => lanes.normal.pop_front(),
+                            };
+                            if let Some(j) = next {
+                                break Some(j);
+                            }
+                            if lanes.shutdown {
+                                break None;
+                            }
+                            lanes = cvar.wait(lanes).expect("lanes poisoned");
+                        }
                     };
                     match job {
-                        Ok(job) => {
+                        Some(job) => {
                             job();
                             queued.fetch_sub(1, Ordering::SeqCst);
                         }
-                        Err(_) => break, // channel closed
+                        None => break,
                     }
                 })
             })
             .collect();
-        Self { tx: Some(tx), handles, queued }
+        Self { shared, handles, queued }
     }
 
     /// Number of jobs submitted but not yet finished.
@@ -147,12 +182,22 @@ impl WorkerPool {
     }
 
     pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.submit_with(Priority::Normal, job);
+    }
+
+    /// Submit into a specific lane; `High` jobs run before queued
+    /// `Normal` jobs.
+    pub fn submit_with(&self, priority: Priority, job: impl FnOnce() + Send + 'static) {
         self.queued.fetch_add(1, Ordering::SeqCst);
-        self.tx
-            .as_ref()
-            .expect("pool already shut down")
-            .send(Box::new(job))
-            .expect("worker pool channel closed");
+        let (lock, cvar) = &*self.shared;
+        let mut lanes = lock.lock().expect("lanes poisoned");
+        assert!(!lanes.shutdown, "pool already shut down");
+        match priority {
+            Priority::High => lanes.high.push_back(Box::new(job)),
+            Priority::Normal => lanes.normal.push_back(Box::new(job)),
+        }
+        drop(lanes);
+        cvar.notify_one();
     }
 
     /// Block until all submitted jobs have completed.
@@ -165,7 +210,11 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        drop(self.tx.take());
+        {
+            let (lock, cvar) = &*self.shared;
+            lock.lock().expect("lanes poisoned").shutdown = true;
+            cvar.notify_all();
+        }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -225,6 +274,28 @@ mod tests {
         }
         pool.wait_idle();
         assert_eq!(sum.load(Ordering::SeqCst), 4950);
+    }
+
+    #[test]
+    fn high_lane_jumps_queued_normal_jobs() {
+        // One worker pinned on a gate job; while it blocks, a Normal then
+        // a High job are queued. The High job must run first.
+        let pool = WorkerPool::new(1);
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+        pool.submit(move || {
+            gate_rx.recv().expect("gate");
+        });
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let (o1, o2) = (Arc::clone(&order), Arc::clone(&order));
+        pool.submit_with(Priority::Normal, move || {
+            o1.lock().expect("order").push("normal");
+        });
+        pool.submit_with(Priority::High, move || {
+            o2.lock().expect("order").push("high");
+        });
+        gate_tx.send(()).expect("open gate");
+        pool.wait_idle();
+        assert_eq!(*order.lock().expect("order"), vec!["high", "normal"]);
     }
 
     #[test]

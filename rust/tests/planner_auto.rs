@@ -15,12 +15,12 @@ use mlmem_spgemm::util::proptest::{check, Gen};
 use std::sync::Arc;
 
 fn run_policy(a: &Arc<Csr>, b: &Arc<Csr>, arch: &Arc<Arch>, policy: Policy, id: u64) -> JobResult {
-    let job = Job {
+    let job = Job::new(
         id,
-        kind: JobKind::Spgemm { a: Arc::clone(a), b: Arc::clone(b) },
-        arch: Arc::clone(arch),
+        JobKind::Spgemm { a: Arc::clone(a), b: Arc::clone(b) },
+        Arc::clone(arch),
         policy,
-    };
+    );
     execute(&job, &PlannerOptions::default())
         .unwrap_or_else(|e| panic!("policy {policy:?}: {e}"))
 }

@@ -1,5 +1,5 @@
 //! Cross-module property tests (our `util::proptest` mini-framework):
-//! the invariants DESIGN.md §6 commits to, exercised on randomized
+//! the invariants DESIGN.md §7 commits to, exercised on randomized
 //! inputs with deterministic, replayable seeds.
 
 use mlmem_spgemm::chunk::partition::{csr_prefix_bytes, is_partition, partition_balanced, range_bytes};

@@ -1,0 +1,207 @@
+//! Session-handle API integration suite: one `Session` serving a mixed
+//! batch — spgemm + tricount against shared registered operands, a
+//! cancelled job, a deadline-expired job, and a backpressure rejection —
+//! with typed `MlmemError`s for every failure and bit-identical products
+//! to the direct `coordinator::execute` path for the successes. Plus the
+//! admission-control recovery and operand-registry reuse satellites.
+
+use mlmem_spgemm::coordinator::{
+    execute, Job, JobKind, PlannerOptions, Session, SubmitOptions,
+};
+use mlmem_spgemm::engine::EngineKind;
+use mlmem_spgemm::error::JobControl;
+use mlmem_spgemm::gen::scale::ScaleFactor;
+use mlmem_spgemm::kkmem::{CompressedMatrix, SpgemmOptions};
+use mlmem_spgemm::memory::arch::{knl, Arch, KnlMode};
+use mlmem_spgemm::prelude::*;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn arch() -> Arc<Arch> {
+    Arc::new(knl(KnlMode::Ddr, 64, ScaleFactor::default()))
+}
+
+/// Big enough that a simulated run takes real milliseconds — the
+/// backpressure submissions below race against it with microseconds.
+fn operand(seed: u64) -> Arc<Csr> {
+    Arc::new(mlmem_spgemm::gen::rhs::random_csr(200, 200, 1, 6, seed))
+}
+
+#[test]
+fn mixed_batch_typed_failures_and_bit_identical_successes() {
+    let arch = arch();
+    let session = Session::builder(Arc::clone(&arch))
+        .workers(1)
+        .max_pending(2)
+        .build();
+    let a_mat = operand(1);
+    let b_mat = operand(2);
+    let adj_mat = Arc::new(mlmem_spgemm::gen::graphs::erdos_renyi(60, 0.2, 3));
+    let a = session.register(Arc::clone(&a_mat));
+    let b = session.register(Arc::clone(&b_mat));
+    let adj = session.register(Arc::clone(&adj_mat));
+
+    // Two successes share the registered operands and fill the queue...
+    let h_mul = session
+        .spgemm_with(a, b, SubmitOptions { keep_product: true, ..Default::default() })
+        .expect("first job admitted");
+    let h_tri = session.tricount(adj).expect("second job admitted");
+    // ...so the next submission is a deterministic backpressure
+    // rejection while the single worker grinds the first job.
+    let err = match session.spgemm(a, b) {
+        Err(e) => e,
+        Ok(_) => panic!("expected backpressure rejection"),
+    };
+    assert!(matches!(
+        err,
+        MlmemError::AdmissionRejected { pending: 2, max_pending: 2 }
+    ));
+
+    // One pre-cancelled job and one already-expired deadline, both
+    // observed at the worker's first checkpoint.
+    session.drain();
+    let cancel = JobControl::new();
+    cancel.cancel();
+    let h_cancelled = session
+        .spgemm_with(a, b, SubmitOptions { control: Some(cancel), ..Default::default() })
+        .expect("admitted after drain");
+    let h_expired = session
+        .spgemm_with(
+            a,
+            b,
+            SubmitOptions { deadline: Some(Duration::ZERO), ..Default::default() },
+        )
+        .expect("admitted");
+    assert!(matches!(h_cancelled.wait(), Err(MlmemError::Cancelled)));
+    assert!(matches!(h_expired.wait(), Err(MlmemError::DeadlineExceeded)));
+
+    // Successes: the spgemm product is bit-identical to the direct
+    // (session-less) execute path on the same operands.
+    let r_mul = h_mul.wait().expect("spgemm succeeds");
+    let c_session = r_mul.c.as_ref().expect("keep_product attaches C");
+    let mut job = Job::new(
+        99,
+        JobKind::Spgemm { a: Arc::clone(&a_mat), b: Arc::clone(&b_mat) },
+        Arc::clone(&arch),
+        Policy::Auto,
+    );
+    job.keep_product = true;
+    let r_direct = execute(&job, &PlannerOptions::default()).expect("direct path succeeds");
+    let c_direct = r_direct.c.as_ref().expect("direct path keeps C");
+    assert_eq!(r_mul.decision, r_direct.decision);
+    assert_eq!(c_session.rowmap, c_direct.rowmap);
+    assert_eq!(c_session.entries, c_direct.entries);
+    assert!(c_session.approx_eq(c_direct, 0.0), "values must be bit-identical");
+
+    // The tricount success drains through the non-blocking poll and
+    // matches the reference count.
+    let mut h_tri = h_tri;
+    let mut out = None;
+    for _ in 0..10_000 {
+        out = h_tri.try_wait();
+        if out.is_some() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let r_tri = out.expect("tricount finishes").expect("tricount succeeds");
+    let l = mlmem_spgemm::tricount::degree_sorted_lower(&adj_mat);
+    let lc = CompressedMatrix::compress(&l);
+    let expect = mlmem_spgemm::tricount::tricount(&l, &lc, 2);
+    assert_eq!(r_tri.triangles, Some(expect));
+
+    session.drain();
+    let m = session.metrics();
+    assert_eq!(m.completed, 2);
+    assert_eq!(m.cancelled, 2);
+    assert_eq!(m.rejected, 1);
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.queue_depth, 0);
+}
+
+#[test]
+fn admission_control_rejects_beyond_max_pending_and_recovers() {
+    let session = Session::builder(arch()).workers(1).max_pending(1).build();
+    let a = session.register(operand(10));
+    let b = session.register(operand(11));
+
+    let mut accepted = Vec::new();
+    let mut rejected = 0u64;
+    for _ in 0..10 {
+        match session.spgemm(a, b) {
+            Ok(h) => accepted.push(h),
+            Err(e) => {
+                assert!(matches!(e, MlmemError::AdmissionRejected { .. }), "{e}");
+                rejected += 1;
+            }
+        }
+    }
+    assert!(rejected > 0, "a tight loop must outrun a 1-deep queue");
+    assert_eq!(session.metrics().rejected, rejected);
+
+    // A drained queue accepts again, and the new job completes.
+    session.drain();
+    let h = session.spgemm(a, b).expect("drained queue admits");
+    assert!(h.wait().is_ok());
+    let m = session.metrics();
+    assert_eq!(m.completed, accepted.len() as u64 + 1);
+    assert_eq!(m.rejected, rejected);
+    for h in accepted {
+        assert!(h.wait().is_ok());
+    }
+}
+
+#[test]
+fn registry_reuse_skips_second_symbolic_pass() {
+    let session = Session::builder(arch()).workers(1).build();
+    let a = session.register(operand(20));
+    let b = session.register(operand(21));
+
+    let first = session.spgemm(a, b).unwrap().wait().expect("ok");
+    assert_eq!(session.symbolic_passes(), 1);
+
+    // Second multiply against the same registered pair: no second pass.
+    let second = session.spgemm(a, b).unwrap().wait().expect("ok");
+    assert_eq!(session.symbolic_passes(), 1);
+    assert_eq!(second.c_nnz, first.c_nnz);
+    assert_eq!(second.decision, first.decision);
+
+    // A new pair pays its own (single) pass...
+    session.spgemm(b, a).unwrap().wait().expect("ok");
+    assert_eq!(session.symbolic_passes(), 2);
+
+    // ...and the synchronous engine path rides the same cache.
+    let (_, rep) = session
+        .execute_engine(EngineKind::Sim, a, b, SpgemmOptions::default(), None)
+        .expect("engine path ok");
+    assert_eq!(rep.c.nnz(), first.c_nnz);
+    assert_eq!(session.symbolic_passes(), 2);
+}
+
+#[test]
+fn deadline_expires_mid_run_at_a_chunk_boundary() {
+    // A chunked policy with a tiny budget forces many passes over a
+    // problem whose simulated run takes far longer than the deadline
+    // (the simulator pushes every access of every pass through the
+    // cache hierarchy), so the deadline reliably expires while passes
+    // remain — observed at the next chunk boundary (or the worker's
+    // first checkpoint on a loaded machine; either way the typed error
+    // is DeadlineExceeded).
+    let session = Session::builder(arch()).workers(1).build();
+    let a = session.register(Arc::new(mlmem_spgemm::gen::rhs::random_csr(600, 600, 6, 10, 30)));
+    let b = session.register(Arc::new(mlmem_spgemm::gen::rhs::random_csr(600, 600, 6, 10, 31)));
+    let budget = session.operand(b).unwrap().size_bytes() / 8;
+    let h = session
+        .spgemm_with(
+            a,
+            b,
+            SubmitOptions {
+                policy: Some(Policy::Chunked { fast_budget: budget }),
+                deadline: Some(Duration::from_millis(2)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert!(matches!(h.wait(), Err(MlmemError::DeadlineExceeded)));
+    assert_eq!(session.metrics().cancelled, 1);
+}

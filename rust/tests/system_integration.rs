@@ -5,7 +5,7 @@
 use mlmem_spgemm::bench::experiments::{
     run_gpu, run_gpu_chunk, run_knl, run_knl_dp, Mul, ProblemCache,
 };
-use mlmem_spgemm::coordinator::{PlannerOptions, Policy, SpgemmService};
+use mlmem_spgemm::coordinator::{Session, SubmitOptions};
 use mlmem_spgemm::gen::scale::ScaleFactor;
 use mlmem_spgemm::memory::arch::{knl, p100, GpuMode, KnlMode};
 use mlmem_spgemm::prelude::*;
@@ -124,9 +124,9 @@ fn claim_uvm_between_hbm_and_pinned() {
 }
 
 /// Failure injection: jobs whose structures cannot fit any pool fail
-/// cleanly through the service (no panic, metrics updated).
+/// cleanly through the session (no panic, typed error, metrics updated).
 #[test]
-fn service_reports_failed_jobs() {
+fn session_reports_failed_jobs() {
     // A tiny scaled machine (DDR ~ 1.5 MiB usable) and a matrix far
     // bigger than that.
     let scale = ScaleFactor::new(64 * 1024);
@@ -134,30 +134,33 @@ fn service_reports_failed_jobs() {
     let a = Arc::new(mlmem_spgemm::gen::rhs::uniform_degree(3000, 3000, 16, 1));
     // A alone is ~600 KiB; A + B + C exceed the ~1.4 MiB usable DDR.
     assert!(a.size_bytes() > 512 * 1024);
-    let svc = SpgemmService::new(1, 8, PlannerOptions::default());
-    let h = svc
-        .submit_spgemm(Arc::clone(&a), a, arch, Policy::Flat)
+    let session = Session::builder(arch).workers(1).max_pending(8).build();
+    let ha = session.register(a);
+    let h = session
+        .spgemm_with(ha, ha, SubmitOptions { policy: Some(Policy::Flat), ..Default::default() })
         .unwrap();
     let err = match h.wait() {
         Ok(_) => panic!("job must fail"),
         Err(e) => e,
     };
-    assert!(err.message.contains("does not fit"));
-    let (_, done, failed, _) = svc.metrics.snapshot();
-    assert_eq!((done, failed), (0, 1));
+    assert!(matches!(err, MlmemError::Alloc(_)), "{err}");
+    assert!(err.to_string().contains("does not fit"));
+    let m = session.metrics();
+    assert_eq!((m.completed, m.failed), (0, 1));
 }
 
 /// The GPU planner handles a mixed batch without loss.
 #[test]
-fn service_mixed_gpu_batch() {
+fn session_mixed_gpu_batch() {
     let s = ScaleFactor::default();
     let arch = Arc::new(p100(GpuMode::Pinned, s));
-    let svc = SpgemmService::new(2, 32, PlannerOptions::default());
+    let session = Session::builder(arch).workers(2).max_pending(32).build();
     let mut handles = Vec::new();
     for seed in 0..6 {
-        let a = Arc::new(mlmem_spgemm::gen::rhs::random_csr(80, 80, 1, 5, seed));
-        let b = Arc::new(mlmem_spgemm::gen::rhs::random_csr(80, 80, 1, 5, seed + 10));
-        handles.push(svc.submit_spgemm(a, b, Arc::clone(&arch), Policy::Auto).unwrap());
+        let a = session.register(Arc::new(mlmem_spgemm::gen::rhs::random_csr(80, 80, 1, 5, seed)));
+        let b = session
+            .register(Arc::new(mlmem_spgemm::gen::rhs::random_csr(80, 80, 1, 5, seed + 10)));
+        handles.push(session.spgemm(a, b).unwrap());
     }
     for h in handles {
         let r = h.wait().expect("ok");
