@@ -162,6 +162,53 @@ pub fn run_gpu_chunk(
     }
 }
 
+/// Execute a whole product chain through the coordinator's chain-aware
+/// planner (the `chain` experiment's probe). `None` = the configuration
+/// did not fit/complete.
+pub fn run_chain_job(
+    mats: &[std::sync::Arc<Csr>],
+    arch: &std::sync::Arc<Arch>,
+    id: u64,
+) -> Option<crate::coordinator::JobResult> {
+    use std::sync::Arc;
+    let job = crate::coordinator::Job::new(
+        id,
+        crate::coordinator::JobKind::Chain { mats: mats.to_vec() },
+        Arc::clone(arch),
+        crate::coordinator::Policy::Auto,
+    );
+    crate::coordinator::execute(&job, &crate::coordinator::PlannerOptions::default()).ok()
+}
+
+/// Naive pairwise baseline for a chain: independent left-to-right jobs
+/// with every intermediate materialized back to the machine default
+/// (evicted) between hops. Returns the summed simulated seconds and the
+/// final product.
+pub fn run_pairwise_chain(
+    mats: &[std::sync::Arc<Csr>],
+    arch: &std::sync::Arc<Arch>,
+    base_id: u64,
+) -> Option<(f64, Csr)> {
+    use std::sync::Arc;
+    let mut total = 0.0;
+    let mut cur = Arc::clone(&mats[0]);
+    for (i, next) in mats[1..].iter().enumerate() {
+        let mut job = crate::coordinator::Job::new(
+            base_id + i as u64,
+            crate::coordinator::JobKind::Spgemm { a: Arc::clone(&cur), b: Arc::clone(next) },
+            Arc::clone(arch),
+            crate::coordinator::Policy::Auto,
+        );
+        job.keep_product = true;
+        let r = crate::coordinator::execute(&job, &crate::coordinator::PlannerOptions::default())
+            .ok()?;
+        total += r.report.seconds;
+        cur = Arc::new(r.c?);
+    }
+    let c = Arc::try_unwrap(cur).unwrap_or_else(|arc| (*arc).clone());
+    Some((total, c))
+}
+
 /// Execute one multiplication through the coordinator under an explicit
 /// policy (or `Policy::Auto`) — the `planner` experiment's probe. `None`
 /// = the configuration did not fit/complete, the paper's missing point.

@@ -16,7 +16,7 @@ use std::path::Path;
 pub const EXPERIMENTS: &[&str] = &[
     "table1", "table2", "table3", "table4", "fig3", "fig4", "fig6", "fig7", "fig9", "fig10",
     "fig11", "fig12", "fig13", "ablate-acc", "ablate-algo", "ablate-compression",
-    "ablate-overlap", "pipeline", "planner", "profiles",
+    "ablate-overlap", "pipeline", "planner", "chain", "profiles",
 ];
 
 /// Run one experiment by id.
@@ -41,6 +41,7 @@ pub fn run_experiment(id: &str, cfg: &BenchConfig, cache: &mut ProblemCache) -> 
         "ablate-overlap" => tables::ablate_overlap(cfg, cache),
         "pipeline" => tables::pipeline_overlap(cfg, cache),
         "planner" => tables::planner_accuracy(cfg, cache),
+        "chain" => tables::chain_triple_product(cfg, cache),
         "profiles" => tables::machine_profiles(cfg),
         _ => return None,
     })

@@ -426,6 +426,71 @@ pub fn planner_accuracy(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
     t
 }
 
+/// The `chain` experiment: the Galerkin triple product `A_c = R·A·P`
+/// planned as one residency-aware chain vs naive pairwise hops with
+/// eviction between them, over the multigrid scale points, on the GPU
+/// (pinned-host) profile where intermediate round-trips hurt most.
+pub fn chain_triple_product(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
+    use super::experiments::{run_chain_job, run_pairwise_chain};
+    use std::sync::Arc;
+    let arch = Arc::new(p100(GpuMode::Pinned, cfg.scale));
+    let mut t = Table::new(&[
+        "problem", "A(GB)", "pairwise s", "chain s", "gain", "assoc", "resident", "promote s",
+    ])
+    .with_title("Chain experiment: R·A·P chain-planned vs pairwise (P100 pinned, seconds)");
+    for (di, domain) in [Domain::Laplace3D, Domain::Elasticity].into_iter().enumerate() {
+        for (si, &gb) in cfg.sizes_gb.iter().enumerate() {
+            // `p` is already an owned clone of the cache entry: move the
+            // operands into the Arcs instead of copying them again.
+            let p = cache.get(domain, gb, cfg.scale).clone();
+            let mats = vec![Arc::new(p.r), Arc::new(p.a), Arc::new(p.p)];
+            let base = (di * cfg.sizes_gb.len() + si) as u64 * 8;
+            let chain = run_chain_job(&mats, &arch, base);
+            let pairwise = run_pairwise_chain(&mats, &arch, base + 4);
+            let row = match (&chain, &pairwise) {
+                (Some(c), Some((pw, _))) => {
+                    let summary = c.chain.as_ref().expect("chain job");
+                    vec![
+                        domain.name().to_string(),
+                        format!("{gb}"),
+                        format!("{pw:.5}"),
+                        format!("{:.5}", c.report.seconds),
+                        format!("{:.2}x", pw / c.report.seconds.max(1e-12)),
+                        summary.assoc.name().to_string(),
+                        summary
+                            .hops
+                            .iter()
+                            .map(|h| {
+                                if h.residency.a {
+                                    "A"
+                                } else if h.residency.b {
+                                    "B"
+                                } else {
+                                    "-"
+                                }
+                            })
+                            .collect::<Vec<_>>()
+                            .join(","),
+                        format!("{:.5}", summary.promote_seconds()),
+                    ]
+                }
+                _ => vec![
+                    domain.name().to_string(),
+                    format!("{gb}"),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ],
+            };
+            t.row(&row);
+        }
+    }
+    t
+}
+
 /// Sanity table: P100 profile — not in the paper, prints the machine
 /// parameters used (documentation aid).
 pub fn machine_profiles(cfg: &BenchConfig) -> Table {
@@ -506,6 +571,17 @@ mod tests {
         let t = pipeline_overlap(&cfg, &mut cache);
         assert_eq!(t.n_rows(), 8);
         assert!(t.render().contains("Pipe8"));
+    }
+
+    #[test]
+    fn chain_table_compares_against_pairwise() {
+        let (cfg, mut cache) = quick();
+        let t = chain_triple_product(&cfg, &mut cache);
+        assert_eq!(t.n_rows(), 2);
+        let r = t.render();
+        assert!(r.contains("pairwise"));
+        // Small problems must complete (an association order was chosen).
+        assert!(r.contains("fold"), "{r}");
     }
 
     #[test]

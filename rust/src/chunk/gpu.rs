@@ -6,6 +6,7 @@
 
 use super::heuristic::{plan_gpu_chunks_with, GpuChunkAlgo, GpuChunkPlan};
 use super::knl::ChunkedProduct;
+use crate::engine::Residency;
 use super::partition::{csr_prefix_bytes, range_bytes, sum_prefixes};
 use crate::kkmem::mempool::PooledAcc;
 use crate::kkmem::numeric::{emit_row, fused_numeric_row, Layout};
@@ -50,49 +51,71 @@ pub(crate) fn c_prefix_from_sizes(sizes: &[usize]) -> Vec<u64> {
     p
 }
 
-pub(crate) struct Staged {
+pub(crate) struct Staged<'m> {
     pub(crate) regions: CsrRegions,
-    pub(crate) csr: Csr,
+    /// The staged rows: an owned slice for real staging, a borrow of the
+    /// whole matrix when a fast-resident operand is consumed in place
+    /// (no multi-GB host-side clone on the no-copy path).
+    pub(crate) csr: std::borrow::Cow<'m, Csr>,
+    /// Bytes the staging actually moved across the slow↔fast link (0
+    /// when the source was already resident in the fast pool).
+    pub(crate) transferred: u64,
+}
+
+/// True when a region triple already lives in the fast pool — staging
+/// from it is an addressing view, not a transfer.
+fn src_in_fast(sim: &MemSim, src: CsrRegions) -> bool {
+    sim.region(src.0).loc == Location::Pool(FAST)
 }
 
 /// Stage a row slice of `m` into the fast pool, charging the bulk copy.
-pub(crate) fn stage_slice(
+/// When the source regions are already fast-resident (a chain hop's
+/// intermediate), the copy is skipped and nothing is charged.
+pub(crate) fn stage_slice<'m>(
     sim: &mut MemSim,
     name: &str,
-    m: &Csr,
+    m: &'m Csr,
     src: CsrRegions,
     lo: usize,
     hi: usize,
-) -> Result<Staged, AllocError> {
+) -> Result<Staged<'m>, AllocError> {
     let slice = m.slice_rows(lo, hi);
     let regions = alloc_csr_regions(sim, name, &slice, Location::Pool(FAST))?;
+    if src_in_fast(sim, src) {
+        return Ok(Staged { regions, csr: std::borrow::Cow::Owned(slice), transferred: 0 });
+    }
+    let transferred = slice.size_bytes();
     sim.bulk_copy(src.0, regions.0, (slice.nrows as u64 + 1) * 8);
     if slice.nnz() > 0 {
         sim.bulk_copy(src.1, regions.1, slice.nnz() as u64 * 4);
         sim.bulk_copy(src.2, regions.2, slice.nnz() as u64 * 8);
     }
-    Ok(Staged { regions, csr: slice })
+    Ok(Staged { regions, csr: std::borrow::Cow::Owned(slice), transferred })
 }
 
 /// Like [`stage_slice`] but issued on the simulator's overlap stream:
 /// the transfer proceeds concurrently with kernel work until the next
 /// `overlap_barrier` (double-buffered staging).
-pub(crate) fn stage_slice_async(
+pub(crate) fn stage_slice_async<'m>(
     sim: &mut MemSim,
     name: &str,
-    m: &Csr,
+    m: &'m Csr,
     src: CsrRegions,
     lo: usize,
     hi: usize,
-) -> Result<Staged, AllocError> {
+) -> Result<Staged<'m>, AllocError> {
     let slice = m.slice_rows(lo, hi);
     let regions = alloc_csr_regions(sim, name, &slice, Location::Pool(FAST))?;
+    if src_in_fast(sim, src) {
+        return Ok(Staged { regions, csr: std::borrow::Cow::Owned(slice), transferred: 0 });
+    }
+    let transferred = slice.size_bytes();
     sim.bulk_copy_async(src.0, regions.0, (slice.nrows as u64 + 1) * 8);
     if slice.nnz() > 0 {
         sim.bulk_copy_async(src.1, regions.1, slice.nnz() as u64 * 4);
         sim.bulk_copy_async(src.2, regions.2, slice.nnz() as u64 * 8);
     }
-    Ok(Staged { regions, csr: slice })
+    Ok(Staged { regions, csr: std::borrow::Cow::Owned(slice), transferred })
 }
 
 pub(crate) fn free_regions(sim: &mut MemSim, r: CsrRegions) {
@@ -159,25 +182,61 @@ pub fn plan_for(
     acc_bytes: u64,
     force: Option<GpuChunkAlgo>,
 ) -> (GpuChunkPlan, Vec<usize>) {
+    plan_for_res(sim, a, b, fast_budget, acc_bytes, force, Residency::NONE)
+}
+
+/// [`plan_for`] with a residency input: a fast-resident operand already
+/// occupies pool space (its bytes come off the staging budget), and a
+/// resident `B` pins Algorithm 3 with `B` unsplit — it is consumed in
+/// place, never re-staged.
+pub fn plan_for_res(
+    sim: &MemSim,
+    a: &Csr,
+    b: &Csr,
+    fast_budget: u64,
+    acc_bytes: u64,
+    force: Option<GpuChunkAlgo>,
+    residency: Residency,
+) -> (GpuChunkPlan, Vec<usize>) {
     let b_comp = CompressedMatrix::compress(b);
     let sizes = symbolic(a, &b_comp);
     let a_prefix = csr_prefix_bytes(a);
     let c_prefix = c_prefix_from_sizes(&sizes);
     let ac_prefix = sum_prefixes(&a_prefix, &c_prefix);
     let b_prefix = csr_prefix_bytes(b);
-    let usable = sim.spec.pools[FAST.0]
-        .usable()
+    let pool_usable = sim.spec.pools[FAST.0].usable();
+    let resident_a = residency.a && a.size_bytes() <= pool_usable;
+    let resident_b = residency.b && b.size_bytes() <= pool_usable;
+    let mut usable = pool_usable
         .min(fast_budget)
         .saturating_sub(acc_bytes)
         .max(1);
-    let plan = plan_gpu_chunks_with(
-        &ac_prefix,
-        &b_prefix,
-        a_prefix[a.nrows],
-        c_prefix[a.nrows],
-        usable,
-        force,
-    );
+    // The resident operand's footprint is not available for staging.
+    if resident_a {
+        usable = usable.saturating_sub(a.size_bytes()).max(1);
+    }
+    if resident_b {
+        usable = usable.saturating_sub(b.size_bytes()).max(1);
+    }
+    let plan = if resident_b {
+        // B is consumed in place: Algorithm 3 with B unsplit; the whole
+        // remaining budget streams A/C blocks past it.
+        GpuChunkPlan {
+            algo: GpuChunkAlgo::BResident,
+            p_ac: super::partition::partition_balanced(&ac_prefix, usable.max(1)),
+            p_b: vec![(0, b.nrows)],
+            predicted_copy_bytes: a_prefix[a.nrows].saturating_add(c_prefix[a.nrows]),
+        }
+    } else {
+        plan_gpu_chunks_with(
+            &ac_prefix,
+            &b_prefix,
+            a_prefix[a.nrows],
+            c_prefix[a.nrows],
+            usable,
+            force,
+        )
+    };
     (plan, sizes)
 }
 
@@ -204,24 +263,47 @@ pub fn gpu_chunked_sim_forced(
     opts: &SpgemmOptions,
     force: Option<GpuChunkAlgo>,
 ) -> Result<ChunkedProduct, MlmemError> {
+    gpu_chunked_sim_forced_res(sim, a, b, fast_budget, opts, force, Residency::NONE)
+}
+
+/// [`gpu_chunked_sim_forced`] with a residency input (chain hops): a
+/// fast-resident operand's backing regions live in the fast pool and its
+/// staging copies are skipped; a resident `B` pins Algorithm 3 with `B`
+/// consumed in place.
+pub fn gpu_chunked_sim_forced_res(
+    sim: &mut MemSim,
+    a: &Csr,
+    b: &Csr,
+    fast_budget: u64,
+    opts: &SpgemmOptions,
+    force: Option<GpuChunkAlgo>,
+    residency: Residency,
+) -> Result<ChunkedProduct, MlmemError> {
     assert_eq!(a.ncols, b.nrows, "spgemm shape mismatch");
     sim.set_compute_efficiency(crate::memory::machine::lane_efficiency(
         a.avg_degree(),
         b.avg_degree(),
     ));
+    let pool_usable = sim.spec.pools[FAST.0].usable();
+    let residency = Residency {
+        a: residency.a && a.size_bytes() <= pool_usable,
+        b: residency.b && b.size_bytes() <= pool_usable,
+    };
     let row_ub = max_row_upper_bound(a, b);
     let acc_wrap = crate::kkmem::spgemm::acc_trace_wrap(sim);
     let acc_bytes = crate::kkmem::spgemm::acc_region_bytes(
         opts.acc.footprint_bytes(row_ub, b.ncols),
         acc_wrap,
     );
-    let (plan, c_sizes) = plan_for(sim, a, b, fast_budget, acc_bytes, force);
+    let (plan, c_sizes) = plan_for_res(sim, a, b, fast_budget, acc_bytes, force, residency);
     let c_prefix = c_prefix_from_sizes(&c_sizes);
 
-    // Host (slow) residents.
+    // Host (slow) residents; a chain hop's fast-resident operand stays
+    // in the fast pool instead.
     let slow = Location::Pool(SLOW);
-    let a_reg = alloc_csr_regions(sim, "A", a, slow)?;
-    let b_reg = alloc_csr_regions(sim, "B", b, slow)?;
+    let fast = Location::Pool(FAST);
+    let a_reg = alloc_csr_regions(sim, "A", a, if residency.a { fast } else { slow })?;
+    let b_reg = alloc_csr_regions(sim, "B", b, if residency.b { fast } else { slow })?;
     let c_nnz: usize = c_sizes.iter().sum();
     let c_reg = alloc_csr_regions_sized(sim, "C", a.nrows, c_nnz, slow)?;
     // Device-global accumulator (second level).
@@ -245,7 +327,7 @@ pub fn gpu_chunked_sim_forced(
             for (ai, &(alo, ahi)) in plan.p_ac.iter().enumerate() {
                 sim.checkpoint()?;
                 let fa = stage_slice(sim, &format!("FA.{ai}"), a, a_reg, alo, ahi)?;
-                copied_bytes += fa.csr.size_bytes();
+                copied_bytes += fa.transferred;
                 let c_block_bytes = range_bytes(&c_prefix, alo, ahi) + 8;
                 let c_block_nnz: usize = c_sizes[alo..ahi].iter().sum();
                 let fc = alloc_csr_regions_sized(
@@ -262,7 +344,7 @@ pub fn gpu_chunked_sim_forced(
                 for (bi, &(blo, bhi)) in plan.p_b.iter().enumerate() {
                     sim.checkpoint()?;
                     let fb = stage_slice(sim, &format!("FB.{ai}.{bi}"), b, b_reg, blo, bhi)?;
-                    copied_bytes += fb.csr.size_bytes();
+                    copied_bytes += fb.transferred;
                     let new_partial = run_block(
                         sim,
                         &mut acc,
@@ -294,12 +376,20 @@ pub fn gpu_chunked_sim_forced(
             let mut partials: Vec<Option<Csr>> = vec![None; plan.p_ac.len()];
             for (bi, &(blo, bhi)) in plan.p_b.iter().enumerate() {
                 sim.checkpoint()?;
-                let fb = stage_slice(sim, &format!("FB.{bi}"), b, b_reg, blo, bhi)?;
-                copied_bytes += fb.csr.size_bytes();
+                // A fast-resident B is consumed in place: its backing
+                // regions ARE the staged chunk (one unsplit part), and
+                // the CSR view is a borrow — no clone of B.
+                let fb = if residency.b {
+                    debug_assert_eq!((blo, bhi), (0, b.nrows));
+                    Staged { regions: b_reg, csr: std::borrow::Cow::Borrowed(b), transferred: 0 }
+                } else {
+                    stage_slice(sim, &format!("FB.{bi}"), b, b_reg, blo, bhi)?
+                };
+                copied_bytes += fb.transferred;
                 for (ai, &(alo, ahi)) in plan.p_ac.iter().enumerate() {
                     sim.checkpoint()?;
                     let fa = stage_slice(sim, &format!("FA.{bi}.{ai}"), a, a_reg, alo, ahi)?;
-                    copied_bytes += fa.csr.size_bytes();
+                    copied_bytes += fa.transferred;
                     let c_block_nnz: usize = c_sizes[alo..ahi].iter().sum();
                     let fc = alloc_csr_regions_sized(
                         sim,
@@ -342,7 +432,9 @@ pub fn gpu_chunked_sim_forced(
                     free_regions(sim, fa.regions);
                     free_regions(sim, fc);
                 }
-                free_regions(sim, fb.regions);
+                if !residency.b {
+                    free_regions(sim, fb.regions);
+                }
             }
             for (ai, p) in partials.into_iter().enumerate() {
                 let (alo, ahi) = plan.p_ac[ai];
@@ -369,6 +461,46 @@ mod tests {
 
     fn gpu_sim() -> MemSim {
         MemSim::new(p100(GpuMode::Pinned, ScaleFactor::default()).spec)
+    }
+
+    #[test]
+    fn resident_b_consumed_in_place() {
+        // With B fast-resident the driver pins Algorithm 3, never splits
+        // or re-stages B, and only A's staging shows up in copied_bytes.
+        let a = crate::gen::rhs::random_csr(60, 50, 1, 6, 11);
+        let b = crate::gen::rhs::random_csr(50, 70, 1, 6, 12);
+        let expect = spgemm_reference(&a, &b);
+        let budget = b.size_bytes() + (a.size_bytes() + b.size_bytes()) / 2;
+        let mut staged_sim = gpu_sim();
+        let staged = gpu_chunked_sim(&mut staged_sim, &a, &b, budget, &SpgemmOptions::default())
+            .unwrap();
+        let staged_rep = staged_sim.finish();
+        let mut res_sim = gpu_sim();
+        let resident = gpu_chunked_sim_forced_res(
+            &mut res_sim,
+            &a,
+            &b,
+            budget,
+            &SpgemmOptions::default(),
+            None,
+            Residency::B_FAST,
+        )
+        .unwrap();
+        let res_rep = res_sim.finish();
+        assert_eq!(resident.n_parts_b, 1);
+        assert!(resident.c.approx_eq(&expect, 1e-12));
+        assert!(
+            resident.copied_bytes < staged.copied_bytes,
+            "resident copied {} !< staged {}",
+            resident.copied_bytes,
+            staged.copied_bytes
+        );
+        assert!(
+            res_rep.seconds < staged_rep.seconds,
+            "resident {} !< staged {}",
+            res_rep.seconds,
+            staged_rep.seconds
+        );
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! `C` stay in DDR; only `B` chunks are staged.
 
 use super::partition::{csr_prefix_bytes, partition_balanced};
+use crate::engine::Residency;
 use crate::error::MlmemError;
 use crate::kkmem::mempool::PooledAcc;
 use crate::kkmem::numeric::{emit_row, fused_numeric_row, Layout};
@@ -39,12 +40,34 @@ pub fn knl_chunked_sim(
     fast_budget: u64,
     opts: &SpgemmOptions,
 ) -> Result<ChunkedProduct, MlmemError> {
+    knl_chunked_sim_res(sim, a, b, fast_budget, opts, Residency::NONE)
+}
+
+/// [`knl_chunked_sim`] with a residency input (chain hops): a fast-pool
+/// resident `B` is consumed in place — one pass, no staging copies — and
+/// a resident `A` is read from the fast pool instead of DDR.
+pub fn knl_chunked_sim_res(
+    sim: &mut MemSim,
+    a: &Csr,
+    b: &Csr,
+    fast_budget: u64,
+    opts: &SpgemmOptions,
+    residency: Residency,
+) -> Result<ChunkedProduct, MlmemError> {
     assert_eq!(a.ncols, b.nrows, "spgemm shape mismatch");
     sim.set_compute_efficiency(crate::memory::machine::lane_efficiency(
         a.avg_degree(),
         b.avg_degree(),
     ));
-    let fast_budget = fast_budget.min(sim.spec.pools[FAST.0].usable());
+    let usable = sim.spec.pools[FAST.0].usable();
+    // A resident operand must actually fit the fast pool to be honored.
+    let resident_a = residency.a && a.size_bytes() <= usable;
+    let resident_b = residency.b && b.size_bytes() <= usable;
+    // A resident A occupies fast-pool space the staging arena cannot use.
+    let arena = usable
+        .saturating_sub(if resident_a { a.size_bytes() } else { 0 })
+        .max(1);
+    let fast_budget = fast_budget.min(arena);
     // Symbolic once for the final structure (partials are subsets of it).
     let b_comp = CompressedMatrix::compress(b);
     let sizes = symbolic(a, &b_comp);
@@ -52,10 +75,14 @@ pub fn knl_chunked_sim(
     let final_nnz = *final_rowmap.last().expect("rowmap nonempty");
     let row_ub = max_row_upper_bound(a, b);
 
-    // Slow-pool residents: A, B, and ping-pong C buffers.
+    // Slow-pool residents: A, B, and ping-pong C buffers (a chain hop's
+    // fast-resident operand stays in the fast pool instead).
     let slow = Location::Pool(SLOW);
-    let (a_rm, a_en, a_va) = alloc_csr_regions(sim, "A", a, slow)?;
-    let (b_rm, b_en, b_va) = alloc_csr_regions(sim, "B", b, slow)?;
+    let fast = Location::Pool(FAST);
+    let (a_rm, a_en, a_va) =
+        alloc_csr_regions(sim, "A", a, if resident_a { fast } else { slow })?;
+    let (b_rm, b_en, b_va) =
+        alloc_csr_regions(sim, "B", b, if resident_b { fast } else { slow })?;
     let c_cur = alloc_csr_regions_sized(sim, "C.cur", a.nrows, final_nnz, slow)?;
     let c_prev = alloc_csr_regions_sized(sim, "C.prev", a.nrows, final_nnz, slow)?;
     let acc_wrap = crate::kkmem::spgemm::acc_trace_wrap(sim);
@@ -66,7 +93,12 @@ pub fn knl_chunked_sim(
     let acc_region = sim.alloc("accumulator", acc_bytes, slow)?;
 
     let prefix = csr_prefix_bytes(b);
-    let parts = partition_balanced(&prefix, fast_budget.max(1));
+    // A resident B is consumed whole: one pass, no staging.
+    let parts = if resident_b {
+        vec![(0usize, b.nrows)]
+    } else {
+        partition_balanced(&prefix, fast_budget.max(1))
+    };
     let mut acc = PooledAcc::build_wrapped(
         opts.acc,
         row_ub,
@@ -82,14 +114,23 @@ pub fn knl_chunked_sim(
     let mut c_regions = [c_cur, c_prev];
     for (pass, &(lo, hi)) in parts.iter().enumerate() {
         sim.checkpoint()?;
-        // copy2Fast(B, B_rp)
-        let slice = b.slice_rows(lo, hi);
-        let (fb_rm, fb_en, fb_va) =
-            alloc_csr_regions(sim, &format!("FastB.{pass}"), &slice, Location::Pool(FAST))?;
-        sim.bulk_copy(b_rm, fb_rm, (slice.nrows as u64 + 1) * 8);
-        sim.bulk_copy(b_en, fb_en, slice.nnz() as u64 * 4);
-        sim.bulk_copy(b_va, fb_va, slice.nnz() as u64 * 8);
-        copied_bytes += slice.size_bytes();
+        // copy2Fast(B, B_rp) — skipped entirely when B is already
+        // resident in the fast pool (its regions and CSR are used in
+        // place; no clone of B).
+        let staged;
+        let (slice, fb_rm, fb_en, fb_va): (&Csr, _, _, _) = if resident_b {
+            (b, b_rm, b_en, b_va)
+        } else {
+            let s = b.slice_rows(lo, hi);
+            let (fb_rm, fb_en, fb_va) =
+                alloc_csr_regions(sim, &format!("FastB.{pass}"), &s, fast)?;
+            sim.bulk_copy(b_rm, fb_rm, (s.nrows as u64 + 1) * 8);
+            sim.bulk_copy(b_en, fb_en, s.nnz() as u64 * 4);
+            sim.bulk_copy(b_va, fb_va, s.nnz() as u64 * 8);
+            copied_bytes += s.size_bytes();
+            staged = s;
+            (&staged, fb_rm, fb_en, fb_va)
+        };
 
         let (cur, prev) = (c_regions[0], c_regions[1]);
         let lay = Layout {
@@ -116,7 +157,7 @@ pub fn knl_chunked_sim(
                 sim,
                 &lay,
                 a,
-                &slice,
+                slice,
                 (lo, hi),
                 partial.as_ref(),
                 i,
@@ -132,9 +173,11 @@ pub fn knl_chunked_sim(
         }
         partial = Some(Csr::new(a.nrows, b.ncols, rowmap, entries, values));
         c_regions.swap(0, 1);
-        sim.free(fb_rm);
-        sim.free(fb_en);
-        sim.free(fb_va);
+        if !resident_b {
+            sim.free(fb_rm);
+            sim.free(fb_en);
+            sim.free(fb_va);
+        }
     }
     let c = partial.unwrap_or_else(|| Csr::empty(a.nrows, b.ncols));
     Ok(ChunkedProduct {
@@ -196,6 +239,45 @@ mod tests {
         let (p, _) = run(&a, &a, a.size_bytes() / 3);
         assert!(p.c.approx_eq(&expect, 1e-12));
         assert!(p.mults > 0);
+    }
+
+    #[test]
+    fn resident_b_skips_staging_and_beats_staged_run() {
+        // Same partition shape (one part either way): the resident run
+        // must produce the bit-identical product with zero staged bytes
+        // and strictly less simulated time (no copy bill, B probes in
+        // the fast pool).
+        let a = crate::gen::rhs::random_csr(60, 50, 1, 6, 7);
+        let b = crate::gen::rhs::random_csr(50, 60, 1, 6, 8);
+        let arch = knl(KnlMode::Ddr, 256, ScaleFactor::default());
+        let budget = 4 * b.size_bytes();
+        let mut staged_sim = MemSim::new(arch.spec.clone());
+        let staged =
+            knl_chunked_sim(&mut staged_sim, &a, &b, budget, &SpgemmOptions::default())
+                .unwrap();
+        let staged_rep = staged_sim.finish();
+        assert_eq!(staged.n_parts_b, 1);
+        let mut res_sim = MemSim::new(arch.spec.clone());
+        let resident = knl_chunked_sim_res(
+            &mut res_sim,
+            &a,
+            &b,
+            budget,
+            &SpgemmOptions::default(),
+            Residency::B_FAST,
+        )
+        .unwrap();
+        let res_rep = res_sim.finish();
+        assert_eq!(resident.n_parts_b, 1);
+        assert!(resident.c.approx_eq(&staged.c, 0.0), "must be bit-identical");
+        assert_eq!(resident.copied_bytes, 0);
+        assert!(
+            res_rep.seconds < staged_rep.seconds,
+            "resident {} !< staged {}",
+            res_rep.seconds,
+            staged_rep.seconds
+        );
+        assert_eq!(res_rep.copy_seconds, 0.0);
     }
 
     #[test]

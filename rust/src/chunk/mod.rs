@@ -8,8 +8,8 @@ pub mod heuristic;
 pub mod knl;
 pub mod partition;
 
-pub use gpu::{gpu_chunked_sim, gpu_chunked_sim_forced};
+pub use gpu::{gpu_chunked_sim, gpu_chunked_sim_forced, gpu_chunked_sim_forced_res};
 pub use heuristic::{
     plan_gpu_chunks, plan_gpu_chunks_sized, plan_gpu_chunks_with, GpuChunkAlgo, GpuChunkPlan,
 };
-pub use knl::{knl_chunked_sim, ChunkedProduct};
+pub use knl::{knl_chunked_sim, knl_chunked_sim_res, ChunkedProduct};

@@ -1,8 +1,11 @@
 //! Job specifications and results for the SpGEMM service: a job names a
-//! multiplication (or triangle count), a machine profile, and a policy;
-//! the result carries the product summary plus the simulated report.
+//! multiplication (a single product, a left-to-right product *chain*, or
+//! a triangle count), a machine profile, and a policy; the result
+//! carries the product summary plus the simulated report — and, for
+//! chains, the per-hop decisions, candidate tables, and residency
+//! bookkeeping.
 
-use crate::engine::CostEstimate;
+use crate::engine::{CostEstimate, Residency};
 use crate::memory::arch::Arch;
 use crate::memory::SimReport;
 use crate::sparse::Csr;
@@ -13,6 +16,10 @@ use std::sync::Arc;
 pub enum JobKind {
     /// `C = A × B`.
     Spgemm { a: Arc<Csr>, b: Arc<Csr> },
+    /// `C = M₁ × M₂ × ⋯ × Mₙ`, planned as one unit: the planner picks
+    /// the association order (3-chains) and keeps intermediates resident
+    /// in the fast pool between hops when they fit.
+    Chain { mats: Vec<Arc<Csr>> },
     /// Triangle count on an undirected adjacency matrix.
     TriCount { adj: Arc<Csr> },
 }
@@ -92,6 +99,75 @@ pub struct CandidateScore {
     pub predicted: CostEstimate,
 }
 
+/// Association order of a product chain. Three-matrix chains are scored
+/// both ways by the planner; longer chains fold left-to-right.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChainAssoc {
+    /// `((M₁ × M₂) × M₃) × ⋯` — the intermediate is the *left* operand
+    /// of every later hop.
+    LeftFold,
+    /// `M₁ × (M₂ × M₃)` (3-chains only) — the intermediate is the
+    /// *right* operand of the final hop.
+    RightFold,
+}
+
+impl ChainAssoc {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChainAssoc::LeftFold => "left-fold",
+            ChainAssoc::RightFold => "right-fold",
+        }
+    }
+}
+
+/// One executed hop of a chain job: its own decision, simulated report,
+/// prediction, and Auto candidate table, plus the residency the hop ran
+/// under and any inter-hop promotion it paid for.
+#[derive(Debug)]
+pub struct HopResult {
+    /// Human-readable hop label, e.g. `"(64x512)·(512x512)"`.
+    pub label: String,
+    pub decision: Decision,
+    pub report: SimReport,
+    pub predicted: Option<CostEstimate>,
+    /// Every candidate `Policy::Auto` scored for this hop.
+    pub candidates: Vec<CandidateScore>,
+    pub c_nnz: usize,
+    /// The residency this hop executed under (which operand was already
+    /// in the fast pool).
+    pub residency: Residency,
+    /// Simulated seconds spent promoting the incoming intermediate into
+    /// the fast pool before this hop (0 when it was produced there, was
+    /// left in the slow pool, or this is the first hop).
+    pub promote_seconds: f64,
+}
+
+/// The chain-level record attached to a chain job's [`JobResult`]: the
+/// association order the planner chose, its pre-pass score per order,
+/// and every executed hop.
+#[derive(Debug)]
+pub struct ChainSummary {
+    pub assoc: ChainAssoc,
+    /// Pre-pass predicted total seconds per association order considered
+    /// — both orders for a 3-chain, empty otherwise (chains of any other
+    /// length have exactly one legal fold, so nothing is scored).
+    pub order_scores: Vec<(ChainAssoc, f64)>,
+    pub hops: Vec<HopResult>,
+}
+
+impl ChainSummary {
+    /// Total inter-hop promotion time the chain paid.
+    pub fn promote_seconds(&self) -> f64 {
+        self.hops.iter().map(|h| h.promote_seconds).sum()
+    }
+
+    /// True when at least one hop consumed its intermediate resident in
+    /// the fast pool.
+    pub fn any_resident_hop(&self) -> bool {
+        self.hops.iter().any(|h| h.residency.any())
+    }
+}
+
 /// Result of a completed job.
 #[derive(Debug)]
 pub struct JobResult {
@@ -108,11 +184,16 @@ pub struct JobResult {
     /// Triangle count for TriCount jobs.
     pub triangles: Option<u64>,
     /// Cost prediction for the plan that ran (None when the job kind has
-    /// no cost model, e.g. triangle counting).
+    /// no cost model, e.g. triangle counting). For chains this is the
+    /// component-wise sum of the per-hop predictions plus the promotion
+    /// transfers, so [`prediction_error`](JobResult::prediction_error)
+    /// reports the chain's total predicted-vs-actual.
     pub predicted: Option<CostEstimate>,
     /// Every candidate `Policy::Auto` scored before committing (empty for
-    /// explicit policies).
+    /// explicit policies; per-hop tables live in `chain` for chains).
     pub candidates: Vec<CandidateScore>,
+    /// Chain jobs only: association order, order scores, per-hop results.
+    pub chain: Option<ChainSummary>,
 }
 
 impl JobResult {

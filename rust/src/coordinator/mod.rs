@@ -10,7 +10,10 @@ pub mod planner;
 pub mod service;
 pub mod session;
 
-pub use job::{CandidateScore, Decision, Job, JobKind, JobResult, Policy};
+pub use job::{
+    CandidateScore, ChainAssoc, ChainSummary, Decision, HopResult, Job, JobKind, JobResult,
+    Policy,
+};
 pub use planner::{execute, explain_spgemm, ExplainRow, PlannerOptions};
 pub use service::{DecisionCounts, JobHandle, Metrics, MetricsSnapshot};
 pub use session::{MatrixHandle, Session, SessionBuilder, SubmitOptions};

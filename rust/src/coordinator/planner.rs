@@ -12,19 +12,23 @@
 //! [`explain_spgemm`] additionally *runs* every candidate to report
 //! predicted vs actual (the CLI's `--explain`).
 
-use super::job::{CandidateScore, Decision, Job, JobKind, JobResult, Policy};
+use super::job::{
+    CandidateScore, ChainAssoc, ChainSummary, Decision, HopResult, Job, JobKind, JobResult,
+    Policy,
+};
 use crate::chunk::heuristic::GpuChunkAlgo;
-use crate::error::MlmemError;
+use crate::error::{JobControl, MlmemError};
 use crate::engine::{
     CostEstimate, Engine, ExecPlan, GpuChunkEngine, KnlChunkEngine, PipelinedChunkEngine,
-    Problem, SimEngine,
+    Problem, ProblemShape, Residency, SimEngine,
 };
 use crate::kkmem::CompressedMatrix;
 use crate::kkmem::Placement;
-use crate::memory::arch::MachineKind;
+use crate::memory::arch::{Arch, MachineKind};
 use crate::memory::alloc::Location;
-use crate::memory::pool::FAST;
-use crate::memory::MemSim;
+use crate::memory::machine::lane_efficiency;
+use crate::memory::pool::{FAST, SLOW};
+use crate::memory::{MemSim, SimReport};
 use crate::placement::{dp_placement, ProblemSizes};
 use crate::sparse::Csr;
 use crate::tricount::{degree_sorted_lower, tricount_sim, TriPlacement};
@@ -56,6 +60,9 @@ pub fn execute(job: &Job, opts: &PlannerOptions) -> Result<JobResult, MlmemError
         JobKind::Spgemm { a, b } => {
             let problem = Problem::try_new(a, b)?;
             execute_spgemm(job, &problem, opts)
+        }
+        JobKind::Chain { mats } => {
+            execute_chain_mats(job, mats, &JobControl::default(), opts, &[])
         }
         JobKind::TriCount { adj } => execute_tricount(job, adj, opts),
     }
@@ -138,12 +145,24 @@ fn spgemm_candidates(
     problem: &Problem,
     opts: &PlannerOptions,
 ) -> Vec<Candidate> {
-    let (a, b) = (problem.a, problem.b);
     let fast_usable = arch.spec.pools[FAST.0].usable();
     let spgemm_opts = opts.spgemm;
-    let sizes = ProblemSizes::measure(a, b);
+    // Sizes come from the problem's cached symbolic summary (one pass
+    // shared with every candidate's `predict`, possibly pre-seeded by a
+    // session registry) instead of a second `ProblemSizes::measure`.
+    let shape = ProblemShape::measure(problem, &spgemm_opts, &arch.spec);
+    let sizes = ProblemSizes {
+        a_bytes: shape.a_bytes + 8,
+        b_bytes: shape.b_bytes + 8,
+        c_bytes: shape.c_bytes + 8,
+    };
     let mut out = Vec::new();
-    if sizes.total() + ACC_SLACK <= fast_usable {
+    // `slow_pinned` marks chain intermediates physically in the slow
+    // pool: flat plans that would teleport them fast are excluded (the
+    // chain executor instead charges an explicit promote and flips the
+    // operand to `residency`).
+    let pinned = problem.slow_pinned;
+    if sizes.total() + ACC_SLACK <= fast_usable && !pinned.any() {
         push_candidate(
             &mut out,
             "flat-fast",
@@ -156,19 +175,28 @@ fn spgemm_candidates(
             problem,
         );
     }
-    if let Some(p) = dp_placement(&sizes, fast_usable.saturating_sub(ACC_SLACK)) {
-        push_candidate(
-            &mut out,
-            "data-placement",
-            Box::new(SimEngine::with_placement(Arc::clone(arch), spgemm_opts, p)),
-            DecisionFlavor::DataPlacement,
-            problem,
-        );
+    if !pinned.b {
+        if let Some(p) = dp_placement(&sizes, fast_usable.saturating_sub(ACC_SLACK)) {
+            push_candidate(
+                &mut out,
+                "data-placement",
+                Box::new(SimEngine::with_placement(Arc::clone(arch), spgemm_opts, p)),
+                DecisionFlavor::DataPlacement,
+                problem,
+            );
+        }
+    }
+    let mut default_placement = Placement::uniform(arch.default_loc);
+    if pinned.a {
+        default_placement.a = Location::Pool(SLOW);
+    }
+    if pinned.b {
+        default_placement.b = Location::Pool(SLOW);
     }
     push_candidate(
         &mut out,
         "flat-default",
-        Box::new(SimEngine::flat(Arc::clone(arch), spgemm_opts)),
+        Box::new(SimEngine::with_placement(Arc::clone(arch), spgemm_opts, default_placement)),
         DecisionFlavor::FlatDefault,
         problem,
     );
@@ -182,19 +210,33 @@ fn spgemm_candidates(
                 DecisionFlavor::ChunkedKnl,
                 problem,
             );
-            push_candidate(
-                &mut out,
-                "pipelined-knl",
-                Box::new(PipelinedChunkEngine::new(Arc::clone(arch), spgemm_opts, budget)),
-                DecisionFlavor::Pipelined,
-                problem,
-            );
+            // A fast-resident B leaves nothing to double-buffer — the
+            // pipelined driver delegates to the serial resident path, so
+            // the candidate would duplicate chunked-knl under a
+            // misleading label.
+            if !problem.residency.b {
+                push_candidate(
+                    &mut out,
+                    "pipelined-knl",
+                    Box::new(PipelinedChunkEngine::new(Arc::clone(arch), spgemm_opts, budget)),
+                    DecisionFlavor::Pipelined,
+                    problem,
+                );
+            }
         }
         MachineKind::Gpu => {
-            for (tag, algo) in [
-                ("AC-res", GpuChunkAlgo::AcResident),
-                ("B-res", GpuChunkAlgo::BResident),
-            ] {
+            // A fast-resident B pins Algorithm 3 in the drivers, so the
+            // AC-resident variants would duplicate the B-resident plan
+            // under a misleading label — enumerate only what can run.
+            let algos: &[(&str, GpuChunkAlgo)] = if problem.residency.b {
+                &[("B-res", GpuChunkAlgo::BResident)]
+            } else {
+                &[
+                    ("AC-res", GpuChunkAlgo::AcResident),
+                    ("B-res", GpuChunkAlgo::BResident),
+                ]
+            };
+            for &(tag, algo) in algos {
                 push_candidate(
                     &mut out,
                     format!("chunked-gpu[{tag}]"),
@@ -245,6 +287,20 @@ pub(crate) fn execute_spgemm(
     problem: &Problem,
     opts: &PlannerOptions,
 ) -> Result<JobResult, MlmemError> {
+    execute_spgemm_precomputed(job, problem, opts, None)
+}
+
+/// [`execute_spgemm`] with an optionally pre-enumerated Auto candidate
+/// list — the chain executor's promote decision already scored the
+/// winning residency's candidates, so the hop run must not pay a third
+/// enumeration. `pre` must have been built for a problem with the same
+/// operands and residency inputs; ignored under explicit policies.
+fn execute_spgemm_precomputed(
+    job: &Job,
+    problem: &Problem,
+    opts: &PlannerOptions,
+    pre: Option<Vec<Candidate>>,
+) -> Result<JobResult, MlmemError> {
     let (a, b) = (problem.a, problem.b);
     let arch = &job.arch;
     let fast_usable = arch.spec.pools[FAST.0].usable();
@@ -258,7 +314,10 @@ pub(crate) fn execute_spgemm(
         Vec<CandidateScore>,
     ) = match job.policy {
         Policy::Auto => {
-            let cands = spgemm_candidates(arch, problem, opts);
+            let cands = match pre {
+                Some(c) => c,
+                None => spgemm_candidates(arch, problem, opts),
+            };
             let best = argmin_candidate(&cands)
                 .ok_or_else(|| planner_err(job, "no execution candidate fits this machine"))?;
             let scores = cands
@@ -343,6 +402,7 @@ pub(crate) fn execute_spgemm(
         triangles: None,
         predicted,
         candidates,
+        chain: None,
     })
 }
 
@@ -392,6 +452,540 @@ pub fn explain_spgemm(
         .collect()
 }
 
+// ---------------------------------------------------------------------------
+// Chain execution: `C = M₁ × M₂ × ⋯ × Mₙ` planned as one unit.
+//
+// The chain-aware pass (DESIGN.md §8) does three things the pairwise
+// path cannot: it sizes every hop's intermediate through the existing
+// symbolic machinery, scores both association orders of a 3-chain with
+// per-hop candidate estimates evaluated *under residency* (the previous
+// hop's product already sitting in the fast pool), and keeps each
+// intermediate resident between hops — promoting it with one explicit
+// bulk transfer when the producing plan materialized it in the slow pool
+// and the prediction says the transfer pays for itself.
+
+/// Which operand of a hop is the incoming intermediate.
+#[derive(Clone, Copy)]
+enum Side {
+    A,
+    B,
+}
+
+impl Side {
+    fn residency(self) -> Residency {
+        match self {
+            Side::A => Residency::A_FAST,
+            Side::B => Residency::B_FAST,
+        }
+    }
+}
+
+/// What the pre-pass knows about an operand: a real matrix, or an
+/// intermediate sized exactly by the symbolic pass but not materialized.
+#[derive(Clone, Copy)]
+struct OperandStats {
+    rows: usize,
+    cols: usize,
+    nnz: u64,
+    bytes: u64,
+}
+
+impl OperandStats {
+    fn of(m: &Csr) -> Self {
+        Self { rows: m.nrows, cols: m.ncols, nnz: m.nnz() as u64, bytes: m.size_bytes() }
+    }
+
+    fn avg_degree(&self) -> f64 {
+        self.nnz as f64 / self.rows.max(1) as f64
+    }
+}
+
+/// Exact stats of a hop's product, from the hop problem's cached
+/// symbolic summary (`c_bytes = 8·nrows + 12·nnz`).
+fn product_stats(p: &Problem) -> OperandStats {
+    let (_, _, c_bytes) = p.shape_core().totals();
+    let rows = p.a.nrows;
+    OperandStats {
+        rows,
+        cols: p.b.ncols,
+        nnz: c_bytes.saturating_sub(8 * rows as u64) / 12,
+        bytes: c_bytes + 8,
+    }
+}
+
+/// Uniform row-byte prefix for a synthetic (not yet materialized)
+/// operand — the chain pre-pass's stand-in for `csr_prefix_bytes`.
+fn uniform_prefix(rows: usize, total: u64) -> Vec<u64> {
+    let rows = rows.max(1) as u64;
+    let per_row = (total / rows).max(1);
+    (0..=rows).map(|i| i * per_row).collect()
+}
+
+/// Synthetic [`ProblemShape`] for a hop whose left operand may be an
+/// unmaterialized intermediate: `mults ≈ nnz(L) · δ(R)` (exact when R's
+/// rows are uniform), the product size capped by the dense bound.
+fn synthetic_shape(l: OperandStats, r: OperandStats) -> (ProblemShape, OperandStats) {
+    let mults = (l.nnz as f64 * r.avg_degree()).ceil() as u64;
+    let dense_cap = (l.rows as u64).saturating_mul(r.cols.max(1) as u64);
+    let c_nnz = mults.min(dense_cap);
+    let c = OperandStats {
+        rows: l.rows,
+        cols: r.cols,
+        nnz: c_nnz,
+        bytes: 8 * (l.rows as u64 + 1) + 12 * c_nnz,
+    };
+    let shape = ProblemShape {
+        a_bytes: l.bytes,
+        b_bytes: r.bytes,
+        c_bytes: c.bytes,
+        mults,
+        efficiency: lane_efficiency(l.avg_degree(), r.avg_degree()),
+        // Accumulators are cache-resident; the slack constant is the
+        // same reservation the candidate gates use.
+        acc_bytes: ACC_SLACK,
+        b_prefix: Arc::new(uniform_prefix(r.rows, r.bytes)),
+        ac_prefix: Arc::new(uniform_prefix(l.rows, l.bytes + c.bytes)),
+    };
+    (shape, c)
+}
+
+/// Cheapest predicted time over the Auto candidate set, evaluated purely
+/// symbolically on a (possibly synthetic) shape — the pre-pass stand-in
+/// for `spgemm_candidates` when one operand is not materialized yet.
+fn best_shape_estimate(
+    arch: &Arc<Arch>,
+    shape: &ProblemShape,
+    residency: Residency,
+    pinned: Residency,
+    opts: &PlannerOptions,
+) -> f64 {
+    use crate::engine::cost::{
+        gpu_chunked_estimate_res, knl_chunked_estimate_res, placed_estimate_res,
+    };
+    let spec = &arch.spec;
+    let usable = spec.pools[FAST.0].usable();
+    let mut default_placement = Placement::uniform(arch.default_loc);
+    if pinned.a {
+        default_placement.a = Location::Pool(SLOW);
+    }
+    if pinned.b {
+        default_placement.b = Location::Pool(SLOW);
+    }
+    let mut best =
+        placed_estimate_res(spec, shape, &default_placement, residency).total_seconds();
+    if shape.a_bytes + shape.b_bytes + shape.c_bytes + ACC_SLACK <= usable && !pinned.any() {
+        best = best.min(
+            placed_estimate_res(spec, shape, &Placement::uniform(Location::Pool(FAST)), residency)
+                .total_seconds(),
+        );
+    }
+    if shape.b_bytes <= usable.saturating_sub(ACC_SLACK) && !pinned.b {
+        let dp = Placement {
+            a: Location::Pool(SLOW),
+            b: Location::Pool(FAST),
+            c: Location::Pool(SLOW),
+            acc: Location::Pool(FAST),
+        };
+        best = best.min(placed_estimate_res(spec, shape, &dp, residency).total_seconds());
+    }
+    let budget = opts.auto_chunk_budget.unwrap_or(usable).min(usable).max(1);
+    match arch.kind {
+        MachineKind::Knl => {
+            for pipelined in [false, true] {
+                best = best.min(
+                    knl_chunked_estimate_res(spec, shape, budget, pipelined, residency)
+                        .total_seconds(),
+                );
+            }
+        }
+        MachineKind::Gpu => {
+            for algo in [GpuChunkAlgo::AcResident, GpuChunkAlgo::BResident] {
+                for pipelined in [false, true] {
+                    best = best.min(
+                        gpu_chunked_estimate_res(
+                            spec,
+                            shape,
+                            budget,
+                            pipelined,
+                            Some(algo),
+                            residency,
+                        )
+                        .1
+                        .total_seconds(),
+                    );
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Minimum predicted total of an enumerated candidate list.
+fn best_candidate_seconds(cands: &[Candidate]) -> f64 {
+    argmin_candidate(cands)
+        .map(|i| cands[i].est.total_seconds())
+        .unwrap_or(f64::INFINITY)
+}
+
+/// Does the executed plan leave the product physically in the fast pool?
+/// This is the residency contract's producer side: flat plans computing
+/// C in fast memory keep it there; DP and every chunk driver materialize
+/// C in the slow pool.
+fn product_stays_fast(arch: &Arch, d: &Decision) -> bool {
+    match d {
+        Decision::FlatFast => true,
+        Decision::FlatDefault => arch.default_loc == Location::Pool(FAST),
+        _ => false,
+    }
+}
+
+/// Score one association order of a 3-chain: the first hop through the
+/// real candidate enumeration (returned so the chosen order's first hop
+/// does not re-enumerate), the second through a synthetic shape with
+/// the intermediate resident when it fits (plus one conservative promote
+/// transfer, since the producing plan may land it in the slow pool).
+fn order_score(
+    arch: &Arc<Arch>,
+    opts: &PlannerOptions,
+    hop1: &Problem,
+    hop2_side: Side,
+    hop2_other: OperandStats,
+) -> (f64, Vec<Candidate>) {
+    let hop1_cands = spgemm_candidates(arch, hop1, opts);
+    let hop1_best = best_candidate_seconds(&hop1_cands);
+    let c1 = product_stats(hop1);
+    let (l, r) = match hop2_side {
+        Side::A => (c1, hop2_other),
+        Side::B => (hop2_other, c1),
+    };
+    let (shape2, _) = synthetic_shape(l, r);
+    let usable = arch.spec.pools[FAST.0].usable();
+    let (residency, pinned, promote) = if c1.bytes + ACC_SLACK <= usable {
+        // Conservative: charge one promote transfer even though the
+        // producing plan may leave the intermediate in fast for free.
+        (
+            hop2_side.residency(),
+            Residency::NONE,
+            arch.spec.bulk_copy_seconds(SLOW, FAST, c1.bytes),
+        )
+    } else {
+        // Too big to stay resident: it is materialized in — and streams
+        // from — the slow pool.
+        (Residency::NONE, hop2_side.residency(), 0.0)
+    };
+    let score = hop1_best + best_shape_estimate(arch, &shape2, residency, pinned, opts) + promote;
+    (score, hop1_cands)
+}
+
+/// The chain entry point: validate shapes, choose the association order,
+/// execute the hops with residency threading, and fold the per-hop
+/// reports into one chain [`JobResult`]. `seed_cores[i]` optionally
+/// pre-seeds the symbolic summary of the adjacent pair
+/// `(mats[i], mats[i+1])` — a [`Session`](crate::coordinator::Session)
+/// passes its registry's pair cache here so chains over registered
+/// operands never repeat those passes (intermediates are inherently
+/// uncacheable).
+pub(crate) fn execute_chain_mats(
+    job: &Job,
+    mats: &[Arc<Csr>],
+    control: &JobControl,
+    opts: &PlannerOptions,
+    seed_cores: &[Option<Arc<crate::engine::cost::ShapeCore>>],
+) -> Result<JobResult, MlmemError> {
+    let arch = &job.arch;
+    if mats.len() < 2 {
+        return Err(planner_err(job, "a chain needs at least two operands"));
+    }
+    for w in mats.windows(2) {
+        if w[0].ncols != w[1].nrows {
+            return Err(MlmemError::ShapeMismatch {
+                a: (w[0].nrows, w[0].ncols),
+                b: (w[1].nrows, w[1].ncols),
+            });
+        }
+    }
+
+    // Association order: 3-chains are scored both ways; longer chains
+    // fold left-to-right (documented in DESIGN.md §8). The chosen
+    // order's first hop reuses the pre-pass symbolic summary.
+    let pair_seed = |i: usize| seed_cores.get(i).cloned().flatten();
+    let (assoc, order_scores, mut seed_core, mut first_cands) = if mats.len() == 3 {
+        let mut p_left = Problem::try_new(&mats[0], &mats[1])?;
+        if let Some(core) = pair_seed(0) {
+            p_left = p_left.with_shape_core(core);
+        }
+        let (left, left_cands) =
+            order_score(arch, opts, &p_left, Side::A, OperandStats::of(&mats[2]));
+        let mut p_right = Problem::try_new(&mats[1], &mats[2])?;
+        if let Some(core) = pair_seed(1) {
+            p_right = p_right.with_shape_core(core);
+        }
+        let (right, right_cands) =
+            order_score(arch, opts, &p_right, Side::B, OperandStats::of(&mats[0]));
+        // The chosen order's first hop reuses both the pre-pass symbolic
+        // summary and its candidate enumeration.
+        let (assoc, core, cands) = if right < left {
+            (ChainAssoc::RightFold, Arc::clone(p_right.shape_core()), right_cands)
+        } else {
+            (ChainAssoc::LeftFold, Arc::clone(p_left.shape_core()), left_cands)
+        };
+        (
+            assoc,
+            vec![(ChainAssoc::LeftFold, left), (ChainAssoc::RightFold, right)],
+            Some(core),
+            Some(cands),
+        )
+    } else {
+        // Only the first hop multiplies two caller-provided matrices;
+        // every later left-fold hop consumes an intermediate.
+        (ChainAssoc::LeftFold, Vec::new(), pair_seed(0), None)
+    };
+
+    let mut hop_job = job.clone();
+    hop_job.keep_product = true;
+
+    let mut hops: Vec<HopResult> = Vec::new();
+    let mut promote_reports: Vec<SimReport> = Vec::new();
+    let (final_c, _in_fast) = match assoc {
+        ChainAssoc::LeftFold => {
+            let mut cur = Arc::clone(&mats[0]);
+            let mut cur_in_fast = false;
+            let mut first = true;
+            for next in &mats[1..] {
+                let intermediate = (!first).then_some((Side::A, cur_in_fast));
+                let (hop, product, in_fast, promote_report) = run_chain_hop(
+                    &hop_job,
+                    opts,
+                    control,
+                    &cur,
+                    next,
+                    intermediate,
+                    seed_core.take(),
+                    first_cands.take(),
+                )?;
+                if let Some(r) = promote_report {
+                    promote_reports.push(r);
+                }
+                hops.push(hop);
+                cur = Arc::new(product);
+                cur_in_fast = in_fast;
+                first = false;
+            }
+            (cur, cur_in_fast)
+        }
+        ChainAssoc::RightFold => {
+            // 3-chains only: C₁ = M₂ × M₃, then C = M₁ × C₁ with C₁ the
+            // resident right operand.
+            let (hop1, c1, c1_fast, _) = run_chain_hop(
+                &hop_job,
+                opts,
+                control,
+                &mats[1],
+                &mats[2],
+                None,
+                seed_core.take(),
+                first_cands.take(),
+            )?;
+            hops.push(hop1);
+            let c1 = Arc::new(c1);
+            let (hop2, c2, c2_fast, promote_report) = run_chain_hop(
+                &hop_job,
+                opts,
+                control,
+                &mats[0],
+                &c1,
+                Some((Side::B, c1_fast)),
+                None,
+                None,
+            )?;
+            if let Some(r) = promote_report {
+                promote_reports.push(r);
+            }
+            hops.push(hop2);
+            (Arc::new(c2), c2_fast)
+        }
+    };
+
+    // Chain totals: per-hop reports plus the inter-hop promotions, and
+    // the component-wise sum of the hop predictions so the chain's
+    // predicted-vs-actual is observable at the job level.
+    let mut parts: Vec<&SimReport> = hops.iter().map(|h| &h.report).collect();
+    parts.extend(promote_reports.iter());
+    let report = combine_sim_reports(&parts);
+    let predicted = hops.iter().try_fold(
+        CostEstimate { kernel_seconds: 0.0, copy_seconds: 0.0, stall_seconds: 0.0, passes: 0 },
+        |acc, h| {
+            h.predicted.map(|p| CostEstimate {
+                kernel_seconds: acc.kernel_seconds + p.kernel_seconds,
+                copy_seconds: acc.copy_seconds + p.copy_seconds,
+                stall_seconds: acc.stall_seconds + p.stall_seconds,
+                passes: acc.passes + p.passes,
+            })
+        },
+    );
+    let predicted = predicted.map(|mut p| {
+        p.copy_seconds += hops.iter().map(|h| h.promote_seconds).sum::<f64>();
+        p
+    });
+    let decision = hops.last().expect("chain has hops").decision.clone();
+    let (c_nrows, c_nnz) = (final_c.nrows, final_c.nnz());
+    let c = job
+        .keep_product
+        .then(|| Arc::try_unwrap(final_c).unwrap_or_else(|arc| (*arc).clone()));
+    Ok(JobResult {
+        id: job.id,
+        decision,
+        report,
+        c_nrows,
+        c_nnz,
+        c,
+        triangles: None,
+        predicted,
+        candidates: Vec::new(),
+        chain: Some(ChainSummary { assoc, order_scores, hops }),
+    })
+}
+
+/// Execute one hop of a chain: decide residency/promotion for the
+/// incoming intermediate, run the hop through the normal spgemm path,
+/// and report where the product physically landed.
+#[allow(clippy::type_complexity, clippy::too_many_arguments)]
+fn run_chain_hop(
+    hop_job: &Job,
+    opts: &PlannerOptions,
+    control: &JobControl,
+    a: &Arc<Csr>,
+    b: &Arc<Csr>,
+    intermediate: Option<(Side, bool)>,
+    seed_core: Option<Arc<crate::engine::cost::ShapeCore>>,
+    first_cands: Option<Vec<Candidate>>,
+) -> Result<(HopResult, Csr, bool, Option<SimReport>), MlmemError> {
+    // Hop boundary: a cancelled or deadline-expired chain stops here
+    // with the typed error (mid-hop, the chunk drivers' checkpoints
+    // apply as usual).
+    control.checkpoint()?;
+    let arch = &hop_job.arch;
+    let usable = arch.spec.pools[FAST.0].usable();
+    let mut base = Problem::try_new(a, b)?.with_control(control.clone());
+    if let Some(core) = seed_core {
+        base = base.with_shape_core(core);
+    }
+    // Decide the intermediate's state for this hop: resident in fast
+    // (free when the producer left it there, one explicit promote
+    // otherwise), or pinned in the slow pool. A non-intermediate operand
+    // keeps the paper's pre-placed semantics.
+    let (residency, pinned, promote_report, pre_cands) = match intermediate {
+        // First hop of the chosen order: the pre-pass already enumerated
+        // its candidates (3-chains) — reuse them.
+        None => (Residency::NONE, Residency::NONE, None, first_cands),
+        Some((side, in_fast)) => {
+            let bytes = match side {
+                Side::A => a.size_bytes(),
+                Side::B => b.size_bytes(),
+            };
+            if bytes + ACC_SLACK > usable {
+                // Too big to stay resident: it is materialized in — and
+                // streams from — the slow pool.
+                (Residency::NONE, side.residency(), None, None)
+            } else if in_fast {
+                (side.residency(), Residency::NONE, None, None)
+            } else {
+                // The producing plan left the intermediate in the slow
+                // pool. Promote it with one bulk transfer when the
+                // predicted residency win covers the transfer. The
+                // winner's candidate enumeration is kept for the run.
+                let core = Arc::clone(base.shape_core());
+                let plain_problem = Problem::try_new(a, b)?
+                    .with_shape_core(Arc::clone(&core))
+                    .with_slow_pinned(side.residency());
+                let res_problem = Problem::try_new(a, b)?
+                    .with_shape_core(core)
+                    .with_residency(side.residency());
+                let plain_cands = spgemm_candidates(arch, &plain_problem, opts);
+                let res_cands = spgemm_candidates(arch, &res_problem, opts);
+                let plain = best_candidate_seconds(&plain_cands);
+                let res = best_candidate_seconds(&res_cands);
+                let mut sim = MemSim::new(arch.spec.clone());
+                sim.bulk_copy_pools(SLOW, FAST, bytes);
+                let promote = sim.finish();
+                if res + promote.seconds < plain {
+                    (side.residency(), Residency::NONE, Some(promote), Some(res_cands))
+                } else {
+                    (Residency::NONE, side.residency(), None, Some(plain_cands))
+                }
+            }
+        }
+    };
+    let promote_seconds = promote_report.as_ref().map(|r| r.seconds).unwrap_or(0.0);
+    let problem = base.with_residency(residency).with_slow_pinned(pinned);
+    // Explicit-policy chains plan per hop themselves; only Auto consumes
+    // the pre-enumerated candidates.
+    let pre = if matches!(hop_job.policy, Policy::Auto) { pre_cands } else { None };
+    let result = execute_spgemm_precomputed(hop_job, &problem, opts, pre)?;
+    let product = result.c.expect("chain hops keep their product");
+    let in_fast = product_stays_fast(arch, &result.decision)
+        && product.size_bytes() + ACC_SLACK <= usable;
+    let hop = HopResult {
+        label: format!(
+            "({}x{})·({}x{})",
+            a.nrows, a.ncols, b.nrows, b.ncols
+        ),
+        decision: result.decision,
+        report: result.report,
+        predicted: result.predicted,
+        candidates: result.candidates,
+        c_nnz: product.nnz(),
+        residency,
+        promote_seconds,
+    };
+    Ok((hop, product, in_fast, promote_report))
+}
+
+/// Fold several simulated reports (hops + inter-hop transfers) into one
+/// chain-level report: times, traffic, and fault counts add; the miss
+/// ratios are flop-weighted averages.
+fn combine_sim_reports(parts: &[&SimReport]) -> SimReport {
+    let first = parts.first().expect("at least one report");
+    let mut traffic = first.traffic.clone();
+    for part in &parts[1..] {
+        for (t, o) in traffic.iter_mut().zip(part.traffic.iter()) {
+            t.merge(o);
+        }
+    }
+    let flops: u64 = parts.iter().map(|r| r.flops).sum();
+    let seconds: f64 = parts.iter().map(|r| r.seconds).sum();
+    let sum = |f: fn(&SimReport) -> f64| parts.iter().map(|r| f(r)).sum::<f64>();
+    // Flop-weighted percentages (plain average when no flops ran).
+    let wavg = |f: fn(&SimReport) -> f64| {
+        if flops > 0 {
+            parts.iter().map(|r| f(r) * r.flops as f64).sum::<f64>() / flops as f64
+        } else {
+            sum(f) / parts.len() as f64
+        }
+    };
+    let mcdram: Vec<f64> = parts.iter().filter_map(|r| r.mcdram_miss_pct).collect();
+    SimReport {
+        machine: first.machine.clone(),
+        threads: first.threads,
+        flops,
+        seconds,
+        gflops: if seconds > 0.0 { flops as f64 / seconds / 1e9 } else { 0.0 },
+        compute_seconds: sum(|r: &SimReport| r.compute_seconds),
+        mem_seconds: sum(|r: &SimReport| r.mem_seconds),
+        copy_seconds: sum(|r: &SimReport| r.copy_seconds),
+        async_copy_seconds: sum(|r: &SimReport| r.async_copy_seconds),
+        overlap_stall_seconds: sum(|r: &SimReport| r.overlap_stall_seconds),
+        uvm_seconds: sum(|r: &SimReport| r.uvm_seconds),
+        l1_miss_pct: wavg(|r: &SimReport| r.l1_miss_pct),
+        l2_miss_pct: wavg(|r: &SimReport| r.l2_miss_pct),
+        traffic,
+        uvm_faults: parts.iter().map(|r| r.uvm_faults).sum(),
+        uvm_evictions: parts.iter().map(|r| r.uvm_evictions).sum(),
+        mcdram_miss_pct: (!mcdram.is_empty())
+            .then(|| mcdram.iter().sum::<f64>() / mcdram.len() as f64),
+    }
+}
+
 fn execute_tricount(
     job: &Job,
     adj: &crate::sparse::Csr,
@@ -435,6 +1029,7 @@ fn execute_tricount(
         triangles: Some(triangles),
         predicted: None,
         candidates: Vec::new(),
+        chain: None,
     })
 }
 

@@ -35,7 +35,7 @@
 //! assert_eq!(session.symbolic_passes(), 1);
 //! ```
 
-use super::job::{Job, JobKind, JobResult, Policy};
+use super::job::{ChainAssoc, Job, JobKind, JobResult, Policy};
 use super::planner::{self, PlannerOptions};
 use super::service::{JobHandle, Metrics, MetricsSnapshot};
 use crate::engine::cost::ShapeCore;
@@ -285,6 +285,79 @@ impl Session {
         })
     }
 
+    /// Execute a whole left-to-right product chain `M₁ × M₂ × ⋯ × Mₙ`
+    /// synchronously, planned as **one unit**: the planner sizes every
+    /// intermediate symbolically, picks the association order for
+    /// 3-chains by predicted cost, and keeps intermediates resident in
+    /// the fast pool between hops when they fit (promoting them with one
+    /// bulk transfer when that pays for itself). The result's
+    /// [`chain`](JobResult::chain) carries per-hop decisions, candidate
+    /// tables, and the chain's total predicted-vs-actual.
+    pub fn execute_chain(&self, handles: &[MatrixHandle]) -> Result<JobResult, MlmemError> {
+        let (mats, ops, ids) = self.resolve_chain(handles)?;
+        let id = self.next_job.fetch_add(1, Ordering::SeqCst);
+        let mut job = Job::new(
+            id,
+            JobKind::Chain { mats: mats.clone() },
+            Arc::clone(&self.arch),
+            self.default_policy,
+        );
+        job.keep_product = true;
+        let seeds = chain_pair_seeds(&self.shared, &ids, &ops);
+        let result =
+            planner::execute_chain_mats(&job, &mats, &JobControl::default(), &self.opts, &seeds)?;
+        record_chain_residency(&self.arch, &ops, &result);
+        Ok(result)
+    }
+
+    /// Submit a product chain asynchronously with per-job
+    /// policy/priority/deadline — cancellation and deadlines are
+    /// observed at every hop boundary (and at chunk boundaries within a
+    /// hop), failing with the typed [`MlmemError`].
+    pub fn chain_with(
+        &self,
+        handles: &[MatrixHandle],
+        options: SubmitOptions,
+    ) -> Result<JobHandle, MlmemError> {
+        let (mats, ops, ids) = self.resolve_chain(handles)?;
+        let kind = JobKind::Chain { mats: mats.clone() };
+        self.submit(kind, options, move |job, control, opts, shared| {
+            let seeds = chain_pair_seeds(shared, &ids, &ops);
+            let result = planner::execute_chain_mats(job, &mats, control, opts, &seeds)?;
+            record_chain_residency(&job.arch, &ops, &result);
+            Ok(result)
+        })
+    }
+
+    /// Resolve and shape-check a chain's handles, keeping the registry
+    /// operands so the pair cache and residency tracking stay wired in.
+    #[allow(clippy::type_complexity)]
+    fn resolve_chain(
+        &self,
+        handles: &[MatrixHandle],
+    ) -> Result<(Vec<Arc<Csr>>, Vec<Arc<Operand>>, Vec<u64>), MlmemError> {
+        if handles.len() < 2 {
+            return Err(MlmemError::Planner(
+                "a chain needs at least two operands".into(),
+            ));
+        }
+        let ops = handles
+            .iter()
+            .map(|&h| self.resolve(h))
+            .collect::<Result<Vec<_>, MlmemError>>()?;
+        let mats: Vec<Arc<Csr>> = ops.iter().map(|o| Arc::clone(&o.matrix)).collect();
+        for w in mats.windows(2) {
+            if w[0].ncols != w[1].nrows {
+                return Err(MlmemError::ShapeMismatch {
+                    a: (w[0].nrows, w[0].ncols),
+                    b: (w[1].nrows, w[1].ncols),
+                });
+            }
+        }
+        let ids = handles.iter().map(|h| h.id).collect();
+        Ok((mats, ops, ids))
+    }
+
     /// Submit a triangle count over a registered adjacency matrix.
     pub fn tricount(&self, adj: MatrixHandle) -> Result<JobHandle, MlmemError> {
         self.tricount_with(adj, SubmitOptions::default())
@@ -411,14 +484,13 @@ impl Session {
     }
 }
 
-/// Record the coarse residency the executed plan implies for each
-/// operand — what "where did my matrix end up" observability needs
-/// without keeping the simulator alive.
-fn record_residency(arch: &Arch, oa: &Operand, ob: &Operand, r: &JobResult) {
+/// Coarse per-operand locations a decision implies (where the plan read
+/// A and B from).
+fn plan_operand_locs(arch: &Arch, d: &super::job::Decision) -> (Location, Location) {
     use super::job::Decision;
     let fast = Location::Pool(FAST);
     let slow = Location::Pool(SLOW);
-    let (a_loc, b_loc) = match &r.decision {
+    match d {
         Decision::FlatDefault => (arch.default_loc, arch.default_loc),
         Decision::FlatFast => (fast, fast),
         // DP's headline move is B into fast memory; A streams from its
@@ -433,9 +505,69 @@ fn record_residency(arch: &Arch, oa: &Operand, ob: &Operand, r: &JobResult) {
             MachineKind::Knl => (slow, fast),
             MachineKind::Gpu => (fast, fast),
         },
-    };
+    }
+}
+
+/// Record the coarse residency the executed plan implies for each
+/// operand — what "where did my matrix end up" observability needs
+/// without keeping the simulator alive.
+fn record_residency(arch: &Arch, oa: &Operand, ob: &Operand, r: &JobResult) {
+    let (a_loc, b_loc) = plan_operand_locs(arch, &r.decision);
     *oa.residency.lock().expect("residency poisoned") = Some(a_loc);
     *ob.residency.lock().expect("residency poisoned") = Some(b_loc);
+}
+
+/// The registry's pair-cache seeds for a chain's adjacent operand pairs:
+/// the first pair always (it is the first hop of a left fold), the
+/// second pair only for 3-chains (the right fold's first hop). Later
+/// pairs are never multiplied directly — left-fold hops past the first
+/// consume intermediates — so computing their cores would be waste.
+fn chain_pair_seeds(
+    shared: &Shared,
+    ids: &[u64],
+    ops: &[Arc<Operand>],
+) -> Vec<Option<Arc<ShapeCore>>> {
+    let mut seeds = vec![None; ops.len().saturating_sub(1)];
+    seeds[0] = Some(shared.shape_core_for((ids[0], ids[1]), &ops[0], &ops[1]));
+    if ops.len() == 3 {
+        seeds[1] = Some(shared.shape_core_for((ids[1], ids[2]), &ops[1], &ops[2]));
+    }
+    seeds
+}
+
+/// Chain flavour of [`record_residency`]: map every registered operand
+/// to the hop side that consumed it under the chosen association order.
+fn record_chain_residency(arch: &Arch, ops: &[Arc<Operand>], result: &JobResult) {
+    let Some(chain) = result.chain.as_ref() else { return };
+    let set = |op: &Operand, loc: Location| {
+        *op.residency.lock().expect("residency poisoned") = Some(loc);
+    };
+    match chain.assoc {
+        ChainAssoc::LeftFold => {
+            if let Some(h0) = chain.hops.first() {
+                let (a_loc, b_loc) = plan_operand_locs(arch, &h0.decision);
+                set(&ops[0], a_loc);
+                set(&ops[1], b_loc);
+            }
+            // Hop i (i ≥ 1) consumes the intermediate on the A side and
+            // operand i+1 on the B side.
+            for (i, hop) in chain.hops.iter().enumerate().skip(1) {
+                let (_, b_loc) = plan_operand_locs(arch, &hop.decision);
+                set(&ops[i + 1], b_loc);
+            }
+        }
+        ChainAssoc::RightFold => {
+            if let Some(h0) = chain.hops.first() {
+                let (a_loc, b_loc) = plan_operand_locs(arch, &h0.decision);
+                set(&ops[1], a_loc);
+                set(&ops[2], b_loc);
+            }
+            if let Some(h1) = chain.hops.get(1) {
+                let (a_loc, _) = plan_operand_locs(arch, &h1.decision);
+                set(&ops[0], a_loc);
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -3,12 +3,12 @@
 //! copies are serial with compute — the baseline the pipelined engine is
 //! judged against.
 
-use super::cost::{gpu_chunked_estimate, knl_chunked_estimate, CostEstimate, ProblemShape};
+use super::cost::{gpu_chunked_estimate_res, knl_chunked_estimate_res, CostEstimate, ProblemShape};
 use super::{Engine, EngineReport, ExecPlan, Problem};
-use crate::chunk::gpu::gpu_chunked_sim_forced;
+use crate::chunk::gpu::gpu_chunked_sim_forced_res;
 use crate::chunk::heuristic::GpuChunkAlgo;
 use crate::chunk::knl::ChunkedProduct;
-use crate::chunk::knl_chunked_sim;
+use crate::chunk::knl_chunked_sim_res;
 use crate::chunk::partition::{csr_prefix_bytes, partition_balanced};
 use crate::error::{JobControl, MlmemError};
 use crate::kkmem::SpgemmOptions;
@@ -24,6 +24,10 @@ fn effective_budget(arch: &Arch, fast_budget: Option<u64>) -> u64 {
 }
 
 fn estimate_b_parts(p: &Problem, budget: u64) -> usize {
+    // A fast-resident B is consumed in place: one pass by construction.
+    if p.residency.b {
+        return 1;
+    }
     let prefix = csr_prefix_bytes(p.b);
     partition_balanced(&prefix, budget.max(1)).len()
 }
@@ -79,27 +83,29 @@ impl Engine for KnlChunkEngine {
             pipelined: false,
             est_parts: estimate_b_parts(p, budget),
             gpu_algo: None,
+            resident: p.residency,
         })
     }
 
     fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<CostEstimate, MlmemError> {
-        let ExecPlan::Chunked { fast_budget, pipelined: false, .. } = plan else {
+        let ExecPlan::Chunked { fast_budget, pipelined: false, resident, .. } = plan else {
             return Err(MlmemError::Planner(
                 "knl-chunk engine got an incompatible plan".into(),
             ));
         };
         let shape = ProblemShape::measure(p, &self.opts, &self.arch.spec);
-        Ok(knl_chunked_estimate(&self.arch.spec, &shape, *fast_budget, false))
+        Ok(knl_chunked_estimate_res(&self.arch.spec, &shape, *fast_budget, false, *resident))
     }
 
     fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, MlmemError> {
-        let ExecPlan::Chunked { fast_budget, pipelined: false, .. } = plan else {
+        let ExecPlan::Chunked { fast_budget, pipelined: false, resident, .. } = plan else {
             return Err(MlmemError::Planner(
                 "knl-chunk engine got an incompatible plan".into(),
             ));
         };
+        let resident = *resident;
         chunk_report(self.name(), &self.arch, &p.control, |sim| {
-            knl_chunked_sim(sim, p.a, p.b, *fast_budget, &self.opts)
+            knl_chunked_sim_res(sim, p.a, p.b, *fast_budget, &self.opts, resident)
         })
     }
 }
@@ -138,29 +144,39 @@ impl Engine for GpuChunkEngine {
             pipelined: false,
             est_parts: estimate_b_parts(p, budget),
             gpu_algo: self.force_algo,
+            resident: p.residency,
         })
     }
 
     fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<CostEstimate, MlmemError> {
-        let ExecPlan::Chunked { fast_budget, pipelined: false, gpu_algo, .. } = plan else {
+        let ExecPlan::Chunked { fast_budget, pipelined: false, gpu_algo, resident, .. } = plan
+        else {
             return Err(MlmemError::Planner(
                 "gpu-chunk engine got an incompatible plan".into(),
             ));
         };
         let shape = ProblemShape::measure(p, &self.opts, &self.arch.spec);
-        let (_, est) =
-            gpu_chunked_estimate(&self.arch.spec, &shape, *fast_budget, false, *gpu_algo);
+        let (_, est) = gpu_chunked_estimate_res(
+            &self.arch.spec,
+            &shape,
+            *fast_budget,
+            false,
+            *gpu_algo,
+            *resident,
+        );
         Ok(est)
     }
 
     fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, MlmemError> {
-        let ExecPlan::Chunked { fast_budget, pipelined: false, gpu_algo, .. } = plan else {
+        let ExecPlan::Chunked { fast_budget, pipelined: false, gpu_algo, resident, .. } = plan
+        else {
             return Err(MlmemError::Planner(
                 "gpu-chunk engine got an incompatible plan".into(),
             ));
         };
+        let resident = *resident;
         chunk_report(self.name(), &self.arch, &p.control, |sim| {
-            gpu_chunked_sim_forced(sim, p.a, p.b, *fast_budget, &self.opts, *gpu_algo)
+            gpu_chunked_sim_forced_res(sim, p.a, p.b, *fast_budget, &self.opts, *gpu_algo, resident)
         })
     }
 }

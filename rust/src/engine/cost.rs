@@ -31,7 +31,7 @@ use crate::memory::alloc::Location;
 use crate::memory::machine::{lane_efficiency, MachineSpec};
 use crate::memory::pool::{FAST, SLOW};
 
-use super::Problem;
+use super::{Problem, Residency};
 
 /// 64 B cache-line granularity of the simulator's demand traffic.
 const LINE: u64 = 64;
@@ -111,6 +111,13 @@ impl ShapeCore {
             b_prefix: std::sync::Arc::new(b_prefix),
             ac_prefix: std::sync::Arc::new(ac_prefix),
         }
+    }
+
+    /// `(a_bytes, b_bytes, c_bytes)` totals of the summary — what the
+    /// chain planner reads to size intermediates without re-running the
+    /// symbolic pass.
+    pub(crate) fn totals(&self) -> (u64, u64, u64) {
+        (self.a_bytes, self.b_bytes, self.c_bytes)
     }
 }
 
@@ -227,19 +234,33 @@ pub fn placed_estimate(
     shape: &ProblemShape,
     placement: &Placement,
 ) -> CostEstimate {
+    placed_estimate_res(spec, shape, placement, Residency::NONE)
+}
+
+/// [`placed_estimate`] with a residency input: a fast-resident operand's
+/// traffic lands in the fast pool regardless of the nominal placement,
+/// and it contributes no UVM migration (it is physically in HBM).
+pub fn placed_estimate_res(
+    spec: &MachineSpec,
+    shape: &ProblemShape,
+    placement: &Placement,
+    residency: Residency,
+) -> CostEstimate {
     let mut loads = vec![PoolLoad::default(); spec.pools.len()];
-    loads[pool_of(placement.a)].add_seq_read(shape.a_bytes);
+    let a_pool = if residency.a { FAST.0 } else { pool_of(placement.a) };
+    let b_pool = if residency.b { FAST.0 } else { pool_of(placement.b) };
+    loads[a_pool].add_seq_read(shape.a_bytes);
     // C is written once (write-allocate) and flushed once.
     loads[pool_of(placement.c)].add_seq_write(2 * shape.c_bytes);
-    loads[pool_of(placement.b)].add_rand_read(shape.touched_b());
+    loads[b_pool].add_rand_read(shape.touched_b());
     let managed_bytes: u64 = [
-        (placement.a, shape.a_bytes),
-        (placement.b, shape.b_bytes),
-        (placement.c, shape.c_bytes),
+        (placement.a, shape.a_bytes, residency.a),
+        (placement.b, shape.b_bytes, residency.b),
+        (placement.c, shape.c_bytes, false),
     ]
     .iter()
-    .filter(|(loc, _)| *loc == Location::Managed)
-    .map(|&(_, bytes)| bytes)
+    .filter(|(loc, _, resident)| *loc == Location::Managed && !resident)
+    .map(|&(_, bytes, _)| bytes)
     .sum();
     let uvm_seconds = match &spec.uvm {
         Some(u) if managed_bytes > 0 => {
@@ -274,24 +295,55 @@ pub fn knl_chunked_estimate(
     fast_budget: u64,
     pipelined: bool,
 ) -> CostEstimate {
+    knl_chunked_estimate_res(spec, shape, fast_budget, pipelined, Residency::NONE)
+}
+
+/// [`knl_chunked_estimate`] with a residency input, mirroring
+/// `knl_chunked_sim_res`: a fast-resident B is consumed in place (one
+/// pass, no staging copy), and a fast-resident A is rescanned from the
+/// fast pool while shrinking the staging arena by its footprint.
+pub fn knl_chunked_estimate_res(
+    spec: &MachineSpec,
+    shape: &ProblemShape,
+    fast_budget: u64,
+    pipelined: bool,
+    residency: Residency,
+) -> CostEstimate {
     let usable = spec.pools[FAST.0].usable();
-    let budget = fast_budget.min(usable).max(1);
+    let resident_a = residency.a && shape.a_bytes + 8 <= usable;
+    let resident_b = residency.b && shape.b_bytes + 8 <= usable;
+    // A resident A occupies fast-pool space the staging arena cannot use
+    // — the same reduction the drivers apply.
+    let arena = usable.saturating_sub(if resident_a { shape.a_bytes + 8 } else { 0 }).max(1);
+    let budget = fast_budget.min(arena).max(1);
     // Pipelined keeps two staging buffers live: same cut rule as
     // `knl_pipelined_sim`.
-    let cut = if pipelined { budget.min((usable / 2).max(1)) } else { budget };
-    let passes = partition_balanced(&shape.b_prefix, cut).len();
+    let pipelined = pipelined && !resident_b;
+    let cut = if pipelined { budget.min((arena / 2).max(1)) } else { budget };
+    let passes = if resident_b {
+        1
+    } else {
+        partition_balanced(&shape.b_prefix, cut).len()
+    };
     let p = passes as u64;
     let mut loads = vec![PoolLoad::default(); spec.pools.len()];
     // Every pass rescans A and reads the previous partial; the growing
     // partial C is rewritten each pass. Averaged over the growth, the
     // partial traffic sums to roughly `c` read+write bytes per pass.
-    loads[SLOW.0].add_seq_read(p * shape.a_bytes + p * shape.c_bytes / 2);
+    let a_pool = if resident_a { FAST.0 } else { SLOW.0 };
+    loads[a_pool].add_seq_read(p * shape.a_bytes);
+    loads[SLOW.0].add_seq_read(p * shape.c_bytes / 2);
     loads[SLOW.0].add_seq_write(p * shape.c_bytes / 2 + shape.c_bytes);
     loads[FAST.0].add_rand_read(shape.touched_b());
     let kernel = kernel_seconds(spec, shape, &loads);
-    // B crosses once in bulk; each pass pays per-region transfer latency.
-    let copy = spec.bulk_copy_seconds(SLOW, FAST, shape.b_bytes)
-        + (3 * p).saturating_sub(1) as f64 * spec.pools[SLOW.0].latency_s;
+    // B crosses once in bulk (unless already resident); each pass pays
+    // per-region transfer latency.
+    let copy = if resident_b {
+        0.0
+    } else {
+        spec.bulk_copy_seconds(SLOW, FAST, shape.b_bytes)
+            + (3 * p).saturating_sub(1) as f64 * spec.pools[SLOW.0].latency_s
+    };
     pipeline_split(kernel, copy, 0.0, passes, pipelined)
 }
 
@@ -305,19 +357,48 @@ pub fn gpu_chunked_estimate(
     pipelined: bool,
     force: Option<GpuChunkAlgo>,
 ) -> (GpuChunkAlgo, CostEstimate) {
-    let usable = spec.pools[FAST.0]
-        .usable()
+    gpu_chunked_estimate_res(spec, shape, fast_budget, pipelined, force, Residency::NONE)
+}
+
+/// [`gpu_chunked_estimate`] with a residency input, mirroring
+/// `gpu_chunked_sim_forced_res` / `plan_for_res`: a fast-resident
+/// operand's bytes come off the staging budget and its copy-in is
+/// dropped from the transfer bill; a resident B pins Algorithm 3 with B
+/// unsplit.
+pub fn gpu_chunked_estimate_res(
+    spec: &MachineSpec,
+    shape: &ProblemShape,
+    fast_budget: u64,
+    pipelined: bool,
+    force: Option<GpuChunkAlgo>,
+    residency: Residency,
+) -> (GpuChunkAlgo, CostEstimate) {
+    let pool_usable = spec.pools[FAST.0].usable();
+    let resident_a = residency.a && shape.a_bytes + 8 <= pool_usable;
+    let resident_b = residency.b && shape.b_bytes + 8 <= pool_usable;
+    let usable = pool_usable
         .min(fast_budget)
         .saturating_sub(shape.acc_bytes)
+        .saturating_sub(if resident_a { shape.a_bytes + 8 } else { 0 })
+        .saturating_sub(if resident_b { shape.b_bytes + 8 } else { 0 })
         .max(1);
-    let plan = plan_gpu_chunks_with(
-        &shape.ac_prefix,
-        &shape.b_prefix,
-        shape.a_bytes,
-        shape.c_bytes,
-        usable,
-        force,
-    );
+    let plan = if resident_b {
+        crate::chunk::heuristic::GpuChunkPlan {
+            algo: GpuChunkAlgo::BResident,
+            p_ac: partition_balanced(&shape.ac_prefix, usable),
+            p_b: vec![(0, shape.b_prefix.len() - 1)],
+            predicted_copy_bytes: shape.a_bytes.saturating_add(shape.c_bytes),
+        }
+    } else {
+        plan_gpu_chunks_with(
+            &shape.ac_prefix,
+            &shape.b_prefix,
+            shape.a_bytes,
+            shape.c_bytes,
+            usable,
+            force,
+        )
+    };
     let max_part = |prefix: &[u64], parts: &[(usize, usize)]| {
         parts.iter().map(|&(lo, hi)| range_bytes(prefix, lo, hi)).max().unwrap_or(0)
     };
@@ -334,7 +415,9 @@ pub fn gpu_chunked_estimate(
                 }
             }
             GpuChunkAlgo::BResident => {
-                let left = usable.saturating_sub(max_part(&shape.b_prefix, &plan.p_b)).max(1);
+                let staged_b =
+                    if resident_b { 0 } else { max_part(&shape.b_prefix, &plan.p_b) };
+                let left = usable.saturating_sub(staged_b).max(1);
                 if 2 * max_part(&shape.ac_prefix, &plan.p_ac) > left {
                     n_ac = partition_balanced(&shape.ac_prefix, (left / 2).max(1)).len() as u64;
                 }
@@ -352,17 +435,17 @@ pub fn gpu_chunked_estimate(
     let kernel = kernel_seconds(spec, shape, &loads);
     // Copy traffic per the Algorithm 2/3 drivers: the streamed side is
     // what double buffering can hide; resident staging and partial
-    // copy-outs stay serial.
+    // copy-outs stay serial. Fast-resident operands cross nothing.
     let (streamed_in, resident_in, out) = match plan.algo {
-        GpuChunkAlgo::AcResident => {
-            (shape.b_bytes.saturating_mul(n_ac), shape.a_bytes, shape.c_bytes)
-        }
+        GpuChunkAlgo::AcResident => (
+            shape.b_bytes.saturating_mul(n_ac),
+            if resident_a { 0 } else { shape.a_bytes },
+            shape.c_bytes,
+        ),
         GpuChunkAlgo::BResident => (
-            shape
-                .a_bytes
-                .saturating_mul(n_b)
+            (if resident_a { 0 } else { shape.a_bytes.saturating_mul(n_b) })
                 .saturating_add(shape.c_bytes.saturating_mul(n_b.saturating_sub(1))),
-            shape.b_bytes,
+            if resident_b { 0 } else { shape.b_bytes },
             shape.c_bytes.saturating_mul(n_b),
         ),
     };

@@ -29,9 +29,42 @@ pub use chunked::{GpuChunkEngine, KnlChunkEngine};
 pub use cost::{CostEstimate, ProblemShape};
 pub use native::{pipelined_spgemm_native, NativeEngine};
 pub use pipelined::{
-    gpu_pipelined_sim, gpu_pipelined_sim_forced, knl_pipelined_sim, PipelinedChunkEngine,
+    gpu_pipelined_sim, gpu_pipelined_sim_forced, gpu_pipelined_sim_forced_res,
+    knl_pipelined_sim, knl_pipelined_sim_res, PipelinedChunkEngine,
 };
 pub use sim::SimEngine;
+
+/// Which operands of a multiplication are **already resident in the
+/// fast pool** when the engine starts — the chain executor's way of
+/// telling hop `k+1` that hop `k`'s product never left fast memory.
+/// Engines honor a resident operand by placing it in the fast pool and
+/// skipping its bulk copy-in (serial and pipelined chunk drivers alike);
+/// the simulator then charges neither the staging transfer nor slow-pool
+/// demand traffic for it. The default (`false`, `false`) keeps the
+/// paper's single-multiply semantics: operands live wherever the plan
+/// places them, with no residency assumption.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Residency {
+    /// The left operand `A` is already in the fast pool.
+    pub a: bool,
+    /// The right operand `B` is already in the fast pool.
+    pub b: bool,
+}
+
+impl Residency {
+    /// No operand resident (the single-multiply default).
+    pub const NONE: Residency = Residency { a: false, b: false };
+
+    /// Residency for a chain hop whose left operand is the intermediate.
+    pub const A_FAST: Residency = Residency { a: true, b: false };
+
+    /// Residency for a chain hop whose right operand is the intermediate.
+    pub const B_FAST: Residency = Residency { a: false, b: true };
+
+    pub fn any(&self) -> bool {
+        self.a || self.b
+    }
+}
 
 /// One multiplication `C = A × B` as the engines see it. Carries a lazy
 /// cache of the machine-independent symbolic summary so that scoring
@@ -40,13 +73,24 @@ pub use sim::SimEngine;
 /// [`Session`](crate::coordinator::Session) pre-seeds the cell from its
 /// operand registry so repeated jobs never repeat the pass at all. The
 /// attached [`JobControl`] is polled by the chunk drivers at chunk
-/// boundaries, making long staged runs cancellable mid-flight.
+/// boundaries, making long staged runs cancellable mid-flight. The
+/// [`Residency`] input marks operands already sitting in the fast pool
+/// (chain hops); engines fold it into their plans.
 pub struct Problem<'a> {
     pub a: &'a Csr,
     pub b: &'a Csr,
     /// Cooperative cancellation/deadline token for this run (defaults
     /// to a token that never trips).
     pub control: JobControl,
+    /// Operands already resident in the fast pool at run start.
+    pub residency: Residency,
+    /// Operands physically materialized in the **slow** pool (a chain
+    /// intermediate the executor decided not to promote): the planner
+    /// may not enumerate plans that teleport such an operand into a fast
+    /// placement for free — moving it costs an explicit promote, which
+    /// is the chain executor's decision, not a candidate's. Default
+    /// none: single multiplies keep the paper's pre-placed semantics.
+    pub slow_pinned: Residency,
     pub(crate) shape_core: std::cell::OnceCell<Arc<cost::ShapeCore>>,
 }
 
@@ -69,6 +113,8 @@ impl<'a> Problem<'a> {
             a,
             b,
             control: JobControl::default(),
+            residency: Residency::NONE,
+            slow_pinned: Residency::NONE,
             shape_core: std::cell::OnceCell::new(),
         })
     }
@@ -76,6 +122,20 @@ impl<'a> Problem<'a> {
     /// Attach a cancellation/deadline token observed at chunk boundaries.
     pub fn with_control(mut self, control: JobControl) -> Self {
         self.control = control;
+        self
+    }
+
+    /// Mark operands as already resident in the fast pool (chain hops).
+    pub fn with_residency(mut self, residency: Residency) -> Self {
+        self.residency = residency;
+        self
+    }
+
+    /// Mark operands as physically materialized in the slow pool (a
+    /// chain intermediate left unpromoted): candidate plans may not
+    /// place them in fast memory for free.
+    pub fn with_slow_pinned(mut self, pinned: Residency) -> Self {
+        self.slow_pinned = pinned;
         self
     }
 
@@ -106,12 +166,15 @@ pub enum ExecPlan {
     /// selects the double-buffered executor; `est_parts` is the planner's
     /// B-partition estimate (the driver may refine it); `gpu_algo` pins
     /// the GPU loop order when the planner scored a specific one (`None`
-    /// lets Algorithm 4 choose; ignored on KNL machines).
+    /// lets Algorithm 4 choose; ignored on KNL machines); `resident`
+    /// records which operands the plan assumes are already in the fast
+    /// pool — the driver skips their bulk copy-in.
     Chunked {
         fast_budget: u64,
         pipelined: bool,
         est_parts: usize,
         gpu_algo: Option<GpuChunkAlgo>,
+        resident: Residency,
     },
 }
 

@@ -20,10 +20,10 @@
 //! The native analogue (prefetch thread) is
 //! [`super::native::pipelined_spgemm_native`].
 
-use super::{Engine, EngineReport, ExecPlan, Problem};
+use super::{Engine, EngineReport, ExecPlan, Problem, Residency};
 use crate::chunk::gpu::{
-    c_prefix_from_sizes, free_regions, gpu_chunked_sim, plan_for, run_block, stage_slice,
-    stage_slice_async, CsrRegions, Staged,
+    c_prefix_from_sizes, free_regions, gpu_chunked_sim_forced_res, plan_for_res, run_block,
+    stage_slice, stage_slice_async, CsrRegions, Staged,
 };
 use crate::chunk::heuristic::GpuChunkAlgo;
 use crate::chunk::knl::ChunkedProduct;
@@ -65,21 +65,45 @@ pub fn knl_pipelined_sim(
     fast_budget: u64,
     opts: &SpgemmOptions,
 ) -> Result<ChunkedProduct, MlmemError> {
+    knl_pipelined_sim_res(sim, a, b, fast_budget, opts, Residency::NONE)
+}
+
+/// [`knl_pipelined_sim`] with a residency input (chain hops). A
+/// fast-resident `B` leaves nothing to double-buffer — it is consumed in
+/// place through the serial driver's resident path — and a resident `A`
+/// is read from the fast pool while B chunks still pipeline past it.
+pub fn knl_pipelined_sim_res(
+    sim: &mut MemSim,
+    a: &Csr,
+    b: &Csr,
+    fast_budget: u64,
+    opts: &SpgemmOptions,
+    residency: Residency,
+) -> Result<ChunkedProduct, MlmemError> {
     assert_eq!(a.ncols, b.nrows, "spgemm shape mismatch");
+    let usable_pool = sim.spec.pools[FAST.0].usable();
+    if residency.b && b.size_bytes() <= usable_pool {
+        // No staging transfers remain to overlap: run the resident
+        // serial path (identical product, identical time).
+        return crate::chunk::knl_chunked_sim_res(sim, a, b, fast_budget, opts, residency);
+    }
+    let resident_a = residency.a && a.size_bytes() <= usable_pool;
     sim.set_compute_efficiency(crate::memory::machine::lane_efficiency(
         a.avg_degree(),
         b.avg_degree(),
     ));
-    let fast_budget = fast_budget.min(sim.spec.pools[FAST.0].usable());
+    let fast_budget = fast_budget.min(usable_pool);
     let b_comp = CompressedMatrix::compress(b);
     let sizes = symbolic(a, &b_comp);
     let final_rowmap = rowmap_from_sizes(&sizes);
     let final_nnz = *final_rowmap.last().expect("rowmap nonempty");
     let row_ub = max_row_upper_bound(a, b);
 
-    // Slow-pool residents: A, B, and ping-pong C buffers (as Algorithm 1).
+    // Slow-pool residents: A, B, and ping-pong C buffers (as Algorithm 1;
+    // a chain hop's fast-resident A stays in the fast pool instead).
     let slow = Location::Pool(SLOW);
-    let (a_rm, a_en, a_va) = alloc_csr_regions(sim, "A", a, slow)?;
+    let a_loc = if resident_a { Location::Pool(FAST) } else { slow };
+    let (a_rm, a_en, a_va) = alloc_csr_regions(sim, "A", a, a_loc)?;
     let b_src: CsrRegions = alloc_csr_regions(sim, "B", b, slow)?;
     let c_cur = alloc_csr_regions_sized(sim, "C.cur", a.nrows, final_nnz, slow)?;
     let c_prev = alloc_csr_regions_sized(sim, "C.prev", a.nrows, final_nnz, slow)?;
@@ -95,7 +119,11 @@ pub fn knl_pipelined_sim(
     // entire win comes from overlapping the staging transfers. Extra
     // passes are never free in Algorithm 1 (each re-processes the whole
     // partial C), so the cut is only tightened when capacity forces it.
-    let usable = sim.spec.pools[FAST.0].usable();
+    // A resident A occupies fast-pool space the staging arena cannot use.
+    let usable = sim.spec.pools[FAST.0]
+        .usable()
+        .saturating_sub(if resident_a { a.size_bytes() } else { 0 })
+        .max(1);
     let chunk_budget = fast_budget.min((usable / 2).max(1));
     let parts = partition_balanced(&prefix, chunk_budget.max(1));
     let mut acc = PooledAcc::build_wrapped(
@@ -123,7 +151,7 @@ pub fn knl_pipelined_sim(
             // the serial driver would.
             None => stage_slice(sim, &format!("FastB.{pass}"), b, b_src, lo, hi)?,
         };
-        copied_bytes += cur.csr.size_bytes();
+        copied_bytes += cur.transferred;
         // Opportunistic prefetch: the next chunk's transfer rides the
         // overlap stream while this chunk multiplies — but only when the
         // pool has room for both buffers (checked up front so a failed
@@ -204,9 +232,9 @@ pub fn knl_pipelined_sim(
 /// the FC block with the previous partial copied in. Returns the staged
 /// pair and the bytes charged to `copied_bytes`.
 #[allow(clippy::too_many_arguments)]
-fn stage_ac_pair(
+fn stage_ac_pair<'m>(
     sim: &mut MemSim,
-    a: &Csr,
+    a: &'m Csr,
     a_reg: CsrRegions,
     c_reg: CsrRegions,
     c_sizes: &[usize],
@@ -215,13 +243,13 @@ fn stage_ac_pair(
     (alo, ahi): (usize, usize),
     tag: &str,
     overlap: bool,
-) -> Result<(Staged, CsrRegions, u64), AllocError> {
+) -> Result<(Staged<'m>, CsrRegions, u64), AllocError> {
     let fa = if overlap {
         stage_slice_async(sim, &format!("FA.{tag}"), a, a_reg, alo, ahi)?
     } else {
         stage_slice(sim, &format!("FA.{tag}"), a, a_reg, alo, ahi)?
     };
-    let mut copied = fa.csr.size_bytes();
+    let mut copied = fa.transferred;
     let c_block_nnz: usize = c_sizes[alo..ahi].iter().sum();
     let fc = alloc_csr_regions_sized(sim, &format!("FC.{tag}"), ahi - alo, c_block_nnz, Location::Pool(FAST))?;
     let rm_bytes = (ahi - alo + 1) as u64 * 8;
@@ -248,7 +276,7 @@ fn stage_ac_pair(
 }
 
 /// Simulated Algorithms 2–3 with the inner streamed matrix
-/// double-buffered. Same product as [`gpu_chunked_sim`] up to
+/// double-buffered. Same product as [`crate::chunk::gpu_chunked_sim`] up to
 /// chunk-split rounding; lower simulated time whenever block kernels
 /// have compute to hide the staging transfers behind.
 pub fn gpu_pipelined_sim(
@@ -271,27 +299,49 @@ pub fn gpu_pipelined_sim_forced(
     opts: &SpgemmOptions,
     force: Option<GpuChunkAlgo>,
 ) -> Result<ChunkedProduct, MlmemError> {
+    gpu_pipelined_sim_forced_res(sim, a, b, fast_budget, opts, force, Residency::NONE)
+}
+
+/// [`gpu_pipelined_sim_forced`] with a residency input (chain hops): a
+/// fast-resident operand's staging copies are skipped, with a resident
+/// `B` consumed in place through Algorithm 3 while the A/C blocks still
+/// double-buffer past it.
+pub fn gpu_pipelined_sim_forced_res(
+    sim: &mut MemSim,
+    a: &Csr,
+    b: &Csr,
+    fast_budget: u64,
+    opts: &SpgemmOptions,
+    force: Option<GpuChunkAlgo>,
+    residency: Residency,
+) -> Result<ChunkedProduct, MlmemError> {
     assert_eq!(a.ncols, b.nrows, "spgemm shape mismatch");
     sim.set_compute_efficiency(crate::memory::machine::lane_efficiency(
         a.avg_degree(),
         b.avg_degree(),
     ));
+    let pool_usable = sim.spec.pools[FAST.0].usable();
+    let residency = Residency {
+        a: residency.a && a.size_bytes() <= pool_usable,
+        b: residency.b && b.size_bytes() <= pool_usable,
+    };
     let row_ub = max_row_upper_bound(a, b);
     let acc_wrap = acc_trace_wrap(sim);
     let acc_bytes = acc_region_bytes(opts.acc.footprint_bytes(row_ub, b.ncols), acc_wrap);
-    let (mut plan, c_sizes) = plan_for(sim, a, b, fast_budget, acc_bytes, force);
+    let (mut plan, c_sizes) = plan_for_res(sim, a, b, fast_budget, acc_bytes, force, residency);
     if plan.p_ac.len() * plan.p_b.len() <= 1 {
         // Whole problem fits the fast pool: nothing to pipeline.
-        return gpu_chunked_sim(sim, a, b, fast_budget, opts);
+        return gpu_chunked_sim_forced_res(sim, a, b, fast_budget, opts, force, residency);
     }
     let c_prefix = c_prefix_from_sizes(&c_sizes);
     let a_prefix = csr_prefix_bytes(a);
     let ac_prefix = sum_prefixes(&a_prefix, &c_prefix);
     let b_prefix = csr_prefix_bytes(b);
-    let usable = sim.spec.pools[FAST.0]
-        .usable()
+    let usable = pool_usable
         .min(fast_budget)
         .saturating_sub(acc_bytes)
+        .saturating_sub(if residency.a { a.size_bytes() } else { 0 })
+        .saturating_sub(if residency.b { b.size_bytes() } else { 0 })
         .max(1);
     // Re-cut the streamed side only when two of its buffers do not fit
     // the space left by the resident side.
@@ -305,19 +355,22 @@ pub fn gpu_pipelined_sim_forced(
             }
         }
         GpuChunkAlgo::BResident => {
-            let leftover = usable
-                .saturating_sub(max_part(&b_prefix, &plan.p_b))
-                .max(1);
+            // A fast-resident B sits outside the staging arena: the whole
+            // remaining budget belongs to the streamed A/C pairs.
+            let staged_b = if residency.b { 0 } else { max_part(&b_prefix, &plan.p_b) };
+            let leftover = usable.saturating_sub(staged_b).max(1);
             if 2 * max_part(&ac_prefix, &plan.p_ac) > leftover {
                 plan.p_ac = partition_balanced(&ac_prefix, (leftover / 2).max(1));
             }
         }
     }
 
-    // Host (slow) residents.
+    // Host (slow) residents; a chain hop's fast-resident operand stays
+    // in the fast pool instead.
     let slow = Location::Pool(SLOW);
-    let a_reg = alloc_csr_regions(sim, "A", a, slow)?;
-    let b_reg = alloc_csr_regions(sim, "B", b, slow)?;
+    let fast = Location::Pool(FAST);
+    let a_reg = alloc_csr_regions(sim, "A", a, if residency.a { fast } else { slow })?;
+    let b_reg = alloc_csr_regions(sim, "B", b, if residency.b { fast } else { slow })?;
     let c_nnz: usize = c_sizes.iter().sum();
     let c_reg = alloc_csr_regions_sized(sim, "C", a.nrows, c_nnz, slow)?;
     // Device-global accumulator (second level).
@@ -342,7 +395,7 @@ pub fn gpu_pipelined_sim_forced(
             for (ai, &(alo, ahi)) in plan.p_ac.iter().enumerate() {
                 sim.checkpoint()?;
                 let fa = stage_slice(sim, &format!("FA.{ai}"), a, a_reg, alo, ahi)?;
-                copied_bytes += fa.csr.size_bytes();
+                copied_bytes += fa.transferred;
                 let c_block_nnz: usize = c_sizes[alo..ahi].iter().sum();
                 let fc = alloc_csr_regions_sized(
                     sim,
@@ -378,7 +431,7 @@ pub fn gpu_pipelined_sim_forced(
                             bhi,
                         )?,
                     };
-                    copied_bytes += fb.csr.size_bytes();
+                    copied_bytes += fb.transferred;
                     if bi + 1 < plan.p_b.len() {
                         let (nlo, nhi) = plan.p_b[bi + 1];
                         let need = range_bytes(&b_prefix, nlo, nhi) + 24;
@@ -427,8 +480,16 @@ pub fn gpu_pipelined_sim_forced(
             let mut partials: Vec<Option<Csr>> = vec![None; plan.p_ac.len()];
             for (bi, &(blo, bhi)) in plan.p_b.iter().enumerate() {
                 sim.checkpoint()?;
-                let fb = stage_slice(sim, &format!("FB.{bi}"), b, b_reg, blo, bhi)?;
-                copied_bytes += fb.csr.size_bytes();
+                // A fast-resident B is consumed in place: its backing
+                // regions ARE the staged chunk (one unsplit part), and
+                // the CSR view is a borrow — no clone of B.
+                let fb = if residency.b {
+                    debug_assert_eq!((blo, bhi), (0, b.nrows));
+                    Staged { regions: b_reg, csr: std::borrow::Cow::Borrowed(b), transferred: 0 }
+                } else {
+                    stage_slice(sim, &format!("FB.{bi}"), b, b_reg, blo, bhi)?
+                };
+                copied_bytes += fb.transferred;
                 let mut staged_pair = Some(stage_ac_pair(
                     sim,
                     a,
@@ -501,7 +562,9 @@ pub fn gpu_pipelined_sim_forced(
                     free_regions(sim, fa.regions);
                     free_regions(sim, fc);
                 }
-                free_regions(sim, fb.regions);
+                if !residency.b {
+                    free_regions(sim, fb.regions);
+                }
             }
             for (ai, p) in partials.into_iter().enumerate() {
                 let (alo, ahi) = plan.p_ac[ai];
@@ -552,42 +615,51 @@ impl Engine for PipelinedChunkEngine {
 
     fn plan(&self, p: &Problem) -> Result<ExecPlan, MlmemError> {
         let budget = self.budget();
-        let prefix = csr_prefix_bytes(p.b);
-        // Same cut rule as `knl_pipelined_sim`: the serial partition
-        // unless two buffers would not fit the pool (GPU plans refine
-        // this per Algorithm 4, so it stays an estimate there).
-        let usable = self.arch.spec.pools[FAST.0].usable();
-        let cut = budget.min((usable / 2).max(1));
-        let est_parts = partition_balanced(&prefix, cut.max(1)).len();
+        let est_parts = if p.residency.b {
+            // A fast-resident B is consumed in place: one pass.
+            1
+        } else {
+            let prefix = csr_prefix_bytes(p.b);
+            // Same cut rule as `knl_pipelined_sim`: the serial partition
+            // unless two buffers would not fit the pool (GPU plans refine
+            // this per Algorithm 4, so it stays an estimate there).
+            let usable = self.arch.spec.pools[FAST.0].usable();
+            let cut = budget.min((usable / 2).max(1));
+            partition_balanced(&prefix, cut.max(1)).len()
+        };
         Ok(ExecPlan::Chunked {
             fast_budget: budget,
             pipelined: true,
             est_parts,
             gpu_algo: self.force_algo,
+            resident: p.residency,
         })
     }
 
     fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<super::CostEstimate, MlmemError> {
-        let ExecPlan::Chunked { fast_budget, pipelined: true, gpu_algo, .. } = plan else {
+        let ExecPlan::Chunked { fast_budget, pipelined: true, gpu_algo, resident, .. } = plan
+        else {
             return Err(MlmemError::Planner(
                 "pipelined engine got an incompatible plan".into(),
             ));
         };
         let shape = super::ProblemShape::measure(p, &self.opts, &self.arch.spec);
         Ok(match self.arch.kind {
-            MachineKind::Knl => super::cost::knl_chunked_estimate(
+            MachineKind::Knl => super::cost::knl_chunked_estimate_res(
                 &self.arch.spec,
                 &shape,
                 *fast_budget,
                 true,
+                *resident,
             ),
             MachineKind::Gpu => {
-                super::cost::gpu_chunked_estimate(
+                super::cost::gpu_chunked_estimate_res(
                     &self.arch.spec,
                     &shape,
                     *fast_budget,
                     true,
                     *gpu_algo,
+                    *resident,
                 )
                 .1
             }
@@ -595,19 +667,29 @@ impl Engine for PipelinedChunkEngine {
     }
 
     fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, MlmemError> {
-        let ExecPlan::Chunked { fast_budget, pipelined: true, gpu_algo, .. } = plan else {
+        let ExecPlan::Chunked { fast_budget, pipelined: true, gpu_algo, resident, .. } = plan
+        else {
             return Err(MlmemError::Planner(
                 "pipelined engine got an incompatible plan".into(),
             ));
         };
+        let resident = *resident;
         super::chunked::chunk_report(self.name(), &self.arch, &p.control, |sim| match self
             .arch
             .kind
         {
-            MachineKind::Knl => knl_pipelined_sim(sim, p.a, p.b, *fast_budget, &self.opts),
-            MachineKind::Gpu => {
-                gpu_pipelined_sim_forced(sim, p.a, p.b, *fast_budget, &self.opts, *gpu_algo)
+            MachineKind::Knl => {
+                knl_pipelined_sim_res(sim, p.a, p.b, *fast_budget, &self.opts, resident)
             }
+            MachineKind::Gpu => gpu_pipelined_sim_forced_res(
+                sim,
+                p.a,
+                p.b,
+                *fast_budget,
+                &self.opts,
+                *gpu_algo,
+                resident,
+            ),
         })
     }
 }

@@ -7,7 +7,8 @@ use super::{Engine, EngineReport, ExecPlan, Problem};
 use crate::error::MlmemError;
 use crate::kkmem::{spgemm_sim, Placement, SpgemmOptions};
 use crate::memory::arch::Arch;
-use crate::memory::MemSim;
+use crate::memory::pool::FAST;
+use crate::memory::{Location, MemSim};
 use crate::util::timer::Timer;
 use std::sync::Arc;
 
@@ -36,8 +37,29 @@ impl Engine for SimEngine {
         "sim"
     }
 
-    fn plan(&self, _p: &Problem) -> Result<ExecPlan, MlmemError> {
-        Ok(ExecPlan::Placed { placement: self.placement })
+    fn plan(&self, p: &Problem) -> Result<ExecPlan, MlmemError> {
+        // A fast-resident operand (chain hop intermediate) overrides the
+        // engine's nominal placement: it is physically in the fast pool,
+        // so the committed plan reads it from there. Honored only when
+        // the operand actually fits the pool. Conversely, a slow-pinned
+        // operand (an unpromoted intermediate) may not be teleported
+        // into a fast placement for free — it reads from the slow pool
+        // no matter what the nominal placement says (DESIGN.md §8).
+        let usable = self.arch.spec.pools[FAST.0].usable();
+        let mut placement = self.placement;
+        if p.residency.a && p.a.size_bytes() <= usable {
+            placement.a = Location::Pool(FAST);
+        }
+        if p.residency.b && p.b.size_bytes() <= usable {
+            placement.b = Location::Pool(FAST);
+        }
+        if p.slow_pinned.a {
+            placement.a = Location::Pool(crate::memory::pool::SLOW);
+        }
+        if p.slow_pinned.b {
+            placement.b = Location::Pool(crate::memory::pool::SLOW);
+        }
+        Ok(ExecPlan::Placed { placement })
     }
 
     fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<CostEstimate, MlmemError> {

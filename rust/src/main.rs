@@ -35,6 +35,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "bench" => cmd_bench(rest),
         "spgemm" => cmd_spgemm(rest),
+        "chain" => cmd_chain(rest),
         "tricount" => cmd_tricount(rest),
         "serve" => cmd_serve(rest),
         "info" => cmd_info(rest),
@@ -60,6 +61,7 @@ fn print_usage() {
          Commands:\n  \
          bench     regenerate the paper's tables/figures\n  \
          spgemm    one simulated multiplication\n  \
+         chain     the multigrid triple product R·A·P planned as one chain\n  \
          tricount  triangle counting on a generated graph\n  \
          serve     run the coordinator service over a job batch\n  \
          info      machine profiles + artifact status\n\n\
@@ -308,6 +310,133 @@ fn explain_spgemm_cmd(
         );
     }
     Ok(())
+}
+
+fn cmd_chain(argv: &[String]) -> Result<(), MlmemError> {
+    let spec = CommandSpec::new(
+        "chain",
+        "the Galerkin triple product A_c = R x A x P planned as one residency-aware chain",
+    )
+    .opt("domain", "laplace", "laplace|bigstar|brick|elasticity")
+    .opt("size-gb", "1", "A matrix size in paper-GB")
+    .opt("machine", "gpu", "knl|gpu")
+    .opt("mode", "pinned", "knl: hbm|ddr|cache16|cache8; gpu: hbm|pinned|uvm")
+    .opt("threads", "256", "KNL thread count")
+    .opt("scale-denom", "1024", "capacity scale denominator")
+    .switch("explain", "print every hop's scored candidate table")
+    .switch("pairwise", "also run naive pairwise hops (eviction between hops) for comparison");
+    let p = spec.parse(argv)?;
+    let scale = scale_from(&p)?;
+    let domain = p.choice("domain", Domain::parse, "laplace|bigstar|brick|elasticity")?;
+    let arch = Arc::new(parse_machine(&p, p.usize("threads")?, scale)?);
+    let mut cache = ProblemCache::default();
+    let prob: MgProblem = cache.get(domain, p.f64("size-gb")?, scale).clone();
+    println!(
+        "{} R·A·P: R {}x{} nnz {}  A {}x{} nnz {}  P {}x{} nnz {}",
+        domain.name(),
+        prob.r.nrows,
+        prob.r.ncols,
+        prob.r.nnz(),
+        prob.a.nrows,
+        prob.a.ncols,
+        prob.a.nnz(),
+        prob.p.nrows,
+        prob.p.ncols,
+        prob.p.nnz()
+    );
+    let mats = vec![Arc::new(prob.r), Arc::new(prob.a), Arc::new(prob.p)];
+    let session = Session::builder(Arc::clone(&arch)).workers(1).build();
+    let hr = session.register(Arc::clone(&mats[0]));
+    let ha = session.register(Arc::clone(&mats[1]));
+    let hp = session.register(Arc::clone(&mats[2]));
+    let result = session.execute_chain(&[hr, ha, hp])?;
+    let chain = result.chain.as_ref().expect("chain jobs carry a summary");
+    print_chain(&result, chain, p.flag("explain"));
+    if p.flag("pairwise") {
+        // Same baseline the `chain` bench experiment uses: independent
+        // left-to-right jobs with eviction between hops.
+        let (pairwise, _) =
+            mlmem_spgemm::bench::experiments::run_pairwise_chain(&mats, &arch, 1 << 32)
+                .ok_or_else(|| {
+                    MlmemError::Planner("pairwise baseline did not complete".into())
+                })?;
+        println!(
+            "\nnaive pairwise (left-to-right, eviction between hops): {pairwise:.6} s \
+             -> chain is {:.2}x",
+            pairwise / result.report.seconds.max(1e-12)
+        );
+    }
+    Ok(())
+}
+
+fn print_chain(
+    result: &mlmem_spgemm::coordinator::JobResult,
+    chain: &mlmem_spgemm::coordinator::ChainSummary,
+    explain: bool,
+) {
+    use mlmem_spgemm::util::table::Table;
+    for (assoc, score) in &chain.order_scores {
+        let marker = if *assoc == chain.assoc { "  <-- chosen" } else { "" };
+        println!("order {:<11}: predicted {:.6} s{}", assoc.name(), score, marker);
+    }
+    let mut t = Table::new(&[
+        "hop", "shape", "decision", "resident", "promote s", "pred s", "actual s", "C nnz",
+    ])
+    .with_title("Chain hops");
+    for (i, h) in chain.hops.iter().enumerate() {
+        let resident = if h.residency.a {
+            "A"
+        } else if h.residency.b {
+            "B"
+        } else {
+            "-"
+        };
+        t.row(&[
+            i.to_string(),
+            h.label.clone(),
+            h.decision.name(),
+            resident.to_string(),
+            format!("{:.6}", h.promote_seconds),
+            h.predicted
+                .map(|p| format!("{:.6}", p.total_seconds()))
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.6}", h.report.seconds),
+            h.c_nnz.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nchain total: {:.6} s simulated ({:.2} GFLOP/s), {:.6} s promoting \
+         intermediates; final C {} rows, {} nnz",
+        result.report.seconds,
+        result.report.gflops,
+        chain.promote_seconds(),
+        result.c_nrows,
+        result.c_nnz
+    );
+    if let Some(err) = result.prediction_error() {
+        println!("prediction error: {:+.1}%", err * 100.0);
+    }
+    if explain {
+        for (i, h) in chain.hops.iter().enumerate() {
+            if h.candidates.is_empty() {
+                continue;
+            }
+            let mut t = Table::new(&["candidate", "passes", "pred kernel", "pred copy", "pred stall", "pred total"])
+                .with_title(format!("hop {i} candidates ({})", h.label));
+            for c in &h.candidates {
+                t.row(&[
+                    c.label.clone(),
+                    c.predicted.passes.to_string(),
+                    format!("{:.6}", c.predicted.kernel_seconds),
+                    format!("{:.6}", c.predicted.copy_seconds),
+                    format!("{:.6}", c.predicted.stall_seconds),
+                    format!("{:.6}", c.predicted.total_seconds()),
+                ]);
+            }
+            t.print();
+        }
+    }
 }
 
 fn cmd_tricount(argv: &[String]) -> Result<(), MlmemError> {

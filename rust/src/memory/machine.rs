@@ -313,6 +313,17 @@ impl MemSim {
         self.copy_seconds += t;
     }
 
+    /// Bulk copy between two pools without region bookkeeping — the
+    /// inter-hop transfers of a multiply chain (promoting an intermediate
+    /// into the fast pool, or evicting one that cannot stay) are priced
+    /// and trafficked exactly like a chunk driver's `copy2Fast`, but the
+    /// regions belong to the neighbouring hops' simulators.
+    pub fn bulk_copy_pools(&mut self, src: PoolId, dst: PoolId, bytes: u64) {
+        self.traffic[src.0].bulk_read_bytes += bytes;
+        self.traffic[dst.0].bulk_write_bytes += bytes;
+        self.copy_seconds += self.spec.bulk_copy_seconds(src, dst, bytes);
+    }
+
     /// Bulk copy on the *overlap stream*: the transfer proceeds
     /// concurrently with kernel work until the next
     /// [`overlap_barrier`](Self::overlap_barrier). Same traffic charge as

@@ -1,0 +1,333 @@
+//! Chain-execution integration suite: `Session::execute_chain` /
+//! `chain_with` against naive pairwise `Session::execute`-style hops —
+//! bit-identical products for stencil, power-law, and multigrid R·A·P
+//! inputs, typed cancellation/deadline errors at hop boundaries, and the
+//! headline acceptance scenario where the left-to-right intermediate
+//! exceeds the GPU fast pool and the chain-planned run beats pairwise
+//! execution with eviction between hops.
+
+use mlmem_spgemm::coordinator::{ChainAssoc, Session, SubmitOptions};
+use mlmem_spgemm::error::JobControl;
+use mlmem_spgemm::gen::multigrid::MgProblem;
+use mlmem_spgemm::gen::scale::ScaleFactor;
+use mlmem_spgemm::gen::stencil::{Domain, Grid};
+use mlmem_spgemm::memory::arch::{knl, p100, Arch, GpuMode, KnlMode};
+use mlmem_spgemm::memory::FAST;
+use mlmem_spgemm::prelude::*;
+use mlmem_spgemm::sparse::ops::spgemm_reference;
+use mlmem_spgemm::MatrixHandle;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn knl_arch() -> Arc<Arch> {
+    Arc::new(knl(KnlMode::Ddr, 64, ScaleFactor::default()))
+}
+
+/// Bitwise comparison up to row-entry ordering (`approx_eq` with zero
+/// tolerance cancels entries exactly).
+fn bit_identical(a: &Csr, b: &Csr) -> bool {
+    a.approx_eq(b, 0.0)
+}
+
+/// Naive pairwise baseline: independent jobs in the given association
+/// order, every intermediate materialized and consumed cold ("evicted"
+/// between hops). Returns (total simulated seconds, product).
+fn pairwise_in_order(
+    session: &Session,
+    h: &[MatrixHandle; 3],
+    assoc: ChainAssoc,
+) -> (f64, Csr) {
+    let run = |a: MatrixHandle, b: MatrixHandle| {
+        let r = session
+            .spgemm_with(a, b, SubmitOptions { keep_product: true, ..Default::default() })
+            .expect("admitted")
+            .wait()
+            .expect("hop succeeds");
+        let c = r.c.expect("keep_product attaches C");
+        (r.report.seconds, c)
+    };
+    match assoc {
+        ChainAssoc::LeftFold => {
+            let (s1, c1) = run(h[0], h[1]);
+            let hc = session.register(Arc::new(c1));
+            let (s2, c2) = run(hc, h[2]);
+            (s1 + s2, c2)
+        }
+        ChainAssoc::RightFold => {
+            let (s1, c1) = run(h[1], h[2]);
+            let hc = session.register(Arc::new(c1));
+            let (s2, c2) = run(h[0], hc);
+            (s1 + s2, c2)
+        }
+    }
+}
+
+/// Run a 3-chain and check it against (a) the plain reference product
+/// and (b) a pairwise replay in the chain's chosen association order,
+/// which must be bit-identical.
+fn check_chain_bit_identical(session: &Session, mats: [Arc<Csr>; 3]) {
+    let reference = spgemm_reference(&spgemm_reference(&mats[0], &mats[1]), &mats[2]);
+    let handles = [
+        session.register(Arc::clone(&mats[0])),
+        session.register(Arc::clone(&mats[1])),
+        session.register(Arc::clone(&mats[2])),
+    ];
+    let result = session.execute_chain(&handles).expect("chain succeeds");
+    let chain = result.chain.as_ref().expect("chain summary present");
+    assert_eq!(chain.hops.len(), 2);
+    assert_eq!(chain.order_scores.len(), 2, "both association orders scored");
+    let c = result.c.as_ref().expect("execute_chain keeps the product");
+    assert_eq!((c.nrows, c.ncols), (reference.nrows, reference.ncols));
+    // Chains never change the math beyond association order: per-column
+    // sums fold left in k order in every driver, so the chain product is
+    // bit-identical to pairwise hops replayed in the same order.
+    let (_, pairwise_c) = pairwise_in_order(session, &handles, chain.assoc);
+    assert!(bit_identical(c, &pairwise_c), "chain != pairwise replay (bitwise)");
+    // And numerically the reference product up to FP association error.
+    assert!(c.approx_eq(&reference, 1e-9), "chain far from reference");
+}
+
+#[test]
+fn chain_bit_identical_stencil() {
+    let session = Session::builder(knl_arch()).workers(1).build();
+    let a = Arc::new(mlmem_spgemm::gen::stencil::laplace3d(Grid::new(6, 6, 6)));
+    check_chain_bit_identical(&session, [Arc::clone(&a), Arc::clone(&a), a]);
+}
+
+#[test]
+fn chain_bit_identical_power_law() {
+    let session = Session::builder(knl_arch()).workers(1).build();
+    let g = Arc::new(mlmem_spgemm::gen::graphs::graph500(7, 8, 11));
+    check_chain_bit_identical(&session, [Arc::clone(&g), Arc::clone(&g), g]);
+}
+
+#[test]
+fn chain_bit_identical_multigrid_rap() {
+    let session = Session::builder(knl_arch()).workers(1).build();
+    let p = MgProblem::build(Domain::Laplace3D, Grid::new(6, 6, 6), 2);
+    check_chain_bit_identical(
+        &session,
+        [Arc::new(p.r), Arc::new(p.a), Arc::new(p.p)],
+    );
+}
+
+#[test]
+fn two_matrix_chain_degenerates_to_single_hop() {
+    let session = Session::builder(knl_arch()).workers(1).build();
+    let a = session.register(Arc::new(mlmem_spgemm::gen::rhs::random_csr(50, 40, 1, 5, 1)));
+    let b = session.register(Arc::new(mlmem_spgemm::gen::rhs::random_csr(40, 60, 1, 5, 2)));
+    let r = session.execute_chain(&[a, b]).expect("chain ok");
+    let chain = r.chain.as_ref().expect("summary");
+    assert_eq!(chain.hops.len(), 1);
+    assert_eq!(chain.assoc, ChainAssoc::LeftFold);
+    assert!(chain.order_scores.is_empty(), "nothing to score for n=2");
+    let ma = session.operand(a).unwrap();
+    let mb = session.operand(b).unwrap();
+    assert!(r.c.unwrap().approx_eq(&spgemm_reference(&ma, &mb), 1e-12));
+}
+
+#[test]
+fn four_matrix_chain_folds_left() {
+    let session = Session::builder(knl_arch()).workers(1).build();
+    let mats: Vec<Arc<Csr>> = (0..4)
+        .map(|i| Arc::new(mlmem_spgemm::gen::rhs::random_csr(40, 40, 1, 4, 10 + i)))
+        .collect();
+    let handles: Vec<_> = mats.iter().map(|m| session.register(Arc::clone(m))).collect();
+    let r = session.execute_chain(&handles).expect("chain ok");
+    let chain = r.chain.as_ref().expect("summary");
+    assert_eq!(chain.hops.len(), 3);
+    assert_eq!(chain.assoc, ChainAssoc::LeftFold);
+    let mut expect = spgemm_reference(&mats[0], &mats[1]);
+    expect = spgemm_reference(&expect, &mats[2]);
+    expect = spgemm_reference(&expect, &mats[3]);
+    assert!(r.c.unwrap().approx_eq(&expect, 1e-9), "left fold replays the reference");
+}
+
+#[test]
+fn chain_shape_mismatch_and_arity_are_typed() {
+    let session = Session::builder(knl_arch()).build();
+    let a = session.register(Arc::new(mlmem_spgemm::gen::rhs::random_csr(10, 7, 1, 3, 1)));
+    let b = session.register(Arc::new(mlmem_spgemm::gen::rhs::random_csr(9, 5, 1, 3, 2)));
+    assert!(matches!(
+        session.execute_chain(&[a, b]),
+        Err(MlmemError::ShapeMismatch { .. })
+    ));
+    assert!(matches!(session.execute_chain(&[a]), Err(MlmemError::Planner(_))));
+    // Handles are session-scoped: one minted by a *different* session
+    // with more registrations carries an id this session never issued.
+    let other = Session::builder(knl_arch()).build();
+    let mut foreign = other.register(Arc::new(mlmem_spgemm::gen::rhs::random_csr(7, 7, 1, 3, 3)));
+    for seed in 4..6 {
+        foreign = other.register(Arc::new(mlmem_spgemm::gen::rhs::random_csr(7, 7, 1, 3, seed)));
+    }
+    assert!(matches!(
+        session.execute_chain(&[a, foreign]),
+        Err(MlmemError::UnknownHandle(3))
+    ));
+}
+
+#[test]
+fn resident_intermediate_when_everything_fits_fast() {
+    // Small multigrid triple product on KNL: every hop fits the fast
+    // pool, so hop 1 runs flat-fast and leaves its product there — hop 2
+    // must consume it resident (no promotion transfer).
+    let session = Session::builder(knl_arch()).workers(1).build();
+    let p = MgProblem::build(Domain::Laplace3D, Grid::new(8, 8, 8), 2);
+    let hr = session.register(Arc::new(p.r));
+    let ha = session.register(Arc::new(p.a));
+    let hp = session.register(Arc::new(p.p));
+    let r = session.execute_chain(&[hr, ha, hp]).expect("chain ok");
+    let chain = r.chain.as_ref().expect("summary");
+    assert_eq!(
+        chain.hops[0].decision,
+        mlmem_spgemm::coordinator::Decision::FlatFast,
+        "premise: the first hop fits the fast pool"
+    );
+    assert!(
+        chain.hops[1].residency.any(),
+        "hop 2 must consume the fast-resident intermediate"
+    );
+    assert_eq!(chain.hops[1].promote_seconds, 0.0, "residency was free");
+    assert_eq!(chain.promote_seconds(), 0.0);
+    assert!(chain.any_resident_hop());
+}
+
+#[test]
+fn chain_reuses_the_registry_pair_cache() {
+    // A 3-chain touches two registered operand pairs; both symbolic
+    // passes go through the session's pair cache, so a second identical
+    // chain computes none (intermediates are uncacheable by nature and
+    // are not counted by the registry).
+    let session = Session::builder(knl_arch()).workers(1).build();
+    let p = MgProblem::build(Domain::Laplace3D, Grid::new(6, 6, 6), 2);
+    let hr = session.register(Arc::new(p.r));
+    let ha = session.register(Arc::new(p.a));
+    let hp = session.register(Arc::new(p.p));
+    session.execute_chain(&[hr, ha, hp]).expect("chain ok");
+    assert_eq!(session.symbolic_passes(), 2, "one pass per registered pair");
+    session.execute_chain(&[hr, ha, hp]).expect("chain ok again");
+    assert_eq!(session.symbolic_passes(), 2, "second chain hits the cache");
+    // The registry's coarse residency tracking covers chain operands.
+    assert!(session.residency(hr).is_some());
+    assert!(session.residency(ha).is_some());
+    assert!(session.residency(hp).is_some());
+}
+
+#[test]
+fn chain_cancellation_and_deadline_at_hop_boundaries() {
+    let session = Session::builder(knl_arch()).workers(1).build();
+    let p = MgProblem::build(Domain::Laplace3D, Grid::new(8, 8, 8), 2);
+    let hr = session.register(Arc::new(p.r));
+    let ha = session.register(Arc::new(p.a));
+    let hp = session.register(Arc::new(p.p));
+
+    // Pre-cancelled control: observed at the first hop boundary.
+    let control = JobControl::new();
+    control.cancel();
+    let h = session
+        .chain_with(
+            &[hr, ha, hp],
+            SubmitOptions { control: Some(control), ..Default::default() },
+        )
+        .expect("admitted");
+    assert!(matches!(h.wait(), Err(MlmemError::Cancelled)));
+
+    // Already-expired deadline: typed DeadlineExceeded, not a failure.
+    let h = session
+        .chain_with(
+            &[hr, ha, hp],
+            SubmitOptions { deadline: Some(Duration::ZERO), ..Default::default() },
+        )
+        .expect("admitted");
+    assert!(matches!(h.wait(), Err(MlmemError::DeadlineExceeded)));
+
+    session.drain();
+    let m = session.metrics();
+    assert_eq!((m.cancelled, m.failed), (2, 0));
+
+    // A short-but-nonzero deadline on a long chain expires mid-flight at
+    // a hop or chunk boundary — still the typed error.
+    let big = MgProblem::build(Domain::Laplace3D, Grid::new(20, 20, 20), 2);
+    let hr = session.register(Arc::new(big.r));
+    let ha = session.register(Arc::new(big.a));
+    let hp = session.register(Arc::new(big.p));
+    let h = session
+        .chain_with(
+            &[hr, ha, hp],
+            SubmitOptions { deadline: Some(Duration::from_millis(1)), ..Default::default() },
+        )
+        .expect("admitted");
+    assert!(matches!(h.wait(), Err(MlmemError::DeadlineExceeded)));
+}
+
+/// The acceptance scenario (ISSUE 4): a multigrid R·A·P instance on the
+/// GPU (pinned host) profile whose **left-to-right intermediate R·A
+/// exceeds the fast pool**. Naive pairwise execution is stuck
+/// materializing and re-consuming that oversized intermediate across the
+/// slow link; the chain planner predicts this, picks `R·(A·P)` whose
+/// intermediate fits, and wins on simulated time with a bit-identical
+/// coarse operator.
+#[test]
+fn chain_beats_pairwise_when_intermediate_exceeds_gpu_fast_pool() {
+    let prob = MgProblem::build(Domain::Laplace3D, Grid::new(20, 20, 20), 2);
+    let ra = spgemm_reference(&prob.r, &prob.a);
+    let ap = spgemm_reference(&prob.a, &prob.p);
+    let reference = spgemm_reference(&ra, &prob.p);
+    let slack = 1u64 << 16;
+    assert!(
+        ap.size_bytes() + 2 * slack < ra.size_bytes(),
+        "construction drifted: AP {} vs RA {}",
+        ap.size_bytes(),
+        ra.size_bytes()
+    );
+    // Size the fast pool between the two intermediates: A·P (plus the
+    // planner's slack) fits and can stay resident; R·A does not.
+    let usable = (ap.size_bytes() + slack + ra.size_bytes()) / 2;
+    let mut arch = p100(GpuMode::Pinned, ScaleFactor::default());
+    let headroom = arch.spec.pools[FAST.0].alloc_headroom;
+    arch.spec.pools[FAST.0].capacity = (usable as f64 / headroom) as u64 + 1;
+    let usable = arch.spec.pools[FAST.0].usable();
+    assert!(ra.size_bytes() > usable, "premise: R·A exceeds the fast pool");
+    assert!(ap.size_bytes() + slack <= usable, "premise: A·P fits the fast pool");
+
+    let session = Session::builder(Arc::new(arch)).workers(1).build();
+    let hr = session.register(Arc::new(prob.r));
+    let ha = session.register(Arc::new(prob.a));
+    let hp = session.register(Arc::new(prob.p));
+    let handles = [hr, ha, hp];
+
+    let result = session.execute_chain(&handles).expect("chain succeeds");
+    let chain = result.chain.as_ref().expect("summary");
+    assert_eq!(
+        chain.assoc,
+        ChainAssoc::RightFold,
+        "planner must route around the oversized R·A intermediate \
+         (order scores: {:?})",
+        chain.order_scores
+    );
+
+    // Naive pairwise, left-to-right, eviction between hops.
+    let (pairwise_seconds, _) = pairwise_in_order(&session, &handles, ChainAssoc::LeftFold);
+    assert!(
+        result.report.seconds < pairwise_seconds,
+        "chain {} !< pairwise {} (hops: {:?})",
+        result.report.seconds,
+        pairwise_seconds,
+        chain.hops.iter().map(|h| h.decision.name()).collect::<Vec<_>>()
+    );
+
+    // Bit-identical coarse operator: the chain adds no numerical
+    // deviation over pairwise hops in its chosen order...
+    let (_, replay_c) = pairwise_in_order(&session, &handles, chain.assoc);
+    let c = result.c.as_ref().expect("product kept");
+    assert!(bit_identical(c, &replay_c), "coarse operator must be bit-identical");
+    // ...and matches the reference triple product numerically.
+    assert!(c.approx_eq(&reference, 1e-9));
+
+    // The chain's prediction machinery stayed observable.
+    assert!(result.predicted.is_some());
+    for hop in &chain.hops {
+        assert!(!hop.candidates.is_empty(), "Auto hops record candidate tables");
+        assert!(hop.report.seconds > 0.0);
+    }
+}

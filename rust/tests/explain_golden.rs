@@ -1,0 +1,120 @@
+//! Golden-file tests for the planner's `--explain` surfaces: the
+//! candidate tables behind `spgemm --explain` and the per-hop output of
+//! `chain`. The snapshots are *structural* — candidate sets, ordering,
+//! chosen-row invariants, hop decisions, residency markers — rather than
+//! raw floating-point columns, so they pin planner-output regressions
+//! (a candidate disappearing, a gate flipping, residency not engaging)
+//! without breaking on every cost-model retune.
+//!
+//! Regenerate with `GOLDEN_BLESS=1 cargo test -q --test explain_golden`.
+
+use mlmem_spgemm::coordinator::{explain_spgemm, PlannerOptions, Session};
+use mlmem_spgemm::gen::rhs::uniform_degree;
+use mlmem_spgemm::gen::scale::ScaleFactor;
+use mlmem_spgemm::memory::arch::{knl, KnlMode};
+use mlmem_spgemm::memory::FAST;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden")
+        .join(name)
+}
+
+fn check_golden(name: &str, actual: &str) {
+    let path = golden_path(name);
+    if std::env::var("GOLDEN_BLESS").is_ok() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, actual).unwrap();
+        return;
+    }
+    let expected = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing golden file {} ({e}); run with GOLDEN_BLESS=1", path.display()));
+    assert_eq!(
+        actual,
+        expected.as_str(),
+        "golden mismatch for {name}; re-bless with GOLDEN_BLESS=1 if intended"
+    );
+}
+
+/// `spgemm --explain` on a fixed seed and a shrunken KNL fast pool that
+/// forces the flat-fast and data-placement candidates out: the snapshot
+/// pins the surviving candidate set, its order, and the table's
+/// structural invariants.
+#[test]
+fn spgemm_explain_candidate_table_is_stable() {
+    let mut arch = knl(KnlMode::Ddr, 256, ScaleFactor::default());
+    arch.spec.pools[FAST.0].capacity = 256 * 1024; // usable = 179 KiB
+    let arch = Arc::new(arch);
+    let a = uniform_degree(300, 2000, 8, 5);
+    let b = uniform_degree(2000, 600, 6, 6);
+    assert!(
+        b.size_bytes() > arch.spec.pools[FAST.0].usable().saturating_sub(1 << 16),
+        "construction drifted: B must rule out the DP candidate"
+    );
+    let rows = explain_spgemm(&a, &b, &arch, &PlannerOptions::default());
+    let mut out = String::new();
+    out.push_str(&format!("machine={}\n", arch.spec.name));
+    out.push_str(&format!(
+        "candidates={}\n",
+        rows.iter().map(|r| r.label.as_str()).collect::<Vec<_>>().join(",")
+    ));
+    out.push_str(&format!("rows={}\n", rows.len()));
+    out.push_str(&format!(
+        "chosen-count={}\n",
+        rows.iter().filter(|r| r.chosen).count()
+    ));
+    out.push_str(&format!(
+        "all-predictions-positive={}\n",
+        rows.iter().all(|r| r.predicted.total_seconds() > 0.0)
+    ));
+    out.push_str(&format!(
+        "all-actuals-finite={}\n",
+        rows.iter().all(|r| r.actual_seconds.is_finite() && r.actual_seconds > 0.0)
+    ));
+    out.push_str(&format!(
+        "all-passes-at-least-one={}\n",
+        rows.iter().all(|r| r.predicted.passes >= 1)
+    ));
+    check_golden("spgemm_explain_knl.txt", &out);
+}
+
+/// The chain planner's output on a fixed 3-chain whose right fold is
+/// structurally forced (M₃ is thin, so `M₂·M₃` is a far smaller
+/// intermediate and both right-order hops do strictly less work):
+/// both orders scored, both hops flat-fast, the second hop consuming
+/// its intermediate resident-as-B with no promotion — which also pins
+/// that the duplicate `pipelined-knl` candidate is dropped for a
+/// resident B while the first hop keeps the full candidate set.
+#[test]
+fn chain_explain_hop_tables_are_stable() {
+    let arch = Arc::new(knl(KnlMode::Ddr, 64, ScaleFactor::default()));
+    let session = Session::builder(arch).workers(1).build();
+    let m1 = session.register(Arc::new(uniform_degree(200, 200, 6, 1)));
+    let m2 = session.register(Arc::new(uniform_degree(200, 200, 6, 2)));
+    let m3 = session.register(Arc::new(mlmem_spgemm::gen::rhs::random_csr(200, 4, 1, 1, 3)));
+    let result = session.execute_chain(&[m1, m2, m3]).expect("chain succeeds");
+    let chain = result.chain.as_ref().expect("summary");
+    let mut out = String::new();
+    out.push_str(&format!("hops={}\n", chain.hops.len()));
+    out.push_str(&format!("orders-scored={}\n", chain.order_scores.len()));
+    out.push_str(&format!("assoc={}\n", chain.assoc.name()));
+    out.push_str(&format!("prediction-present={}\n", result.predicted.is_some()));
+    for (i, h) in chain.hops.iter().enumerate() {
+        out.push_str(&format!("hop{i}.decision={}\n", h.decision.name()));
+        out.push_str(&format!(
+            "hop{i}.resident={}\n",
+            if h.residency.any() { "yes" } else { "no" }
+        ));
+        out.push_str(&format!(
+            "hop{i}.promoted={}\n",
+            if h.promote_seconds > 0.0 { "yes" } else { "no" }
+        ));
+        out.push_str(&format!(
+            "hop{i}.candidates={}\n",
+            h.candidates.iter().map(|c| c.label.as_str()).collect::<Vec<_>>().join(",")
+        ));
+    }
+    check_golden("chain_explain_knl.txt", &out);
+}

@@ -136,6 +136,56 @@ fn prop_all_engines_produce_identical_sorted_products() {
 }
 
 #[test]
+fn prop_chain_orders_and_chain_path_agree_with_reference() {
+    use mlmem_spgemm::coordinator::{execute, Job, JobKind, PlannerOptions, Policy};
+    use std::sync::Arc;
+    check("3-chain assoc orders + chain path == reference", 10, |g| {
+        // Random compatible 3-chain with non-empty rows so the simulated
+        // runs do real work.
+        let (m, k, l, n) = (g.usize(2, 25), g.usize(2, 25), g.usize(2, 25), g.usize(2, 25));
+        let m1 = random_csr(m, k, 1, 4.min(k), g.u64());
+        let m2 = random_csr(k, l, 1, 4.min(l), g.u64());
+        let m3 = random_csr(l, n, 1, 4.min(n), g.u64());
+        let left = spgemm_reference(&spgemm_reference(&m1, &m2), &m3);
+        let right = spgemm_reference(&m1, &spgemm_reference(&m2, &m3));
+        // Matrix multiplication is associative up to FP rounding.
+        assert!(left.approx_eq(&right, 1e-9), "association orders disagree");
+
+        let arch = Arc::new(knl(KnlMode::Ddr, 64, ScaleFactor::default()));
+        let mats = vec![Arc::new(m1), Arc::new(m2), Arc::new(m3)];
+        let mut job = Job::new(1, JobKind::Chain { mats }, arch, Policy::Auto);
+        job.keep_product = true;
+        let r = execute(&job, &PlannerOptions::default()).expect("chain executes");
+        let c = r.c.as_ref().expect("chain keeps its product");
+        assert!(c.approx_eq(&left, 1e-9), "chain product far from reference");
+
+        // The chain records its total prediction, and the cost model
+        // never underestimates the simulated time by more than the
+        // documented 4x bound (DESIGN.md §8 — the estimates ignore cache
+        // absorption, so they err on the overestimate side).
+        let summary = r.chain.as_ref().expect("chain summary");
+        assert_eq!(summary.hops.len(), 2);
+        let predicted = r.predicted.expect("Auto chains record a prediction");
+        assert!(
+            predicted.total_seconds() >= r.report.seconds * 0.25,
+            "prediction underestimates by more than 4x: {} vs {}",
+            predicted.total_seconds(),
+            r.report.seconds
+        );
+        for hop in &summary.hops {
+            if let Some(p) = hop.predicted {
+                assert!(
+                    p.total_seconds() >= hop.report.seconds * 0.25,
+                    "hop prediction underestimates by more than 4x: {} vs {}",
+                    p.total_seconds(),
+                    hop.report.seconds
+                );
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_partition_tiles_and_respects_budget() {
     check("partition invariants", 60, |g| {
         let m = gen_csr(g, 60);
