@@ -94,5 +94,13 @@ fn main() {
         session.symbolic_passes(),
         m.completed
     );
+    println!(
+        "fast pool     : {} residency hits / {} misses, {} evicted; {} resident in {} operands",
+        m.residency.hits,
+        m.residency.misses,
+        mlmem_spgemm::util::table::human_bytes(m.residency.evicted_bytes),
+        mlmem_spgemm::util::table::human_bytes(m.residency.resident_bytes),
+        m.residency.resident_entries
+    );
     println!("simulated agg : {:.2} GFLOP/s", session.aggregate_gflops());
 }

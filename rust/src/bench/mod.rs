@@ -16,7 +16,7 @@ use std::path::Path;
 pub const EXPERIMENTS: &[&str] = &[
     "table1", "table2", "table3", "table4", "fig3", "fig4", "fig6", "fig7", "fig9", "fig10",
     "fig11", "fig12", "fig13", "ablate-acc", "ablate-algo", "ablate-compression",
-    "ablate-overlap", "pipeline", "planner", "chain", "profiles",
+    "ablate-overlap", "pipeline", "planner", "chain", "serve", "profiles",
 ];
 
 /// Run one experiment by id.
@@ -42,23 +42,30 @@ pub fn run_experiment(id: &str, cfg: &BenchConfig, cache: &mut ProblemCache) -> 
         "pipeline" => tables::pipeline_overlap(cfg, cache),
         "planner" => tables::planner_accuracy(cfg, cache),
         "chain" => tables::chain_triple_product(cfg, cache),
+        "serve" => tables::serve_operand_cache(cfg, cache),
         "profiles" => tables::machine_profiles(cfg),
         _ => return None,
     })
 }
 
-/// Run an experiment set, printing each table and archiving CSVs.
+/// Run an experiment set, printing each table, archiving CSVs, and —
+/// when `json_path` is given — writing one machine-readable JSON
+/// document with every experiment's rows (the `BENCH_*.json` perf
+/// trajectory format: numeric cells become JSON numbers).
 pub fn run_and_report(
     ids: &[String],
     cfg: &BenchConfig,
     out_dir: Option<&Path>,
+    json_path: Option<&Path>,
 ) -> Result<(), String> {
+    use crate::util::json::Json;
     let mut cache = ProblemCache::default();
     let expanded: Vec<String> = if ids.iter().any(|s| s == "all") {
         EXPERIMENTS.iter().map(|s| s.to_string()).collect()
     } else {
         ids.to_vec()
     };
+    let mut json_experiments: Vec<Json> = Vec::new();
     for id in &expanded {
         let t = run_experiment(id, cfg, &mut cache)
             .ok_or_else(|| format!("unknown experiment `{id}`; known: {EXPERIMENTS:?}"))?;
@@ -68,6 +75,18 @@ pub fn run_and_report(
             let path = dir.join(format!("{id}.csv"));
             t.write_csv(&path).map_err(|e| format!("writing {}: {e}", path.display()))?;
         }
+        if json_path.is_some() {
+            json_experiments
+                .push(Json::obj().set("experiment", id.clone()).set("rows", t.to_json()));
+        }
+    }
+    if let Some(path) = json_path {
+        let doc = Json::obj()
+            .set("scale_denominator", cfg.scale.denominator)
+            .set("seed", cfg.seed)
+            .set("experiments", Json::Arr(json_experiments));
+        std::fs::write(path, doc.render_pretty())
+            .map_err(|e| format!("writing {}: {e}", path.display()))?;
     }
     Ok(())
 }

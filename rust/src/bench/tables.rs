@@ -491,6 +491,49 @@ pub fn chain_triple_product(cfg: &BenchConfig, cache: &mut ProblemCache) -> Tabl
     t
 }
 
+/// The `serve` experiment: a power-law-popularity job stream served with
+/// the session's fast-pool operand cache vs the cache-disabled baseline,
+/// on the P100 pinned profile (where staging cost dominates and skipping
+/// a hot operand's copy-in pays most). One row per scenario: total
+/// simulated seconds both ways, the gain, and the pool counters.
+pub fn serve_operand_cache(cfg: &BenchConfig, _cache: &mut ProblemCache) -> Table {
+    use super::experiments::{run_serve_stream, serve_scenarios};
+    use crate::gen::scale::ScaleFactor;
+    use std::sync::Arc;
+    // Operands are sized as fractions of the fast pool's usable bytes,
+    // so shrinking the machine further keeps the stream cheap without
+    // changing the scenario's shape.
+    let scale = ScaleFactor::new(cfg.scale.denominator.saturating_mul(64));
+    let arch = Arc::new(p100(GpuMode::Pinned, scale));
+    let mut t = Table::new(&[
+        "scenario", "jobs", "pairs", "uncached s", "cached s", "gain", "hits", "misses",
+        "evicted",
+    ])
+    .with_title("Serve experiment: fast-pool operand caching across jobs (P100 pinned)");
+    for sc in serve_scenarios(&arch, cfg.seed) {
+        let uncached = run_serve_stream(&arch, &sc, false);
+        let cached = run_serve_stream(&arch, &sc, true);
+        let mut row = vec![
+            sc.name.to_string(),
+            sc.stream.len().to_string(),
+            sc.pairs.len().to_string(),
+        ];
+        match (uncached, cached) {
+            (Some((us, _)), Some((cs, m))) => row.extend([
+                format!("{us:.6}"),
+                format!("{cs:.6}"),
+                format!("{:.2}x", us / cs.max(1e-12)),
+                m.residency.hits.to_string(),
+                m.residency.misses.to_string(),
+                crate::util::table::human_bytes(m.residency.evicted_bytes),
+            ]),
+            _ => row.extend(vec!["-".to_string(); 6]),
+        }
+        t.row(&row);
+    }
+    t
+}
+
 /// Sanity table: P100 profile — not in the paper, prints the machine
 /// parameters used (documentation aid).
 pub fn machine_profiles(cfg: &BenchConfig) -> Table {
@@ -582,6 +625,44 @@ mod tests {
         assert!(r.contains("pairwise"));
         // Small problems must complete (an association order was chosen).
         assert!(r.contains("fold"), "{r}");
+    }
+
+    #[test]
+    fn serve_table_runs_both_scenarios() {
+        let (cfg, mut cache) = quick();
+        let t = serve_operand_cache(&cfg, &mut cache);
+        assert_eq!(t.n_rows(), 2);
+        let r = t.render();
+        assert!(r.contains("hot-shared-rhs"));
+        assert!(r.contains("over-capacity"));
+    }
+
+    #[test]
+    fn serve_cached_run_strictly_beats_uncached() {
+        use super::super::experiments::{run_serve_stream, serve_scenarios};
+        use crate::gen::scale::ScaleFactor;
+        use std::sync::Arc;
+        let (cfg, _) = quick();
+        let scale = ScaleFactor::new(cfg.scale.denominator * 64);
+        let arch = Arc::new(p100(GpuMode::Pinned, scale));
+        let scenarios = serve_scenarios(&arch, cfg.seed);
+
+        // Hot shared RHS: exactly one capture of B, a hit on every later
+        // job, and a strictly faster cached stream.
+        let hot = &scenarios[0];
+        let (us, um) = run_serve_stream(&arch, hot, false).expect("uncached runs");
+        let (cs, cm) = run_serve_stream(&arch, hot, true).expect("cached runs");
+        assert!(cs < us, "cached {cs} !< uncached {us}");
+        assert_eq!(cm.residency.hits as usize, hot.stream.len() - 1);
+        assert_eq!(um.residency.hits, 0, "disabled cache never hits");
+
+        // Over-capacity RHSs: eviction keeps the accounting within the
+        // fast pool's capacity while the hot runs still profit.
+        let over = &scenarios[1];
+        let (_, om) = run_serve_stream(&arch, over, true).expect("cached runs");
+        assert!(om.residency.evicted_bytes > 0, "no eviction under pressure");
+        let usable = arch.spec.pools[crate::memory::pool::FAST.0].usable();
+        assert!(om.residency.resident_bytes <= usable);
     }
 
     #[test]

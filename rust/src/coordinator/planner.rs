@@ -62,7 +62,7 @@ pub fn execute(job: &Job, opts: &PlannerOptions) -> Result<JobResult, MlmemError
             execute_spgemm(job, &problem, opts)
         }
         JobKind::Chain { mats } => {
-            execute_chain_mats(job, mats, &JobControl::default(), opts, &[])
+            execute_chain_mats(job, mats, &JobControl::default(), opts, &[], &[])
         }
         JobKind::TriCount { adj } => execute_tricount(job, adj, opts),
     }
@@ -644,12 +644,16 @@ fn product_stays_fast(arch: &Arch, d: &Decision) -> bool {
 /// does not re-enumerate), the second through a synthetic shape with
 /// the intermediate resident when it fits (plus one conservative promote
 /// transfer, since the producing plan may land it in the slow pool).
+/// `hop1` carries any session-pool residency of its operands;
+/// `other_resident` marks the second hop's non-intermediate operand as
+/// already sitting in the fast pool (the session's operand cache).
 fn order_score(
     arch: &Arc<Arch>,
     opts: &PlannerOptions,
     hop1: &Problem,
     hop2_side: Side,
     hop2_other: OperandStats,
+    other_resident: bool,
 ) -> (f64, Vec<Candidate>) {
     let hop1_cands = spgemm_candidates(arch, hop1, opts);
     let hop1_best = best_candidate_seconds(&hop1_cands);
@@ -660,18 +664,24 @@ fn order_score(
     };
     let (shape2, _) = synthetic_shape(l, r);
     let usable = arch.spec.pools[FAST.0].usable();
+    // The non-intermediate operand sits on the opposite side of the
+    // intermediate.
+    let other = match hop2_side {
+        Side::A => Residency { a: false, b: other_resident },
+        Side::B => Residency { a: other_resident, b: false },
+    };
     let (residency, pinned, promote) = if c1.bytes + ACC_SLACK <= usable {
         // Conservative: charge one promote transfer even though the
         // producing plan may leave the intermediate in fast for free.
         (
-            hop2_side.residency(),
+            hop2_side.residency().union(other),
             Residency::NONE,
             arch.spec.bulk_copy_seconds(SLOW, FAST, c1.bytes),
         )
     } else {
         // Too big to stay resident: it is materialized in — and streams
         // from — the slow pool.
-        (Residency::NONE, hop2_side.residency(), 0.0)
+        (other, hop2_side.residency(), 0.0)
     };
     let score = hop1_best + best_shape_estimate(arch, &shape2, residency, pinned, opts) + promote;
     (score, hop1_cands)
@@ -684,13 +694,17 @@ fn order_score(
 /// `(mats[i], mats[i+1])` — a [`Session`](crate::coordinator::Session)
 /// passes its registry's pair cache here so chains over registered
 /// operands never repeat those passes (intermediates are inherently
-/// uncacheable).
+/// uncacheable). `resident[i]` marks operand `i` as already sitting in
+/// the session's fast-pool cache: the hop consuming it runs (and is
+/// scored) under that residency, exactly like an intra-chain
+/// intermediate. Empty slices mean no seeds / nothing resident.
 pub(crate) fn execute_chain_mats(
     job: &Job,
     mats: &[Arc<Csr>],
     control: &JobControl,
     opts: &PlannerOptions,
     seed_cores: &[Option<Arc<crate::engine::cost::ShapeCore>>],
+    resident: &[bool],
 ) -> Result<JobResult, MlmemError> {
     let arch = &job.arch;
     if mats.len() < 2 {
@@ -704,24 +718,27 @@ pub(crate) fn execute_chain_mats(
             });
         }
     }
+    let op_res = |i: usize| resident.get(i).copied().unwrap_or(false);
 
     // Association order: 3-chains are scored both ways; longer chains
     // fold left-to-right (documented in DESIGN.md §8). The chosen
     // order's first hop reuses the pre-pass symbolic summary.
     let pair_seed = |i: usize| seed_cores.get(i).cloned().flatten();
     let (assoc, order_scores, mut seed_core, mut first_cands) = if mats.len() == 3 {
-        let mut p_left = Problem::try_new(&mats[0], &mats[1])?;
+        let mut p_left = Problem::try_new(&mats[0], &mats[1])?
+            .with_residency(Residency { a: op_res(0), b: op_res(1) });
         if let Some(core) = pair_seed(0) {
             p_left = p_left.with_shape_core(core);
         }
         let (left, left_cands) =
-            order_score(arch, opts, &p_left, Side::A, OperandStats::of(&mats[2]));
-        let mut p_right = Problem::try_new(&mats[1], &mats[2])?;
+            order_score(arch, opts, &p_left, Side::A, OperandStats::of(&mats[2]), op_res(2));
+        let mut p_right = Problem::try_new(&mats[1], &mats[2])?
+            .with_residency(Residency { a: op_res(1), b: op_res(2) });
         if let Some(core) = pair_seed(1) {
             p_right = p_right.with_shape_core(core);
         }
         let (right, right_cands) =
-            order_score(arch, opts, &p_right, Side::B, OperandStats::of(&mats[0]));
+            order_score(arch, opts, &p_right, Side::B, OperandStats::of(&mats[0]), op_res(0));
         // The chosen order's first hop reuses both the pre-pass symbolic
         // summary and its candidate enumeration.
         let (assoc, core, cands) = if right < left {
@@ -751,8 +768,15 @@ pub(crate) fn execute_chain_mats(
             let mut cur = Arc::clone(&mats[0]);
             let mut cur_in_fast = false;
             let mut first = true;
-            for next in &mats[1..] {
+            for (i, next) in mats[1..].iter().enumerate() {
                 let intermediate = (!first).then_some((Side::A, cur_in_fast));
+                // The first hop's A is operand 0; every later hop's A is
+                // the intermediate, so only the B side can be a
+                // pool-resident session operand.
+                let operand_res = Residency {
+                    a: first && op_res(0),
+                    b: op_res(i + 1),
+                };
                 let (hop, product, in_fast, promote_report) = run_chain_hop(
                     &hop_job,
                     opts,
@@ -760,6 +784,7 @@ pub(crate) fn execute_chain_mats(
                     &cur,
                     next,
                     intermediate,
+                    operand_res,
                     seed_core.take(),
                     first_cands.take(),
                 )?;
@@ -783,6 +808,7 @@ pub(crate) fn execute_chain_mats(
                 &mats[1],
                 &mats[2],
                 None,
+                Residency { a: op_res(1), b: op_res(2) },
                 seed_core.take(),
                 first_cands.take(),
             )?;
@@ -795,6 +821,7 @@ pub(crate) fn execute_chain_mats(
                 &mats[0],
                 &c1,
                 Some((Side::B, c1_fast)),
+                Residency { a: op_res(0), b: false },
                 None,
                 None,
             )?;
@@ -848,7 +875,9 @@ pub(crate) fn execute_chain_mats(
 
 /// Execute one hop of a chain: decide residency/promotion for the
 /// incoming intermediate, run the hop through the normal spgemm path,
-/// and report where the product physically landed.
+/// and report where the product physically landed. `operand_res` marks
+/// the hop's non-intermediate session operands already resident in the
+/// fast pool (never the intermediate's own side).
 #[allow(clippy::type_complexity, clippy::too_many_arguments)]
 fn run_chain_hop(
     hop_job: &Job,
@@ -857,6 +886,7 @@ fn run_chain_hop(
     a: &Arc<Csr>,
     b: &Arc<Csr>,
     intermediate: Option<(Side, bool)>,
+    operand_res: Residency,
     seed_core: Option<Arc<crate::engine::cost::ShapeCore>>,
     first_cands: Option<Vec<Candidate>>,
 ) -> Result<(HopResult, Csr, bool, Option<SimReport>), MlmemError> {
@@ -873,11 +903,12 @@ fn run_chain_hop(
     // Decide the intermediate's state for this hop: resident in fast
     // (free when the producer left it there, one explicit promote
     // otherwise), or pinned in the slow pool. A non-intermediate operand
-    // keeps the paper's pre-placed semantics.
+    // keeps the paper's pre-placed semantics unless the session's fast
+    // pool already holds it (`operand_res`).
     let (residency, pinned, promote_report, pre_cands) = match intermediate {
         // First hop of the chosen order: the pre-pass already enumerated
         // its candidates (3-chains) — reuse them.
-        None => (Residency::NONE, Residency::NONE, None, first_cands),
+        None => (operand_res, Residency::NONE, None, first_cands),
         Some((side, in_fast)) => {
             let bytes = match side {
                 Side::A => a.size_bytes(),
@@ -886,9 +917,9 @@ fn run_chain_hop(
             if bytes + ACC_SLACK > usable {
                 // Too big to stay resident: it is materialized in — and
                 // streams from — the slow pool.
-                (Residency::NONE, side.residency(), None, None)
+                (operand_res, side.residency(), None, None)
             } else if in_fast {
-                (side.residency(), Residency::NONE, None, None)
+                (side.residency().union(operand_res), Residency::NONE, None, None)
             } else {
                 // The producing plan left the intermediate in the slow
                 // pool. Promote it with one bulk transfer when the
@@ -897,10 +928,11 @@ fn run_chain_hop(
                 let core = Arc::clone(base.shape_core());
                 let plain_problem = Problem::try_new(a, b)?
                     .with_shape_core(Arc::clone(&core))
-                    .with_slow_pinned(side.residency());
+                    .with_slow_pinned(side.residency())
+                    .with_residency(operand_res);
                 let res_problem = Problem::try_new(a, b)?
                     .with_shape_core(core)
-                    .with_residency(side.residency());
+                    .with_residency(side.residency().union(operand_res));
                 let plain_cands = spgemm_candidates(arch, &plain_problem, opts);
                 let res_cands = spgemm_candidates(arch, &res_problem, opts);
                 let plain = best_candidate_seconds(&plain_cands);
@@ -909,9 +941,14 @@ fn run_chain_hop(
                 sim.bulk_copy_pools(SLOW, FAST, bytes);
                 let promote = sim.finish();
                 if res + promote.seconds < plain {
-                    (side.residency(), Residency::NONE, Some(promote), Some(res_cands))
+                    (
+                        side.residency().union(operand_res),
+                        Residency::NONE,
+                        Some(promote),
+                        Some(res_cands),
+                    )
                 } else {
-                    (Residency::NONE, side.residency(), None, Some(plain_cands))
+                    (operand_res, side.residency(), None, Some(plain_cands))
                 }
             }
         }

@@ -6,6 +6,7 @@
 
 use super::job::{Decision, JobResult};
 use crate::error::{JobControl, MlmemError};
+use crate::memory::ResidencyStats;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::time::Duration;
@@ -54,12 +55,17 @@ pub struct MetricsSnapshot {
     /// Jobs submitted but not yet finished when the snapshot was taken.
     pub queue_depth: u64,
     pub decisions: DecisionCounts,
+    /// Fast-pool operand cache counters: hits/misses of the session's
+    /// [`ResidencyPool`](crate::memory::ResidencyPool), evicted bytes,
+    /// and the live resident gauges.
+    pub residency: ResidencyStats,
 }
 
 impl Metrics {
     /// Snapshot every counter; the caller supplies the live queue depth
-    /// (the worker pool owns that number).
-    pub fn snapshot(&self, queue_depth: usize) -> MetricsSnapshot {
+    /// (the worker pool owns that number) and the session's residency-pool
+    /// stats (the pool owns those).
+    pub fn snapshot(&self, queue_depth: usize, residency: ResidencyStats) -> MetricsSnapshot {
         let load = |c: &AtomicU64| c.load(Ordering::SeqCst);
         MetricsSnapshot {
             submitted: load(&self.submitted),
@@ -68,6 +74,7 @@ impl Metrics {
             rejected: load(&self.rejected),
             cancelled: load(&self.cancelled),
             queue_depth: queue_depth as u64,
+            residency,
             decisions: DecisionCounts {
                 flat_default: load(&self.dec_flat_default),
                 flat_fast: load(&self.dec_flat_fast),
@@ -243,9 +250,10 @@ mod tests {
         m.record_outcome(&Err(MlmemError::Cancelled));
         m.record_outcome(&Err(MlmemError::DeadlineExceeded));
         m.record_outcome(&Err(MlmemError::Planner("boom".into())));
-        let s = m.snapshot(3);
+        let s = m.snapshot(3, ResidencyStats::default());
         assert_eq!((s.cancelled, s.failed, s.completed), (2, 1, 0));
         assert_eq!(s.queue_depth, 3);
+        assert_eq!(s.residency, ResidencyStats::default());
     }
 
     #[test]

@@ -16,6 +16,13 @@
 //! [`cancel`](JobHandle::cancel), and per-job deadlines — all failing
 //! with the crate-wide typed [`MlmemError`].
 //!
+//! The session also owns a **fast-pool residency manager**
+//! ([`ResidencyPool`], DESIGN.md §9): operands a finished job left
+//! wholly materialized in the fast pool stay resident across jobs, so a
+//! `serve` batch hammering a hot operand stages it once and every later
+//! job starts with [`Residency`] set and the bulk copy-in skipped.
+//! Residency hits/misses/evictions surface in [`MetricsSnapshot`].
+//!
 //! ```
 //! use mlmem_spgemm::coordinator::Session;
 //! use mlmem_spgemm::gen::rhs::random_csr;
@@ -35,15 +42,15 @@
 //! assert_eq!(session.symbolic_passes(), 1);
 //! ```
 
-use super::job::{ChainAssoc, Job, JobKind, JobResult, Policy};
+use super::job::{ChainAssoc, Decision, Job, JobKind, JobResult, Policy};
 use super::planner::{self, PlannerOptions};
 use super::service::{JobHandle, Metrics, MetricsSnapshot};
 use crate::engine::cost::ShapeCore;
-use crate::engine::{EngineKind, EngineReport, ExecPlan, Problem};
+use crate::engine::{EngineKind, EngineReport, ExecPlan, Problem, Residency};
 use crate::error::{JobControl, MlmemError};
 use crate::kkmem::{CompressedMatrix, SpgemmOptions};
 use crate::memory::arch::{Arch, MachineKind};
-use crate::memory::{Location, FAST, SLOW};
+use crate::memory::{Location, ResidencyPool, FAST, SLOW};
 use crate::sparse::Csr;
 use crate::util::threadpool::{Priority, WorkerPool};
 use std::collections::HashMap;
@@ -78,15 +85,13 @@ pub struct SubmitOptions {
 }
 
 /// One registered operand: the matrix plus the cached per-matrix
-/// symbolic summary and its last-known placement residency.
+/// symbolic summary. Placement residency is tracked by the session's
+/// [`ResidencyPool`], not per operand.
 struct Operand {
     matrix: Arc<Csr>,
     /// Compressed form, built on first use as a right-hand side and
     /// reused across every pair this operand appears in.
     compressed: Mutex<Option<Arc<CompressedMatrix>>>,
-    /// Coarse last-known residency from the most recent executed plan
-    /// (`None` until a job ran against this operand).
-    residency: Mutex<Option<Location>>,
 }
 
 impl Operand {
@@ -113,6 +118,10 @@ struct Shared {
     /// Symbolic passes actually computed (cache misses). The registry
     /// reuse tests pin this.
     symbolic_passes: AtomicU64,
+    /// Cross-job operand cache over the fast pool: jobs lease resident
+    /// operands at run start and capture what their executed plan left
+    /// wholly in fast memory (DESIGN.md §9).
+    fast_pool: ResidencyPool,
 }
 
 impl Shared {
@@ -140,6 +149,7 @@ pub struct SessionBuilder {
     workers: usize,
     max_pending: usize,
     default_policy: Policy,
+    operand_cache: bool,
 }
 
 impl SessionBuilder {
@@ -150,6 +160,7 @@ impl SessionBuilder {
             workers: 4,
             max_pending: 64,
             default_policy: Policy::Auto,
+            operand_cache: true,
         }
     }
 
@@ -178,7 +189,17 @@ impl SessionBuilder {
         self
     }
 
+    /// Enable or disable the cross-job fast-pool operand cache (default
+    /// on). Disabled, every job runs with the paper's per-multiplication
+    /// placement semantics — the baseline the `serve` bench experiment
+    /// compares against.
+    pub fn operand_cache(mut self, enabled: bool) -> Self {
+        self.operand_cache = enabled;
+        self
+    }
+
     pub fn build(self) -> Session {
+        let fast_capacity = self.arch.spec.pools[FAST.0].usable();
         Session {
             arch: self.arch,
             opts: self.opts,
@@ -192,6 +213,7 @@ impl SessionBuilder {
                 metrics: Metrics::default(),
                 pair_cache: Mutex::new(HashMap::new()),
                 symbolic_passes: AtomicU64::new(0),
+                fast_pool: ResidencyPool::new(fast_capacity, self.operand_cache),
             }),
         }
     }
@@ -220,11 +242,7 @@ impl Session {
     /// reused by every job it participates in.
     pub fn register(&self, matrix: Arc<Csr>) -> MatrixHandle {
         let id = self.next_handle.fetch_add(1, Ordering::SeqCst);
-        let operand = Arc::new(Operand {
-            matrix,
-            compressed: Mutex::new(None),
-            residency: Mutex::new(None),
-        });
+        let operand = Arc::new(Operand { matrix, compressed: Mutex::new(None) });
         self.operands.lock().expect("registry poisoned").insert(id, operand);
         MatrixHandle { id }
     }
@@ -234,12 +252,31 @@ impl Session {
         Ok(Arc::clone(&self.resolve(h)?.matrix))
     }
 
-    /// Coarse last-known placement residency of a registered operand
-    /// (`None` until a job ran against it).
+    /// Where a registered operand is materialized right now:
+    /// `Some(Pool(FAST))` while it is resident in the session's fast-pool
+    /// cache, `None` otherwise (never resident, evicted, or the handle is
+    /// unknown).
     pub fn residency(&self, h: MatrixHandle) -> Option<Location> {
-        let op = self.resolve(h).ok()?;
-        let loc = *op.residency.lock().expect("residency poisoned");
-        loc
+        (self.resolve(h).is_ok() && self.shared.fast_pool.contains(h.id))
+            .then_some(Location::Pool(FAST))
+    }
+
+    /// Pin a registered operand in the fast-pool cache: once captured it
+    /// is never evicted until [`unpin_fast`](Session::unpin_fast). The
+    /// pool pays no transfers of its own, so pinning takes effect at the
+    /// operand's next capture (a job whose plan materializes it wholly in
+    /// fast memory). Returns whether the operand is resident right now.
+    pub fn pin_fast(&self, h: MatrixHandle) -> Result<bool, MlmemError> {
+        self.resolve(h)?;
+        Ok(self.shared.fast_pool.pin(h.id))
+    }
+
+    /// Clear a [`pin_fast`](Session::pin_fast) mark; the operand becomes
+    /// an ordinary eviction candidate again.
+    pub fn unpin_fast(&self, h: MatrixHandle) -> Result<(), MlmemError> {
+        self.resolve(h)?;
+        self.shared.fast_pool.unpin(h.id);
+        Ok(())
     }
 
     /// Symbolic passes computed so far — stays flat while jobs hit the
@@ -274,12 +311,26 @@ impl Session {
         };
         self.submit(kind, options, move |job, control, opts, shared| {
             let core = shared.shape_core_for((a.id, b.id), &oa, &ob);
+            // Lease pool-resident operands for the run (the leases keep
+            // them unevictable mid-job) and seed the problem's residency
+            // from live pool state, so the planner prices "operand
+            // already fast" exactly as the chain path does.
+            let lease_a = shared.fast_pool.acquire(a.id);
+            let lease_b = shared.fast_pool.acquire(b.id);
+            let residency = Residency { a: lease_a.is_some(), b: lease_b.is_some() };
             let problem = Problem::try_new(&oa.matrix, &ob.matrix)?
                 .with_shape_core(core)
-                .with_control(control.clone());
+                .with_control(control.clone())
+                .with_residency(residency);
             let result = planner::execute_spgemm(job, &problem, opts);
             if let Ok(r) = &result {
-                record_residency(&job.arch, &oa, &ob, r);
+                let (fa, fb) = decision_leaves_fast(&job.arch, &r.decision);
+                if fa {
+                    capture_operand(&shared.fast_pool, &job.arch, a.id, &oa.matrix);
+                }
+                if fb {
+                    capture_operand(&shared.fast_pool, &job.arch, b.id, &ob.matrix);
+                }
             }
             result
         })
@@ -304,9 +355,17 @@ impl Session {
         );
         job.keep_product = true;
         let seeds = chain_pair_seeds(&self.shared, &ids, &ops);
-        let result =
-            planner::execute_chain_mats(&job, &mats, &JobControl::default(), &self.opts, &seeds)?;
-        record_chain_residency(&self.arch, &ops, &result);
+        let leases: Vec<_> = ids.iter().map(|&i| self.shared.fast_pool.acquire(i)).collect();
+        let resident: Vec<bool> = leases.iter().map(|l| l.is_some()).collect();
+        let result = planner::execute_chain_mats(
+            &job,
+            &mats,
+            &JobControl::default(),
+            &self.opts,
+            &seeds,
+            &resident,
+        )?;
+        capture_chain(&self.shared.fast_pool, &self.arch, &ids, &mats, &result);
         Ok(result)
     }
 
@@ -323,8 +382,11 @@ impl Session {
         let kind = JobKind::Chain { mats: mats.clone() };
         self.submit(kind, options, move |job, control, opts, shared| {
             let seeds = chain_pair_seeds(shared, &ids, &ops);
-            let result = planner::execute_chain_mats(job, &mats, control, opts, &seeds)?;
-            record_chain_residency(&job.arch, &ops, &result);
+            let leases: Vec<_> = ids.iter().map(|&i| shared.fast_pool.acquire(i)).collect();
+            let resident: Vec<bool> = leases.iter().map(|l| l.is_some()).collect();
+            let result =
+                planner::execute_chain_mats(job, &mats, control, opts, &seeds, &resident)?;
+            capture_chain(&shared.fast_pool, &job.arch, &ids, &mats, &result);
             Ok(result)
         })
     }
@@ -451,10 +513,21 @@ impl Session {
         }
         let engine = kind.build(Arc::clone(&self.arch), engine_opts, fast_budget)?;
         let core = self.shared.shape_core_for((a.id, b.id), &oa, &ob);
-        let problem =
-            Problem::try_new(&oa.matrix, &ob.matrix)?.with_shape_core(core);
+        let lease_a = self.shared.fast_pool.acquire(a.id);
+        let lease_b = self.shared.fast_pool.acquire(b.id);
+        let residency = Residency { a: lease_a.is_some(), b: lease_b.is_some() };
+        let problem = Problem::try_new(&oa.matrix, &ob.matrix)?
+            .with_shape_core(core)
+            .with_residency(residency);
         let plan = engine.plan(&problem)?;
         let report = engine.run(&problem, &plan)?;
+        let (fa, fb) = plan_leaves_fast(&self.arch, &plan, &report);
+        if fa {
+            capture_operand(&self.shared.fast_pool, &self.arch, a.id, &oa.matrix);
+        }
+        if fb {
+            capture_operand(&self.shared.fast_pool, &self.arch, b.id, &ob.matrix);
+        }
         Ok((plan, report))
     }
 
@@ -464,9 +537,12 @@ impl Session {
     }
 
     /// Named snapshot of the service counters, including live queue
-    /// depth and per-decision counts.
+    /// depth, per-decision counts, and the fast-pool residency cache's
+    /// hits/misses/evicted bytes.
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.shared.metrics.snapshot(self.pool.pending())
+        self.shared
+            .metrics
+            .snapshot(self.pool.pending(), self.shared.fast_pool.stats())
     }
 
     /// Aggregate simulated GFLOP/s across completed jobs.
@@ -484,37 +560,57 @@ impl Session {
     }
 }
 
-/// Coarse per-operand locations a decision implies (where the plan read
-/// A and B from).
-fn plan_operand_locs(arch: &Arch, d: &super::job::Decision) -> (Location, Location) {
-    use super::job::Decision;
-    let fast = Location::Pool(FAST);
-    let slow = Location::Pool(SLOW);
+/// Does the executed decision leave each operand **wholly materialized**
+/// in the fast pool when the job finishes — the capture side of the
+/// fast-pool residency cache (DESIGN.md §9)? Flat-fast (and flat-default
+/// on an HBM-default machine) computed with the operands placed fast; DP
+/// placed B there; a chunk plan that staged a side in exactly one part
+/// finished with that side's full copy in the staging arena. A side
+/// staged in several parts holds only its last chunk at the end, so it
+/// is not capturable.
+fn decision_leaves_fast(arch: &Arch, d: &Decision) -> (bool, bool) {
+    let hbm_default = arch.default_loc == Location::Pool(FAST);
     match d {
-        Decision::FlatDefault => (arch.default_loc, arch.default_loc),
-        Decision::FlatFast => (fast, fast),
-        // DP's headline move is B into fast memory; A streams from its
-        // default location.
-        Decision::DataPlacement => (arch.default_loc, fast),
-        // Algorithm 1 keeps A (and C) in the slow pool and stages B
-        // chunks through fast memory.
-        Decision::ChunkedKnl { .. } => (slow, fast),
-        // The GPU drivers stage both sides through fast memory.
-        Decision::ChunkedGpu { .. } => (fast, fast),
-        Decision::Pipelined { .. } => match arch.kind {
-            MachineKind::Knl => (slow, fast),
-            MachineKind::Gpu => (fast, fast),
+        Decision::FlatDefault => (hbm_default, hbm_default),
+        Decision::FlatFast => (true, true),
+        // DP's headline move is B (whole) into fast memory; A streams
+        // from its default location.
+        Decision::DataPlacement => (false, true),
+        // Algorithm 1 keeps A in the slow pool and stages B chunks.
+        Decision::ChunkedKnl { parts } => (false, *parts == 1),
+        Decision::ChunkedGpu { parts_ac, parts_b } => (*parts_ac == 1, *parts_b == 1),
+        Decision::Pipelined { parts_ac, parts_b } => match arch.kind {
+            MachineKind::Knl => (false, *parts_b == 1),
+            MachineKind::Gpu => (*parts_ac == 1, *parts_b == 1),
         },
     }
 }
 
-/// Record the coarse residency the executed plan implies for each
-/// operand — what "where did my matrix end up" observability needs
-/// without keeping the simulator alive.
-fn record_residency(arch: &Arch, oa: &Operand, ob: &Operand, r: &JobResult) {
-    let (a_loc, b_loc) = plan_operand_locs(arch, &r.decision);
-    *oa.residency.lock().expect("residency poisoned") = Some(a_loc);
-    *ob.residency.lock().expect("residency poisoned") = Some(b_loc);
+/// [`decision_leaves_fast`] for the synchronous engine path, where the
+/// committed [`ExecPlan`] plus the run's settled partition counts play
+/// the decision's role. Native runs simulate nothing — nothing to keep.
+fn plan_leaves_fast(arch: &Arch, plan: &ExecPlan, rep: &EngineReport) -> (bool, bool) {
+    match plan {
+        ExecPlan::Native { .. } => (false, false),
+        ExecPlan::Placed { placement } => (
+            placement.a == Location::Pool(FAST),
+            placement.b == Location::Pool(FAST),
+        ),
+        ExecPlan::Chunked { .. } => match arch.kind {
+            MachineKind::Knl => (false, rep.n_parts_b == 1),
+            MachineKind::Gpu => (rep.n_parts_ac == 1, rep.n_parts_b == 1),
+        },
+    }
+}
+
+/// Offer one operand to the fast-pool cache, pricing its re-copy through
+/// the same bulk-transfer primitive the chunk drivers charge — the single
+/// accounting path every session route (spgemm, chain, engine) captures
+/// through.
+fn capture_operand(pool: &ResidencyPool, arch: &Arch, id: u64, m: &Csr) {
+    let bytes = m.size_bytes();
+    let recopy = arch.spec.bulk_copy_seconds(SLOW, FAST, bytes);
+    pool.insert(id, bytes, recopy);
 }
 
 /// The registry's pair-cache seeds for a chain's adjacent operand pairs:
@@ -535,36 +631,53 @@ fn chain_pair_seeds(
     seeds
 }
 
-/// Chain flavour of [`record_residency`]: map every registered operand
-/// to the hop side that consumed it under the chosen association order.
-fn record_chain_residency(arch: &Arch, ops: &[Arc<Operand>], result: &JobResult) {
+/// Chain flavour of the capture path: map every registered operand to
+/// the hop side that consumed it under the chosen association order, and
+/// offer to the pool the ones whose hop left them wholly in fast memory.
+fn capture_chain(
+    pool: &ResidencyPool,
+    arch: &Arch,
+    ids: &[u64],
+    mats: &[Arc<Csr>],
+    result: &JobResult,
+) {
     let Some(chain) = result.chain.as_ref() else { return };
-    let set = |op: &Operand, loc: Location| {
-        *op.residency.lock().expect("residency poisoned") = Some(loc);
-    };
+    let capture = |i: usize| capture_operand(pool, arch, ids[i], &mats[i]);
     match chain.assoc {
         ChainAssoc::LeftFold => {
             if let Some(h0) = chain.hops.first() {
-                let (a_loc, b_loc) = plan_operand_locs(arch, &h0.decision);
-                set(&ops[0], a_loc);
-                set(&ops[1], b_loc);
+                let (fa, fb) = decision_leaves_fast(arch, &h0.decision);
+                if fa {
+                    capture(0);
+                }
+                if fb {
+                    capture(1);
+                }
             }
             // Hop i (i ≥ 1) consumes the intermediate on the A side and
             // operand i+1 on the B side.
             for (i, hop) in chain.hops.iter().enumerate().skip(1) {
-                let (_, b_loc) = plan_operand_locs(arch, &hop.decision);
-                set(&ops[i + 1], b_loc);
+                let (_, fb) = decision_leaves_fast(arch, &hop.decision);
+                if fb {
+                    capture(i + 1);
+                }
             }
         }
         ChainAssoc::RightFold => {
             if let Some(h0) = chain.hops.first() {
-                let (a_loc, b_loc) = plan_operand_locs(arch, &h0.decision);
-                set(&ops[1], a_loc);
-                set(&ops[2], b_loc);
+                let (fa, fb) = decision_leaves_fast(arch, &h0.decision);
+                if fa {
+                    capture(1);
+                }
+                if fb {
+                    capture(2);
+                }
             }
             if let Some(h1) = chain.hops.get(1) {
-                let (a_loc, _) = plan_operand_locs(arch, &h1.decision);
-                set(&ops[0], a_loc);
+                let (fa, _) = decision_leaves_fast(arch, &h1.decision);
+                if fa {
+                    capture(0);
+                }
             }
         }
     }
@@ -647,19 +760,59 @@ mod tests {
     }
 
     #[test]
-    fn residency_tracks_last_plan() {
+    fn residency_reflects_fast_pool_capture() {
         let session = Session::builder(arch()).workers(1).build();
         let a = session.register(mat(3));
         let b = session.register(mat(4));
         assert_eq!(session.residency(a), None);
+        // A Flat run on a DDR-default KNL leaves nothing in fast memory.
         session
             .spgemm_with(a, b, SubmitOptions { policy: Some(Policy::Flat), ..Default::default() })
             .unwrap()
             .wait()
             .unwrap();
-        // Flat on a DDR-default KNL: both operands at the default pool.
-        assert_eq!(session.residency(a), Some(session.arch.default_loc));
-        assert_eq!(session.residency(b), Some(session.arch.default_loc));
+        assert_eq!(session.residency(a), None);
+        assert_eq!(session.metrics().residency.misses, 2);
+        // An Auto run on tiny operands goes flat-fast: both captured.
+        session.spgemm(a, b).unwrap().wait().unwrap();
+        assert_eq!(session.residency(a), Some(Location::Pool(FAST)));
+        assert_eq!(session.residency(b), Some(Location::Pool(FAST)));
+        // The next job leases both straight from the pool.
+        session.spgemm(a, b).unwrap().wait().unwrap();
+        let m = session.metrics();
+        assert_eq!((m.residency.hits, m.residency.misses), (2, 4));
+        assert_eq!(m.residency.resident_entries, 2);
+        assert!(m.residency.resident_bytes <= session.arch.spec.pools[FAST.0].usable());
+    }
+
+    #[test]
+    fn disabled_operand_cache_is_inert_and_equivalent() {
+        let session = Session::builder(arch()).workers(1).operand_cache(false).build();
+        let a = session.register(mat(3));
+        let b = session.register(mat(4));
+        let r1 = session.spgemm(a, b).unwrap().wait().unwrap();
+        let r2 = session.spgemm(a, b).unwrap().wait().unwrap();
+        assert_eq!(session.residency(a), None);
+        assert_eq!(session.metrics().residency, crate::memory::ResidencyStats::default());
+        // Without the cache every job re-plans from cold state.
+        assert_eq!(r1.decision, r2.decision);
+        assert_eq!(r1.report.seconds, r2.report.seconds);
+    }
+
+    #[test]
+    fn pinned_operand_survives_capture_pressure() {
+        let session = Session::builder(arch()).workers(1).build();
+        let a = session.register(mat(5));
+        let b = session.register(mat(6));
+        assert!(!session.pin_fast(b).unwrap(), "nothing resident yet");
+        session.spgemm(a, b).unwrap().wait().unwrap();
+        // Captured with the pending pin applied.
+        assert!(session.pin_fast(b).unwrap());
+        session.unpin_fast(b).unwrap();
+        assert!(matches!(
+            session.pin_fast(MatrixHandle { id: 999 }),
+            Err(MlmemError::UnknownHandle(999))
+        ));
     }
 
     #[test]

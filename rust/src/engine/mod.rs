@@ -64,6 +64,12 @@ impl Residency {
     pub fn any(&self) -> bool {
         self.a || self.b
     }
+
+    /// Component-wise OR — how the chain executor folds an intermediate's
+    /// residency together with the session pool's operand residency.
+    pub fn union(self, other: Residency) -> Residency {
+        Residency { a: self.a || other.a, b: self.b || other.b }
+    }
 }
 
 /// One multiplication `C = A × B` as the engines see it. Carries a lazy

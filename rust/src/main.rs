@@ -80,6 +80,7 @@ fn cmd_bench(argv: &[String]) -> Result<(), MlmemError> {
         .opt("graph-scale", "13", "log2 vertices for Figure 11 graphs")
         .opt("scale-denom", "1024", "capacity scale denominator (1024 = paper-GB -> MiB)")
         .opt("out-dir", "reports", "CSV output directory ('' to skip)")
+        .opt("json", "", "machine-readable JSON output path, e.g. BENCH_serve.json ('' to skip)")
         .opt("seed", "42", "workload seed")
         .switch("quick", "tiny sizes for smoke runs");
     let p = spec.parse(argv)?;
@@ -96,7 +97,9 @@ fn cmd_bench(argv: &[String]) -> Result<(), MlmemError> {
     }
     let out = p.string("out-dir");
     let out_dir = (!out.is_empty()).then(|| PathBuf::from(out));
-    Ok(run_and_report(&p.list("exp"), &cfg, out_dir.as_deref())?)
+    let json = p.string("json");
+    let json_path = (!json.is_empty()).then(|| PathBuf::from(json));
+    Ok(run_and_report(&p.list("exp"), &cfg, out_dir.as_deref(), json_path.as_deref())?)
 }
 
 fn parse_machine(p: &ParsedArgs, threads: usize, scale: ScaleFactor) -> Result<Arch, String> {
@@ -547,6 +550,14 @@ fn cmd_serve(argv: &[String]) -> Result<(), MlmemError> {
         session.aggregate_gflops(),
         session.symbolic_passes(),
         jobs
+    );
+    println!(
+        "fast-pool cache: {} hits, {} misses, {} evicted; {} resident now ({} operands)",
+        m.residency.hits,
+        m.residency.misses,
+        mlmem_spgemm::util::table::human_bytes(m.residency.evicted_bytes),
+        mlmem_spgemm::util::table::human_bytes(m.residency.resident_bytes),
+        m.residency.resident_entries
     );
     Ok(())
 }

@@ -12,9 +12,11 @@ pub mod cache;
 pub mod machine;
 pub mod mcdram_cache;
 pub mod pool;
+pub mod residency;
 pub mod uvm;
 
 pub use alloc::Location;
 pub use arch::{Arch, GpuMode, KnlMode, MachineKind};
 pub use machine::{MachineSpec, MemSim, MemTracer, NullTracer, RegionId, SimReport};
 pub use pool::{PoolId, FAST, SLOW};
+pub use residency::{Lease, ResidencyPool, ResidencyStats};

@@ -1,0 +1,450 @@
+//! The fast-pool residency manager: a byte-accounted registry of
+//! operands currently materialized in the fast memory space, shared by
+//! every job of a [`Session`](crate::coordinator::Session).
+//!
+//! The paper's placement decisions are per multiplication; a service
+//! multiplying the same operands over and over (Nagasaka & Azad's
+//! repeated-SpGEMM regime) re-stages the same hot structure into
+//! MCDRAM/HBM on every job. This pool closes that gap at the session
+//! level:
+//!
+//! * **Admission is by capture.** The pool never issues transfers of its
+//!   own — after a job completes, the session inserts the operands whose
+//!   executed plan left them *wholly* materialized in the fast pool
+//!   (a flat-fast placement, a DP-placed B, a chunked run that staged
+//!   the operand in one part). Retaining that copy is free; the next job
+//!   against the operand starts with [`Residency`](crate::engine::Residency)
+//!   set and its bulk copy-in skipped by the drivers.
+//! * **Leases are ref-counted.** A job holds a [`Lease`] on each resident
+//!   operand it reads for the duration of its run; leased entries are
+//!   never evicted, so a concurrent capture cannot pull a matrix out from
+//!   under a running kernel. Leases release on drop.
+//! * **Eviction is cost-aware.** When a capture needs space, victims are
+//!   the unleased, unpinned entries with the lowest *re-copy cost per
+//!   byte freed* — the seconds one bulk slow→fast transfer of the entry
+//!   would cost (priced by the same
+//!   [`bulk_copy_seconds`](crate::memory::MachineSpec::bulk_copy_seconds)
+//!   primitive the chunk drivers charge), divided by its resident bytes —
+//!   with least-recently-used as the tiebreak. An insert that cannot be
+//!   satisfied by evicting unleased entries is refused outright (no
+//!   partial evictions for a failed admission).
+//! * **Accounting is capacity-bounded.** The sum of resident bytes never
+//!   exceeds the configured capacity (the architecture's usable fast
+//!   bytes); entries larger than the capacity are never admitted.
+//!
+//! The pool is a session-level model: each job still runs against its own
+//! [`MemSim`](crate::memory::MemSim), which accounts the job's *own*
+//! resident operands (the residency-aware drivers shrink their staging
+//! arenas by the resident footprint). Residency held by operands a job
+//! does not touch is not visible to that job's simulator — the
+//! single-job-at-a-time approximation DESIGN.md §9 documents.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
+
+/// One resident operand.
+struct Entry {
+    bytes: u64,
+    /// Active leases; a leased entry is never evicted.
+    leases: u32,
+    /// Pinned entries are never evicted, leased or not.
+    pinned: bool,
+    /// Logical-clock timestamp of the last touch (LRU tiebreak).
+    last_use: u64,
+    /// Seconds one bulk slow→fast transfer of this operand costs — what
+    /// eviction weighs the freed bytes against.
+    recopy_seconds: f64,
+}
+
+#[derive(Default)]
+struct Inner {
+    entries: HashMap<u64, Entry>,
+    /// Sum of resident entry bytes; invariant: `used <= capacity`.
+    used: u64,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    evicted_bytes: u64,
+    /// Keys pinned before their first capture: applied at insert.
+    pending_pins: HashSet<u64>,
+}
+
+/// Counters and gauges of a [`ResidencyPool`], surfaced through
+/// [`MetricsSnapshot`](crate::coordinator::MetricsSnapshot).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResidencyStats {
+    /// Acquires that found the operand resident (its copy-in is skipped).
+    pub hits: u64,
+    /// Acquires that found nothing resident.
+    pub misses: u64,
+    /// Entries evicted to make room for captures.
+    pub evictions: u64,
+    /// Total bytes those evictions freed.
+    pub evicted_bytes: u64,
+    /// Bytes currently resident (gauge; never exceeds the capacity).
+    pub resident_bytes: u64,
+    /// Operands currently resident (gauge).
+    pub resident_entries: u64,
+}
+
+/// A ref-counted hold on a resident operand for the duration of one job;
+/// releases on drop. While any lease on an entry is live, the entry
+/// cannot be evicted.
+pub struct Lease<'p> {
+    pool: &'p ResidencyPool,
+    key: u64,
+}
+
+impl Drop for Lease<'_> {
+    fn drop(&mut self) {
+        self.pool.release(self.key);
+    }
+}
+
+/// The session-owned fast-pool residency manager; see the module docs.
+pub struct ResidencyPool {
+    capacity: u64,
+    enabled: bool,
+    inner: Mutex<Inner>,
+}
+
+impl ResidencyPool {
+    /// A pool accounting up to `capacity` bytes. A disabled pool is
+    /// inert: every acquire misses silently, nothing is ever captured,
+    /// and all counters stay zero (the cache-off baseline).
+    pub fn new(capacity: u64, enabled: bool) -> Self {
+        Self { capacity, enabled, inner: Mutex::new(Inner::default()) }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Try to lease the operand for a job about to run: `Some` when it is
+    /// resident (counted as a hit; the entry is ref-locked until the
+    /// lease drops), `None` when it is not (counted as a miss).
+    pub fn acquire(&self, key: u64) -> Option<Lease<'_>> {
+        if !self.enabled {
+            return None;
+        }
+        let mut guard = self.inner.lock().expect("residency pool poisoned");
+        // Reborrow through the guard once so the arms can touch disjoint
+        // fields while the entry borrow is live.
+        let inner = &mut *guard;
+        inner.clock += 1;
+        let tick = inner.clock;
+        match inner.entries.get_mut(&key) {
+            Some(e) => {
+                e.leases += 1;
+                e.last_use = tick;
+                inner.hits += 1;
+                Some(Lease { pool: self, key })
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    fn release(&self, key: u64) {
+        let mut inner = self.inner.lock().expect("residency pool poisoned");
+        if let Some(e) = inner.entries.get_mut(&key) {
+            e.leases = e.leases.saturating_sub(1);
+        }
+    }
+
+    /// Capture an operand the just-finished job left wholly materialized
+    /// in the fast pool. Evicts unleased, unpinned victims (cheapest
+    /// re-copy per byte first, LRU tiebreak) when space is needed;
+    /// refuses — without evicting anything — when the remaining entries
+    /// are all leased or pinned, or the operand exceeds the capacity.
+    /// Re-capturing a resident operand refreshes its LRU position.
+    /// `recopy_seconds` prices one bulk slow→fast transfer of the operand
+    /// (see [`MachineSpec::bulk_copy_seconds`](crate::memory::MachineSpec::bulk_copy_seconds)).
+    pub fn insert(&self, key: u64, bytes: u64, recopy_seconds: f64) -> bool {
+        if !self.enabled || bytes > self.capacity {
+            return false;
+        }
+        let mut inner = self.inner.lock().expect("residency pool poisoned");
+        inner.clock += 1;
+        let tick = inner.clock;
+        if let Some(e) = inner.entries.get_mut(&key) {
+            e.last_use = tick;
+            return true;
+        }
+        let free = self.capacity - inner.used;
+        if bytes > free {
+            let needed = bytes - free;
+            // Victims sorted by re-copy seconds per byte freed (ascending
+            // — big cheap-to-restream entries go first), then LRU.
+            let mut victims: Vec<(u64, u64, f64, u64)> = inner
+                .entries
+                .iter()
+                .filter(|(_, e)| e.leases == 0 && !e.pinned)
+                .map(|(&k, e)| (k, e.bytes, e.recopy_seconds / e.bytes.max(1) as f64, e.last_use))
+                .collect();
+            victims.sort_by(|x, y| {
+                x.2.partial_cmp(&y.2)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(x.3.cmp(&y.3))
+            });
+            let mut chosen = Vec::new();
+            let mut freed = 0u64;
+            for &(k, b, _, _) in &victims {
+                if freed >= needed {
+                    break;
+                }
+                chosen.push((k, b));
+                freed += b;
+            }
+            if freed < needed {
+                return false;
+            }
+            for (k, b) in chosen {
+                inner.entries.remove(&k);
+                inner.used -= b;
+                inner.evictions += 1;
+                inner.evicted_bytes += b;
+            }
+        }
+        let pinned = inner.pending_pins.remove(&key);
+        inner.entries.insert(
+            key,
+            Entry { bytes, leases: 0, pinned, last_use: tick, recopy_seconds },
+        );
+        inner.used += bytes;
+        debug_assert!(inner.used <= self.capacity);
+        true
+    }
+
+    /// Mark the operand unevictable. Takes effect immediately when it is
+    /// resident; otherwise the mark is remembered and applied at its next
+    /// capture. Returns whether the operand is resident right now.
+    pub fn pin(&self, key: u64) -> bool {
+        if !self.enabled {
+            return false;
+        }
+        let mut guard = self.inner.lock().expect("residency pool poisoned");
+        let inner = &mut *guard;
+        match inner.entries.get_mut(&key) {
+            Some(e) => {
+                e.pinned = true;
+                true
+            }
+            None => {
+                inner.pending_pins.insert(key);
+                false
+            }
+        }
+    }
+
+    /// Clear a pin (resident or pending); the entry becomes an ordinary
+    /// eviction candidate again once unleased.
+    pub fn unpin(&self, key: u64) {
+        if !self.enabled {
+            return;
+        }
+        let mut inner = self.inner.lock().expect("residency pool poisoned");
+        inner.pending_pins.remove(&key);
+        if let Some(e) = inner.entries.get_mut(&key) {
+            e.pinned = false;
+        }
+    }
+
+    /// Is the operand resident right now?
+    pub fn contains(&self, key: u64) -> bool {
+        self.inner
+            .lock()
+            .expect("residency pool poisoned")
+            .entries
+            .contains_key(&key)
+    }
+
+    pub fn stats(&self) -> ResidencyStats {
+        let inner = self.inner.lock().expect("residency pool poisoned");
+        ResidencyStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            evicted_bytes: inner.evicted_bytes,
+            resident_bytes: inner.used,
+            resident_entries: inner.entries.len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+
+    /// A flat per-byte price keeps scoring deterministic in unit tests.
+    fn cost(bytes: u64) -> f64 {
+        bytes as f64 * 1e-9
+    }
+
+    #[test]
+    fn acquire_counts_hits_and_misses() {
+        let pool = ResidencyPool::new(1000, true);
+        assert!(pool.acquire(1).is_none());
+        assert!(pool.insert(1, 400, cost(400)));
+        let lease = pool.acquire(1).expect("resident");
+        assert!(pool.contains(1));
+        drop(lease);
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.resident_bytes, 400);
+        assert_eq!(s.resident_entries, 1);
+    }
+
+    #[test]
+    fn disabled_pool_is_inert() {
+        let pool = ResidencyPool::new(1000, false);
+        assert!(pool.acquire(1).is_none());
+        assert!(!pool.insert(1, 10, cost(10)));
+        assert!(!pool.pin(1));
+        assert_eq!(pool.stats(), ResidencyStats::default());
+    }
+
+    #[test]
+    fn oversized_entry_is_refused() {
+        let pool = ResidencyPool::new(100, true);
+        assert!(!pool.insert(1, 101, cost(101)));
+        assert!(pool.insert(2, 100, cost(100)));
+    }
+
+    #[test]
+    fn leased_entries_are_never_evicted() {
+        let pool = ResidencyPool::new(1000, true);
+        assert!(pool.insert(1, 900, cost(900)));
+        let lease = pool.acquire(1).expect("resident");
+        // Nothing evictable: the insert is refused and nothing changes.
+        assert!(!pool.insert(2, 200, cost(200)));
+        assert!(pool.contains(1));
+        assert_eq!(pool.stats().evictions, 0);
+        drop(lease);
+        // Unleased now: the same insert evicts it.
+        assert!(pool.insert(2, 200, cost(200)));
+        assert!(!pool.contains(1));
+        let s = pool.stats();
+        assert_eq!((s.evictions, s.evicted_bytes), (1, 900));
+        assert_eq!(s.resident_bytes, 200);
+    }
+
+    #[test]
+    fn pinned_entries_are_never_evicted() {
+        let pool = ResidencyPool::new(1000, true);
+        assert!(pool.insert(1, 900, cost(900)));
+        assert!(pool.pin(1));
+        assert!(!pool.insert(2, 200, cost(200)));
+        pool.unpin(1);
+        assert!(pool.insert(2, 200, cost(200)));
+        // A pending pin sticks at the next capture.
+        assert!(!pool.pin(3), "not resident yet");
+        assert!(pool.insert(3, 700, cost(700)));
+        assert!(!pool.insert(4, 500, cost(500)), "3 is pinned, 2 too small");
+    }
+
+    #[test]
+    fn eviction_prefers_cheap_recopy_per_byte_then_lru() {
+        let pool = ResidencyPool::new(1200, true);
+        // Same size; entry 1 is twice as expensive to bring back.
+        assert!(pool.insert(1, 400, 2.0));
+        assert!(pool.insert(2, 400, 1.0));
+        assert!(pool.insert(3, 300, 0.75)); // same 2.5e-3 s/B as entry 2
+        // Need 300: entry 2 ties entry 3 on cost/byte, is older -> goes.
+        assert!(pool.insert(4, 200, cost(200)));
+        assert!(!pool.contains(2));
+        assert!(pool.contains(1) && pool.contains(3) && pool.contains(4));
+    }
+
+    #[test]
+    fn failed_insert_evicts_nothing() {
+        let pool = ResidencyPool::new(1000, true);
+        assert!(pool.insert(1, 500, cost(500)));
+        let lease = pool.acquire(1).expect("resident");
+        // 600 needed, only 500 free even after any eviction of unleased
+        // entries (there are none): refused with zero evictions.
+        assert!(!pool.insert(2, 600, cost(600)));
+        assert_eq!(pool.stats().evictions, 0);
+        assert_eq!(pool.stats().resident_bytes, 500);
+        drop(lease);
+    }
+
+    #[test]
+    fn reinsert_refreshes_lru() {
+        let pool = ResidencyPool::new(1000, true);
+        assert!(pool.insert(1, 400, 1.0));
+        assert!(pool.insert(2, 400, 1.0));
+        // Touch 1 so 2 becomes the LRU victim.
+        assert!(pool.insert(1, 400, 1.0));
+        assert!(pool.insert(3, 400, 1.0));
+        assert!(pool.contains(1) && !pool.contains(2));
+    }
+
+    #[test]
+    fn prop_accounting_never_exceeds_capacity_and_holds_are_safe() {
+        check("residency pool accounting invariants", 200, |g: &mut Gen| {
+            let capacity = g.usize(64, 4096) as u64;
+            let pool = ResidencyPool::new(capacity, true);
+            let keys: Vec<u64> = (0..g.usize(2, 8) as u64).collect();
+            let mut leases: Vec<Lease> = Vec::new();
+            let mut leased_keys: Vec<u64> = Vec::new();
+            let mut pinned: std::collections::HashSet<u64> =
+                std::collections::HashSet::new();
+            for _ in 0..g.usize(10, 60) {
+                let key = *g.pick(&keys);
+                match g.usize(0, 4) {
+                    0 => {
+                        let bytes = g.usize(1, 2 * capacity as usize) as u64;
+                        let admitted = pool.insert(key, bytes, cost(bytes));
+                        if bytes > capacity {
+                            assert!(!admitted, "oversized entry admitted");
+                        }
+                    }
+                    1 => {
+                        if let Some(l) = pool.acquire(key) {
+                            leases.push(l);
+                            leased_keys.push(key);
+                        }
+                    }
+                    2 => {
+                        if !leases.is_empty() {
+                            let i = g.usize(0, leases.len() - 1);
+                            leases.swap_remove(i);
+                            leased_keys.swap_remove(i);
+                        }
+                    }
+                    3 => {
+                        if pool.pin(key) {
+                            pinned.insert(key);
+                        }
+                    }
+                    _ => {
+                        pool.unpin(key);
+                        pinned.remove(&key);
+                    }
+                }
+                let s = pool.stats();
+                assert!(
+                    s.resident_bytes <= capacity,
+                    "accounted {} > capacity {capacity}",
+                    s.resident_bytes
+                );
+                // Leased and pinned entries are still resident.
+                for k in &leased_keys {
+                    assert!(pool.contains(*k), "leased {k} was evicted");
+                }
+                for k in &pinned {
+                    assert!(pool.contains(*k), "pinned {k} was evicted");
+                }
+            }
+        });
+    }
+}

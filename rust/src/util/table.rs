@@ -66,6 +66,38 @@ impl Table {
         self.rows.len()
     }
 
+    /// Column headers (machine-readable exports).
+    pub fn headers(&self) -> &[String] {
+        &self.headers
+    }
+
+    /// Data rows (machine-readable exports).
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
+    /// The table as a JSON array of row objects keyed by header — the
+    /// `bench --json` export format. Cells that parse as finite numbers
+    /// become JSON numbers; everything else stays a string.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::Arr(
+            self.rows
+                .iter()
+                .map(|row| {
+                    let mut obj = Json::obj();
+                    for (h, c) in self.headers.iter().zip(row) {
+                        obj = match c.parse::<f64>() {
+                            Ok(v) if v.is_finite() => obj.set(h, v),
+                            _ => obj.set(h, c.clone()),
+                        };
+                    }
+                    obj
+                })
+                .collect(),
+        )
+    }
+
     /// Render with unicode-free ASCII separators.
     pub fn render(&self) -> String {
         let ncols = self.headers.len();
@@ -213,5 +245,17 @@ mod tests {
     fn title_in_render() {
         let t = Table::new(&["x"]).with_title("Table 3");
         assert!(t.render().starts_with("== Table 3 =="));
+    }
+
+    #[test]
+    fn json_rows_keep_numbers_numeric() {
+        let mut t = Table::new(&["name", "seconds", "gain"]);
+        t.row_strs(&["laplace", "0.125", "2.00x"]);
+        assert_eq!(
+            t.to_json().render(),
+            r#"[{"name":"laplace","seconds":0.125,"gain":"2.00x"}]"#
+        );
+        assert_eq!(t.headers().len(), 3);
+        assert_eq!(t.rows().len(), 1);
     }
 }

@@ -207,7 +207,9 @@ fn chain_reuses_the_registry_pair_cache() {
     assert_eq!(session.symbolic_passes(), 2, "one pass per registered pair");
     session.execute_chain(&[hr, ha, hp]).expect("chain ok again");
     assert_eq!(session.symbolic_passes(), 2, "second chain hits the cache");
-    // The registry's coarse residency tracking covers chain operands.
+    // The fast-pool residency cache covers chain operands: every hop of
+    // this tiny chain runs flat-fast, so all three operands were
+    // captured and report as resident (DESIGN.md §9).
     assert!(session.residency(hr).is_some());
     assert!(session.residency(ha).is_some());
     assert!(session.residency(hp).is_some());
@@ -290,10 +292,14 @@ fn chain_beats_pairwise_when_intermediate_exceeds_gpu_fast_pool() {
     assert!(ra.size_bytes() > usable, "premise: R·A exceeds the fast pool");
     assert!(ap.size_bytes() + slack <= usable, "premise: A·P fits the fast pool");
 
-    let session = Session::builder(Arc::new(arch)).workers(1).build();
-    let hr = session.register(Arc::new(prob.r));
-    let ha = session.register(Arc::new(prob.a));
-    let hp = session.register(Arc::new(prob.p));
+    let arch = Arc::new(arch);
+    let r_mat = Arc::new(prob.r);
+    let a_mat = Arc::new(prob.a);
+    let p_mat = Arc::new(prob.p);
+    let session = Session::builder(Arc::clone(&arch)).workers(1).build();
+    let hr = session.register(Arc::clone(&r_mat));
+    let ha = session.register(Arc::clone(&a_mat));
+    let hp = session.register(Arc::clone(&p_mat));
     let handles = [hr, ha, hp];
 
     let result = session.execute_chain(&handles).expect("chain succeeds");
@@ -306,8 +312,19 @@ fn chain_beats_pairwise_when_intermediate_exceeds_gpu_fast_pool() {
         chain.order_scores
     );
 
-    // Naive pairwise, left-to-right, eviction between hops.
-    let (pairwise_seconds, _) = pairwise_in_order(&session, &handles, ChainAssoc::LeftFold);
+    // Naive pairwise, left-to-right, eviction between hops — on a
+    // cache-disabled session, so the chain's fast-pool captures cannot
+    // quietly subsidize the baseline it is judged against.
+    let baseline = Session::builder(Arc::clone(&arch))
+        .workers(1)
+        .operand_cache(false)
+        .build();
+    let bh = [
+        baseline.register(Arc::clone(&r_mat)),
+        baseline.register(Arc::clone(&a_mat)),
+        baseline.register(Arc::clone(&p_mat)),
+    ];
+    let (pairwise_seconds, _) = pairwise_in_order(&baseline, &bh, ChainAssoc::LeftFold);
     assert!(
         result.report.seconds < pairwise_seconds,
         "chain {} !< pairwise {} (hops: {:?})",
