@@ -1,6 +1,8 @@
-//! Accumulator micro-benchmark: insert+drain throughput of the three
+//! Accumulator micro-benchmark: insert+drain throughput of the fixed
 //! accumulator strategies — the innermost operation of the numeric phase
-//! and the top target of the §Perf pass.
+//! and the top target of the §Perf pass. `Adaptive` is excluded: it is
+//! a per-row dispatcher over these kernels, not an accumulator itself
+//! (the `accumulator` bench experiment measures it end to end).
 
 use mlmem_spgemm::kkmem::accumulator::Accumulator;
 use mlmem_spgemm::kkmem::mempool::{AccKind, PooledAcc};
@@ -14,7 +16,7 @@ fn main() {
     let mut t = Table::new(&["accumulator", "row nnz", "M inserts/s"])
         .with_title("accumulator insert+drain throughput (native)");
     let mut rng = Xoshiro256::seed_from_u64(7);
-    for kind in [AccKind::Hash, AccKind::Dense, AccKind::TwoLevel] {
+    for kind in AccKind::FIXED {
         for &row_nnz in &[8usize, 64, 512] {
             let cols: Vec<u32> = (0..row_nnz)
                 .map(|_| rng.usize_below(100_000) as u32)

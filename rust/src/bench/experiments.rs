@@ -8,7 +8,7 @@ use crate::gen::multigrid::MgProblem;
 use crate::gen::rhs::uniform_degree;
 use crate::gen::scale::{grid_for_bytes, ScaleFactor};
 use crate::gen::stencil::Domain;
-use crate::kkmem::{spgemm_sim, Placement, SpgemmOptions};
+use crate::kkmem::{spgemm, spgemm_sim, AccKind, Placement, SpgemmOptions};
 use crate::memory::arch::{knl, p100, Arch, GpuMode, KnlMode};
 use crate::memory::{MemSim, SimReport};
 use crate::placement::{dp_placement, pin_one, ProblemSizes, Structure};
@@ -331,6 +331,21 @@ pub fn run_policy_job(
         policy,
     );
     crate::coordinator::execute(&job, &crate::coordinator::PlannerOptions::default()).ok()
+}
+
+/// Median native (real threads, no simulator) wall-clock seconds of one
+/// SpGEMM under a fixed accumulator strategy — the `accumulator`
+/// experiment's measurement probe. One warmup run, median of three
+/// timed repetitions, so a single scheduler hiccup cannot flip the
+/// adaptive-vs-fixed comparison.
+pub fn native_acc_seconds(a: &Csr, b: &Csr, acc: AccKind, threads: usize) -> f64 {
+    use crate::util::stats::Summary;
+    use crate::util::timer::bench_runs;
+    let opts = SpgemmOptions { acc, threads, ..Default::default() };
+    let samples = bench_runs(1, 3, |_| {
+        std::hint::black_box(spgemm(a, b, &opts));
+    });
+    Summary::of(&samples).median
 }
 
 /// Format an optional GFLOP/s outcome ("-" for missing points, as the

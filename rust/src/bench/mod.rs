@@ -16,7 +16,7 @@ use std::path::Path;
 pub const EXPERIMENTS: &[&str] = &[
     "table1", "table2", "table3", "table4", "fig3", "fig4", "fig6", "fig7", "fig9", "fig10",
     "fig11", "fig12", "fig13", "ablate-acc", "ablate-algo", "ablate-compression",
-    "ablate-overlap", "pipeline", "planner", "chain", "serve", "profiles",
+    "ablate-overlap", "accumulator", "pipeline", "planner", "chain", "serve", "profiles",
 ];
 
 /// Run one experiment by id.
@@ -39,6 +39,7 @@ pub fn run_experiment(id: &str, cfg: &BenchConfig, cache: &mut ProblemCache) -> 
         "ablate-algo" => tables::ablate_gpu_algos(cfg, cache),
         "ablate-compression" => tables::ablate_compression(cfg, cache),
         "ablate-overlap" => tables::ablate_overlap(cfg, cache),
+        "accumulator" => tables::accumulator_regimes(cfg),
         "pipeline" => tables::pipeline_overlap(cfg, cache),
         "planner" => tables::planner_accuracy(cfg, cache),
         "chain" => tables::chain_triple_product(cfg, cache),

@@ -128,8 +128,10 @@ pub fn table4(cfg: &BenchConfig) -> Table {
 /// argument, measured).
 pub fn ablate_accumulators(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
     let gb = cfg.sizes_gb.first().copied().unwrap_or(1.0);
-    let mut t = Table::new(&["problem", "mult", "hash", "dense", "two-level", "hash L1M%", "dense L1M%"])
-        .with_title("Ablation: accumulator strategy (KNL DDR 256T, GFLOP/s)");
+    let mut t = Table::new(&[
+        "problem", "mult", "hash", "dense", "two-level", "sort", "hash L1M%", "dense L1M%",
+    ])
+    .with_title("Ablation: accumulator strategy (KNL DDR 256T, GFLOP/s)");
     for domain in Domain::ALL {
         for mul in [Mul::AxP, Mul::RxA] {
             let p = cache.get(domain, gb, cfg.scale).clone();
@@ -145,6 +147,7 @@ pub fn ablate_accumulators(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table
             let h = run(AccKind::Hash);
             let d = run(AccKind::Dense);
             let tl = run(AccKind::TwoLevel);
+            let so = run(AccKind::Sort);
             let miss = |o: &Option<crate::memory::SimReport>| {
                 o.as_ref()
                     .map(|r| format!("{:.2}", r.l1_miss_pct))
@@ -156,6 +159,7 @@ pub fn ablate_accumulators(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table
                 fmt_gflops(&h),
                 fmt_gflops(&d),
                 fmt_gflops(&tl),
+                fmt_gflops(&so),
                 miss(&h),
                 miss(&d),
             ]);
@@ -267,6 +271,76 @@ pub fn ablate_overlap(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
     t
 }
 
+/// The `accumulator` experiment: native (real-thread) wall-clock of
+/// every fixed accumulator strategy against the adaptive dispatcher,
+/// over inputs engineered to land in each regime plus a mixed power-law
+/// square. The census column counts output rows the symbolic phase
+/// classified hash/dense/sort — the signal adaptive dispatch acts on;
+/// the final column is adaptive's time relative to the best fixed
+/// strategy for that input (≤ 1.00 means adaptive won or tied).
+pub fn accumulator_regimes(cfg: &BenchConfig) -> Table {
+    use super::experiments::native_acc_seconds;
+    use crate::gen::graphs::graph500;
+    use crate::gen::rhs::banded;
+    use crate::kkmem::symbolic::symbolic_stats;
+    use crate::sparse::Csr;
+
+    let n = 1usize << cfg.graph_scale.clamp(6, 13);
+    let s = cfg.seed;
+    let mut inputs: Vec<(&str, Csr, Csr)> = vec![
+        // Narrow B: output rows fill most of a 256-column space → dense.
+        (
+            "dense-regime",
+            uniform_degree(n, n / 4, 16, s),
+            uniform_degree(n / 4, 256, 32, s + 1),
+        ),
+        // Wide scattered B: sparse rows in a huge column space → hash.
+        (
+            "sparse-regime",
+            uniform_degree(n, n, 8, s + 2),
+            uniform_degree(n, n * 64, 8, s + 3),
+        ),
+        // Tiny bands: every row's upper bound is ≤ 4 → sort.
+        (
+            "tiny-rows",
+            banded(4 * n, 4 * n, 2, 2, s + 4),
+            banded(4 * n, 4 * n, 2, 2, s + 5),
+        ),
+    ];
+    let g = graph500(cfg.graph_scale.min(12), 8, s + 6);
+    inputs.push(("mixed-powerlaw", g.clone(), g));
+
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let mut t = Table::new(&[
+        "input", "rows h/d/s", "hash s", "dense s", "two-level s", "sort s", "adaptive s",
+        "best fixed s", "adapt/best",
+    ])
+    .with_title(format!(
+        "Adaptive accumulator: native wall-clock by regime ({threads} threads, median of 3)"
+    ));
+    for (name, a, b) in &inputs {
+        let stats = symbolic_stats(a, &CompressedMatrix::compress(b));
+        let mut census = [0usize; 3];
+        for r in stats.regimes(b.ncols) {
+            census[r.index()] += 1;
+        }
+        let fixed: Vec<f64> =
+            AccKind::FIXED.iter().map(|&k| native_acc_seconds(a, b, k, threads)).collect();
+        let adaptive = native_acc_seconds(a, b, AccKind::Adaptive, threads);
+        let best = fixed.iter().copied().fold(f64::INFINITY, f64::min);
+        let mut row = vec![
+            name.to_string(),
+            format!("{}/{}/{}", census[0], census[1], census[2]),
+        ];
+        row.extend(fixed.iter().map(|v| format!("{v:.5}")));
+        row.push(format!("{adaptive:.5}"));
+        row.push(format!("{best:.5}"));
+        row.push(format!("{:.2}", adaptive / best));
+        t.row(&row);
+    }
+    t
+}
+
 /// Measured serial-vs-pipelined chunk execution (the engine-layer
 /// successor of [`ablate_overlap`]'s estimate): the same chunked
 /// multiplications run through the serial drivers and the
@@ -330,9 +404,16 @@ pub fn pipeline_overlap(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
 /// alongside `Policy::Auto`; the table reports the policy times, which
 /// candidate Auto chose, its predicted-vs-actual error, and the regret
 /// against the best explicit policy (0% = Auto matched the best).
+///
+/// The last three columns step outside the simulator: each input also
+/// runs through `NativeEngine` (adaptive accumulator, all host threads)
+/// and the table reports real wall-clock next to the engine's
+/// per-regime throughput prediction and its signed error (`nerr%`) —
+/// the live calibration check for the `NATIVE_*_MACS_PER_S` constants.
 pub fn planner_accuracy(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
     use super::experiments::run_policy_job;
     use crate::coordinator::{JobResult, Policy};
+    use crate::engine::{Engine, NativeEngine, Problem};
     use crate::memory::pool::FAST;
     use crate::sparse::Csr;
     use std::sync::Arc;
@@ -376,9 +457,10 @@ pub fn planner_accuracy(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
     let secs = |r: &Option<JobResult>| r.as_ref().map(|x| x.report.seconds);
     let fmt = |s: Option<f64>| s.map(|v| format!("{v:.5}")).unwrap_or_else(|| "-".into());
 
+    let nthreads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
     let mut t = Table::new(&[
         "input", "flat", "dp", "chunk", "pipe", "auto", "decision", "pred s", "err%",
-        "regret%",
+        "regret%", "native s", "npred s", "nerr%",
     ])
     .with_title("Auto planner: prediction accuracy and regret (KNL-DDR 256T, seconds)");
     for (i, (name, a, b)) in inputs.iter().enumerate() {
@@ -410,6 +492,31 @@ pub fn planner_accuracy(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
             ),
             None => ("-".into(), "-".into(), "-".into(), "-".into()),
         };
+        // Ground truth: the same multiplication on real threads, with
+        // the per-regime model's prediction alongside for calibration.
+        let (native, npred, nerr) = {
+            let eng = NativeEngine::new(SpgemmOptions {
+                acc: AccKind::Adaptive,
+                threads: nthreads,
+                ..Default::default()
+            });
+            let prob = Problem::new(a, b);
+            match eng.plan(&prob).and_then(|plan| {
+                let pr = eng.predict(&prob, &plan)?.total_seconds();
+                Ok((eng.run(&prob, &plan)?.wall_seconds, pr))
+            }) {
+                Ok((w, pr)) => (
+                    format!("{w:.5}"),
+                    format!("{pr:.5}"),
+                    if w > 0.0 {
+                        format!("{:+.1}", (pr / w - 1.0) * 100.0)
+                    } else {
+                        "-".into()
+                    },
+                ),
+                Err(_) => ("-".into(), "-".into(), "-".into()),
+            }
+        };
         t.row(&[
             name.clone(),
             fmt(secs(&flat)),
@@ -421,6 +528,9 @@ pub fn planner_accuracy(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
             pred,
             err,
             regret,
+            native,
+            npred,
+            nerr,
         ]);
     }
     t
@@ -674,5 +784,33 @@ mod tests {
         assert!(r.contains("regret"));
         assert!(r.contains("banded"));
         assert!(r.contains("powerlaw-g500"));
+        // The native ground-truth columns are populated (never "-" for
+        // inputs this small: the native engine cannot fail to fit).
+        assert!(r.contains("native s"));
+        for row in t.rows() {
+            assert_ne!(row[10], "-", "native wall-clock missing for {}", row[0]);
+            assert_ne!(row[11], "-", "native prediction missing for {}", row[0]);
+        }
+    }
+
+    #[test]
+    fn accumulator_table_census_matches_engineered_regimes() {
+        let (cfg, _) = quick();
+        let t = accumulator_regimes(&cfg);
+        assert_eq!(t.n_rows(), 4);
+        let census = |i: usize| -> Vec<usize> {
+            t.rows()[i][1].split('/').map(|x| x.parse().unwrap()).collect()
+        };
+        // Each engineered input is dominated by its intended regime
+        // (census order is hash/dense/sort).
+        let d = census(0);
+        assert!(d[1] > d[0] + d[2], "dense-regime census {d:?}");
+        let h = census(1);
+        assert!(h[0] > h[1] + h[2], "sparse-regime census {h:?}");
+        let s = census(2);
+        assert!(s[2] > s[0] + s[1], "tiny-rows census {s:?}");
+        let r = t.render();
+        assert!(r.contains("mixed-powerlaw"));
+        assert!(r.contains("adapt/best"));
     }
 }

@@ -25,7 +25,7 @@ use crate::chunk::gpu::c_prefix_from_sizes;
 use crate::chunk::heuristic::{plan_gpu_chunks_with, GpuChunkAlgo};
 use crate::chunk::partition::{csr_prefix_bytes, partition_balanced, range_bytes, sum_prefixes};
 use crate::kkmem::spgemm::acc_region_bytes;
-use crate::kkmem::symbolic::{max_row_upper_bound, symbolic};
+use crate::kkmem::symbolic::symbolic_stats;
 use crate::kkmem::{CompressedMatrix, Placement, SpgemmOptions};
 use crate::memory::alloc::Location;
 use crate::memory::machine::{lane_efficiency, MachineSpec};
@@ -79,6 +79,11 @@ pub(crate) struct ShapeCore {
     mults: u64,
     efficiency: f64,
     row_ub: usize,
+    /// Flop mass per accumulator regime, indexed by
+    /// [`Regime::index`](crate::kkmem::symbolic::Regime::index)
+    /// (`[hash, dense, sort]`) — the native per-regime throughput
+    /// model's input.
+    mults_by_regime: [u64; 3],
     b_prefix: std::sync::Arc<Vec<u64>>,
     ac_prefix: std::sync::Arc<Vec<u64>>,
 }
@@ -96,18 +101,24 @@ impl ShapeCore {
         b: &crate::sparse::Csr,
         comp: &CompressedMatrix,
     ) -> Self {
-        let sizes = symbolic(a, comp);
-        let c_prefix = c_prefix_from_sizes(&sizes);
+        let stats = symbolic_stats(a, comp);
+        let c_prefix = c_prefix_from_sizes(&stats.sizes);
         let a_prefix = csr_prefix_bytes(a);
         let ac_prefix = sum_prefixes(&a_prefix, &c_prefix);
         let b_prefix = csr_prefix_bytes(b);
+        let mults_by_regime = stats.mults_by_regime(b.ncols);
         Self {
             a_bytes: a_prefix[a.nrows],
             b_bytes: b_prefix[b.nrows],
             c_bytes: c_prefix[a.nrows],
-            mults: crate::sparse::ops::spgemm_flops(a, b) / 2,
+            // Sum of per-row upper bounds == Σ_{(i,k)∈A} nnz(B(k,:)),
+            // the numeric phase's exact multiply count.
+            mults: mults_by_regime.iter().sum(),
             efficiency: lane_efficiency(a.avg_degree(), b.avg_degree()),
-            row_ub: max_row_upper_bound(a, b),
+            // Derived from the same stats pass (the former standalone
+            // `max_row_upper_bound` scan over A×B is no longer needed).
+            row_ub: stats.max_row_upper_bound(),
+            mults_by_regime,
             b_prefix: std::sync::Arc::new(b_prefix),
             ac_prefix: std::sync::Arc::new(ac_prefix),
         }
@@ -118,6 +129,11 @@ impl ShapeCore {
     /// symbolic pass.
     pub(crate) fn totals(&self) -> (u64, u64, u64) {
         (self.a_bytes, self.b_bytes, self.c_bytes)
+    }
+
+    /// Flop mass per accumulator regime (`[hash, dense, sort]`).
+    pub(crate) fn mults_by_regime(&self) -> [u64; 3] {
+        self.mults_by_regime
     }
 }
 

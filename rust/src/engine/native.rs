@@ -11,12 +11,27 @@ use crate::chunk::partition::{csr_prefix_bytes, partition_balanced};
 use crate::kkmem::mempool::PooledAcc;
 use crate::kkmem::numeric::{fused_numeric_row, Layout};
 use crate::kkmem::symbolic::max_row_upper_bound;
-use crate::kkmem::{spgemm, SpgemmOptions};
+use crate::kkmem::{spgemm, AccKind, SpgemmOptions};
 use crate::memory::machine::NullTracer;
 use crate::sparse::csr::{Csr, Idx};
 use crate::sparse::ops::spgemm_flops;
 use crate::util::timer::Timer;
 use std::sync::mpsc;
+
+/// Per-thread hot-loop throughput (scalar multiply-accumulates per
+/// second) of each accumulator regime's native kernel. Calibration
+/// defaults measured with the `accumulator` bench experiment on the dev
+/// container; the `planner` bench re-measures the resulting prediction
+/// error (its `nerr%` column) on every run, so drift is visible per PR.
+pub const NATIVE_HASH_MACS_PER_S: f64 = 1.5e8;
+/// Dense regime: the branch-free scatter-FMA kernel
+/// (`numeric_row_dense_native`) sustains several× the hash rate.
+pub const NATIVE_DENSE_MACS_PER_S: f64 = 4.5e8;
+/// Sort regime: sequential append + tiny stable sort on drain.
+pub const NATIVE_SORT_MACS_PER_S: f64 = 2.5e8;
+/// Fixed per-row cost of the numeric phase (drain, reset, row emit) —
+/// dominates on tiny-row inputs where MAC counts say almost nothing.
+pub const NATIVE_ROW_OVERHEAD_S: f64 = 5e-8;
 
 /// Native (non-simulated) engine. With a `chunk_budget` it runs the
 /// pipelined chunked path; otherwise the flat parallel kernel.
@@ -56,13 +71,29 @@ impl Engine for NativeEngine {
         let ExecPlan::Native { threads, .. } = plan else {
             return Err(MlmemError::Planner("native engine got a non-native plan".into()));
         };
-        // No machine profile to roofline against: an order-of-magnitude
-        // wall-clock guess from the flop count at a nominal per-thread
-        // scalar-kernel rate. Never compared against simulated engines.
-        const NATIVE_FLOPS_PER_THREAD: f64 = 1e9;
-        let flops = spgemm_flops(p.a, p.b);
+        // Per-regime throughput model: the symbolic summary splits the
+        // multiply count by accumulator regime; each slice is charged at
+        // the measured rate of the kernel that will actually run it (see
+        // the calibration constants above). Never compared against
+        // simulated engines — this predicts real wall-clock.
+        let [h, d, s] = p.shape_core().mults_by_regime();
+        let (h, d, s) = (h as f64, d as f64, s as f64);
+        let mac_seconds = match self.opts.acc {
+            // Adaptive dispatches each regime to its own kernel.
+            AccKind::Adaptive => {
+                h / NATIVE_HASH_MACS_PER_S
+                    + d / NATIVE_DENSE_MACS_PER_S
+                    + s / NATIVE_SORT_MACS_PER_S
+            }
+            // A fixed strategy runs every row at that strategy's rate
+            // (two-level shares the hash inner loop natively).
+            AccKind::Hash | AccKind::TwoLevel => (h + d + s) / NATIVE_HASH_MACS_PER_S,
+            AccKind::Dense => (h + d + s) / NATIVE_DENSE_MACS_PER_S,
+            AccKind::Sort => (h + d + s) / NATIVE_SORT_MACS_PER_S,
+        };
+        let row_seconds = p.a.nrows as f64 * NATIVE_ROW_OVERHEAD_S;
         let threads = (*threads).max(1) as f64;
-        Ok(super::CostEstimate::unstaged(flops as f64 / (threads * NATIVE_FLOPS_PER_THREAD)))
+        Ok(super::CostEstimate::unstaged((mac_seconds + row_seconds) / threads))
     }
 
     fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, MlmemError> {
@@ -187,6 +218,27 @@ mod tests {
         assert!(rep.c.approx_eq(&spgemm_reference(&a, &b), 1e-12));
         assert!(rep.sim.is_none());
         assert!(rep.wall_seconds >= 0.0);
+    }
+
+    #[test]
+    fn predict_uses_per_regime_rates() {
+        let a = crate::gen::rhs::random_csr(30, 25, 1, 5, 3);
+        let b = crate::gen::rhs::random_csr(25, 35, 1, 5, 4);
+        let p = Problem::new(&a, &b);
+        let secs = |acc: AccKind, threads: usize| {
+            let eng = NativeEngine::new(SpgemmOptions { acc, threads, ..Default::default() });
+            let plan = eng.plan(&p).unwrap();
+            eng.predict(&p, &plan).unwrap().total_seconds()
+        };
+        for acc in AccKind::ALL {
+            let s = secs(acc, 1);
+            assert!(s.is_finite() && s > 0.0, "{}", acc.name());
+            // More threads → proportionally smaller estimate.
+            assert!(secs(acc, 4) < s, "{}", acc.name());
+        }
+        // A pure-hash-rate strategy is never predicted faster than the
+        // adaptive dispatch (adaptive charges each slice at ≥ hash rate).
+        assert!(secs(AccKind::Adaptive, 1) <= secs(AccKind::Hash, 1) + 1e-12);
     }
 
     #[test]

@@ -213,6 +213,15 @@ impl DenseAccumulator {
     pub fn footprint_bytes(ncols: usize) -> u64 {
         ncols as u64 * 9 // 8 B value + 1 B flag
     }
+
+    /// Split borrows for the native branch-free row kernel
+    /// (`numeric::numeric_row_dense_native`): values, presence flags, and
+    /// the touched-column list. The kernel must uphold the drain
+    /// invariant — every touched value reset to `0.0` and flag cleared.
+    #[inline]
+    pub(crate) fn parts_mut(&mut self) -> (&mut [f64], &mut [bool], &mut Vec<Idx>) {
+        (&mut self.vals, &mut self.present, &mut self.touched)
+    }
 }
 
 impl Accumulator for DenseAccumulator {
@@ -249,6 +258,97 @@ impl Accumulator for DenseAccumulator {
             self.vals[c] = 0.0;
         }
         self.touched.clear();
+    }
+}
+
+/// Sort-based accumulator (Nagasaka & Azad's third strategy): inserts
+/// append `(column, value)` pairs to a sequential buffer; drain stable-
+/// sorts by column and merges equal columns. For tiny rows the whole
+/// buffer fits a couple of cache lines and the append beats both hash
+/// probing and dense reset-by-list. The sort is **stable** so values for
+/// one column merge in insertion order — the same per-column addition
+/// order as the hash and dense accumulators, keeping floating-point
+/// results bit-identical across strategies.
+pub struct SortAccumulator {
+    pairs: Vec<(Idx, f64)>,
+    region: RegionId,
+    /// Trace-address wrap in bytes (same cache-residency model as
+    /// [`HashAccumulator`]; the buffer is tiny and stays L1-resident).
+    wrap: u64,
+    pub inserts: u64,
+}
+
+impl SortAccumulator {
+    /// Sized for up to `capacity` pending pairs (the row's flop upper
+    /// bound, since duplicates are kept until drain). The buffer grows if
+    /// exceeded — capacity is a preallocation, not a limit.
+    pub fn new(capacity: usize, region: RegionId) -> Self {
+        Self::with_wrap(capacity, region, u64::MAX)
+    }
+
+    /// Like [`new`](Self::new) with an explicit trace-address wrap.
+    pub fn with_wrap(capacity: usize, region: RegionId, wrap: u64) -> Self {
+        Self {
+            pairs: Vec::with_capacity(capacity.max(16)),
+            region,
+            wrap: wrap.max(64),
+            inserts: 0,
+        }
+    }
+
+    #[inline]
+    fn off(&self, raw: u64) -> u64 {
+        if raw < self.wrap {
+            raw
+        } else {
+            raw % self.wrap
+        }
+    }
+
+    /// Byte footprint as laid out in its region: packed 12 B pairs.
+    pub fn footprint_bytes(capacity: usize) -> u64 {
+        capacity.max(16) as u64 * 12
+    }
+}
+
+impl Accumulator for SortAccumulator {
+    #[inline]
+    fn insert<T: MemTracer>(&mut self, t: &mut T, col: Idx, val: f64) {
+        self.inserts += 1;
+        if T::ENABLED {
+            // Sequential append: one packed 12 B pair.
+            t.write(self.region, self.off(self.pairs.len() as u64 * 12), 12);
+        }
+        self.pairs.push((col, val));
+    }
+
+    /// Pending pairs — an upper bound on distinct columns until drained
+    /// (duplicates merge only at drain time).
+    fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    fn drain_into<T: MemTracer>(&mut self, t: &mut T, out: &mut Vec<(Idx, f64)>) {
+        if T::ENABLED && !self.pairs.is_empty() {
+            // One sequential re-read of the buffer for the sort+merge.
+            t.read(self.region, 0, self.off(self.pairs.len() as u64 * 12).max(12));
+        }
+        // Stable: equal columns keep insertion order (see type docs).
+        self.pairs.sort_by_key(|&(c, _)| c);
+        let mut it = self.pairs.iter();
+        if let Some(&(mut cur, mut sum)) = it.next() {
+            for &(c, v) in it {
+                if c == cur {
+                    sum += v;
+                } else {
+                    out.push((cur, sum));
+                    cur = c;
+                    sum = v;
+                }
+            }
+            out.push((cur, sum));
+        }
+        self.pairs.clear();
     }
 }
 
@@ -444,5 +544,69 @@ mod tests {
         // cap_for(100) = next_pow2(151) = 256 slots of 12 B.
         assert_eq!(HashAccumulator::footprint_bytes(100), 256 * 12);
         assert_eq!(DenseAccumulator::footprint_bytes(100), 900);
+        assert_eq!(SortAccumulator::footprint_bytes(100), 1200);
+        assert_eq!(SortAccumulator::footprint_bytes(0), 16 * 12);
+    }
+
+    #[test]
+    fn sort_merges_sorted_and_resets() {
+        // `len()` before drain counts pending pairs (an upper bound), so
+        // the sort accumulator gets its own oracle check rather than
+        // `oracle_check`'s mid-stream distinct-count assertion.
+        let mut acc = SortAccumulator::new(4, 0);
+        let mut t = NullTracer;
+        let mut oracle: BTreeMap<Idx, f64> = BTreeMap::new();
+        for &(c, v) in &test_ops() {
+            acc.insert(&mut t, c, v);
+            *oracle.entry(c).or_insert(0.0) += v;
+        }
+        assert_eq!(acc.len(), test_ops().len()); // pending pairs, not distinct
+        let mut out = Vec::new();
+        acc.drain_into(&mut t, &mut out);
+        let expect: Vec<(Idx, f64)> = oracle.into_iter().collect();
+        assert_eq!(out.len(), expect.len());
+        // Drain output is already column-sorted.
+        for ((c1, v1), (c2, v2)) in out.iter().zip(&expect) {
+            assert_eq!(c1, c2);
+            assert!((v1 - v2).abs() < 1e-12);
+        }
+        // Reset: reusable after drain, growth past preallocation fine.
+        assert!(acc.is_empty());
+        for c in 0..100u32 {
+            acc.insert(&mut t, c % 10, 1.0);
+        }
+        out.clear();
+        acc.drain_into(&mut t, &mut out);
+        assert_eq!(out.len(), 10);
+        assert!(out.iter().all(|&(_, v)| v == 10.0));
+    }
+
+    #[test]
+    fn sort_merge_is_insertion_ordered() {
+        // Stable sort: a column's values must add in insertion order, so
+        // the sum is bit-identical to sequential accumulation.
+        let vals = [1e16, 1.0, -1e16, 3.5, 0.25];
+        let mut acc = SortAccumulator::new(8, 0);
+        let mut t = NullTracer;
+        let mut seq = vals[0];
+        acc.insert(&mut t, 7, vals[0]);
+        for &v in &vals[1..] {
+            acc.insert(&mut t, 7, v);
+            acc.insert(&mut t, 3, 1.0); // interleave another column
+            seq += v;
+        }
+        let mut out = Vec::new();
+        acc.drain_into(&mut t, &mut out);
+        let got = out.iter().find(|&&(c, _)| c == 7).unwrap().1;
+        assert_eq!(got.to_bits(), seq.to_bits());
+    }
+
+    #[test]
+    fn sort_empty_drain_is_empty() {
+        let mut acc = SortAccumulator::new(0, 0);
+        let mut t = NullTracer;
+        let mut out = Vec::new();
+        acc.drain_into(&mut t, &mut out);
+        assert!(out.is_empty());
     }
 }

@@ -2,7 +2,9 @@
 //! once from the symbolic phase's upper bound and reused across all rows
 //! a thread processes — no allocation inside the numeric hot loop.
 
-use super::accumulator::{Accumulator, DenseAccumulator, HashAccumulator, TwoLevelAccumulator};
+use super::accumulator::{
+    Accumulator, DenseAccumulator, HashAccumulator, SortAccumulator, TwoLevelAccumulator,
+};
 use crate::memory::machine::{MemTracer, RegionId};
 use crate::sparse::csr::Idx;
 
@@ -15,14 +17,35 @@ pub enum AccKind {
     Dense,
     /// GPU-style shared-memory first level + global second level.
     TwoLevel,
+    /// Append + stable-sort + merge (wins on tiny rows).
+    Sort,
+    /// Per-row-band regime selection between hash, dense and sort
+    /// (`kkmem::spgemm`'s adaptive dispatch).
+    Adaptive,
 }
 
 impl AccKind {
+    /// Every selectable strategy, in CLI/report order.
+    pub const ALL: [AccKind; 5] = [
+        AccKind::Hash,
+        AccKind::Dense,
+        AccKind::TwoLevel,
+        AccKind::Sort,
+        AccKind::Adaptive,
+    ];
+
+    /// The fixed (non-adaptive) strategies — the candidates the adaptive
+    /// mode selects among, plus two-level.
+    pub const FIXED: [AccKind; 4] =
+        [AccKind::Hash, AccKind::Dense, AccKind::TwoLevel, AccKind::Sort];
+
     pub fn name(&self) -> &'static str {
         match self {
             AccKind::Hash => "hash",
             AccKind::Dense => "dense",
             AccKind::TwoLevel => "two-level",
+            AccKind::Sort => "sort",
+            AccKind::Adaptive => "adaptive",
         }
     }
 
@@ -31,16 +54,25 @@ impl AccKind {
             "hash" => Some(AccKind::Hash),
             "dense" => Some(AccKind::Dense),
             "twolevel" | "two-level" | "2l" => Some(AccKind::TwoLevel),
+            "sort" => Some(AccKind::Sort),
+            "adaptive" => Some(AccKind::Adaptive),
             _ => None,
         }
     }
 
-    /// Backing-store bytes for one accumulator instance.
+    /// Backing-store bytes for one accumulator instance. For `Adaptive`
+    /// this is the conservative maximum over the constituent strategies
+    /// (the adaptive dispatch builds at most one of each, and only the
+    /// largest bounds the region).
     pub fn footprint_bytes(&self, row_ub: usize, ncols: usize) -> u64 {
         match self {
             AccKind::Hash => HashAccumulator::footprint_bytes(row_ub.max(16)),
             AccKind::Dense => DenseAccumulator::footprint_bytes(ncols),
             AccKind::TwoLevel => HashAccumulator::footprint_bytes(row_ub.max(16)),
+            AccKind::Sort => SortAccumulator::footprint_bytes(row_ub.max(16)),
+            AccKind::Adaptive => HashAccumulator::footprint_bytes(row_ub.max(16))
+                .max(DenseAccumulator::footprint_bytes(ncols))
+                .max(SortAccumulator::footprint_bytes(row_ub.max(16))),
         }
     }
 }
@@ -51,6 +83,7 @@ pub enum PooledAcc {
     Hash(HashAccumulator),
     Dense(DenseAccumulator),
     TwoLevel(TwoLevelAccumulator),
+    Sort(SortAccumulator),
 }
 
 impl PooledAcc {
@@ -88,6 +121,18 @@ impl PooledAcc {
                 row_ub.max(16),
                 region,
             )),
+            AccKind::Sort => {
+                PooledAcc::Sort(SortAccumulator::with_wrap(row_ub.max(16), region, wrap))
+            }
+            // The adaptive mode dispatches per row band and builds its own
+            // per-regime accumulators inside `kkmem::spgemm`. Contexts that
+            // need a single concrete pooled accumulator (the fused chunk
+            // and pipelined drivers, where a chunk sees only part of each
+            // row and the full-row regime is not meaningful) fall back to
+            // the robust hash default.
+            AccKind::Adaptive => {
+                PooledAcc::Hash(HashAccumulator::with_wrap(row_ub.max(16), region, wrap))
+            }
         }
     }
 }
@@ -99,6 +144,7 @@ impl Accumulator for PooledAcc {
             PooledAcc::Hash(a) => a.insert(t, col, val),
             PooledAcc::Dense(a) => a.insert(t, col, val),
             PooledAcc::TwoLevel(a) => a.insert(t, col, val),
+            PooledAcc::Sort(a) => a.insert(t, col, val),
         }
     }
 
@@ -107,6 +153,7 @@ impl Accumulator for PooledAcc {
             PooledAcc::Hash(a) => a.len(),
             PooledAcc::Dense(a) => a.len(),
             PooledAcc::TwoLevel(a) => a.len(),
+            PooledAcc::Sort(a) => a.len(),
         }
     }
 
@@ -115,6 +162,7 @@ impl Accumulator for PooledAcc {
             PooledAcc::Hash(a) => a.drain_into(t, out),
             PooledAcc::Dense(a) => a.drain_into(t, out),
             PooledAcc::TwoLevel(a) => a.drain_into(t, out),
+            PooledAcc::Sort(a) => a.drain_into(t, out),
         }
     }
 }
@@ -127,15 +175,19 @@ mod tests {
     #[test]
     fn all_kinds_build_and_accumulate() {
         let mut t = NullTracer;
-        for kind in [AccKind::Hash, AccKind::Dense, AccKind::TwoLevel] {
+        for kind in AccKind::ALL {
             let mut acc = PooledAcc::build(kind, 32, 100, 16, 0);
             acc.insert(&mut t, 5, 1.0);
             acc.insert(&mut t, 5, 2.0);
             acc.insert(&mut t, 9, 1.0);
-            assert_eq!(acc.len(), 2, "{}", kind.name());
+            if kind != AccKind::Sort {
+                // Sort's len() counts pending pairs until drain.
+                assert_eq!(acc.len(), 2, "{}", kind.name());
+            }
             let mut out = Vec::new();
             acc.drain_into(&mut t, &mut out);
             out.sort_by_key(|&(c, _)| c);
+            assert_eq!(out.len(), 2, "{}", kind.name());
             assert_eq!(out[0], (5, 3.0));
             assert_eq!(out[1], (9, 1.0));
         }
@@ -143,7 +195,7 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        for k in [AccKind::Hash, AccKind::Dense, AccKind::TwoLevel] {
+        for k in AccKind::ALL {
             assert_eq!(AccKind::parse(k.name()), Some(k));
         }
         assert_eq!(AccKind::parse("bogus"), None);
@@ -151,8 +203,21 @@ mod tests {
 
     #[test]
     fn footprints_positive() {
-        for k in [AccKind::Hash, AccKind::Dense, AccKind::TwoLevel] {
+        for k in AccKind::ALL {
             assert!(k.footprint_bytes(100, 1000) > 0);
         }
+        // Adaptive's footprint covers each constituent strategy.
+        let ad = AccKind::Adaptive.footprint_bytes(100, 1000);
+        for k in [AccKind::Hash, AccKind::Dense, AccKind::Sort] {
+            assert!(ad >= k.footprint_bytes(100, 1000), "{}", k.name());
+        }
+    }
+
+    #[test]
+    fn adaptive_pooled_fallback_is_hash() {
+        // Fused/pipelined drivers need one concrete accumulator; adaptive
+        // degrades to the robust hash default there.
+        let acc = PooledAcc::build(AccKind::Adaptive, 32, 100, 16, 0);
+        assert!(matches!(acc, PooledAcc::Hash(_)));
     }
 }

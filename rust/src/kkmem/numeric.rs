@@ -7,7 +7,7 @@
 //! path runs natively (NullTracer — zero overhead, real threads) or under
 //! the machine simulator (MemSim — full cache/pool accounting).
 
-use super::accumulator::Accumulator;
+use super::accumulator::{Accumulator, DenseAccumulator};
 use crate::memory::machine::{MemTracer, RegionId};
 use crate::sparse::csr::{Csr, Idx};
 
@@ -72,6 +72,72 @@ pub fn numeric_row<T: MemTracer, A: Accumulator>(
     }
     t.flops(2 * mults);
     acc.drain_into(t, out);
+    mults
+}
+
+/// Native-only dense-accumulator row kernel (§Perf). The generic
+/// [`numeric_row`] pays a presence branch and an indirect `insert` on
+/// every multiply; this variant splits the row into two passes over the
+/// same `B` rows:
+///
+/// 1. a structure gather that marks present flags and collects the
+///    touched-column list (index-only, the one branchy pass), then
+/// 2. a straight-line scatter-FMA over each `B` row's contiguous
+///    column/value slices — no per-element branch and no bounds checks in
+///    the loop body, so the compiler can unroll and vectorize it.
+///
+/// Values accumulate with `+=` from the drain invariant's `0.0`, which is
+/// the same per-column addition order as the generic path. Not traced:
+/// the simulator keeps the generic kernel so per-insert traffic stays
+/// observable.
+///
+/// Returns the number of scalar multiplications performed.
+pub fn numeric_row_dense_native(
+    a: &Csr,
+    b: &Csr,
+    i: usize,
+    acc: &mut DenseAccumulator,
+    out: &mut Vec<(Idx, f64)>,
+) -> u64 {
+    out.clear();
+    let (acols, avals) = a.row(i);
+    let (vals, present, touched) = acc.parts_mut();
+    // The unchecked scatter below relies on every B column fitting the
+    // accumulator arrays (they are allocated at b.ncols).
+    assert!(vals.len() >= b.ncols && present.len() >= b.ncols);
+    // Pass 1: gather the output structure.
+    for &k in acols {
+        let (bcols, _) = b.row(k as usize);
+        for &j in bcols {
+            let c = j as usize;
+            if !present[c] {
+                present[c] = true;
+                touched.push(j);
+            }
+        }
+    }
+    // Pass 2: branch-free multiply-accumulate.
+    let mut mults: u64 = 0;
+    for (&k, &av) in acols.iter().zip(avals) {
+        let (bcols, bvals) = b.row(k as usize);
+        mults += bcols.len() as u64;
+        for (&j, &bv) in bcols.iter().zip(bvals) {
+            // SAFETY: CSR validity bounds `j < b.ncols`, and `vals` holds
+            // at least `b.ncols` slots (asserted above).
+            unsafe {
+                *vals.get_unchecked_mut(j as usize) += av * bv;
+            }
+        }
+    }
+    // Emit and reset by touched list (the drain invariant).
+    for &col in touched.iter() {
+        let c = col as usize;
+        out.push((col, vals[c]));
+        vals[c] = 0.0;
+        present[c] = false;
+    }
+    touched.clear();
+    acc.inserts += mults;
     mults
 }
 
@@ -194,6 +260,34 @@ mod tests {
             for (k, &(c, v)) in out.iter().enumerate() {
                 assert_eq!(c, ecols[k]);
                 assert!((v - evals[k]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_native_row_matches_generic_bitwise() {
+        use crate::kkmem::accumulator::DenseAccumulator;
+        let a = crate::gen::rhs::random_csr(12, 9, 0, 5, 7);
+        let b = crate::gen::rhs::random_csr(9, 30, 0, 6, 8);
+        let mut t = NullTracer;
+        let lay = Layout::default();
+        let mut acc_gen = DenseAccumulator::new(b.ncols, 0);
+        let mut acc_vec = DenseAccumulator::new(b.ncols, 0);
+        let mut out_gen = Vec::new();
+        let mut out_vec = Vec::new();
+        for i in 0..a.nrows {
+            let m1 = numeric_row(&mut t, &lay, &a, &b, i, &mut acc_gen, &mut out_gen);
+            let m2 = numeric_row_dense_native(&a, &b, i, &mut acc_vec, &mut out_vec);
+            assert_eq!(m1, m2, "row {i}");
+            out_gen.sort_by_key(|&(c, _)| c);
+            out_vec.sort_by_key(|&(c, _)| c);
+            assert_eq!(out_gen.len(), out_vec.len(), "row {i}");
+            for (&(c1, v1), &(c2, v2)) in out_gen.iter().zip(&out_vec) {
+                assert_eq!(c1, c2, "row {i}");
+                // Same per-column addition order → same bits (the generic
+                // dense path sets the first value, the vectorized path
+                // adds it to 0.0; `==` admits the ±0.0 case).
+                assert!(v1 == v2, "row {i} col {c1}: {v1} vs {v2}");
             }
         }
     }

@@ -7,10 +7,11 @@
 //!   simulator with a per-structure [`Placement`], producing both the
 //!   product and the simulated traffic/time — the reproduction path.
 
+use super::accumulator::{DenseAccumulator, HashAccumulator, SortAccumulator, TwoLevelAccumulator};
 use super::compression::CompressedMatrix;
 use super::mempool::{AccKind, PooledAcc};
-use super::numeric::{emit_row, numeric_row, Layout};
-use super::symbolic::{max_row_upper_bound, rowmap_from_sizes, symbolic};
+use super::numeric::{emit_row, numeric_row, numeric_row_dense_native, Layout};
+use super::symbolic::{rowmap_from_sizes, symbolic_stats, Regime, SymbolicStats};
 use crate::memory::alloc::{AllocError, Location};
 use crate::memory::machine::{MemSim, MemTracer, NullTracer, RegionId};
 use crate::sparse::csr::{Csr, Idx};
@@ -67,42 +68,134 @@ impl<T> SyncSlice<T> {
 pub fn spgemm(a: &Csr, b: &Csr, opts: &SpgemmOptions) -> Csr {
     assert_eq!(a.ncols, b.nrows, "spgemm shape mismatch");
     let b_comp = CompressedMatrix::compress(b);
-    let sizes = symbolic(a, &b_comp);
-    let rowmap = rowmap_from_sizes(&sizes);
+    let stats = symbolic_stats(a, &b_comp);
+    let rowmap = rowmap_from_sizes(&stats.sizes);
     let nnz = *rowmap.last().expect("rowmap nonempty");
-    let row_ub = max_row_upper_bound(a, b);
     let mut entries = vec![0 as Idx; nnz];
     let mut values = vec![0.0f64; nnz];
+    // Adaptive: classify every row once, outside the parallel region.
+    let regimes = (opts.acc == AccKind::Adaptive).then(|| stats.regimes(b.ncols));
     {
         let e = SyncSlice(entries.as_mut_ptr());
         let v = SyncSlice(values.as_mut_ptr());
         let rowmap_ref = &rowmap;
-        // §Perf: dispatch on accumulator kind ONCE per thread chunk so the
-        // per-insert call is monomorphized (the PooledAcc enum cost a
-        // branch per multiply — ~15% of the numeric phase).
-        parallel_for_chunks(a.nrows, opts.threads, |lo, hi, _tid| {
-            use crate::kkmem::accumulator::{DenseAccumulator, HashAccumulator, TwoLevelAccumulator};
-            match opts.acc {
-                AccKind::Hash => numeric_rows_into(
-                    a, b, lo, hi, rowmap_ref, opts,
-                    HashAccumulator::new(row_ub.max(16), 0), &e, &v,
+        let stats_ref = &stats;
+        let regimes_ref = regimes.as_deref();
+        // §Perf: dispatch on accumulator kind ONCE per thread chunk (or,
+        // adaptively, once per regime band) so the per-insert call is
+        // monomorphized (the PooledAcc enum cost a branch per multiply —
+        // ~15% of the numeric phase). Accumulators are sized from the
+        // chunk's own symbolic row stats, not the global worst case, so
+        // small-row chunks stop paying worst-case allocation and clearing.
+        parallel_for_chunks(a.nrows, opts.threads, |lo, hi, _tid| match opts.acc {
+            AccKind::Hash => numeric_rows_into(
+                a, b, lo, hi, rowmap_ref, opts,
+                &mut HashAccumulator::new(stats_ref.max_size(lo, hi).max(16), 0), &e, &v,
+            ),
+            AccKind::Dense => dense_rows_into(
+                a, b, lo, hi, rowmap_ref, opts,
+                &mut DenseAccumulator::new(b.ncols, 0), &e, &v,
+            ),
+            AccKind::TwoLevel => numeric_rows_into(
+                a, b, lo, hi, rowmap_ref, opts,
+                &mut TwoLevelAccumulator::new(
+                    opts.tl_l1_entries,
+                    stats_ref.max_size(lo, hi).max(16),
+                    0,
                 ),
-                AccKind::Dense => numeric_rows_into(
-                    a, b, lo, hi, rowmap_ref, opts,
-                    DenseAccumulator::new(b.ncols, 0), &e, &v,
-                ),
-                AccKind::TwoLevel => numeric_rows_into(
-                    a, b, lo, hi, rowmap_ref, opts,
-                    TwoLevelAccumulator::new(opts.tl_l1_entries, row_ub.max(16), 0), &e, &v,
-                ),
-            }
+                &e, &v,
+            ),
+            AccKind::Sort => numeric_rows_into(
+                a, b, lo, hi, rowmap_ref, opts,
+                &mut SortAccumulator::new(stats_ref.max_upper_bound(lo, hi).max(16), 0), &e, &v,
+            ),
+            AccKind::Adaptive => adaptive_rows_into(
+                a, b, lo, hi, rowmap_ref, opts, stats_ref,
+                regimes_ref.expect("adaptive regimes classified"),
+                &e, &v,
+            ),
         });
     }
     Csr::new(a.nrows, b.ncols, rowmap, entries, values)
 }
 
+/// Maximal contiguous runs of a single regime within rows `[lo, hi)` —
+/// the band partitioning of the adaptive dispatch. Each returned
+/// `(band_lo, band_hi, regime)` covers rows `[band_lo, band_hi)`.
+pub fn regime_bands(regimes: &[Regime], lo: usize, hi: usize) -> Vec<(usize, usize, Regime)> {
+    let mut bands = Vec::new();
+    let mut start = lo;
+    while start < hi {
+        let reg = regimes[start];
+        let mut end = start + 1;
+        while end < hi && regimes[end] == reg {
+            end += 1;
+        }
+        bands.push((start, end, reg));
+        start = end;
+    }
+    bands
+}
+
+/// Adaptive chunk driver: walk the chunk's contiguous regime bands and
+/// run each band through the accumulator its regime selects, each via the
+/// monomorphized band loop (the per-row hot path stays branch-free).
+/// Accumulators are built lazily per chunk — a chunk with no dense band
+/// never allocates the O(ncols) dense arrays — and sized from the chunk's
+/// own symbolic stats.
+#[allow(clippy::too_many_arguments)]
+fn adaptive_rows_into(
+    a: &Csr,
+    b: &Csr,
+    lo: usize,
+    hi: usize,
+    rowmap: &[usize],
+    opts: &SpgemmOptions,
+    stats: &SymbolicStats,
+    regimes: &[Regime],
+    e: &SyncSlice<Idx>,
+    v: &SyncSlice<f64>,
+) {
+    let mut hash_cap = 0usize;
+    let mut sort_cap = 0usize;
+    let (mut need_hash, mut need_dense, mut need_sort) = (false, false, false);
+    for i in lo..hi {
+        match regimes[i] {
+            Regime::Hash => {
+                need_hash = true;
+                hash_cap = hash_cap.max(stats.sizes[i]);
+            }
+            Regime::Dense => need_dense = true,
+            Regime::Sort => {
+                need_sort = true;
+                sort_cap = sort_cap.max(stats.upper_bounds[i]);
+            }
+        }
+    }
+    let mut hash = need_hash.then(|| HashAccumulator::new(hash_cap.max(16), 0));
+    let mut dense = need_dense.then(|| DenseAccumulator::new(b.ncols, 0));
+    let mut sort = need_sort.then(|| SortAccumulator::new(sort_cap.max(16), 0));
+    for (blo, bhi, reg) in regime_bands(regimes, lo, hi) {
+        match reg {
+            Regime::Hash => numeric_rows_into(
+                a, b, blo, bhi, rowmap, opts,
+                hash.as_mut().expect("hash band has accumulator"), e, v,
+            ),
+            Regime::Dense => dense_rows_into(
+                a, b, blo, bhi, rowmap, opts,
+                dense.as_mut().expect("dense band has accumulator"), e, v,
+            ),
+            Regime::Sort => numeric_rows_into(
+                a, b, blo, bhi, rowmap, opts,
+                sort.as_mut().expect("sort band has accumulator"), e, v,
+            ),
+        }
+    }
+}
+
 /// Monomorphized numeric loop over a row range, writing into the shared
-/// output arrays at rowmap offsets.
+/// output arrays at rowmap offsets. Takes the accumulator by `&mut` so
+/// the adaptive dispatch can reuse one instance across bands.
 #[allow(clippy::too_many_arguments)]
 fn numeric_rows_into<A: crate::kkmem::accumulator::Accumulator>(
     a: &Csr,
@@ -111,7 +204,7 @@ fn numeric_rows_into<A: crate::kkmem::accumulator::Accumulator>(
     hi: usize,
     rowmap: &[usize],
     opts: &SpgemmOptions,
-    mut acc: A,
+    acc: &mut A,
     e: &SyncSlice<Idx>,
     v: &SyncSlice<f64>,
 ) {
@@ -119,19 +212,53 @@ fn numeric_rows_into<A: crate::kkmem::accumulator::Accumulator>(
     let mut t = NullTracer;
     let mut out: Vec<(Idx, f64)> = Vec::with_capacity(1 << 10);
     for i in lo..hi {
-        numeric_row(&mut t, &lay, a, b, i, &mut acc, &mut out);
-        debug_assert_eq!(out.len(), rowmap[i + 1] - rowmap[i]);
-        if opts.sort_output {
-            out.sort_unstable_by_key(|&(c, _)| c);
-        }
-        let pos = rowmap[i];
-        for (off, &(c, val)) in out.iter().enumerate() {
-            // SAFETY: rows write disjoint [rowmap[i], rowmap[i+1]) ranges;
-            // threads own disjoint row sets.
-            unsafe {
-                e.write(pos + off, c);
-                v.write(pos + off, val);
-            }
+        numeric_row(&mut t, &lay, a, b, i, acc, &mut out);
+        scatter_row(&mut out, i, rowmap, opts, e, v);
+    }
+}
+
+/// Dense-band numeric loop through the branch-free native kernel
+/// (`numeric_row_dense_native`) instead of the generic per-insert path.
+#[allow(clippy::too_many_arguments)]
+fn dense_rows_into(
+    a: &Csr,
+    b: &Csr,
+    lo: usize,
+    hi: usize,
+    rowmap: &[usize],
+    opts: &SpgemmOptions,
+    acc: &mut DenseAccumulator,
+    e: &SyncSlice<Idx>,
+    v: &SyncSlice<f64>,
+) {
+    let mut out: Vec<(Idx, f64)> = Vec::with_capacity(1 << 10);
+    for i in lo..hi {
+        numeric_row_dense_native(a, b, i, acc, &mut out);
+        scatter_row(&mut out, i, rowmap, opts, e, v);
+    }
+}
+
+/// Write one finished row into the shared output arrays.
+#[inline]
+fn scatter_row(
+    out: &mut [(Idx, f64)],
+    i: usize,
+    rowmap: &[usize],
+    opts: &SpgemmOptions,
+    e: &SyncSlice<Idx>,
+    v: &SyncSlice<f64>,
+) {
+    debug_assert_eq!(out.len(), rowmap[i + 1] - rowmap[i]);
+    if opts.sort_output {
+        out.sort_unstable_by_key(|&(c, _)| c);
+    }
+    let pos = rowmap[i];
+    for (off, &(c, val)) in out.iter().enumerate() {
+        // SAFETY: rows write disjoint [rowmap[i], rowmap[i+1]) ranges;
+        // threads own disjoint row sets.
+        unsafe {
+            e.write(pos + off, c);
+            v.write(pos + off, val);
         }
     }
 }
@@ -201,22 +328,61 @@ pub fn spgemm_sim(
     // Symbolic phase (not instrumented — the paper studies the numeric
     // phase; §2.1).
     let b_comp = CompressedMatrix::compress(b);
-    let sizes = symbolic(a, &b_comp);
-    let rowmap = rowmap_from_sizes(&sizes);
+    let stats = symbolic_stats(a, &b_comp);
+    let rowmap = rowmap_from_sizes(&stats.sizes);
     let nnz = *rowmap.last().expect("rowmap nonempty");
-    let row_ub = max_row_upper_bound(a, b);
+    let row_ub = stats.max_row_upper_bound();
+    // Adaptive: classify rows and plan the per-regime accumulator bank —
+    // which regimes occur, and the hash/sort capacities their rows need.
+    let regimes = (opts.acc == AccKind::Adaptive).then(|| stats.regimes(b.ncols));
+    let bank_plan = regimes.as_ref().map(|regs| {
+        let mut need = [false; 3];
+        let mut hash_cap = 0usize;
+        let mut sort_cap = 0usize;
+        for (i, r) in regs.iter().enumerate() {
+            need[r.index()] = true;
+            match r {
+                Regime::Hash => hash_cap = hash_cap.max(stats.sizes[i]),
+                Regime::Sort => sort_cap = sort_cap.max(stats.upper_bounds[i]),
+                Regime::Dense => {}
+            }
+        }
+        (need, hash_cap, sort_cap)
+    });
 
     let (a_rm, a_en, a_va) = alloc_csr_regions(sim, "A", a, placement.a)?;
     let (b_rm, b_en, b_va) = alloc_csr_regions(sim, "B", b, placement.b)?;
     let (c_rm, c_en, c_va) = alloc_csr_regions_sized(sim, "C", a.nrows, nnz, placement.c)?;
-    // Hash accumulators are cache-resident in practice; wrap their trace
-    // window to half the (scaled) L1 so that relation survives scaling.
+    // Cache-resident accumulators (hash, sort) are wrapped: their trace
+    // window is folded to half the (scaled) L1 so that locality relation
+    // survives scaling. Dense uses its raw footprint.
     let acc_wrap = acc_trace_wrap(sim);
-    let footprint = opts.acc.footprint_bytes(row_ub, b.ncols);
-    let acc_bytes = if opts.acc == crate::kkmem::mempool::AccKind::Hash {
-        acc_region_bytes(footprint, acc_wrap)
-    } else {
-        footprint.max(64)
+    let acc_bytes = match &bank_plan {
+        // Adaptive: the bank's accumulators are alternatives sharing one
+        // region, so it is sized for the largest one actually built.
+        Some((need, hash_cap, sort_cap)) => {
+            let mut bytes = 64u64;
+            if need[Regime::Hash.index()] {
+                bytes = bytes
+                    .max(acc_region_bytes(AccKind::Hash.footprint_bytes(*hash_cap, b.ncols), acc_wrap));
+            }
+            if need[Regime::Dense.index()] {
+                bytes = bytes.max(AccKind::Dense.footprint_bytes(0, b.ncols));
+            }
+            if need[Regime::Sort.index()] {
+                bytes = bytes
+                    .max(acc_region_bytes(AccKind::Sort.footprint_bytes(*sort_cap, b.ncols), acc_wrap));
+            }
+            bytes
+        }
+        None => {
+            let footprint = opts.acc.footprint_bytes(row_ub, b.ncols);
+            if matches!(opts.acc, AccKind::Hash | AccKind::Sort) {
+                acc_region_bytes(footprint, acc_wrap)
+            } else {
+                footprint.max(64)
+            }
+        }
     };
     let acc_region = sim.alloc("accumulator", acc_bytes, placement.acc)?;
     let lay = Layout {
@@ -233,26 +399,49 @@ pub fn spgemm_sim(
         ..Default::default()
     };
 
-    let mut acc = PooledAcc::build_wrapped(
-        opts.acc,
-        row_ub,
-        b.ncols,
-        opts.tl_l1_entries,
-        acc_region,
-        acc_wrap,
-    );
     let mut entries = vec![0 as Idx; nnz];
     let mut values = vec![0.0f64; nnz];
     let mut out: Vec<(Idx, f64)> = Vec::new();
     let mut mults = 0u64;
-    for i in 0..a.nrows {
-        mults += numeric_row(sim, &lay, a, b, i, &mut acc, &mut out);
-        if opts.sort_output {
-            out.sort_unstable_by_key(|&(c, _)| c);
+    if let (Some((need, hash_cap, sort_cap)), Some(regs)) = (&bank_plan, &regimes) {
+        // Adaptive: per-regime accumulator bank, rows dispatched by their
+        // classified regime (the simulator stays on the generic traced
+        // kernel, so per-insert traffic remains observable per regime).
+        let build = |kind: AccKind, cap: usize| {
+            PooledAcc::build_wrapped(kind, cap, b.ncols, opts.tl_l1_entries, acc_region, acc_wrap)
+        };
+        let mut bank: [Option<PooledAcc>; 3] = [
+            need[Regime::Hash.index()].then(|| build(AccKind::Hash, *hash_cap)),
+            need[Regime::Dense.index()].then(|| build(AccKind::Dense, 0)),
+            need[Regime::Sort.index()].then(|| build(AccKind::Sort, *sort_cap)),
+        ];
+        for i in 0..a.nrows {
+            let acc = bank[regs[i].index()].as_mut().expect("regime accumulator built");
+            mults += numeric_row(sim, &lay, a, b, i, acc, &mut out);
+            if opts.sort_output {
+                out.sort_unstable_by_key(|&(c, _)| c);
+            }
+            sim.write(lay.c_rowmap, (i as u64 + 1) * 8, 8);
+            emit_row(sim, &lay, rowmap[i], &out, &mut entries, &mut values);
         }
-        // Rowmap write for this row (streamed).
-        sim.write(lay.c_rowmap, (i as u64 + 1) * 8, 8);
-        emit_row(sim, &lay, rowmap[i], &out, &mut entries, &mut values);
+    } else {
+        let mut acc = PooledAcc::build_wrapped(
+            opts.acc,
+            row_ub,
+            b.ncols,
+            opts.tl_l1_entries,
+            acc_region,
+            acc_wrap,
+        );
+        for i in 0..a.nrows {
+            mults += numeric_row(sim, &lay, a, b, i, &mut acc, &mut out);
+            if opts.sort_output {
+                out.sort_unstable_by_key(|&(c, _)| c);
+            }
+            // Rowmap write for this row (streamed).
+            sim.write(lay.c_rowmap, (i as u64 + 1) * 8, 8);
+            emit_row(sim, &lay, rowmap[i], &out, &mut entries, &mut values);
+        }
     }
     let c = Csr::new(a.nrows, b.ncols, rowmap, entries, values);
     Ok(SimProduct { c, mults, layout: lay })
@@ -276,10 +465,123 @@ mod tests {
     fn native_matches_reference_all_acc_kinds() {
         let (a, b) = rand_pair(10);
         let expect = spgemm_reference(&a, &b);
-        for acc in [AccKind::Hash, AccKind::Dense, AccKind::TwoLevel] {
-            let opts = SpgemmOptions { acc, threads: 1, ..Default::default() };
+        for acc in AccKind::ALL {
+            for threads in [1, 4] {
+                let opts = SpgemmOptions { acc, threads, ..Default::default() };
+                let c = spgemm(&a, &b, &opts);
+                assert!(c.approx_eq(&expect, 1e-12), "acc {} x{threads}", acc.name());
+            }
+        }
+    }
+
+    /// Build a CSR from per-row (col, val) lists.
+    fn csr_from_rows(rows: &[Vec<(Idx, f64)>], ncols: usize) -> Csr {
+        let mut coo = crate::sparse::Coo::new(rows.len(), ncols);
+        for (i, row) in rows.iter().enumerate() {
+            for &(c, v) in row {
+                coo.push(i, c as usize, v);
+            }
+        }
+        coo.to_csr()
+    }
+
+    /// A and B crafted so A's row groups land in known regimes: dense
+    /// (wide coverage), hash (scattered, wide output), sort (tiny/empty).
+    fn mixed_regime_pair() -> (Csr, Csr) {
+        let ncols = 1024usize;
+        // B rows 0..4: dense runs covering cols 0..256.
+        // B rows 4..8: 8 scattered columns each.
+        // B rows 8..12: 2 columns each.
+        let mut b_rows: Vec<Vec<(Idx, f64)>> = Vec::new();
+        for r in 0..4usize {
+            b_rows.push((0..256).map(|j| (j as Idx, 0.25 + r as f64 + j as f64 * 0.125)).collect());
+        }
+        for r in 0..4usize {
+            b_rows.push((0..8).map(|j| (((j * 131 + r * 17) % ncols) as Idx, 1.5 - j as f64)).collect());
+        }
+        for r in 0..4usize {
+            b_rows.push(vec![((r * 97) % ncols) as Idx, ((r * 211 + 5) % ncols) as Idx]
+                .into_iter()
+                .map(|c| (c, 0.5 + r as f64))
+                .collect());
+        }
+        let b = csr_from_rows(&b_rows, ncols);
+        // A rows: [0..3) dense-regime, [3..6) hash-regime, [6..8) sort
+        // (tiny), row 8 empty (also sort).
+        let a_rows: Vec<Vec<(Idx, f64)>> = vec![
+            vec![(0, 1.0), (1, -0.5)],
+            vec![(1, 2.0), (2, 0.5), (5, 1.0)],
+            vec![(3, -1.0), (0, 0.25)],
+            vec![(4, 1.0), (5, -1.0), (6, 2.0)],
+            vec![(5, 0.5), (7, 1.5), (4, -2.0)],
+            vec![(6, 1.0), (7, 0.5), (5, 0.25)],
+            vec![(8, 1.0)],
+            vec![(9, -1.0), (10, 2.0)],
+            vec![],
+        ];
+        (csr_from_rows(&a_rows, 12), b)
+    }
+
+    #[test]
+    fn adaptive_bands_select_intended_accumulators() {
+        use crate::kkmem::symbolic::{symbolic_stats, Regime};
+        let (a, b) = mixed_regime_pair();
+        let stats = symbolic_stats(&a, &CompressedMatrix::compress(&b));
+        let regimes = stats.regimes(b.ncols);
+        // Dense rows: ub ≥ 512, size ≥ 256 of 1024 → density ≥ 1/8.
+        assert_eq!(&regimes[0..3], &[Regime::Dense; 3], "dense rows: {regimes:?}");
+        // Scattered rows: ub = 24 > 16, size ≈ 24 ≪ 1024/8 → hash.
+        assert_eq!(&regimes[3..6], &[Regime::Hash; 3], "hash rows: {regimes:?}");
+        // Tiny and empty rows: ub ≤ 16 → sort.
+        assert_eq!(&regimes[6..9], &[Regime::Sort; 3], "sort rows: {regimes:?}");
+        // Band partitioning: three maximal contiguous runs.
+        let bands = regime_bands(&regimes, 0, a.nrows);
+        assert_eq!(
+            bands,
+            vec![(0, 3, Regime::Dense), (3, 6, Regime::Hash), (6, 9, Regime::Sort)]
+        );
+        // Sub-range banding splits at the range bounds.
+        assert_eq!(regime_bands(&regimes, 2, 5), vec![(2, 3, Regime::Dense), (3, 5, Regime::Hash)]);
+        assert_eq!(regime_bands(&regimes, 4, 4), vec![]);
+    }
+
+    #[test]
+    fn adaptive_bit_identical_to_reference_on_mixed_regimes() {
+        let (a, b) = mixed_regime_pair();
+        let expect = spgemm_reference(&a, &b);
+        for threads in [1, 3] {
+            let opts = SpgemmOptions {
+                acc: AccKind::Adaptive,
+                threads,
+                sort_output: true,
+                ..Default::default()
+            };
             let c = spgemm(&a, &b, &opts);
-            assert!(c.approx_eq(&expect, 1e-12), "acc {}", acc.name());
+            assert_eq!(c.rowmap, expect.rowmap, "x{threads}");
+            assert_eq!(c.entries, expect.entries, "x{threads}");
+            // Element-wise exact equality (`==` admits ±0.0): every
+            // accumulator adds each column's products in the same k-then-j
+            // order as the reference.
+            for (i, (&v1, &v2)) in c.values.iter().zip(&expect.values).enumerate() {
+                assert!(v1 == v2, "value {i}: {v1} vs {v2} (x{threads})");
+            }
+        }
+    }
+
+    #[test]
+    fn sim_adaptive_and_sort_match_reference() {
+        let (a, b) = mixed_regime_pair();
+        let expect = spgemm_reference(&a, &b);
+        let arch = knl(KnlMode::Ddr, 64, ScaleFactor::default());
+        for acc in [AccKind::Adaptive, AccKind::Sort] {
+            let mut sim = MemSim::new(arch.spec.clone());
+            let placement = Placement::uniform(arch.default_loc);
+            let opts = SpgemmOptions { acc, ..Default::default() };
+            let prod = spgemm_sim(&mut sim, &a, &b, placement, &opts).unwrap();
+            assert!(prod.c.approx_eq(&expect, 1e-12), "acc {}", acc.name());
+            let rep = sim.finish();
+            assert_eq!(rep.flops, 2 * prod.mults, "acc {}", acc.name());
+            assert!(rep.seconds > 0.0, "acc {}", acc.name());
         }
     }
 

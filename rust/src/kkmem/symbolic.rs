@@ -74,24 +74,170 @@ impl BlockUnion {
 }
 
 /// Exact per-row nonzero counts of `C = A × B` via compressed union.
+/// Thin wrapper over [`symbolic_stats`] for callers that only need sizes.
 pub fn symbolic(a: &Csr, b_compressed: &CompressedMatrix) -> Vec<usize> {
+    symbolic_stats(a, b_compressed).sizes
+}
+
+/// Accumulator regime of one output row (§3.1 / Nagasaka & Azad): which
+/// accumulator the adaptive numeric phase should run for it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Regime {
+    /// Scattered, mid-sized rows: linear-probing hash accumulator.
+    Hash,
+    /// Rows whose output covers a sizable fraction of the output width
+    /// (or heavily compressed/clustered rows): dense accumulator with the
+    /// branch-free scatter-FMA kernel.
+    Dense,
+    /// Tiny rows (including empty ones): append + stable-sort + merge.
+    Sort,
+}
+
+impl Regime {
+    /// Stable index used for per-regime arrays (`[hash, dense, sort]`).
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            Regime::Hash => 0,
+            Regime::Dense => 1,
+            Regime::Sort => 2,
+        }
+    }
+
+    /// Human-readable name for tables and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            Regime::Hash => "hash",
+            Regime::Dense => "dense",
+            Regime::Sort => "sort",
+        }
+    }
+}
+
+/// A row is dense-regime when its exact output size is at least
+/// `ncols / DENSE_DENSITY_DEN` (density ≥ 1/8): the dense accumulator's
+/// O(ncols) arrays are then amortized over enough touches to beat hashing.
+pub const DENSE_DENSITY_DEN: usize = 8;
+
+/// Secondary clustered-dense rule: rows whose B-row compression ratio is
+/// at least [`DENSE_CLUSTER_RATIO`] (contiguous column runs, e.g. stencil
+/// bands) go dense already at density ≥ `1/DENSE_CLUSTERED_DEN`, because
+/// their dense-array touches are cache-line friendly.
+pub const DENSE_CLUSTERED_DEN: usize = 64;
+
+/// Minimum `upper_bound / compressed_bound` ratio for the clustered rule.
+pub const DENSE_CLUSTER_RATIO: f64 = 4.0;
+
+/// Rows whose flop upper bound is at most this are sort-regime: the whole
+/// row fits a handful of cache lines, so append + stable sort + merge
+/// beats paying hash probes or dense clearing.
+pub const SORT_MAX_UB: usize = 16;
+
+/// Per-row statistics of the symbolic phase, computed in the same single
+/// pass that produces the exact sizes. Feeds adaptive accumulator
+/// selection and the native per-regime throughput model.
+#[derive(Clone, Debug)]
+pub struct SymbolicStats {
+    /// Exact nnz of each C row (what [`symbolic`] returns).
+    pub sizes: Vec<usize>,
+    /// Flop upper bound per row: `Σ_{k∈A(i,:)} nnz(B(k,:))`.
+    pub upper_bounds: Vec<usize>,
+    /// Compressed upper bound per row: `Σ_{k∈A(i,:)} |compressed B(k,:)|`
+    /// (block/mask pairs). `upper_bounds[i] / compressed_bounds[i]` is the
+    /// B-row compression ratio seen from row `i`.
+    pub compressed_bounds: Vec<usize>,
+}
+
+impl SymbolicStats {
+    /// B-row compression ratio seen from row `i` (≥ 1.0; 1.0 for empty).
+    #[inline]
+    pub fn compression_ratio(&self, i: usize) -> f64 {
+        if self.compressed_bounds[i] == 0 {
+            1.0
+        } else {
+            self.upper_bounds[i] as f64 / self.compressed_bounds[i] as f64
+        }
+    }
+
+    /// Classify row `i` for an output of width `ncols`.
+    pub fn regime(&self, i: usize, ncols: usize) -> Regime {
+        let size = self.sizes[i];
+        let ub = self.upper_bounds[i];
+        if ub <= SORT_MAX_UB {
+            return Regime::Sort;
+        }
+        let clustered = self.compression_ratio(i) >= DENSE_CLUSTER_RATIO;
+        if size.saturating_mul(DENSE_DENSITY_DEN) >= ncols
+            || (clustered && size.saturating_mul(DENSE_CLUSTERED_DEN) >= ncols)
+        {
+            Regime::Dense
+        } else {
+            Regime::Hash
+        }
+    }
+
+    /// Classify every row at once.
+    pub fn regimes(&self, ncols: usize) -> Vec<Regime> {
+        (0..self.sizes.len()).map(|i| self.regime(i, ncols)).collect()
+    }
+
+    /// Largest exact size over rows `[lo, hi)` — sizes hash/two-level
+    /// accumulators for a thread chunk (distinct columns, not flops).
+    pub fn max_size(&self, lo: usize, hi: usize) -> usize {
+        self.sizes[lo..hi].iter().copied().max().unwrap_or(0)
+    }
+
+    /// Largest flop upper bound over rows `[lo, hi)` — sizes the sort
+    /// accumulator's pair buffer (it holds duplicates until drain).
+    pub fn max_upper_bound(&self, lo: usize, hi: usize) -> usize {
+        self.upper_bounds[lo..hi].iter().copied().max().unwrap_or(0)
+    }
+
+    /// Largest flop upper bound over all rows (what
+    /// [`max_row_upper_bound`] computes from scratch).
+    pub fn max_row_upper_bound(&self) -> usize {
+        self.upper_bounds.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Flop mass (scalar multiplications) per regime, indexed by
+    /// [`Regime::index`] — the native per-regime throughput model's input.
+    pub fn mults_by_regime(&self, ncols: usize) -> [u64; 3] {
+        let mut by = [0u64; 3];
+        for i in 0..self.sizes.len() {
+            by[self.regime(i, ncols).index()] += self.upper_bounds[i] as u64;
+        }
+        by
+    }
+}
+
+/// One-pass symbolic analysis: exact sizes plus the per-row upper bounds
+/// and compressed bounds, all from the same compressed-union walk.
+pub fn symbolic_stats(a: &Csr, b_compressed: &CompressedMatrix) -> SymbolicStats {
     assert_eq!(a.ncols, b_compressed.nrows, "symbolic shape mismatch");
     let mut sizes = vec![0usize; a.nrows];
+    let mut upper_bounds = vec![0usize; a.nrows];
+    let mut compressed_bounds = vec![0usize; a.nrows];
     let mut acc = BlockUnion::new(64);
     for i in 0..a.nrows {
         let (acols, _) = a.row(i);
+        let mut ub = 0usize;
+        let mut comp = 0usize;
         // §Perf note: a last-(block,slot) memo was tried here and
         // reverted — no measurable gain and a stale-slot hazard across
         // map growth (EXPERIMENTS.md §Perf iteration log).
         for &k in acols {
             let (blocks, masks) = b_compressed.row(k as usize);
+            comp += blocks.len();
             for (&blk, &m) in blocks.iter().zip(masks) {
+                ub += m.count_ones() as usize;
                 let _ = acc.or_insert(blk, m);
             }
         }
         sizes[i] = acc.drain_popcount();
+        upper_bounds[i] = ub;
+        compressed_bounds[i] = comp;
     }
-    sizes
+    SymbolicStats { sizes, upper_bounds, compressed_bounds }
 }
 
 /// Upper bound on any single C row's nnz: `max_i Σ_{k∈A(i,:)} nnz(B(k,:))`
@@ -164,5 +310,64 @@ mod tests {
     fn rowmap_prefix_sum() {
         assert_eq!(rowmap_from_sizes(&[2, 0, 3]), vec![0, 2, 2, 5]);
         assert_eq!(rowmap_from_sizes(&[]), vec![0]);
+    }
+
+    #[test]
+    fn stats_agree_with_scalar_passes() {
+        let a = crate::gen::rhs::random_csr(40, 30, 0, 8, 11);
+        let b = crate::gen::rhs::random_csr(30, 50, 0, 8, 12);
+        let comp = CompressedMatrix::compress(&b);
+        let stats = symbolic_stats(&a, &comp);
+        assert_eq!(stats.sizes, symbolic(&a, &comp));
+        assert_eq!(stats.max_row_upper_bound(), max_row_upper_bound(&a, &b));
+        for i in 0..a.nrows {
+            assert!(stats.sizes[i] <= stats.upper_bounds[i], "row {i}");
+            assert!(stats.compressed_bounds[i] <= stats.upper_bounds[i], "row {i}");
+            assert!(stats.compression_ratio(i) >= 1.0, "row {i}");
+        }
+        let total: u64 = stats.upper_bounds.iter().map(|&u| u as u64).sum();
+        assert_eq!(stats.mults_by_regime(b.ncols).iter().sum::<u64>(), total);
+    }
+
+    #[test]
+    fn regimes_classify_as_intended() {
+        // Tiny upper bound → sort regime, regardless of density.
+        let tiny = SymbolicStats {
+            sizes: vec![0, 4],
+            upper_bounds: vec![0, SORT_MAX_UB],
+            compressed_bounds: vec![0, 2],
+        };
+        assert_eq!(tiny.regime(0, 100), Regime::Sort);
+        assert_eq!(tiny.regime(1, 100), Regime::Sort);
+        // Covers ≥ 1/8 of the output width → dense regime.
+        let dense = SymbolicStats {
+            sizes: vec![64],
+            upper_bounds: vec![200],
+            compressed_bounds: vec![200],
+        };
+        assert_eq!(dense.regime(0, 256), Regime::Dense);
+        // Same size on a much wider output, incompressible → hash regime.
+        assert_eq!(dense.regime(0, 1 << 16), Regime::Hash);
+        // Clustered rows (high compression ratio) go dense at 1/64 density.
+        let clustered = SymbolicStats {
+            sizes: vec![64],
+            upper_bounds: vec![200],
+            compressed_bounds: vec![20],
+        };
+        assert_eq!(clustered.regime(0, 64 * DENSE_CLUSTERED_DEN), Regime::Dense);
+        assert_eq!(clustered.regime(0, 1 << 20), Regime::Hash);
+    }
+
+    #[test]
+    fn max_over_ranges() {
+        let s = SymbolicStats {
+            sizes: vec![3, 9, 1, 5],
+            upper_bounds: vec![4, 20, 2, 8],
+            compressed_bounds: vec![4, 10, 2, 8],
+        };
+        assert_eq!(s.max_size(0, 4), 9);
+        assert_eq!(s.max_size(2, 4), 5);
+        assert_eq!(s.max_upper_bound(1, 3), 20);
+        assert_eq!(s.max_size(2, 2), 0);
     }
 }

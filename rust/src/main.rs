@@ -16,7 +16,7 @@ use mlmem_spgemm::error::MlmemError;
 use mlmem_spgemm::gen::scale::ScaleFactor;
 use mlmem_spgemm::gen::stencil::Domain;
 use mlmem_spgemm::gen::{graphs::GraphKind, MgProblem};
-use mlmem_spgemm::kkmem::{CompressedMatrix, SpgemmOptions};
+use mlmem_spgemm::kkmem::{AccKind, CompressedMatrix, SpgemmOptions};
 use mlmem_spgemm::memory::arch::{knl, p100, Arch, GpuMode, KnlMode};
 use mlmem_spgemm::memory::{MemSim, SimReport};
 use mlmem_spgemm::tricount::{degree_sorted_lower, tricount_sim, TriPlacement};
@@ -167,6 +167,11 @@ fn cmd_spgemm(argv: &[String]) -> Result<(), MlmemError> {
             "execution engine: native|sim|knl-chunk|gpu-chunk|pipelined",
         )
         .opt(
+            "acc",
+            "hash",
+            "accumulator strategy: hash|dense|sort|twolevel|adaptive",
+        )
+        .opt(
             "budget-gb",
             "",
             "staging budget in paper-GB ('' = engine default; for native, \
@@ -211,7 +216,8 @@ fn cmd_spgemm(argv: &[String]) -> Result<(), MlmemError> {
         b.ncols,
         b.nnz()
     );
-    let mut opts = SpgemmOptions::default();
+    let acc = p.choice("acc", AccKind::parse, "hash|dense|sort|twolevel|adaptive")?;
+    let mut opts = SpgemmOptions { acc, ..Default::default() };
     if kind == EngineKind::Native {
         // Real OS threads, not the simulated-machine thread count.
         opts.threads = std::thread::available_parallelism()

@@ -37,12 +37,103 @@ fn prop_native_spgemm_matches_reference_all_acc_kinds() {
     check("native spgemm == reference", 40, |g| {
         let (a, b) = gen_pair(g, 40);
         let expect = spgemm_reference(&a, &b);
-        let acc = *g.pick(&[AccKind::Hash, AccKind::Dense, AccKind::TwoLevel]);
+        let acc = *g.pick(&AccKind::ALL);
         let threads = g.usize(1, 6);
         let opts = SpgemmOptions { acc, threads, ..Default::default() };
         let c = spgemm(&a, &b, &opts);
         assert!(c.approx_eq(&expect, 1e-10), "acc {} threads {threads}", acc.name());
         c.validate().unwrap();
+    });
+}
+
+/// Build a CSR from per-row column sets (already distinct and sorted),
+/// with random values.
+fn csr_from_cols(rows: &[Vec<u32>], ncols: usize, g: &mut Gen) -> Csr {
+    let mut rowmap = vec![0usize; rows.len() + 1];
+    let mut entries: Vec<u32> = Vec::new();
+    let mut values: Vec<f64> = Vec::new();
+    for (i, cols) in rows.iter().enumerate() {
+        for &c in cols {
+            entries.push(c);
+            values.push(g.f64(-2.0, 2.0));
+        }
+        rowmap[i + 1] = entries.len();
+    }
+    Csr::new(rows.len(), ncols, rowmap, entries, values)
+}
+
+/// An input pair engineered to hit every accumulator regime at once: B
+/// mixes clustered runs (dense-clustered rows), scattered rows (hash),
+/// and near-empty rows (sort); A mixes empty, tiny, scattered, and
+/// heavy rows so adjacent output rows land in different regimes.
+fn gen_mixed_regime_pair(g: &mut Gen) -> (Csr, Csr) {
+    use std::collections::BTreeSet;
+    let ncols = g.usize(256, 1024);
+    let nb = g.usize(12, 24);
+    let mut brows: Vec<Vec<u32>> = Vec::with_capacity(nb);
+    for r in 0..nb {
+        let mut cols = BTreeSet::new();
+        match r % 3 {
+            0 => {
+                // A contiguous run over a solid chunk of the column space.
+                let len = g.usize(ncols / 4, ncols / 2);
+                let start = g.usize(0, ncols - len);
+                for j in start..start + len {
+                    cols.insert(j as u32);
+                }
+            }
+            1 => {
+                for _ in 0..g.usize(4, 12) {
+                    cols.insert(g.usize(0, ncols - 1) as u32);
+                }
+            }
+            _ => {
+                for _ in 0..g.usize(1, 2) {
+                    cols.insert(g.usize(0, ncols - 1) as u32);
+                }
+            }
+        }
+        brows.push(cols.into_iter().collect());
+    }
+    let b = csr_from_cols(&brows, ncols, g);
+    let na = g.usize(8, 20);
+    let mut arows: Vec<Vec<u32>> = Vec::with_capacity(na);
+    for i in 0..na {
+        let mut cols = BTreeSet::new();
+        let deg = match i % 4 {
+            0 => 0,
+            1 => g.usize(1, 2),
+            2 => g.usize(3, 6),
+            _ => g.usize(6, nb.min(12)),
+        };
+        for _ in 0..deg {
+            cols.insert(g.usize(0, nb - 1) as u32);
+        }
+        arows.push(cols.into_iter().collect());
+    }
+    let a = csr_from_cols(&arows, nb, g);
+    (a, b)
+}
+
+#[test]
+fn prop_adaptive_bit_identical_to_reference_on_mixed_regimes() {
+    // The adaptive dispatcher must not merely approximate the fixed
+    // strategies — every accumulator adds each output entry's products
+    // in the same k-order, so the result is bit-identical to the
+    // sequential reference regardless of which band a row lands in.
+    check("adaptive spgemm bit-identical", 25, |g| {
+        let (a, b) = gen_mixed_regime_pair(g);
+        let expect = spgemm_reference(&a, &b);
+        let threads = g.usize(1, 4);
+        for acc in [AccKind::Adaptive, AccKind::Hash] {
+            let opts = SpgemmOptions { acc, threads, sort_output: true, ..Default::default() };
+            let c = spgemm(&a, &b, &opts);
+            assert_eq!(c.rowmap, expect.rowmap, "{} threads {threads}", acc.name());
+            assert_eq!(c.entries, expect.entries, "{}", acc.name());
+            for (x, y) in c.values.iter().zip(&expect.values) {
+                assert!(x == y, "{}: {x} != {y}", acc.name());
+            }
+        }
     });
 }
 
