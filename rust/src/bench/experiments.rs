@@ -313,6 +313,113 @@ pub fn run_serve_stream(
     Some((total, session.metrics()))
 }
 
+/// The `contention` experiment's job mix: serve-style staging pairs
+/// (copy-bound — their time is dominated by bulk transfers over the
+/// shared link) interleaved with small dense multiplies (compute-bound —
+/// kernel time dominates, barely touching the link). Submitted all at
+/// once, so the shared link actually sees concurrent streams.
+pub struct ContentionBatch {
+    pub operands: Vec<std::sync::Arc<Csr>>,
+    /// Submission order: `(a, b)` indices into `operands`. Copy-bound
+    /// jobs lead, so a FIFO scheduler pairs copy with copy on the link
+    /// while the co-scheduler reorders complementary work forward.
+    pub pairs: Vec<(usize, usize)>,
+}
+
+/// Three copy-bound serve-style pairs followed by three compute-bound
+/// dense pairs — the mixed batch both schedulers replay.
+pub fn contention_batch(arch: &Arch, seed: u64) -> ContentionBatch {
+    use std::sync::Arc;
+    let usable = arch.spec.pools[crate::memory::FAST.0].usable();
+    let b = Arc::new(serve_rhs(usable, seed));
+    let b_rows = b.nrows;
+    let mut operands = vec![
+        Arc::new(serve_lhs(usable, b_rows, seed + 1)),
+        Arc::new(serve_lhs(usable, b_rows, seed + 2)),
+        Arc::new(serve_lhs(usable, b_rows, seed + 3)),
+        b,
+    ];
+    // Small and dense: both operands together use a small slice of the
+    // fast pool, so staging (if the planner stages at all) is a few
+    // microseconds against a kernel crunching dense-capped product rows.
+    for i in 0..3 {
+        operands.push(Arc::new(uniform_degree(96, 96, 48, seed + 20 + i)));
+        operands.push(Arc::new(uniform_degree(96, 96, 48, seed + 30 + i)));
+    }
+    ContentionBatch {
+        operands,
+        pairs: vec![(0, 3), (1, 3), (2, 3), (4, 5), (6, 7), (8, 9)],
+    }
+}
+
+/// Outcome of replaying one [`ContentionBatch`] through a session.
+pub struct ContentionOutcome {
+    /// Total simulated seconds across the batch — the makespan proxy.
+    /// Concurrent streams on the shared link inflate it, so a scheduler
+    /// that pairs copy-bound with compute-bound work lowers it.
+    pub total_seconds: f64,
+    /// Mean |relative error| of the contention-blind admission price
+    /// against each job's actual simulated seconds.
+    pub blind_err: f64,
+    /// Mean |relative error| of the contention-aware price (same jobs).
+    pub aware_err: f64,
+    pub metrics: crate::coordinator::MetricsSnapshot,
+}
+
+/// Replay the batch on two workers with admission pricing on, FIFO or
+/// co-scheduled. All jobs are submitted before the first wait, so the
+/// link sees the full committed load and the workers genuinely overlap.
+pub fn run_contention_batch(
+    arch: &std::sync::Arc<Arch>,
+    batch: &ContentionBatch,
+    co_schedule: bool,
+) -> Option<ContentionOutcome> {
+    use std::sync::Arc;
+    let session = crate::coordinator::Session::builder(Arc::clone(arch))
+        .workers(2)
+        .max_pending(batch.pairs.len().max(1) * 2)
+        .operand_cache(false)
+        .co_schedule(co_schedule)
+        .build();
+    let handles: Vec<_> = batch
+        .operands
+        .iter()
+        .map(|m| session.register(Arc::clone(m)))
+        .collect();
+    let jobs: Vec<_> = batch
+        .pairs
+        .iter()
+        .map(|&(ia, ib)| {
+            let submit = crate::coordinator::SubmitOptions {
+                price_admission: true,
+                ..Default::default()
+            };
+            session.spgemm_with(handles[ia], handles[ib], submit)
+        })
+        .collect::<Result<_, _>>()
+        .ok()?;
+    let (mut total, mut blind, mut aware, mut priced) = (0.0, 0.0, 0.0, 0usize);
+    for h in jobs {
+        let ticket = h.ticket().copied();
+        let r = h.wait().ok()?;
+        total += r.report.seconds;
+        if let Some(t) = ticket {
+            let actual = r.report.seconds.max(1e-12);
+            blind += ((t.blind_seconds - actual) / actual).abs();
+            aware += ((t.aware_seconds - actual) / actual).abs();
+            priced += 1;
+        }
+    }
+    session.drain();
+    let n = priced.max(1) as f64;
+    Some(ContentionOutcome {
+        total_seconds: total,
+        blind_err: blind / n,
+        aware_err: aware / n,
+        metrics: session.metrics(),
+    })
+}
+
 /// Execute one multiplication through the coordinator under an explicit
 /// policy (or `Policy::Auto`) — the `planner` experiment's probe. `None`
 /// = the configuration did not fit/complete, the paper's missing point.

@@ -16,7 +16,8 @@ use std::path::Path;
 pub const EXPERIMENTS: &[&str] = &[
     "table1", "table2", "table3", "table4", "fig3", "fig4", "fig6", "fig7", "fig9", "fig10",
     "fig11", "fig12", "fig13", "ablate-acc", "ablate-algo", "ablate-compression",
-    "ablate-overlap", "accumulator", "pipeline", "planner", "chain", "serve", "profiles",
+    "ablate-overlap", "accumulator", "pipeline", "planner", "chain", "serve", "contention",
+    "profiles",
 ];
 
 /// Run one experiment by id.
@@ -44,6 +45,7 @@ pub fn run_experiment(id: &str, cfg: &BenchConfig, cache: &mut ProblemCache) -> 
         "planner" => tables::planner_accuracy(cfg, cache),
         "chain" => tables::chain_triple_product(cfg, cache),
         "serve" => tables::serve_operand_cache(cfg, cache),
+        "contention" => tables::contention_shared_link(cfg, cache),
         "profiles" => tables::machine_profiles(cfg),
         _ => return None,
     })

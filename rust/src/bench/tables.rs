@@ -644,6 +644,46 @@ pub fn serve_operand_cache(cfg: &BenchConfig, _cache: &mut ProblemCache) -> Tabl
     t
 }
 
+/// The `contention` experiment: one mixed copy/compute batch replayed
+/// through the shared-bandwidth link under both schedulers. Each row is
+/// one scheduler: total simulated seconds (the makespan proxy — link
+/// contention inflates it), the arbiter's recorded stall, the
+/// co-scheduler's pairing hits, and the mean |prediction error| of the
+/// contention-blind vs contention-aware admission prices.
+pub fn contention_shared_link(cfg: &BenchConfig, _cache: &mut ProblemCache) -> Table {
+    use super::experiments::{contention_batch, run_contention_batch};
+    use crate::gen::scale::ScaleFactor;
+    use std::sync::Arc;
+    let scale = ScaleFactor::new(cfg.scale.denominator.saturating_mul(64));
+    let arch = Arc::new(p100(GpuMode::Pinned, scale));
+    let batch = contention_batch(&arch, cfg.seed);
+    let mut t = Table::new(&[
+        "scheduler", "jobs", "total sim s", "link stall s", "cosched hits", "blind err",
+        "aware err",
+    ])
+    .with_title("Contention experiment: shared-link arbitration, FIFO vs co-scheduled (P100 pinned)");
+    for (name, co_schedule) in [("fifo", false), ("co-scheduled", true)] {
+        let row = match run_contention_batch(&arch, &batch, co_schedule) {
+            Some(o) => vec![
+                name.to_string(),
+                batch.pairs.len().to_string(),
+                format!("{:.6}", o.total_seconds),
+                format!("{:.6}", o.metrics.link.stall_seconds),
+                o.metrics.co_schedule_hits.to_string(),
+                format!("{:.1}%", o.blind_err * 100.0),
+                format!("{:.1}%", o.aware_err * 100.0),
+            ],
+            None => {
+                let mut r = vec![name.to_string()];
+                r.extend(vec!["-".to_string(); 6]);
+                r
+            }
+        };
+        t.row(&row);
+    }
+    t
+}
+
 /// Sanity table: P100 profile — not in the paper, prints the machine
 /// parameters used (documentation aid).
 pub fn machine_profiles(cfg: &BenchConfig) -> Table {
@@ -735,6 +775,16 @@ mod tests {
         assert!(r.contains("pairwise"));
         // Small problems must complete (an association order was chosen).
         assert!(r.contains("fold"), "{r}");
+    }
+
+    #[test]
+    fn contention_table_runs_both_schedulers() {
+        let (cfg, mut cache) = quick();
+        let t = contention_shared_link(&cfg, &mut cache);
+        assert_eq!(t.n_rows(), 2);
+        let r = t.render();
+        assert!(r.contains("fifo"));
+        assert!(r.contains("co-scheduled"));
     }
 
     #[test]

@@ -15,5 +15,5 @@ pub use job::{
     Policy,
 };
 pub use planner::{execute, explain_spgemm, ExplainRow, PlannerOptions};
-pub use service::{DecisionCounts, JobHandle, Metrics, MetricsSnapshot};
+pub use service::{AdmissionTicket, DecisionCounts, JobHandle, Metrics, MetricsSnapshot};
 pub use session::{MatrixHandle, Session, SessionBuilder, SubmitOptions};

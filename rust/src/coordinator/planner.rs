@@ -41,11 +41,20 @@ pub struct PlannerOptions {
     /// Staging budget for Auto-mode chunking (defaults to the fast pool's
     /// usable capacity at execution time).
     pub auto_chunk_budget: Option<u64>,
+    /// Native-engine throughput calibration for any native-path engine
+    /// the planner constructs. Defaults to the baked constants overridden
+    /// by `MLMEM_NATIVE_*` env vars; `SessionBuilder::native_calibration`
+    /// replaces it programmatically.
+    pub native_cal: crate::engine::NativeCalibration,
 }
 
 impl Default for PlannerOptions {
     fn default() -> Self {
-        Self { spgemm: crate::kkmem::SpgemmOptions::default(), auto_chunk_budget: None }
+        Self {
+            spgemm: crate::kkmem::SpgemmOptions::default(),
+            auto_chunk_budget: None,
+            native_cal: crate::engine::NativeCalibration::from_env(),
+        }
     }
 }
 
@@ -276,6 +285,38 @@ fn argmin_candidate(cands: &[Candidate]) -> Option<usize> {
         }
     }
     best.map(|(i, _)| i)
+}
+
+/// Price a prospective `Policy::Auto` submission against the shared
+/// link's committed load at admission time: every candidate is re-priced
+/// contended ([`CostEstimate::contended`]) and the cheapest contended
+/// completion wins. Contention can reorder candidates — a copy-heavy
+/// plan degrades faster under a loaded link than a compute-heavy one —
+/// so the argmin runs on the contended totals, not the blind ones.
+/// Returns the winner's blind estimate alongside its contended pricing
+/// (`None` when no candidate fits the machine).
+pub(crate) fn admission_estimate(
+    arch: &Arc<crate::memory::arch::Arch>,
+    problem: &Problem,
+    opts: &PlannerOptions,
+    load: &crate::memory::contention::LinkLoad,
+    workers: usize,
+) -> Option<(CostEstimate, crate::engine::ContendedEstimate)> {
+    let cands = spgemm_candidates(arch, problem, opts);
+    let mut best: Option<(CostEstimate, crate::engine::ContendedEstimate)> = None;
+    for c in &cands {
+        let contended = c.est.contended(load, workers);
+        // Strict `<` keeps the simplest-first tie-breaking of
+        // `argmin_candidate`.
+        let better = match &best {
+            None => true,
+            Some((_, b)) => contended.completion_seconds() < b.completion_seconds(),
+        };
+        if better {
+            best = Some((c.est, contended));
+        }
+    }
+    best
 }
 
 /// Execute one SpGEMM job against a caller-built [`Problem`]. The
@@ -1012,6 +1053,7 @@ fn combine_sim_reports(parts: &[&SimReport]) -> SimReport {
         copy_seconds: sum(|r: &SimReport| r.copy_seconds),
         async_copy_seconds: sum(|r: &SimReport| r.async_copy_seconds),
         overlap_stall_seconds: sum(|r: &SimReport| r.overlap_stall_seconds),
+        link_stall_seconds: sum(|r: &SimReport| r.link_stall_seconds),
         uvm_seconds: sum(|r: &SimReport| r.uvm_seconds),
         l1_miss_pct: wavg(|r: &SimReport| r.l1_miss_pct),
         l2_miss_pct: wavg(|r: &SimReport| r.l2_miss_pct),

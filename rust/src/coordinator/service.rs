@@ -6,7 +6,9 @@
 
 use super::job::{Decision, JobResult};
 use crate::error::{JobControl, MlmemError};
+use crate::memory::contention::LinkStats;
 use crate::memory::ResidencyStats;
+use crate::util::threadpool::QueueDepth;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::time::Duration;
@@ -21,6 +23,10 @@ pub struct Metrics {
     /// Jobs that stopped at a chunk boundary via cancellation or an
     /// expired deadline (not counted as `failed`).
     pub cancelled: AtomicU64,
+    /// Admitted jobs that still blew their deadline at runtime — the SLO
+    /// contract's residual error (admission pricing said they would fit).
+    /// A subset of `cancelled`.
+    pub slo_misses: AtomicU64,
     /// Total simulated time across completed jobs (nanoseconds).
     pub sim_time_ns: AtomicU64,
     /// Total simulated flops across completed jobs.
@@ -45,27 +51,47 @@ pub struct DecisionCounts {
 
 /// Named snapshot of the service counters at one instant (replaces the
 /// old positional `(submitted, completed, failed, rejected)` tuple).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,
     pub failed: u64,
     pub rejected: u64,
     pub cancelled: u64,
+    /// Admitted jobs that still blew their deadline at runtime (subset
+    /// of `cancelled`).
+    pub slo_misses: u64,
     /// Jobs submitted but not yet finished when the snapshot was taken.
     pub queue_depth: u64,
+    /// Jobs waiting in the High priority lane (not yet running).
+    pub queued_high: u64,
+    /// Jobs waiting in the Normal priority lane (not yet running).
+    pub queued_normal: u64,
     pub decisions: DecisionCounts,
     /// Fast-pool operand cache counters: hits/misses of the session's
     /// [`ResidencyPool`](crate::memory::ResidencyPool), evicted bytes,
     /// and the live resident gauges.
     pub residency: ResidencyStats,
+    /// Shared bulk-copy link arbitration counters: busy/stall seconds
+    /// (utilization), bytes, requests, and the peak concurrent streams.
+    pub link: LinkStats,
+    /// Times the scheduler reordered the Normal lane to pair a
+    /// copy-bound job with a compute-bound one.
+    pub co_schedule_hits: u64,
 }
 
 impl Metrics {
-    /// Snapshot every counter; the caller supplies the live queue depth
-    /// (the worker pool owns that number) and the session's residency-pool
-    /// stats (the pool owns those).
-    pub fn snapshot(&self, queue_depth: usize, residency: ResidencyStats) -> MetricsSnapshot {
+    /// Snapshot every counter; the caller supplies the live queue depths
+    /// (the worker pool owns those numbers), the session's residency-pool
+    /// stats, the shared link's arbitration stats, and the scheduler's
+    /// co-schedule hit count.
+    pub fn snapshot(
+        &self,
+        queue: QueueDepth,
+        residency: ResidencyStats,
+        link: LinkStats,
+        co_schedule_hits: u64,
+    ) -> MetricsSnapshot {
         let load = |c: &AtomicU64| c.load(Ordering::SeqCst);
         MetricsSnapshot {
             submitted: load(&self.submitted),
@@ -73,8 +99,13 @@ impl Metrics {
             failed: load(&self.failed),
             rejected: load(&self.rejected),
             cancelled: load(&self.cancelled),
-            queue_depth: queue_depth as u64,
+            slo_misses: load(&self.slo_misses),
+            queue_depth: queue.pending as u64,
+            queued_high: queue.high as u64,
+            queued_normal: queue.normal as u64,
             residency,
+            link,
+            co_schedule_hits,
             decisions: DecisionCounts {
                 flat_default: load(&self.dec_flat_default),
                 flat_fast: load(&self.dec_flat_fast),
@@ -95,8 +126,14 @@ impl Metrics {
                 self.flops.fetch_add(r.report.flops, Ordering::SeqCst);
                 self.record_decision(&r.decision);
             }
-            Err(MlmemError::Cancelled | MlmemError::DeadlineExceeded) => {
+            Err(MlmemError::Cancelled) => {
                 self.cancelled.fetch_add(1, Ordering::SeqCst);
+            }
+            Err(MlmemError::DeadlineExceeded) => {
+                // The job was admitted (possibly under a priced SLO) and
+                // still expired at runtime: a cancellation AND a miss.
+                self.cancelled.fetch_add(1, Ordering::SeqCst);
+                self.slo_misses.fetch_add(1, Ordering::SeqCst);
             }
             Err(_) => {
                 self.failed.fetch_add(1, Ordering::SeqCst);
@@ -125,6 +162,34 @@ impl Metrics {
     }
 }
 
+/// What contention-aware admission pricing concluded for one submitted
+/// job — recorded on the [`JobHandle`] so callers (and `serve --explain`)
+/// can compare the promise against the simulated actual.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdmissionTicket {
+    /// Contention-blind predicted simulated run time: the single-tenant
+    /// argmin total (what the planner promised before this PR).
+    pub blind_seconds: f64,
+    /// Contention-aware predicted run time under the link load at
+    /// admission (comparable to the job's `SimReport::seconds`).
+    pub aware_seconds: f64,
+    /// Predicted wait before the job starts (full admission rounds
+    /// ahead of it on the link).
+    pub queue_seconds: f64,
+    /// Copy-seconds committed on the shared link when this job was priced.
+    pub committed_copy_seconds: f64,
+    /// Admitted-but-unfinished jobs declared on the link when priced.
+    pub pending_jobs: usize,
+}
+
+impl AdmissionTicket {
+    /// Admission-to-completion prediction — what an SLO deadline was
+    /// checked against.
+    pub fn completion_seconds(&self) -> f64 {
+        self.aware_seconds + self.queue_seconds
+    }
+}
+
 /// Handle for an in-flight job: blocking wait, non-blocking polls, and
 /// cooperative cancellation. A worker that dies without reporting (panic
 /// or pool teardown) surfaces as [`MlmemError::WorkerLost`] — distinct
@@ -134,6 +199,7 @@ pub struct JobHandle {
     control: JobControl,
     rx: mpsc::Receiver<Result<JobResult, MlmemError>>,
     finished: bool,
+    ticket: Option<AdmissionTicket>,
 }
 
 impl JobHandle {
@@ -142,7 +208,19 @@ impl JobHandle {
         control: JobControl,
         rx: mpsc::Receiver<Result<JobResult, MlmemError>>,
     ) -> Self {
-        Self { id, control, rx, finished: false }
+        Self { id, control, rx, finished: false, ticket: None }
+    }
+
+    pub(crate) fn with_ticket(mut self, ticket: Option<AdmissionTicket>) -> Self {
+        self.ticket = ticket;
+        self
+    }
+
+    /// The admission pricing recorded for this job, when the submission
+    /// was priced (a deadline was set, pricing was requested, or the
+    /// operand pair's symbolic summary was already cached).
+    pub fn ticket(&self) -> Option<&AdmissionTicket> {
+        self.ticket.as_ref()
     }
 
     /// Request cooperative cancellation: the job (queued or running)
@@ -250,10 +328,16 @@ mod tests {
         m.record_outcome(&Err(MlmemError::Cancelled));
         m.record_outcome(&Err(MlmemError::DeadlineExceeded));
         m.record_outcome(&Err(MlmemError::Planner("boom".into())));
-        let s = m.snapshot(3, ResidencyStats::default());
+        let depth = QueueDepth { pending: 3, high: 1, normal: 2 };
+        let s = m.snapshot(depth, ResidencyStats::default(), LinkStats::default(), 5);
         assert_eq!((s.cancelled, s.failed, s.completed), (2, 1, 0));
-        assert_eq!(s.queue_depth, 3);
+        // The DeadlineExceeded outcome is an SLO miss; plain Cancelled
+        // is not.
+        assert_eq!(s.slo_misses, 1);
+        assert_eq!((s.queue_depth, s.queued_high, s.queued_normal), (3, 1, 2));
         assert_eq!(s.residency, ResidencyStats::default());
+        assert_eq!(s.link, LinkStats::default());
+        assert_eq!(s.co_schedule_hits, 5);
     }
 
     #[test]

@@ -23,6 +23,18 @@
 //! job starts with [`Residency`] set and the bulk copy-in skipped.
 //! Residency hits/misses/evictions surface in [`MetricsSnapshot`].
 //!
+//! Finally, the session owns a **shared-bandwidth link** ([`SharedLink`],
+//! DESIGN.md §11): every priced job's bulk transfers are charged through
+//! one arbiter, so N concurrent copy-heavy jobs see degraded effective
+//! bandwidth instead of each pretending it owns the machine. Auto-policy
+//! submissions are priced against the link's committed load at admission
+//! (the handle carries an [`AdmissionTicket`] with blind vs
+//! contention-aware predictions); a deadline turns the price into an SLO
+//! check that turns unmeetable jobs away up front
+//! ([`MlmemError::AdmissionRejected`]); and the worker pool co-schedules
+//! compute-bound jobs alongside copy-bound ones so the link and the
+//! cores stay busy together.
+//!
 //! ```
 //! use mlmem_spgemm::coordinator::Session;
 //! use mlmem_spgemm::gen::rhs::random_csr;
@@ -44,15 +56,18 @@
 
 use super::job::{ChainAssoc, Decision, Job, JobKind, JobResult, Policy};
 use super::planner::{self, PlannerOptions};
-use super::service::{JobHandle, Metrics, MetricsSnapshot};
+use super::service::{AdmissionTicket, JobHandle, Metrics, MetricsSnapshot};
 use crate::engine::cost::ShapeCore;
-use crate::engine::{EngineKind, EngineReport, ExecPlan, Problem, Residency};
+use crate::engine::{
+    EngineKind, EngineReport, ExecPlan, NativeCalibration, Problem, Residency,
+};
 use crate::error::{JobControl, MlmemError};
 use crate::kkmem::{CompressedMatrix, SpgemmOptions};
 use crate::memory::arch::{Arch, MachineKind};
+use crate::memory::contention::{LinkHandle, LinkReservation, PendingDemand, SharedLink};
 use crate::memory::{Location, ResidencyPool, FAST, SLOW};
 use crate::sparse::Csr;
-use crate::util::threadpool::{Priority, WorkerPool};
+use crate::util::threadpool::{CopyBound, Priority, WorkerPool};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -82,6 +97,25 @@ pub struct SubmitOptions {
     pub control: Option<JobControl>,
     /// Attach the product matrix to the [`JobResult`].
     pub keep_product: bool,
+    /// Price this submission against the shared link's committed load at
+    /// admission even without a deadline: the returned handle carries an
+    /// [`AdmissionTicket`] with blind vs contention-aware predictions and
+    /// the job's declared demand joins the link's committed load.
+    /// Auto-policy pricing also activates implicitly when a deadline is
+    /// set or the pair's symbolic summary is already cached.
+    pub price_admission: bool,
+}
+
+/// What admission pricing decided for one submission: the ticket
+/// surfaced on the handle, the link reservation the worker converts to
+/// an attached stream at run start, and the transfer-profile tag the
+/// co-scheduler pairs on. `Default` is an unpriced admission — no
+/// ticket, no link demand, untagged.
+#[derive(Default)]
+struct Admission {
+    ticket: Option<AdmissionTicket>,
+    reservation: Option<LinkReservation>,
+    copy_bound: CopyBound,
 }
 
 /// One registered operand: the matrix plus the cached per-matrix
@@ -122,6 +156,9 @@ struct Shared {
     /// operands at run start and capture what their executed plan left
     /// wholly in fast memory (DESIGN.md §9).
     fast_pool: ResidencyPool,
+    /// The shared fast↔slow bulk-copy link every priced job's transfers
+    /// are arbitrated through (DESIGN.md §11).
+    link: Arc<SharedLink>,
 }
 
 impl Shared {
@@ -150,6 +187,7 @@ pub struct SessionBuilder {
     max_pending: usize,
     default_policy: Policy,
     operand_cache: bool,
+    co_schedule: bool,
 }
 
 impl SessionBuilder {
@@ -161,6 +199,7 @@ impl SessionBuilder {
             max_pending: 64,
             default_policy: Policy::Auto,
             operand_cache: true,
+            co_schedule: true,
         }
     }
 
@@ -198,14 +237,38 @@ impl SessionBuilder {
         self
     }
 
+    /// Override the native engine's calibration constants for this
+    /// session: the planner's native predictions and the synchronous
+    /// engine path both price with these numbers instead of the baked-in
+    /// `NATIVE_*` defaults (or the `MLMEM_NATIVE_*` env overrides the
+    /// default picks up).
+    pub fn native_calibration(mut self, cal: NativeCalibration) -> Self {
+        self.opts.native_cal = cal;
+        self
+    }
+
+    /// Enable or disable copy/compute co-scheduling in the worker pool
+    /// (default on). Disabled, both lanes drain strict FIFO — the
+    /// baseline the `contention` bench experiment compares against.
+    pub fn co_schedule(mut self, enabled: bool) -> Self {
+        self.co_schedule = enabled;
+        self
+    }
+
     pub fn build(self) -> Session {
         let fast_capacity = self.arch.spec.pools[FAST.0].usable();
+        let workers = self.workers.max(1);
         Session {
             arch: self.arch,
             opts: self.opts,
             default_policy: self.default_policy,
             max_pending: self.max_pending,
-            pool: WorkerPool::new(self.workers),
+            workers,
+            pool: if self.co_schedule {
+                WorkerPool::new(workers)
+            } else {
+                WorkerPool::fifo(workers)
+            },
             next_job: AtomicU64::new(1),
             next_handle: AtomicU64::new(1),
             operands: Mutex::new(HashMap::new()),
@@ -214,6 +277,7 @@ impl SessionBuilder {
                 pair_cache: Mutex::new(HashMap::new()),
                 symbolic_passes: AtomicU64::new(0),
                 fast_pool: ResidencyPool::new(fast_capacity, self.operand_cache),
+                link: SharedLink::new(),
             }),
         }
     }
@@ -225,6 +289,7 @@ pub struct Session {
     opts: PlannerOptions,
     default_policy: Policy,
     max_pending: usize,
+    workers: usize,
     pool: WorkerPool,
     next_job: AtomicU64,
     next_handle: AtomicU64,
@@ -305,11 +370,12 @@ impl Session {
                 b: (ob.matrix.nrows, ob.matrix.ncols),
             });
         }
+        let admission = self.price_spgemm(a, b, &oa, &ob, &options)?;
         let kind = JobKind::Spgemm {
             a: Arc::clone(&oa.matrix),
             b: Arc::clone(&ob.matrix),
         };
-        self.submit(kind, options, move |job, control, opts, shared| {
+        self.submit(kind, options, admission, move |job, control, opts, shared, link| {
             let core = shared.shape_core_for((a.id, b.id), &oa, &ob);
             // Lease pool-resident operands for the run (the leases keep
             // them unevictable mid-job) and seed the problem's residency
@@ -321,7 +387,8 @@ impl Session {
             let problem = Problem::try_new(&oa.matrix, &ob.matrix)?
                 .with_shape_core(core)
                 .with_control(control.clone())
-                .with_residency(residency);
+                .with_residency(residency)
+                .with_link(link);
             let result = planner::execute_spgemm(job, &problem, opts);
             if let Ok(r) = &result {
                 let (fa, fb) = decision_leaves_fast(&job.arch, &r.decision);
@@ -333,6 +400,94 @@ impl Session {
                 }
             }
             result
+        })
+    }
+
+    /// Price a prospective SpGEMM submission against the shared link's
+    /// committed load (DESIGN.md §11). Pricing activates for Auto-policy
+    /// jobs when the caller asked for it (`price_admission`), staked an
+    /// SLO (`deadline` — the deadline doubles as a simulated-seconds
+    /// budget checked against the contention-aware completion), or the
+    /// pair's shape core is already cached (pricing is then nearly
+    /// free). Explicit non-Auto policies skip pricing: the caller has
+    /// overruled the planner, so its candidate table does not describe
+    /// what will run. Chains and triangle counts are never priced — they
+    /// ride the link for free and inflict no contention.
+    fn price_spgemm(
+        &self,
+        a: MatrixHandle,
+        b: MatrixHandle,
+        oa: &Arc<Operand>,
+        ob: &Arc<Operand>,
+        options: &SubmitOptions,
+    ) -> Result<Admission, MlmemError> {
+        let policy = options.policy.unwrap_or(self.default_policy);
+        let cached = self
+            .shared
+            .pair_cache
+            .lock()
+            .expect("pair cache poisoned")
+            .contains_key(&(a.id, b.id));
+        let price = matches!(policy, Policy::Auto)
+            && (options.price_admission || options.deadline.is_some() || cached);
+        if !price {
+            return Ok(Admission::default());
+        }
+        // Backpressure check first: a full queue rejects before any
+        // pricing work happens (and without the priced context).
+        let pending = self.pool.pending();
+        if pending >= self.max_pending {
+            self.shared.metrics.rejected.fetch_add(1, Ordering::SeqCst);
+            return Err(MlmemError::AdmissionRejected {
+                pending,
+                max_pending: self.max_pending,
+                priced_seconds: None,
+                deadline_seconds: None,
+            });
+        }
+        let core = self.shared.shape_core_for((a.id, b.id), oa, ob);
+        // Peek residency without touching the hit/miss counters — the
+        // job's own lease at run start does the accounting.
+        let residency = Residency {
+            a: self.shared.fast_pool.contains(a.id),
+            b: self.shared.fast_pool.contains(b.id),
+        };
+        let problem = Problem::try_new(&oa.matrix, &ob.matrix)?
+            .with_shape_core(core)
+            .with_residency(residency);
+        let load = self.shared.link.load();
+        let Some((blind, contended)) =
+            planner::admission_estimate(&self.arch, &problem, &self.opts, &load, self.workers)
+        else {
+            return Ok(Admission::default());
+        };
+        if let Some(d) = options.deadline {
+            let budget = d.as_secs_f64();
+            let priced = contended.completion_seconds();
+            if priced > budget {
+                self.shared.metrics.rejected.fetch_add(1, Ordering::SeqCst);
+                return Err(MlmemError::AdmissionRejected {
+                    pending,
+                    max_pending: self.max_pending,
+                    priced_seconds: Some(priced),
+                    deadline_seconds: Some(budget),
+                });
+            }
+        }
+        let reservation = self.shared.link.reserve(PendingDemand {
+            copy_seconds: blind.link_seconds(),
+            total_seconds: blind.total_seconds(),
+        });
+        Ok(Admission {
+            ticket: Some(AdmissionTicket {
+                blind_seconds: blind.total_seconds(),
+                aware_seconds: contended.service_seconds,
+                queue_seconds: contended.queue_seconds,
+                committed_copy_seconds: load.committed_copy_seconds(),
+                pending_jobs: load.pending.len(),
+            }),
+            reservation: Some(reservation),
+            copy_bound: Some(blind.link_seconds() > blind.kernel_seconds),
         })
     }
 
@@ -380,7 +535,7 @@ impl Session {
     ) -> Result<JobHandle, MlmemError> {
         let (mats, ops, ids) = self.resolve_chain(handles)?;
         let kind = JobKind::Chain { mats: mats.clone() };
-        self.submit(kind, options, move |job, control, opts, shared| {
+        self.submit(kind, options, Admission::default(), move |job, control, opts, shared, _link| {
             let seeds = chain_pair_seeds(shared, &ids, &ops);
             let leases: Vec<_> = ids.iter().map(|&i| shared.fast_pool.acquire(i)).collect();
             let resident: Vec<bool> = leases.iter().map(|l| l.is_some()).collect();
@@ -434,7 +589,7 @@ impl Session {
         let kind = JobKind::TriCount { adj: Arc::clone(&op.matrix) };
         // Triangle counting runs one fused kernel (no chunk boundaries);
         // the control is observed once, before the run.
-        self.submit(kind, options, |job, _control, opts, _shared| {
+        self.submit(kind, options, Admission::default(), |job, _control, opts, _shared, _link| {
             planner::execute(job, opts)
         })
     }
@@ -445,10 +600,17 @@ impl Session {
         &self,
         kind: JobKind,
         options: SubmitOptions,
+        admission: Admission,
         run: F,
     ) -> Result<JobHandle, MlmemError>
     where
-        F: FnOnce(&Job, &JobControl, &PlannerOptions, &Shared) -> Result<JobResult, MlmemError>
+        F: FnOnce(
+                &Job,
+                &JobControl,
+                &PlannerOptions,
+                &Shared,
+                Option<LinkHandle>,
+            ) -> Result<JobResult, MlmemError>
             + Send
             + 'static,
     {
@@ -458,6 +620,8 @@ impl Session {
             return Err(MlmemError::AdmissionRejected {
                 pending,
                 max_pending: self.max_pending,
+                priced_seconds: None,
+                deadline_seconds: None,
             });
         }
         let id = self.next_job.fetch_add(1, Ordering::SeqCst);
@@ -480,15 +644,22 @@ impl Session {
         let opts = self.opts;
         let shared = Arc::clone(&self.shared);
         let worker_control = control.clone();
+        let Admission { ticket, reservation, copy_bound } = admission;
         let (tx, rx) = mpsc::channel();
-        self.pool.submit_with(options.priority, move || {
+        self.pool.submit_tagged(options.priority, copy_bound, move || {
+            // The reservation becomes an attached stream here — at run
+            // start, not admission — so queued jobs never inflate running
+            // ones; their declared demand is what admission pricing sees
+            // instead. The handle rides the problem into the engines and
+            // detaches when the run drops it.
+            let link = reservation.map(LinkReservation::attach);
             let result = worker_control
                 .checkpoint()
-                .and_then(|()| run(&job, &worker_control, &opts, &shared));
+                .and_then(|()| run(&job, &worker_control, &opts, &shared, link));
             shared.metrics.record_outcome(&result);
             let _ = tx.send(result);
         });
-        Ok(JobHandle::new(id, control, rx))
+        Ok(JobHandle::new(id, control, rx).with_ticket(ticket))
     }
 
     /// Synchronously run one multiplication through an explicit engine
@@ -511,7 +682,12 @@ impl Session {
                 b: (ob.matrix.nrows, ob.matrix.ncols),
             });
         }
-        let engine = kind.build(Arc::clone(&self.arch), engine_opts, fast_budget)?;
+        let engine = kind.build_calibrated(
+            Arc::clone(&self.arch),
+            engine_opts,
+            fast_budget,
+            self.opts.native_cal,
+        )?;
         let core = self.shared.shape_core_for((a.id, b.id), &oa, &ob);
         let lease_a = self.shared.fast_pool.acquire(a.id);
         let lease_b = self.shared.fast_pool.acquire(b.id);
@@ -536,13 +712,25 @@ impl Session {
         self.pool.wait_idle();
     }
 
-    /// Named snapshot of the service counters, including live queue
-    /// depth, per-decision counts, and the fast-pool residency cache's
-    /// hits/misses/evicted bytes.
+    /// Named snapshot of the service counters, including live per-lane
+    /// queue depths, per-decision counts, the fast-pool residency
+    /// cache's hits/misses/evicted bytes, the shared link's arbiter
+    /// statistics, and the co-scheduler's pairing hits.
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.shared
-            .metrics
-            .snapshot(self.pool.pending(), self.shared.fast_pool.stats())
+        self.shared.metrics.snapshot(
+            self.pool.queue_depth(),
+            self.shared.fast_pool.stats(),
+            self.shared.link.stats(),
+            self.pool.co_schedule_hits(),
+        )
+    }
+
+    /// The session's shared fast↔slow bulk-copy link — the arbiter every
+    /// priced job's transfers are charged through. Exposed so tools and
+    /// tests can inspect (or pre-load) the committed demand and read the
+    /// arbiter's statistics directly.
+    pub fn shared_link(&self) -> Arc<SharedLink> {
+        Arc::clone(&self.shared.link)
     }
 
     /// Aggregate simulated GFLOP/s across completed jobs.
@@ -813,6 +1001,55 @@ mod tests {
             session.pin_fast(MatrixHandle { id: 999 }),
             Err(MlmemError::UnknownHandle(999))
         ));
+    }
+
+    #[test]
+    fn priced_admission_carries_a_ticket_and_clears_the_link() {
+        let session = Session::builder(arch()).workers(1).build();
+        let a = session.register(mat(7));
+        let b = session.register(mat(8));
+        let h = session
+            .spgemm_with(a, b, SubmitOptions { price_admission: true, ..Default::default() })
+            .unwrap();
+        let t = *h.ticket().expect("priced submission carries a ticket");
+        assert!(t.blind_seconds > 0.0);
+        assert_eq!(t.pending_jobs, 0, "first admission sees an idle link");
+        assert_eq!(t.queue_seconds, 0.0);
+        // An idle link prices aware == blind (no streaming mates).
+        assert_eq!(t.aware_seconds, t.blind_seconds);
+        h.wait().unwrap();
+        session.drain();
+        // The job's reservation was withdrawn when its run finished.
+        assert!(session.shared_link().load().pending.is_empty());
+        // Pricing computed the pair's symbolic pass; the worker hit the
+        // cache instead of recomputing.
+        assert_eq!(session.symbolic_passes(), 1);
+    }
+
+    #[test]
+    fn unmeetable_slo_is_rejected_at_admission_with_priced_context() {
+        let session = Session::builder(arch()).workers(1).build();
+        let a = session.register(mat(7));
+        let b = session.register(mat(8));
+        let err = session
+            .spgemm_with(
+                a,
+                b,
+                SubmitOptions { deadline: Some(Duration::ZERO), ..Default::default() },
+            )
+            .expect_err("zero simulated-seconds budget cannot be met");
+        match err {
+            MlmemError::AdmissionRejected {
+                priced_seconds: Some(p),
+                deadline_seconds: Some(d),
+                ..
+            } => assert!(p > d),
+            other => panic!("expected a priced rejection, got {other:?}"),
+        }
+        let m = session.metrics();
+        assert_eq!((m.submitted, m.rejected), (0, 1));
+        // The turned-away job left no demand on the link.
+        assert!(session.shared_link().load().pending.is_empty());
     }
 
     #[test]

@@ -34,17 +34,21 @@ fn estimate_b_parts(p: &Problem, budget: u64) -> usize {
 
 /// Shared run body for every chunk engine (serial and pipelined): time
 /// the driver against a fresh simulator (carrying the job's control
-/// token, so the driver's chunk-boundary checkpoints can trip) and fold
-/// its product plus the finished report into one [`EngineReport`].
+/// token, so the driver's chunk-boundary checkpoints can trip, and the
+/// job's shared-link stream, so staging contends with concurrent jobs)
+/// and fold its product plus the finished report into one
+/// [`EngineReport`].
 pub(super) fn chunk_report(
     name: &'static str,
     arch: &Arch,
     control: &JobControl,
+    link: Option<crate::memory::contention::LinkHandle>,
     driver: impl FnOnce(&mut MemSim) -> Result<ChunkedProduct, MlmemError>,
 ) -> Result<EngineReport, MlmemError> {
     let t = Timer::start();
     let mut sim = MemSim::new(arch.spec.clone());
     sim.set_control(control.clone());
+    sim.set_link(link);
     let prod = driver(&mut sim)?;
     Ok(EngineReport {
         engine: name,
@@ -104,7 +108,7 @@ impl Engine for KnlChunkEngine {
             ));
         };
         let resident = *resident;
-        chunk_report(self.name(), &self.arch, &p.control, |sim| {
+        chunk_report(self.name(), &self.arch, &p.control, p.link.clone(), |sim| {
             knl_chunked_sim_res(sim, p.a, p.b, *fast_budget, &self.opts, resident)
         })
     }
@@ -175,7 +179,7 @@ impl Engine for GpuChunkEngine {
             ));
         };
         let resident = *resident;
-        chunk_report(self.name(), &self.arch, &p.control, |sim| {
+        chunk_report(self.name(), &self.arch, &p.control, p.link.clone(), |sim| {
             gpu_chunked_sim_forced_res(sim, p.a, p.b, *fast_budget, &self.opts, *gpu_algo, resident)
         })
     }

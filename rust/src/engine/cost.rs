@@ -28,6 +28,7 @@ use crate::kkmem::spgemm::acc_region_bytes;
 use crate::kkmem::symbolic::symbolic_stats;
 use crate::kkmem::{CompressedMatrix, Placement, SpgemmOptions};
 use crate::memory::alloc::Location;
+use crate::memory::contention::{LinkLoad, LINK_EPS};
 use crate::memory::machine::{lane_efficiency, MachineSpec};
 use crate::memory::pool::{FAST, SLOW};
 
@@ -60,6 +61,75 @@ impl CostEstimate {
     /// simulator's `seconds`.
     pub fn total_seconds(&self) -> f64 {
         self.kernel_seconds + self.copy_seconds + self.stall_seconds
+    }
+
+    /// The link-visible part of the estimate: transfer seconds that
+    /// contend on the shared fast↔slow bulk-copy link.
+    pub fn link_seconds(&self) -> f64 {
+        self.copy_seconds + self.stall_seconds
+    }
+
+    /// Contention-aware pricing: re-price this (contention-blind)
+    /// estimate against the shared link's committed load at admission
+    /// time (DESIGN.md §11).
+    ///
+    /// The model replays the admission queue as FIFO rounds of `workers`
+    /// jobs. The candidate lands in the queue's trailing partial round;
+    /// its transfer legs are inflated by the round's concurrently
+    /// streaming jobs (the same `natural × streams` factor the runtime
+    /// arbiter charges), while every full round ahead of it contributes
+    /// its slowest member's contended time as queue wait. Deterministic,
+    /// because Session admissions are serialized.
+    pub fn contended(&self, load: &LinkLoad, workers: usize) -> ContendedEstimate {
+        let w = workers.max(1);
+        let me = load.pending.len();
+        let first_mate = (me / w) * w;
+        let mates = &load.pending[first_mate..];
+        let streaming_mates = mates
+            .iter()
+            .filter(|d| d.streaming())
+            .count()
+            .min(w.saturating_sub(1));
+        let my_factor = if self.link_seconds() > LINK_EPS {
+            1.0 + streaming_mates as f64
+        } else {
+            1.0
+        };
+        let service_seconds = self.kernel_seconds + self.link_seconds() * my_factor;
+
+        let mut queue_seconds = 0.0;
+        let mut start = 0;
+        while start < first_mate {
+            let round = &load.pending[start..(start + w).min(first_mate)];
+            let streamers = round.iter().filter(|d| d.streaming()).count().max(1);
+            let round_t = round
+                .iter()
+                .map(|d| d.total_seconds + d.copy_seconds * (streamers as f64 - 1.0))
+                .fold(0.0_f64, f64::max);
+            queue_seconds += round_t;
+            start += w;
+        }
+        ContendedEstimate { service_seconds, queue_seconds }
+    }
+}
+
+/// A [`CostEstimate`] re-priced against the shared link's committed load
+/// (see [`CostEstimate::contended`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ContendedEstimate {
+    /// Predicted simulated run time under contention (the quantity
+    /// comparable to `SimReport::seconds`).
+    pub service_seconds: f64,
+    /// Predicted wait before the job starts: full admission rounds ahead
+    /// of it, each charged its slowest member's contended time.
+    pub queue_seconds: f64,
+}
+
+impl ContendedEstimate {
+    /// Admission-to-completion time — what an SLO deadline is checked
+    /// against.
+    pub fn completion_seconds(&self) -> f64 {
+        self.service_seconds + self.queue_seconds
     }
 }
 

@@ -26,8 +26,8 @@ use crate::sparse::Csr;
 use std::sync::Arc;
 
 pub use chunked::{GpuChunkEngine, KnlChunkEngine};
-pub use cost::{CostEstimate, ProblemShape};
-pub use native::{pipelined_spgemm_native, NativeEngine};
+pub use cost::{ContendedEstimate, CostEstimate, ProblemShape};
+pub use native::{pipelined_spgemm_native, NativeCalibration, NativeEngine};
 pub use pipelined::{
     gpu_pipelined_sim, gpu_pipelined_sim_forced, gpu_pipelined_sim_forced_res,
     knl_pipelined_sim, knl_pipelined_sim_res, PipelinedChunkEngine,
@@ -97,6 +97,11 @@ pub struct Problem<'a> {
     /// is the chain executor's decision, not a candidate's. Default
     /// none: single multiplies keep the paper's pre-placed semantics.
     pub slow_pinned: Residency,
+    /// This job's stream on the session's shared bulk-copy link; when
+    /// set, the simulated engines arbitrate every bulk transfer against
+    /// other jobs' concurrent streams (DESIGN.md §11). Default `None` —
+    /// standalone runs keep the single-tenant clock.
+    pub link: Option<crate::memory::contention::LinkHandle>,
     pub(crate) shape_core: std::cell::OnceCell<Arc<cost::ShapeCore>>,
 }
 
@@ -121,6 +126,7 @@ impl<'a> Problem<'a> {
             control: JobControl::default(),
             residency: Residency::NONE,
             slow_pinned: Residency::NONE,
+            link: None,
             shape_core: std::cell::OnceCell::new(),
         })
     }
@@ -142,6 +148,13 @@ impl<'a> Problem<'a> {
     /// place them in fast memory for free.
     pub fn with_slow_pinned(mut self, pinned: Residency) -> Self {
         self.slow_pinned = pinned;
+        self
+    }
+
+    /// Attach this job's stream on the session's shared bulk-copy link;
+    /// simulated bulk transfers are then arbitrated against other jobs.
+    pub fn with_link(mut self, link: Option<crate::memory::contention::LinkHandle>) -> Self {
+        self.link = link;
         self
     }
 
@@ -314,14 +327,30 @@ impl EngineKind {
         opts: SpgemmOptions,
         fast_budget: Option<u64>,
     ) -> Result<Box<dyn Engine>, MlmemError> {
+        self.build_calibrated(arch, opts, fast_budget, NativeCalibration::from_env())
+    }
+
+    /// [`build`](Self::build) with an explicit native throughput
+    /// calibration (the `SessionBuilder::native_calibration` path);
+    /// simulated engines ignore it.
+    pub fn build_calibrated(
+        &self,
+        arch: Arc<Arch>,
+        opts: SpgemmOptions,
+        fast_budget: Option<u64>,
+        cal: NativeCalibration,
+    ) -> Result<Box<dyn Engine>, MlmemError> {
         use crate::memory::arch::MachineKind;
         match self {
             // A budget selects the chunked path with prefetch staging; a
             // budget larger than B degenerates to one chunk (≈ flat).
-            EngineKind::Native => Ok(Box::new(match fast_budget {
-                Some(b) => NativeEngine::pipelined(opts, b),
-                None => NativeEngine::new(opts),
-            })),
+            EngineKind::Native => Ok(Box::new(
+                match fast_budget {
+                    Some(b) => NativeEngine::pipelined(opts, b),
+                    None => NativeEngine::new(opts),
+                }
+                .with_calibration(cal),
+            )),
             EngineKind::Sim => Ok(Box::new(SimEngine::flat(arch, opts))),
             EngineKind::KnlChunk => {
                 if arch.kind != MachineKind::Knl {

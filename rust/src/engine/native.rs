@@ -33,22 +33,82 @@ pub const NATIVE_SORT_MACS_PER_S: f64 = 2.5e8;
 /// dominates on tiny-row inputs where MAC counts say almost nothing.
 pub const NATIVE_ROW_OVERHEAD_S: f64 = 5e-8;
 
+/// Runtime-overridable native throughput calibration. The baked-in
+/// `NATIVE_*` constants above were measured on the dev container;
+/// deployment hardware re-measures with the `accumulator` bench and
+/// overrides either through
+/// [`SessionBuilder::native_calibration`](crate::coordinator::SessionBuilder::native_calibration)
+/// or the `MLMEM_NATIVE_*` environment variables — no rebuild needed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NativeCalibration {
+    /// Hash-regime multiply-accumulates per second per thread.
+    pub hash_macs_per_s: f64,
+    /// Dense-regime (scatter-FMA kernel) MACs per second per thread.
+    pub dense_macs_per_s: f64,
+    /// Sort-regime MACs per second per thread.
+    pub sort_macs_per_s: f64,
+    /// Fixed per-output-row overhead of the numeric phase.
+    pub row_overhead_s: f64,
+}
+
+impl Default for NativeCalibration {
+    fn default() -> Self {
+        Self {
+            hash_macs_per_s: NATIVE_HASH_MACS_PER_S,
+            dense_macs_per_s: NATIVE_DENSE_MACS_PER_S,
+            sort_macs_per_s: NATIVE_SORT_MACS_PER_S,
+            row_overhead_s: NATIVE_ROW_OVERHEAD_S,
+        }
+    }
+}
+
+impl NativeCalibration {
+    /// Baked defaults overridden by any of `MLMEM_NATIVE_HASH_MACS_PER_S`,
+    /// `MLMEM_NATIVE_DENSE_MACS_PER_S`, `MLMEM_NATIVE_SORT_MACS_PER_S`,
+    /// `MLMEM_NATIVE_ROW_OVERHEAD_S` set to a positive float.
+    /// Unparsable or non-positive values are ignored (the default
+    /// stands) — a bad env var must not change planning silently to 0.
+    pub fn from_env() -> Self {
+        fn over(var: &str, default: f64) -> f64 {
+            std::env::var(var)
+                .ok()
+                .and_then(|v| v.trim().parse::<f64>().ok())
+                .filter(|v| v.is_finite() && *v > 0.0)
+                .unwrap_or(default)
+        }
+        let d = Self::default();
+        Self {
+            hash_macs_per_s: over("MLMEM_NATIVE_HASH_MACS_PER_S", d.hash_macs_per_s),
+            dense_macs_per_s: over("MLMEM_NATIVE_DENSE_MACS_PER_S", d.dense_macs_per_s),
+            sort_macs_per_s: over("MLMEM_NATIVE_SORT_MACS_PER_S", d.sort_macs_per_s),
+            row_overhead_s: over("MLMEM_NATIVE_ROW_OVERHEAD_S", d.row_overhead_s),
+        }
+    }
+}
+
 /// Native (non-simulated) engine. With a `chunk_budget` it runs the
 /// pipelined chunked path; otherwise the flat parallel kernel.
 pub struct NativeEngine {
     opts: SpgemmOptions,
     chunk_budget: Option<u64>,
+    cal: NativeCalibration,
 }
 
 impl NativeEngine {
     pub fn new(opts: SpgemmOptions) -> Self {
-        Self { opts, chunk_budget: None }
+        Self { opts, chunk_budget: None, cal: NativeCalibration::from_env() }
     }
 
     /// Pipelined native execution with B staged in chunks of at most
     /// `chunk_budget` bytes, prefetched one chunk ahead.
     pub fn pipelined(opts: SpgemmOptions, chunk_budget: u64) -> Self {
-        Self { opts, chunk_budget: Some(chunk_budget) }
+        Self { opts, chunk_budget: Some(chunk_budget), cal: NativeCalibration::from_env() }
+    }
+
+    /// Replace the throughput calibration (the `SessionBuilder` knob).
+    pub fn with_calibration(mut self, cal: NativeCalibration) -> Self {
+        self.cal = cal;
+        self
     }
 }
 
@@ -78,20 +138,19 @@ impl Engine for NativeEngine {
         // simulated engines — this predicts real wall-clock.
         let [h, d, s] = p.shape_core().mults_by_regime();
         let (h, d, s) = (h as f64, d as f64, s as f64);
+        let cal = &self.cal;
         let mac_seconds = match self.opts.acc {
             // Adaptive dispatches each regime to its own kernel.
             AccKind::Adaptive => {
-                h / NATIVE_HASH_MACS_PER_S
-                    + d / NATIVE_DENSE_MACS_PER_S
-                    + s / NATIVE_SORT_MACS_PER_S
+                h / cal.hash_macs_per_s + d / cal.dense_macs_per_s + s / cal.sort_macs_per_s
             }
             // A fixed strategy runs every row at that strategy's rate
             // (two-level shares the hash inner loop natively).
-            AccKind::Hash | AccKind::TwoLevel => (h + d + s) / NATIVE_HASH_MACS_PER_S,
-            AccKind::Dense => (h + d + s) / NATIVE_DENSE_MACS_PER_S,
-            AccKind::Sort => (h + d + s) / NATIVE_SORT_MACS_PER_S,
+            AccKind::Hash | AccKind::TwoLevel => (h + d + s) / cal.hash_macs_per_s,
+            AccKind::Dense => (h + d + s) / cal.dense_macs_per_s,
+            AccKind::Sort => (h + d + s) / cal.sort_macs_per_s,
         };
-        let row_seconds = p.a.nrows as f64 * NATIVE_ROW_OVERHEAD_S;
+        let row_seconds = p.a.nrows as f64 * cal.row_overhead_s;
         let threads = (*threads).max(1) as f64;
         Ok(super::CostEstimate::unstaged((mac_seconds + row_seconds) / threads))
     }
@@ -239,6 +298,28 @@ mod tests {
         // A pure-hash-rate strategy is never predicted faster than the
         // adaptive dispatch (adaptive charges each slice at ≥ hash rate).
         assert!(secs(AccKind::Adaptive, 1) <= secs(AccKind::Hash, 1) + 1e-12);
+    }
+
+    #[test]
+    fn calibration_override_rescales_prediction() {
+        let a = crate::gen::rhs::random_csr(30, 25, 1, 5, 3);
+        let b = crate::gen::rhs::random_csr(25, 35, 1, 5, 4);
+        let p = Problem::new(&a, &b);
+        let opts = SpgemmOptions { threads: 1, ..Default::default() };
+        let base = NativeEngine::new(opts).with_calibration(NativeCalibration::default());
+        let plan = base.plan(&p).unwrap();
+        let t_base = base.predict(&p, &plan).unwrap().total_seconds();
+        // Double every rate, halve the row overhead: prediction halves.
+        let d = NativeCalibration::default();
+        let twice = NativeCalibration {
+            hash_macs_per_s: d.hash_macs_per_s * 2.0,
+            dense_macs_per_s: d.dense_macs_per_s * 2.0,
+            sort_macs_per_s: d.sort_macs_per_s * 2.0,
+            row_overhead_s: d.row_overhead_s / 2.0,
+        };
+        let fast = NativeEngine::new(opts).with_calibration(twice);
+        let t_fast = fast.predict(&p, &plan).unwrap().total_seconds();
+        assert!((t_base - 2.0 * t_fast).abs() <= 1e-12 * t_base);
     }
 
     #[test]

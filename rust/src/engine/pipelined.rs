@@ -674,7 +674,7 @@ impl Engine for PipelinedChunkEngine {
             ));
         };
         let resident = *resident;
-        super::chunked::chunk_report(self.name(), &self.arch, &p.control, |sim| match self
+        super::chunked::chunk_report(self.name(), &self.arch, &p.control, p.link.clone(), |sim| match self
             .arch
             .kind
         {

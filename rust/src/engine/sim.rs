@@ -79,6 +79,7 @@ impl Engine for SimEngine {
         p.control.checkpoint()?;
         let t = Timer::start();
         let mut sim = MemSim::new(self.arch.spec.clone());
+        sim.set_link(p.link.clone());
         let prod = spgemm_sim(&mut sim, p.a, p.b, *placement, &self.opts)
             .map_err(MlmemError::from)?;
         Ok(EngineReport {

@@ -24,9 +24,23 @@ pub enum MlmemError {
     /// `A.ncols != B.nrows` at submission time. Tuples are
     /// `(nrows, ncols)` of each operand.
     ShapeMismatch { a: (usize, usize), b: (usize, usize) },
-    /// Admission control rejected the submission: `pending` jobs were
-    /// already queued or running against a limit of `max_pending`.
-    AdmissionRejected { pending: usize, max_pending: usize },
+    /// Admission control rejected the submission. Two causes, told apart
+    /// by `priced_seconds`: backpressure (`pending` jobs were already
+    /// queued or running against a limit of `max_pending`; `priced_*`
+    /// empty), or an SLO rejection — the completion time priced against
+    /// the shared link's committed load (`priced_seconds`) cannot meet
+    /// the requested deadline (`deadline_seconds`), so the job is turned
+    /// away at admission instead of burning the machine and expiring
+    /// mid-run.
+    AdmissionRejected {
+        pending: usize,
+        max_pending: usize,
+        /// Contention-aware predicted completion (simulated seconds from
+        /// admission), when the submission was priced.
+        priced_seconds: Option<f64>,
+        /// The SLO deadline budget (seconds) the priced completion missed.
+        deadline_seconds: Option<f64>,
+    },
     /// A simulated allocation did not fit its pool.
     Alloc(AllocError),
     /// Planning or execution failed: engine/machine family mismatch, no
@@ -55,10 +69,22 @@ impl std::fmt::Display for MlmemError {
                 "spgemm shape mismatch: A is {}x{}, B is {}x{}",
                 a.0, a.1, b.0, b.1
             ),
-            MlmemError::AdmissionRejected { pending, max_pending } => write!(
-                f,
-                "admission rejected: {pending} jobs pending >= limit {max_pending}"
-            ),
+            MlmemError::AdmissionRejected {
+                pending,
+                max_pending,
+                priced_seconds,
+                deadline_seconds,
+            } => match (priced_seconds, deadline_seconds) {
+                (Some(p), Some(d)) => write!(
+                    f,
+                    "admission rejected: priced completion {p:.3e}s misses deadline \
+                     {d:.3e}s under current load ({pending} jobs pending, limit {max_pending})"
+                ),
+                _ => write!(
+                    f,
+                    "admission rejected: {pending} jobs pending >= limit {max_pending}"
+                ),
+            },
             MlmemError::Alloc(e) => write!(f, "{e}"),
             MlmemError::Planner(m) => write!(f, "{m}"),
             MlmemError::Cancelled => write!(f, "job cancelled"),

@@ -10,7 +10,7 @@
 use mlmem_spgemm::bench::experiments::{Mul, ProblemCache};
 use mlmem_spgemm::bench::figures::BenchConfig;
 use mlmem_spgemm::bench::{run_and_report, EXPERIMENTS};
-use mlmem_spgemm::coordinator::{MatrixHandle, PlannerOptions, Session};
+use mlmem_spgemm::coordinator::{MatrixHandle, PlannerOptions, Session, SubmitOptions};
 use mlmem_spgemm::engine::EngineKind;
 use mlmem_spgemm::error::MlmemError;
 use mlmem_spgemm::gen::scale::ScaleFactor;
@@ -492,14 +492,20 @@ fn cmd_serve(argv: &[String]) -> Result<(), MlmemError> {
         .opt("mode", "ddr", "memory mode")
         .opt("threads", "256", "KNL thread count")
         .opt("size-gb", "1", "A size per job in paper-GB")
-        .opt("scale-denom", "1024", "capacity scale denominator");
+        .opt("scale-denom", "1024", "capacity scale denominator")
+        .opt("deadline-ms", "0", "per-job SLO budget in milliseconds (0 = none)")
+        .switch("explain", "print admission tickets, SLO rejections, and link metrics")
+        .switch("fifo", "disable copy/compute co-scheduling (strict two-lane FIFO)");
     let p = spec.parse(argv)?;
     let scale = scale_from(&p)?;
     let arch = Arc::new(parse_machine(&p, p.usize("threads")?, scale)?);
     let jobs = p.usize("jobs")?;
+    let explain = p.flag("explain");
+    let deadline_ms = p.usize("deadline-ms")? as u64;
     let session = Session::builder(arch)
         .workers(p.usize("workers")?)
         .max_pending(jobs * 2)
+        .co_schedule(!p.flag("fifo"))
         .build();
     let mut cache = ProblemCache::default();
     let size = p.f64("size-gb")?;
@@ -524,10 +530,29 @@ fn cmd_serve(argv: &[String]) -> Result<(), MlmemError> {
                 pair
             }
         };
-        handles.push(session.spgemm(ha, hb)?);
+        let submit = SubmitOptions {
+            deadline: (deadline_ms > 0)
+                .then(|| std::time::Duration::from_millis(deadline_ms)),
+            price_admission: explain,
+            ..Default::default()
+        };
+        // SLO rejections are part of the batch's story, not a CLI
+        // failure: print the structured context and move on.
+        match session.spgemm_with(ha, hb, submit) {
+            Ok(h) => handles.push(h),
+            Err(e @ MlmemError::AdmissionRejected { .. }) => println!("job {:>3}: {e}", i + 1),
+            Err(e) => return Err(e),
+        }
     }
     for h in handles {
-        let r = h.wait()?;
+        let ticket = h.ticket().copied();
+        let r = match h.wait() {
+            Ok(r) => r,
+            Err(e) => {
+                println!("job    ?: {e}");
+                continue;
+            }
+        };
         let pred = match (r.predicted.as_ref(), r.prediction_error()) {
             (Some(p), Some(e)) => {
                 format!("  pred {:.5}s ({:+.0}%)", p.total_seconds(), e * 100.0)
@@ -542,6 +567,20 @@ fn cmd_serve(argv: &[String]) -> Result<(), MlmemError> {
             r.c_nnz,
             pred
         );
+        if let (true, Some(t)) = (explain, ticket) {
+            let actual = r.report.seconds;
+            println!(
+                "         admission: blind {:.5}s  aware {:.5}s (+{:.5}s queue, {} pending) \
+                 actual {:.5}s  err blind {:+.0}% aware {:+.0}%",
+                t.blind_seconds,
+                t.aware_seconds,
+                t.queue_seconds,
+                t.pending_jobs,
+                actual,
+                (t.blind_seconds - actual) / actual * 100.0,
+                (t.aware_seconds - actual) / actual * 100.0,
+            );
+        }
     }
     let m = session.metrics();
     println!(
@@ -565,6 +604,21 @@ fn cmd_serve(argv: &[String]) -> Result<(), MlmemError> {
         mlmem_spgemm::util::table::human_bytes(m.residency.resident_bytes),
         m.residency.resident_entries
     );
+    if explain {
+        println!(
+            "shared link: {:.0}% busy ({:.4}s simulated stall), {} in {} transfers, \
+             peak {} streams",
+            m.link.utilization() * 100.0,
+            m.link.stall_seconds,
+            mlmem_spgemm::util::table::human_bytes(m.link.bytes),
+            m.link.requests,
+            m.link.peak_streams
+        );
+        println!(
+            "scheduler: queue H{}/N{}, co-schedule hits {}, SLO misses {}",
+            m.queued_high, m.queued_normal, m.co_schedule_hits, m.slo_misses
+        );
+    }
     Ok(())
 }
 

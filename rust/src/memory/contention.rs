@@ -1,0 +1,333 @@
+//! Shared bulk-copy link arbitration across concurrent jobs.
+//!
+//! Every job's `MemSim` used to assume it owned the fast<->slow bulk-copy
+//! link; under a multi-worker `Session` that made N simultaneous staging
+//! jobs each see a private, uncontended machine. `SharedLink` is the
+//! session-owned arbiter that fixes this: jobs declare their staging demand
+//! at admission (a [`LinkReservation`]), convert it to a [`LinkHandle`] when
+//! they start running, and every bulk transfer is then charged a fair-share
+//! serialization factor — `natural * (1 + other concurrently streaming
+//! jobs)` — the way a memory bus serializes requests (see DESIGN.md §11).
+//!
+//! Three invariants keep the model honest and the products deterministic:
+//!
+//! * Arbitration only inflates **simulated time**, never changes what bytes
+//!   move or what the kernels compute — products stay bit-identical to
+//!   serial single-tenant execution.
+//! * A lone attached stream (or a job with no declared copy demand left)
+//!   is charged exactly `natural * 1.0`, so single-tenant sessions and
+//!   serial submission see bit-identical simulated times too.
+//! * Unpriced jobs (no reservation) ride free: they neither pay nor inflict
+//!   contention. This is deliberately conservative — admission pricing is
+//!   what opts a job into the shared-clock model.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Declared copy demand below this is treated as "not streaming".
+pub const LINK_EPS: f64 = 1e-12;
+
+/// One admitted-but-unfinished job's declared demand on the link.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PendingDemand {
+    /// Predicted bulk-copy + overlap-stall seconds (the link-visible part).
+    pub copy_seconds: f64,
+    /// Predicted total simulated seconds for the whole job.
+    pub total_seconds: f64,
+}
+
+impl PendingDemand {
+    pub fn streaming(&self) -> bool {
+        self.copy_seconds > LINK_EPS
+    }
+}
+
+/// Snapshot of the link's committed load, in admission order. This is what
+/// contention-aware admission pricing reasons over (`CostEstimate::contended`).
+#[derive(Clone, Debug, Default)]
+pub struct LinkLoad {
+    /// Declared demand of every admitted-but-unfinished job, oldest first.
+    pub pending: Vec<PendingDemand>,
+}
+
+impl LinkLoad {
+    pub fn committed_copy_seconds(&self) -> f64 {
+        self.pending.iter().map(|d| d.copy_seconds).sum()
+    }
+
+    pub fn committed_total_seconds(&self) -> f64 {
+        self.pending.iter().map(|d| d.total_seconds).sum()
+    }
+
+    pub fn streaming_jobs(&self) -> usize {
+        self.pending.iter().filter(|d| d.streaming()).count()
+    }
+}
+
+/// Cumulative arbitration statistics, surfaced in `MetricsSnapshot`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LinkStats {
+    /// Natural (uncontended) transfer seconds pushed through the link.
+    pub busy_seconds: f64,
+    /// Extra seconds charged by serialization on top of `busy_seconds`.
+    pub stall_seconds: f64,
+    /// Bytes moved over the link.
+    pub bytes: u64,
+    /// Individual arbitrated transfer requests.
+    pub requests: u64,
+    /// Peak number of concurrently streaming jobs observed on any request.
+    pub peak_streams: u64,
+}
+
+impl LinkStats {
+    /// Fraction of link time doing useful transfer work: 1.0 means no
+    /// contention was ever observed; lower means serialization stalls.
+    pub fn utilization(&self) -> f64 {
+        let t = self.busy_seconds + self.stall_seconds;
+        if t <= 0.0 {
+            1.0
+        } else {
+            self.busy_seconds / t
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Entry {
+    declared: PendingDemand,
+    /// Declared copy seconds not yet consumed by actual transfers; a stream
+    /// stops inflicting contention once its declared budget is spent.
+    remaining_copy: f64,
+    /// True once the owning job started running (reservation attached).
+    attached: bool,
+}
+
+#[derive(Debug, Default)]
+struct LinkInner {
+    next_seq: u64,
+    /// Keyed by admission sequence number, so iteration is admission order.
+    entries: BTreeMap<u64, Entry>,
+    stats: LinkStats,
+}
+
+/// The session-owned bulk-copy link arbiter. Cheap to share: one mutex,
+/// touched once per admission, job start/end, and bulk transfer.
+#[derive(Debug, Default)]
+pub struct SharedLink {
+    inner: Mutex<LinkInner>,
+}
+
+impl SharedLink {
+    pub fn new() -> Arc<SharedLink> {
+        Arc::new(SharedLink::default())
+    }
+
+    /// Snapshot of admitted-but-unfinished declared demand, admission order.
+    pub fn load(&self) -> LinkLoad {
+        let inner = self.inner.lock().unwrap();
+        LinkLoad {
+            pending: inner.entries.values().map(|e| e.declared).collect(),
+        }
+    }
+
+    pub fn stats(&self) -> LinkStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Declare a job's predicted demand at admission. The reservation counts
+    /// toward [`LinkLoad`] immediately; dropping it without [`attach`]
+    /// (job rejected later, or never ran) withdraws the declaration.
+    ///
+    /// [`attach`]: LinkReservation::attach
+    pub fn reserve(self: &Arc<Self>, demand: PendingDemand) -> LinkReservation {
+        let seq = {
+            let mut inner = self.inner.lock().unwrap();
+            let seq = inner.next_seq;
+            inner.next_seq += 1;
+            inner.entries.insert(
+                seq,
+                Entry {
+                    declared: demand,
+                    remaining_copy: demand.copy_seconds.max(0.0),
+                    attached: false,
+                },
+            );
+            seq
+        };
+        LinkReservation {
+            link: Arc::clone(self),
+            seq: Some(seq),
+        }
+    }
+
+    fn detach(&self, seq: u64) {
+        self.inner.lock().unwrap().entries.remove(&seq);
+    }
+
+    /// Arbitrate one transfer for stream `seq`: returns the charged seconds
+    /// (`natural * (1 + other attached streams with copy budget left)`).
+    fn transfer(&self, seq: u64, natural_seconds: f64, bytes: u64) -> f64 {
+        let mut inner = self.inner.lock().unwrap();
+        let others = inner
+            .entries
+            .iter()
+            .filter(|(s, e)| **s != seq && e.attached && e.remaining_copy > LINK_EPS)
+            .count();
+        let streams = 1 + others as u64;
+        let charged = natural_seconds * streams as f64;
+        if let Some(e) = inner.entries.get_mut(&seq) {
+            e.remaining_copy = (e.remaining_copy - natural_seconds).max(0.0);
+        }
+        inner.stats.busy_seconds += natural_seconds;
+        inner.stats.stall_seconds += charged - natural_seconds;
+        inner.stats.bytes += bytes;
+        inner.stats.requests += 1;
+        inner.stats.peak_streams = inner.stats.peak_streams.max(streams);
+        charged
+    }
+}
+
+/// An admitted job's declared demand, not yet running. Dropping it before
+/// `attach` withdraws the declaration from the link.
+#[derive(Debug)]
+pub struct LinkReservation {
+    link: Arc<SharedLink>,
+    seq: Option<u64>,
+}
+
+impl LinkReservation {
+    /// The job is starting: convert the reservation into a live stream
+    /// handle. Transfers charged through the handle drain the declared copy
+    /// budget and contend with other attached streams.
+    pub fn attach(mut self) -> LinkHandle {
+        let seq = self.seq.take().expect("reservation already consumed");
+        if let Some(e) = self.link.inner.lock().unwrap().entries.get_mut(&seq) {
+            e.attached = true;
+        }
+        LinkHandle {
+            core: Arc::new(HandleCore {
+                link: Arc::clone(&self.link),
+                seq,
+            }),
+        }
+    }
+}
+
+impl Drop for LinkReservation {
+    fn drop(&mut self) {
+        if let Some(seq) = self.seq.take() {
+            self.link.detach(seq);
+        }
+    }
+}
+
+#[derive(Debug)]
+struct HandleCore {
+    link: Arc<SharedLink>,
+    seq: u64,
+}
+
+impl Drop for HandleCore {
+    fn drop(&mut self) {
+        self.link.detach(self.seq);
+    }
+}
+
+/// Cheap-clone per-job stream handle threaded into `MemSim`. The job's
+/// declared demand leaves the link's committed load when the last clone
+/// drops (job finished).
+#[derive(Clone, Debug)]
+pub struct LinkHandle {
+    core: Arc<HandleCore>,
+}
+
+impl LinkHandle {
+    /// Charge one bulk transfer through the arbiter; returns charged seconds.
+    pub fn transfer(&self, natural_seconds: f64, bytes: u64) -> f64 {
+        self.core.link.transfer(self.core.seq, natural_seconds, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lone_stream_is_charged_exactly_natural_time() {
+        let link = SharedLink::new();
+        let h = link
+            .reserve(PendingDemand { copy_seconds: 1.0, total_seconds: 2.0 })
+            .attach();
+        assert_eq!(h.transfer(0.25, 100), 0.25);
+        let s = link.stats();
+        assert_eq!(s.stall_seconds, 0.0);
+        assert_eq!(s.busy_seconds, 0.25);
+        assert_eq!(s.peak_streams, 1);
+        assert_eq!(s.bytes, 100);
+        assert!((s.utilization() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concurrent_streams_serialize_fairly() {
+        let link = SharedLink::new();
+        let a = link
+            .reserve(PendingDemand { copy_seconds: 1.0, total_seconds: 1.0 })
+            .attach();
+        let b = link
+            .reserve(PendingDemand { copy_seconds: 1.0, total_seconds: 1.0 })
+            .attach();
+        // Two attached streams with copy budget: each pays a 2x factor.
+        assert_eq!(a.transfer(0.5, 10), 1.0);
+        assert_eq!(b.transfer(0.5, 10), 1.0);
+        let s = link.stats();
+        assert_eq!(s.busy_seconds, 1.0);
+        assert_eq!(s.stall_seconds, 1.0);
+        assert_eq!(s.peak_streams, 2);
+        assert!(s.utilization() < 1.0);
+        // A third transfer exhausts A's declared budget; after that A no
+        // longer inflicts contention on B, even while still attached.
+        assert_eq!(a.transfer(0.5, 10), 1.0); // b still has budget -> 2x
+        assert_eq!(b.transfer(0.5, 10), 0.5); // a's budget exhausted -> b streams alone
+        drop(a);
+        assert_eq!(b.transfer(0.25, 10), 0.25);
+    }
+
+    #[test]
+    fn unpriced_jobs_ride_free_and_do_not_inflict_contention() {
+        let link = SharedLink::new();
+        let priced = link
+            .reserve(PendingDemand { copy_seconds: 1.0, total_seconds: 1.0 })
+            .attach();
+        // A job with no reservation never calls transfer(); the priced job
+        // streams alone and pays no stall.
+        assert_eq!(priced.transfer(0.125, 8), 0.125);
+        // A reservation that never attaches (admitted, not yet running)
+        // counts toward load but not toward runtime contention.
+        let parked = link.reserve(PendingDemand { copy_seconds: 9.0, total_seconds: 9.0 });
+        assert_eq!(link.load().pending.len(), 2);
+        assert_eq!(priced.transfer(0.125, 8), 0.125);
+        drop(parked);
+        assert_eq!(link.load().pending.len(), 1);
+    }
+
+    #[test]
+    fn reservation_lifecycle_updates_committed_load() {
+        let link = SharedLink::new();
+        assert_eq!(link.load().pending.len(), 0);
+        let r1 = link.reserve(PendingDemand { copy_seconds: 2.0, total_seconds: 3.0 });
+        let r2 = link.reserve(PendingDemand { copy_seconds: 0.0, total_seconds: 5.0 });
+        let load = link.load();
+        assert_eq!(load.pending.len(), 2);
+        assert_eq!(load.committed_copy_seconds(), 2.0);
+        assert_eq!(load.committed_total_seconds(), 8.0);
+        assert_eq!(load.streaming_jobs(), 1);
+        // Admission order is preserved in the snapshot.
+        assert_eq!(load.pending[0].copy_seconds, 2.0);
+        drop(r1);
+        assert_eq!(link.load().pending.len(), 1);
+        let h2 = r2.attach();
+        assert_eq!(link.load().pending.len(), 1);
+        drop(h2);
+        assert_eq!(link.load().pending.len(), 0);
+    }
+}

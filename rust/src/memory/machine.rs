@@ -37,6 +37,7 @@
 use super::alloc::{AllocError, AllocTracker, Location, Region};
 use super::cache::{Cache, CacheSpec, LINE};
 use super::mcdram_cache::McdramCache;
+use super::contention::LinkHandle;
 use super::pool::{PoolId, PoolSpec, PoolTraffic, FAST, SLOW};
 use super::uvm::{Uvm, UvmOutcome, UvmSpec};
 use crate::error::{JobControl, MlmemError};
@@ -179,6 +180,12 @@ pub struct SimReport {
     /// Async transfer time that could NOT be hidden behind kernel work —
     /// the exposed part of double-buffered staging.
     pub overlap_stall_seconds: f64,
+    /// Extra transfer seconds charged by shared-link arbitration — the
+    /// slowdown this job suffered from other jobs streaming concurrently
+    /// (0 when no [`SharedLink`](super::contention::SharedLink) is
+    /// attached, i.e. single-tenant runs). Already included in
+    /// `copy_seconds`/`overlap_stall_seconds` and hence in `seconds`.
+    pub link_stall_seconds: f64,
     pub uvm_seconds: f64,
     pub l1_miss_pct: f64,
     pub l2_miss_pct: f64,
@@ -208,6 +215,10 @@ pub struct MemSim {
     async_copy_seconds: f64,
     kernel_mark_s: f64,
     overlap_stall_seconds: f64,
+    /// Per-job stream on the session's shared bulk-copy link; when set,
+    /// every bulk transfer is arbitrated against other jobs' streams.
+    link: Option<LinkHandle>,
+    link_stall_seconds: f64,
     flops: u64,
     /// Per-workload compute efficiency in (0, 1]: the fraction of the
     /// machine's calibrated scalar-kernel rate this multiplication's row
@@ -242,6 +253,8 @@ impl MemSim {
             async_copy_seconds: 0.0,
             kernel_mark_s: 0.0,
             overlap_stall_seconds: 0.0,
+            link: None,
+            link_stall_seconds: 0.0,
             flops: 0,
             compute_efficiency: 1.0,
             control: JobControl::default(),
@@ -252,6 +265,14 @@ impl MemSim {
     /// observe it at every chunk boundary through [`MemSim::checkpoint`].
     pub fn set_control(&mut self, control: JobControl) {
         self.control = control;
+    }
+
+    /// Attach this job's stream on the session's shared bulk-copy link.
+    /// All subsequent bulk transfers are arbitrated: concurrent streams
+    /// fair-share the link, so each pays `natural × streams`. `None`
+    /// (the default) keeps the single-tenant clock.
+    pub fn set_link(&mut self, link: Option<LinkHandle>) {
+        self.link = link;
     }
 
     /// Poll the attached [`JobControl`]: `Err(Cancelled)` /
@@ -303,7 +324,22 @@ impl MemSim {
         let (sp, dp) = (self.loc_pool(src), self.loc_pool(dst));
         self.traffic[sp.0].bulk_read_bytes += bytes;
         self.traffic[dp.0].bulk_write_bytes += bytes;
-        self.spec.bulk_copy_seconds(sp, dp, bytes)
+        let natural = self.spec.bulk_copy_seconds(sp, dp, bytes);
+        self.arbitrate(natural, bytes)
+    }
+
+    /// Route one bulk transfer through the shared link, if attached:
+    /// the arbiter charges `natural × concurrent streams`, and the
+    /// contention surcharge is tracked as `link_stall_seconds`.
+    fn arbitrate(&mut self, natural: f64, bytes: u64) -> f64 {
+        match &self.link {
+            Some(link) => {
+                let charged = link.transfer(natural, bytes);
+                self.link_stall_seconds += charged - natural;
+                charged
+            }
+            None => natural,
+        }
     }
 
     /// Bulk copy (the chunking algorithms' `copy2Fast`/`copy2Slow`):
@@ -321,7 +357,9 @@ impl MemSim {
     pub fn bulk_copy_pools(&mut self, src: PoolId, dst: PoolId, bytes: u64) {
         self.traffic[src.0].bulk_read_bytes += bytes;
         self.traffic[dst.0].bulk_write_bytes += bytes;
-        self.copy_seconds += self.spec.bulk_copy_seconds(src, dst, bytes);
+        let natural = self.spec.bulk_copy_seconds(src, dst, bytes);
+        let t = self.arbitrate(natural, bytes);
+        self.copy_seconds += t;
     }
 
     /// Bulk copy on the *overlap stream*: the transfer proceeds
@@ -568,6 +606,7 @@ impl MemSim {
             copy_seconds: self.copy_seconds,
             async_copy_seconds: self.async_copy_seconds,
             overlap_stall_seconds,
+            link_stall_seconds: self.link_stall_seconds,
             uvm_seconds,
             l1_miss_pct: self.l1.miss_ratio() * 100.0,
             l2_miss_pct: self.l2.miss_ratio() * 100.0,

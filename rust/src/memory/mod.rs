@@ -9,6 +9,7 @@
 pub mod alloc;
 pub mod arch;
 pub mod cache;
+pub mod contention;
 pub mod machine;
 pub mod mcdram_cache;
 pub mod pool;
@@ -17,6 +18,9 @@ pub mod uvm;
 
 pub use alloc::Location;
 pub use arch::{Arch, GpuMode, KnlMode, MachineKind};
+pub use contention::{
+    LinkHandle, LinkLoad, LinkReservation, LinkStats, PendingDemand, SharedLink,
+};
 pub use machine::{MachineSpec, MemSim, MemTracer, NullTracer, RegionId, SimReport};
 pub use pool::{PoolId, FAST, SLOW};
 pub use residency::{Lease, ResidencyPool, ResidencyStats};

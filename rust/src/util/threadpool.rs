@@ -4,7 +4,7 @@
 //! the coordinator's executor.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
@@ -116,12 +116,67 @@ pub enum Priority {
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Transfer-profile tag the coordinator attaches to a submission:
+/// `Some(true)` = copy-bound (predicted transfer time exceeds kernel
+/// time), `Some(false)` = compute-bound, `None` = unknown (unpriced).
+pub type CopyBound = Option<bool>;
+
+/// Per-lane queue depths, with the total in-flight count — the
+/// observable the metrics snapshot breaks out so lane starvation is
+/// visible (a deep Normal lane behind an empty High lane).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueueDepth {
+    /// Jobs submitted but not finished (queued in either lane + running).
+    pub pending: usize,
+    /// Jobs waiting in the High lane.
+    pub high: usize,
+    /// Jobs waiting in the Normal lane.
+    pub normal: usize,
+}
+
+struct Queued {
+    run: Job,
+    copy_bound: CopyBound,
+}
+
 /// The two-lane queue workers pop from: high lane drains first.
 #[derive(Default)]
 struct Lanes {
-    high: VecDeque<Job>,
-    normal: VecDeque<Job>,
+    high: VecDeque<Queued>,
+    normal: VecDeque<Queued>,
     shutdown: bool,
+    /// Tagged jobs currently executing, by profile — what the
+    /// co-scheduler balances against.
+    running_copy: usize,
+    running_compute: usize,
+}
+
+/// Pop the next Normal-lane job. With co-scheduling on, when the
+/// running mix is imbalanced the queue is scanned for the first job of
+/// the complementary profile — one job's kernel time then hides
+/// another's transfer time on the shared link (the §3 overlap-stream
+/// discipline lifted from intra-job to inter-job). Untagged jobs are
+/// never reordered around for; FIFO order is the fallback everywhere.
+fn pick_normal(lanes: &mut Lanes, co_schedule: bool, hits: &AtomicU64) -> Option<Queued> {
+    if co_schedule {
+        let want = if lanes.running_copy > lanes.running_compute {
+            Some(false) // link is loaded: prefer a compute-bound job
+        } else if lanes.running_compute > lanes.running_copy {
+            Some(true) // link is idle under kernels: prefer a copy-bound job
+        } else {
+            None
+        };
+        if let Some(w) = want {
+            if let Some(idx) = lanes.normal.iter().position(|q| q.copy_bound == Some(w)) {
+                if idx > 0 {
+                    // Only an actual reorder counts as a co-schedule hit.
+                    hits.fetch_add(1, Ordering::SeqCst);
+                }
+                return lanes.normal.remove(idx);
+            }
+        }
+    }
+    lanes.normal.pop_front()
 }
 
 /// A persistent worker pool executing boxed jobs from a two-lane
@@ -130,18 +185,33 @@ pub struct WorkerPool {
     shared: Arc<(Mutex<Lanes>, Condvar)>,
     handles: Vec<thread::JoinHandle<()>>,
     queued: Arc<AtomicUsize>,
+    co_schedule_hits: Arc<AtomicU64>,
 }
 
 impl WorkerPool {
+    /// Co-scheduling pool: Normal-lane jobs may be reordered to pair
+    /// copy-bound work with compute-bound work (see [`pick_normal`]).
     pub fn new(workers: usize) -> Self {
+        Self::with_co_scheduling(workers, true)
+    }
+
+    /// Strict two-lane FIFO pool (the pre-contention scheduler) — the
+    /// baseline the `contention` bench compares against.
+    pub fn fifo(workers: usize) -> Self {
+        Self::with_co_scheduling(workers, false)
+    }
+
+    fn with_co_scheduling(workers: usize, co_schedule: bool) -> Self {
         let workers = workers.max(1);
         let shared: Arc<(Mutex<Lanes>, Condvar)> =
             Arc::new((Mutex::new(Lanes::default()), Condvar::new()));
         let queued = Arc::new(AtomicUsize::new(0));
+        let co_schedule_hits = Arc::new(AtomicU64::new(0));
         let handles = (0..workers)
             .map(|_| {
                 let shared = Arc::clone(&shared);
                 let queued = Arc::clone(&queued);
+                let hits = Arc::clone(&co_schedule_hits);
                 thread::spawn(move || loop {
                     let job = {
                         let (lock, cvar) = &*shared;
@@ -152,9 +222,14 @@ impl WorkerPool {
                             // finish-what-was-queued semantics.
                             let next = match lanes.high.pop_front() {
                                 Some(j) => Some(j),
-                                None => lanes.normal.pop_front(),
+                                None => pick_normal(&mut lanes, co_schedule, &hits),
                             };
                             if let Some(j) = next {
+                                match j.copy_bound {
+                                    Some(true) => lanes.running_copy += 1,
+                                    Some(false) => lanes.running_compute += 1,
+                                    None => {}
+                                }
                                 break Some(j);
                             }
                             if lanes.shutdown {
@@ -165,7 +240,17 @@ impl WorkerPool {
                     };
                     match job {
                         Some(job) => {
-                            job();
+                            let tag = job.copy_bound;
+                            (job.run)();
+                            if tag.is_some() {
+                                let (lock, _) = &*shared;
+                                let mut lanes = lock.lock().expect("lanes poisoned");
+                                match tag {
+                                    Some(true) => lanes.running_copy -= 1,
+                                    Some(false) => lanes.running_compute -= 1,
+                                    None => {}
+                                }
+                            }
                             queued.fetch_sub(1, Ordering::SeqCst);
                         }
                         None => break,
@@ -173,12 +258,29 @@ impl WorkerPool {
                 })
             })
             .collect();
-        Self { shared, handles, queued }
+        Self { shared, handles, queued, co_schedule_hits }
     }
 
     /// Number of jobs submitted but not yet finished.
     pub fn pending(&self) -> usize {
         self.queued.load(Ordering::SeqCst)
+    }
+
+    /// Per-lane queue depths plus the total in-flight count.
+    pub fn queue_depth(&self) -> QueueDepth {
+        let (lock, _) = &*self.shared;
+        let lanes = lock.lock().expect("lanes poisoned");
+        QueueDepth {
+            pending: self.pending(),
+            high: lanes.high.len(),
+            normal: lanes.normal.len(),
+        }
+    }
+
+    /// Times the co-scheduler reordered the Normal lane to pair a
+    /// copy-bound job with a compute-bound one.
+    pub fn co_schedule_hits(&self) -> u64 {
+        self.co_schedule_hits.load(Ordering::SeqCst)
     }
 
     pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
@@ -188,13 +290,25 @@ impl WorkerPool {
     /// Submit into a specific lane; `High` jobs run before queued
     /// `Normal` jobs.
     pub fn submit_with(&self, priority: Priority, job: impl FnOnce() + Send + 'static) {
+        self.submit_tagged(priority, None, job);
+    }
+
+    /// Submit with a transfer-profile tag; the co-scheduler uses tags to
+    /// pair copy-bound jobs with compute-bound ones in the Normal lane.
+    pub fn submit_tagged(
+        &self,
+        priority: Priority,
+        copy_bound: CopyBound,
+        job: impl FnOnce() + Send + 'static,
+    ) {
         self.queued.fetch_add(1, Ordering::SeqCst);
         let (lock, cvar) = &*self.shared;
         let mut lanes = lock.lock().expect("lanes poisoned");
         assert!(!lanes.shutdown, "pool already shut down");
+        let q = Queued { run: Box::new(job), copy_bound };
         match priority {
-            Priority::High => lanes.high.push_back(Box::new(job)),
-            Priority::Normal => lanes.normal.push_back(Box::new(job)),
+            Priority::High => lanes.high.push_back(q),
+            Priority::Normal => lanes.normal.push_back(q),
         }
         drop(lanes);
         cvar.notify_one();
@@ -296,6 +410,84 @@ mod tests {
         gate_tx.send(()).expect("open gate");
         pool.wait_idle();
         assert_eq!(*order.lock().expect("order"), vec!["high", "normal"]);
+    }
+
+    #[test]
+    fn co_scheduler_pairs_compute_with_running_copy_job() {
+        // Worker 1 holds a copy-bound gate job; worker 2 holds an
+        // untagged gate. Queue a copy-bound then a compute-bound job,
+        // release worker 2 only: with a copy-bound job running, the
+        // co-scheduler must skip the queued copy job and run the
+        // compute job first (one reorder = one hit).
+        let pool = WorkerPool::new(2);
+        let (copy_gate_tx, copy_gate_rx) = std::sync::mpsc::channel::<()>();
+        let (free_gate_tx, free_gate_rx) = std::sync::mpsc::channel::<()>();
+        pool.submit_tagged(Priority::Normal, Some(true), move || {
+            copy_gate_rx.recv().expect("copy gate");
+        });
+        pool.submit_tagged(Priority::Normal, None, move || {
+            free_gate_rx.recv().expect("free gate");
+        });
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let (o1, o2) = (Arc::clone(&order), Arc::clone(&order));
+        pool.submit_tagged(Priority::Normal, Some(true), move || {
+            o1.lock().expect("order").push("copy");
+        });
+        pool.submit_tagged(Priority::Normal, Some(false), move || {
+            o2.lock().expect("order").push("compute");
+        });
+        free_gate_tx.send(()).expect("open free gate");
+        // The freed worker drains both queued jobs while the copy gate
+        // still holds the other worker.
+        while pool.pending() > 1 {
+            thread::yield_now();
+        }
+        copy_gate_tx.send(()).expect("open copy gate");
+        pool.wait_idle();
+        assert_eq!(*order.lock().expect("order"), vec!["compute", "copy"]);
+        assert_eq!(pool.co_schedule_hits(), 1);
+    }
+
+    #[test]
+    fn fifo_pool_never_reorders() {
+        let pool = WorkerPool::fifo(1);
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+        pool.submit_tagged(Priority::Normal, Some(true), move || {
+            gate_rx.recv().expect("gate");
+        });
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let (o1, o2) = (Arc::clone(&order), Arc::clone(&order));
+        pool.submit_tagged(Priority::Normal, Some(true), move || {
+            o1.lock().expect("order").push("copy");
+        });
+        pool.submit_tagged(Priority::Normal, Some(false), move || {
+            o2.lock().expect("order").push("compute");
+        });
+        gate_tx.send(()).expect("open gate");
+        pool.wait_idle();
+        assert_eq!(*order.lock().expect("order"), vec!["copy", "compute"]);
+        assert_eq!(pool.co_schedule_hits(), 0);
+    }
+
+    #[test]
+    fn queue_depth_breaks_out_lanes() {
+        let pool = WorkerPool::new(1);
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+        pool.submit(move || {
+            gate_rx.recv().expect("gate");
+        });
+        // Wait until the gate job is actually running (off the queue).
+        while pool.queue_depth().normal > 0 {
+            thread::yield_now();
+        }
+        pool.submit_with(Priority::Normal, || {});
+        pool.submit_with(Priority::High, || {});
+        pool.submit_with(Priority::High, || {});
+        let d = pool.queue_depth();
+        assert_eq!((d.pending, d.high, d.normal), (4, 2, 1));
+        gate_tx.send(()).expect("open gate");
+        pool.wait_idle();
+        assert_eq!(pool.queue_depth(), QueueDepth::default());
     }
 
     #[test]

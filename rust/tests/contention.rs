@@ -1,0 +1,189 @@
+//! Shared-bandwidth link integration suite (DESIGN.md §11). The
+//! contract under test: contention changes simulated *time*, never
+//! *results* (any interleaving of jobs through the link yields
+//! bit-identical products to serial execution); admission pricing is
+//! contention-aware and strictly more accurate than the blind price
+//! under a loaded link; SLO deadlines reject unmeetable work at
+//! admission with the priced context; and unpriced jobs ride the link
+//! for free.
+
+use mlmem_spgemm::bench::experiments::{serve_lhs, serve_rhs};
+use mlmem_spgemm::coordinator::{Session, SubmitOptions};
+use mlmem_spgemm::gen::scale::ScaleFactor;
+use mlmem_spgemm::memory::arch::{knl, p100, Arch, GpuMode, KnlMode};
+use mlmem_spgemm::memory::{PendingDemand, FAST};
+use mlmem_spgemm::prelude::*;
+use mlmem_spgemm::util::proptest::{check, Gen};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn knl_arch() -> Arc<Arch> {
+    Arc::new(knl(KnlMode::Ddr, 64, ScaleFactor::default()))
+}
+
+/// The serve experiment's machine: P100 pinned, shrunk so the
+/// copy-bound operands stay cheap to simulate.
+fn gpu_arch() -> Arc<Arch> {
+    Arc::new(p100(GpuMode::Pinned, ScaleFactor::new(1024 * 64)))
+}
+
+/// A copy-bound pair sized against the fast pool (staging dominates).
+fn copy_bound_pair(arch: &Arch, seed: u64) -> (Arc<Csr>, Arc<Csr>) {
+    let usable = arch.spec.pools[FAST.0].usable();
+    let b = Arc::new(serve_rhs(usable, seed));
+    let a = Arc::new(serve_lhs(usable, b.nrows, seed + 1));
+    (a, b)
+}
+
+#[test]
+fn products_bit_identical_serial_vs_concurrent_link() {
+    check("link interleavings preserve products", 8, |g: &mut Gen| {
+        let arch = knl_arch();
+        let n_jobs = g.usize(2, 5);
+        let pairs: Vec<_> = (0..n_jobs).map(|_| g.csr_pair(40, 4)).collect();
+        let submit = || SubmitOptions {
+            keep_product: true,
+            price_admission: true,
+            ..Default::default()
+        };
+        // Serial reference: one worker, submit-and-wait one at a time.
+        let serial = Session::builder(Arc::clone(&arch))
+            .workers(1)
+            .co_schedule(false)
+            .build();
+        let mut reference = Vec::new();
+        for (a, b) in &pairs {
+            let ha = serial.register(Arc::new(a.clone()));
+            let hb = serial.register(Arc::new(b.clone()));
+            let r = serial.spgemm_with(ha, hb, submit()).unwrap().wait().unwrap();
+            reference.push(r.c.expect("kept product"));
+        }
+        // Concurrent: everything in flight at once, all priced through
+        // the shared link, co-scheduler free to reorder.
+        let concurrent = Session::builder(arch).workers(4).build();
+        let handles: Vec<_> = pairs
+            .iter()
+            .map(|(a, b)| {
+                let ha = concurrent.register(Arc::new(a.clone()));
+                let hb = concurrent.register(Arc::new(b.clone()));
+                concurrent.spgemm_with(ha, hb, submit()).unwrap()
+            })
+            .collect();
+        for (h, want) in handles.into_iter().zip(&reference) {
+            let got = h.wait().unwrap().c.expect("kept product");
+            assert_eq!(got.rowmap, want.rowmap);
+            assert_eq!(got.entries, want.entries);
+            assert!(got.approx_eq(want, 0.0), "values must be bit-identical");
+        }
+    });
+}
+
+#[test]
+fn slo_rejects_unmeetable_job_and_admits_meetable_one() {
+    let session = Session::builder(knl_arch()).workers(1).build();
+    let a = session.register(Arc::new(mlmem_spgemm::gen::rhs::random_csr(60, 60, 1, 5, 1)));
+    let b = session.register(Arc::new(mlmem_spgemm::gen::rhs::random_csr(60, 60, 1, 5, 2)));
+    // A competitor with ten committed simulated seconds sits ahead in
+    // the single worker's admission queue.
+    let competitor = session
+        .shared_link()
+        .reserve(PendingDemand { copy_seconds: 10.0, total_seconds: 10.0 });
+    let err = session
+        .spgemm_with(
+            a,
+            b,
+            SubmitOptions { deadline: Some(Duration::from_secs(5)), ..Default::default() },
+        )
+        .expect_err("a 5s budget cannot clear 10s of queued work");
+    match err {
+        MlmemError::AdmissionRejected {
+            priced_seconds: Some(p),
+            deadline_seconds: Some(d),
+            ..
+        } => {
+            assert!(p > 10.0, "queue wait must dominate the price, got {p}");
+            assert_eq!(d, 5.0);
+        }
+        other => panic!("expected a priced rejection, got {other:?}"),
+    }
+    // With the competitor gone the same job meets a generous SLO.
+    drop(competitor);
+    let r = session
+        .spgemm_with(
+            a,
+            b,
+            SubmitOptions { deadline: Some(Duration::from_secs(60)), ..Default::default() },
+        )
+        .expect("idle link admits")
+        .wait()
+        .expect("admitted job completes within its SLO");
+    assert!(r.c_nnz > 0);
+    session.drain();
+    let m = session.metrics();
+    assert_eq!((m.completed, m.rejected, m.slo_misses), (1, 1, 0));
+}
+
+#[test]
+fn aware_price_beats_blind_under_a_saturated_link() {
+    let arch = gpu_arch();
+    let (a, b) = copy_bound_pair(&arch, 7);
+    let session = Session::builder(Arc::clone(&arch))
+        .workers(2)
+        .operand_cache(false)
+        .build();
+    let (ha, hb) = (session.register(a), session.register(b));
+    // A foreign stream holds the link for the whole run: reserved AND
+    // attached, with a copy budget it never drains — deterministic
+    // contention without racing a second worker thread.
+    let foreign = session
+        .shared_link()
+        .reserve(PendingDemand { copy_seconds: 1e6, total_seconds: 1e6 })
+        .attach();
+    let h = session
+        .spgemm_with(ha, hb, SubmitOptions { price_admission: true, ..Default::default() })
+        .expect("admitted");
+    let t = *h.ticket().expect("priced submission carries a ticket");
+    assert_eq!(t.pending_jobs, 1, "the foreign stream is committed load");
+    assert!(t.committed_copy_seconds >= 1e6);
+    assert!(t.aware_seconds > t.blind_seconds, "contention must be priced in");
+    let r = h.wait().expect("job ok");
+    let actual = r.report.seconds;
+    assert!(
+        r.report.link_stall_seconds > 0.0,
+        "the arbiter actually charged contention"
+    );
+    let blind_err = ((t.blind_seconds - actual) / actual).abs();
+    let aware_err = ((t.aware_seconds - actual) / actual).abs();
+    assert!(
+        aware_err < blind_err,
+        "aware error {aware_err:.4} must beat blind {blind_err:.4} (actual {actual:.6}s)"
+    );
+    drop(foreign);
+}
+
+#[test]
+fn unpriced_jobs_ride_the_link_free() {
+    // The same job on a fresh session, with and without a saturated
+    // link: an unpriced submission (Auto, no deadline, no price flag,
+    // cold pair cache) never touches the arbiter, so its simulated time
+    // is bit-identical and it records no link stall.
+    let run = |saturate: bool| {
+        let arch = gpu_arch();
+        let (a, b) = copy_bound_pair(&arch, 11);
+        let session = Session::builder(arch).workers(1).operand_cache(false).build();
+        let (ha, hb) = (session.register(a), session.register(b));
+        let _foreign = saturate.then(|| {
+            session
+                .shared_link()
+                .reserve(PendingDemand { copy_seconds: 1e6, total_seconds: 1e6 })
+                .attach()
+        });
+        let r = session.spgemm(ha, hb).unwrap().wait().unwrap();
+        (r.report.seconds, r.report.link_stall_seconds)
+    };
+    let (clean_s, clean_stall) = run(false);
+    let (loaded_s, loaded_stall) = run(true);
+    assert_eq!(clean_s, loaded_s, "a saturated link must not slow unpriced jobs");
+    assert_eq!(clean_stall, 0.0);
+    assert_eq!(loaded_stall, 0.0);
+}

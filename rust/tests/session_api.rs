@@ -1,8 +1,9 @@
 //! Session-handle API integration suite: one `Session` serving a mixed
 //! batch — spgemm + tricount against shared registered operands, a
-//! cancelled job, a deadline-expired job, and a backpressure rejection —
-//! with typed `MlmemError`s for every failure and bit-identical products
-//! to the direct `coordinator::execute` path for the successes. Plus the
+//! cancelled job, an SLO rejection at admission, a mid-run deadline
+//! expiry, and a backpressure rejection — with typed `MlmemError`s for
+//! every failure and bit-identical products to the direct
+//! `coordinator::execute` path for the successes. Plus the
 //! admission-control recovery and operand-registry reuse satellites.
 
 use mlmem_spgemm::coordinator::{
@@ -54,26 +55,40 @@ fn mixed_batch_typed_failures_and_bit_identical_successes() {
     };
     assert!(matches!(
         err,
-        MlmemError::AdmissionRejected { pending: 2, max_pending: 2 }
+        MlmemError::AdmissionRejected {
+            pending: 2,
+            max_pending: 2,
+            priced_seconds: None,
+            ..
+        }
     ));
 
-    // One pre-cancelled job and one already-expired deadline, both
-    // observed at the worker's first checkpoint.
+    // One pre-cancelled job, observed at the worker's first checkpoint —
+    // and an already-expired deadline that SLO-aware admission now turns
+    // away up front with the priced context, instead of letting it burn
+    // the worker and expire mid-run.
     session.drain();
     let cancel = JobControl::new();
     cancel.cancel();
     let h_cancelled = session
         .spgemm_with(a, b, SubmitOptions { control: Some(cancel), ..Default::default() })
         .expect("admitted after drain");
-    let h_expired = session
+    let err = session
         .spgemm_with(
             a,
             b,
             SubmitOptions { deadline: Some(Duration::ZERO), ..Default::default() },
         )
-        .expect("admitted");
+        .expect_err("a zero simulated-seconds budget cannot be met");
+    assert!(matches!(
+        err,
+        MlmemError::AdmissionRejected {
+            priced_seconds: Some(_),
+            deadline_seconds: Some(_),
+            ..
+        }
+    ));
     assert!(matches!(h_cancelled.wait(), Err(MlmemError::Cancelled)));
-    assert!(matches!(h_expired.wait(), Err(MlmemError::DeadlineExceeded)));
 
     // Successes: the spgemm product is bit-identical to the direct
     // (session-less) execute path on the same operands.
@@ -113,8 +128,8 @@ fn mixed_batch_typed_failures_and_bit_identical_successes() {
     session.drain();
     let m = session.metrics();
     assert_eq!(m.completed, 2);
-    assert_eq!(m.cancelled, 2);
-    assert_eq!(m.rejected, 1);
+    assert_eq!(m.cancelled, 1);
+    assert_eq!(m.rejected, 2, "backpressure + SLO rejection");
     assert_eq!(m.failed, 0);
     assert_eq!(m.queue_depth, 0);
 }
