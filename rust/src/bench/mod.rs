@@ -17,8 +17,12 @@ pub const EXPERIMENTS: &[&str] = &[
     "table1", "table2", "table3", "table4", "fig3", "fig4", "fig6", "fig7", "fig9", "fig10",
     "fig11", "fig12", "fig13", "ablate-acc", "ablate-algo", "ablate-compression",
     "ablate-overlap", "accumulator", "pipeline", "planner", "chain", "serve", "contention",
-    "profiles",
+    "cluster", "profiles",
 ];
+
+/// Schema version of the `BENCH_*.json` perf-trajectory document; bump
+/// whenever the document shape changes.
+pub const BENCH_JSON_SCHEMA: u64 = 2;
 
 /// Run one experiment by id.
 pub fn run_experiment(id: &str, cfg: &BenchConfig, cache: &mut ProblemCache) -> Option<Table> {
@@ -46,6 +50,7 @@ pub fn run_experiment(id: &str, cfg: &BenchConfig, cache: &mut ProblemCache) -> 
         "chain" => tables::chain_triple_product(cfg, cache),
         "serve" => tables::serve_operand_cache(cfg, cache),
         "contention" => tables::contention_shared_link(cfg, cache),
+        "cluster" => tables::cluster_scale_out(cfg, cache),
         "profiles" => tables::machine_profiles(cfg),
         _ => return None,
     })
@@ -79,14 +84,26 @@ pub fn run_and_report(
             t.write_csv(&path).map_err(|e| format!("writing {}: {e}", path.display()))?;
         }
         if json_path.is_some() {
-            json_experiments
-                .push(Json::obj().set("experiment", id.clone()).set("rows", t.to_json()));
+            // Each experiment entry is self-describing: id, display
+            // title, and any provenance context the table attached
+            // (arch, input family, …).
+            let mut exp = Json::obj().set("experiment", id.clone());
+            if let Some(title) = t.title() {
+                exp = exp.set("title", title);
+            }
+            for (k, v) in t.context() {
+                exp = exp.set(k, v.clone());
+            }
+            json_experiments.push(exp.set("rows", t.to_json()));
         }
     }
     if let Some(path) = json_path {
         let doc = Json::obj()
+            .set("schema_version", BENCH_JSON_SCHEMA)
+            .set("tool", "mlmem bench")
             .set("scale_denominator", cfg.scale.denominator)
             .set("seed", cfg.seed)
+            .set("graph_scale", cfg.graph_scale as u64)
             .set("experiments", Json::Arr(json_experiments));
         std::fs::write(path, doc.render_pretty())
             .map_err(|e| format!("writing {}: {e}", path.display()))?;
@@ -108,5 +125,21 @@ mod tests {
             assert!(run_experiment(id, &cfg, &mut cache).is_some(), "{id}");
         }
         assert!(run_experiment("bogus", &cfg, &mut cache).is_none());
+    }
+
+    #[test]
+    fn json_export_is_self_describing() {
+        let mut cfg = BenchConfig::quick();
+        cfg.sizes_gb = vec![0.0625];
+        cfg.graph_scale = 7;
+        let path = std::env::temp_dir().join("mlmem_bench_schema_test.json");
+        run_and_report(&["profiles".to_string()], &cfg, None, Some(&path)).unwrap();
+        let doc = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(doc.contains("\"schema_version\""));
+        assert!(doc.contains("\"tool\""));
+        assert!(doc.contains("\"graph_scale\""));
+        assert!(doc.contains("\"experiment\": \"profiles\"") || doc.contains("\"experiment\":\"profiles\""));
+        assert!(doc.contains("\"title\""));
     }
 }

@@ -317,7 +317,8 @@ pub fn accumulator_regimes(cfg: &BenchConfig) -> Table {
     ])
     .with_title(format!(
         "Adaptive accumulator: native wall-clock by regime ({threads} threads, median of 3)"
-    ));
+    ))
+    .with_context("arch", format!("native host, {threads} threads"));
     for (name, a, b) in &inputs {
         let stats = symbolic_stats(a, &CompressedMatrix::compress(b));
         let mut census = [0usize; 3];
@@ -360,7 +361,8 @@ pub fn pipeline_overlap(cfg: &BenchConfig, cache: &mut ProblemCache) -> Table {
         "GPU Pipe16",
         "gain",
     ])
-    .with_title("Pipelined chunk engine: measured serial vs double-buffered GFLOP/s");
+    .with_title("Pipelined chunk engine: measured serial vs double-buffered GFLOP/s")
+    .with_context("arch", "KNL ddr + P100 pinned");
     let gain = |s: &Option<(crate::chunk::ChunkedProduct, crate::memory::SimReport)>,
                 p: &Option<(crate::chunk::ChunkedProduct, crate::memory::SimReport)>| {
         match (s, p) {
@@ -547,7 +549,8 @@ pub fn chain_triple_product(cfg: &BenchConfig, cache: &mut ProblemCache) -> Tabl
     let mut t = Table::new(&[
         "problem", "A(GB)", "pairwise s", "chain s", "gain", "assoc", "resident", "promote s",
     ])
-    .with_title("Chain experiment: R·A·P chain-planned vs pairwise (P100 pinned, seconds)");
+    .with_title("Chain experiment: R·A·P chain-planned vs pairwise (P100 pinned, seconds)")
+    .with_context("arch", "P100 pinned");
     for (di, domain) in [Domain::Laplace3D, Domain::Elasticity].into_iter().enumerate() {
         for (si, &gb) in cfg.sizes_gb.iter().enumerate() {
             // `p` is already an owned clone of the cache entry: move the
@@ -619,7 +622,8 @@ pub fn serve_operand_cache(cfg: &BenchConfig, _cache: &mut ProblemCache) -> Tabl
         "scenario", "jobs", "pairs", "uncached s", "cached s", "gain", "hits", "misses",
         "evicted",
     ])
-    .with_title("Serve experiment: fast-pool operand caching across jobs (P100 pinned)");
+    .with_title("Serve experiment: fast-pool operand caching across jobs (P100 pinned)")
+    .with_context("arch", "P100 pinned (x64 shrink)");
     for sc in serve_scenarios(&arch, cfg.seed) {
         let uncached = run_serve_stream(&arch, &sc, false);
         let cached = run_serve_stream(&arch, &sc, true);
@@ -661,7 +665,8 @@ pub fn contention_shared_link(cfg: &BenchConfig, _cache: &mut ProblemCache) -> T
         "scheduler", "jobs", "total sim s", "link stall s", "cosched hits", "blind err",
         "aware err",
     ])
-    .with_title("Contention experiment: shared-link arbitration, FIFO vs co-scheduled (P100 pinned)");
+    .with_title("Contention experiment: shared-link arbitration, FIFO vs co-scheduled (P100 pinned)")
+    .with_context("arch", "P100 pinned (x64 shrink)");
     for (name, co_schedule) in [("fifo", false), ("co-scheduled", true)] {
         let row = match run_contention_batch(&arch, &batch, co_schedule) {
             Some(o) => vec![
@@ -680,6 +685,70 @@ pub fn contention_shared_link(cfg: &BenchConfig, _cache: &mut ProblemCache) -> T
             }
         };
         t.row(&row);
+    }
+    t
+}
+
+/// The `cluster` experiment: one embarrassingly row-parallel product
+/// sharded across 1/2/4/8 simulated nodes by the cluster layer. Every
+/// node count replays the same input through a fresh 200 GB/s fabric;
+/// rows report the per-node-count simulated product time, the speedup
+/// over the single-node run, and the fabric's share of the bill
+/// (scatter makespan, exposed gather, utilization).
+pub fn cluster_scale_out(cfg: &BenchConfig, _cache: &mut ProblemCache) -> Table {
+    use crate::cluster::{self, ClusterSpec, Fabric, FabricSpec};
+    use crate::coordinator::PlannerOptions;
+    use std::sync::Arc;
+    // Full-size machine (no x64 shrink): every shard — including the
+    // single-node baseline — must fit, so the speedup column measures
+    // parallelism rather than capacity relief.
+    let arch = Arc::new(knl(KnlMode::Ddr, 64, cfg.scale));
+    let m = (1usize << (cfg.graph_scale as usize + 4)).min(1 << 18);
+    let a = Arc::new(uniform_degree(m, 256, 8, cfg.seed));
+    let b = Arc::new(uniform_degree(256, 32, 32, cfg.seed + 1));
+    let fabric_spec = FabricSpec { latency_s: 1e-6, bandwidth_bps: 200e9 };
+    let opts = PlannerOptions::default();
+    let mut t = Table::new(&[
+        "nodes", "live", "compute s", "gather s", "product s", "speedup", "scatter s",
+        "fabric util",
+    ])
+    .with_title("Cluster experiment: block-row scale-out over a 200 GB/s fabric (KNL ddr)")
+    .with_context("arch", "KNL ddr 64T")
+    .with_context("input", format!("uniform {m}x256 deg 8 x uniform 256x32 deg 32"))
+    .with_context("fabric", "latency 1 us, bandwidth 200 GB/s");
+    let mut base: Option<f64> = None;
+    for nodes in [1usize, 2, 4, 8] {
+        let spec = ClusterSpec::new(nodes).with_fabric(fabric_spec);
+        let fabric = Fabric::new(fabric_spec);
+        match cluster::execute(&a, &b, &arch, &spec, &fabric, &opts) {
+            Ok(out) => {
+                let live = out.shards.iter().filter(|s| s.rows.1 > s.rows.0).count();
+                let product = out.elapsed_seconds;
+                let speedup = match base {
+                    None => {
+                        base = Some(product);
+                        1.0
+                    }
+                    Some(b1) => b1 / product.max(1e-15),
+                };
+                let stats = fabric.stats();
+                t.row(&[
+                    nodes.to_string(),
+                    live.to_string(),
+                    format!("{:.6}", out.compute_seconds),
+                    format!("{:.6}", out.gather_seconds),
+                    format!("{product:.6}"),
+                    format!("{speedup:.2}x"),
+                    format!("{:.6}", out.scatter_seconds),
+                    format!("{:.2}", stats.utilization()),
+                ]);
+            }
+            Err(e) => {
+                let mut row = vec![nodes.to_string(), format!("error: {e}")];
+                row.extend(vec!["-".to_string(); 6]);
+                t.row(&row);
+            }
+        }
     }
     t
 }
@@ -775,6 +844,27 @@ mod tests {
         assert!(r.contains("pairwise"));
         // Small problems must complete (an association order was chosen).
         assert!(r.contains("fold"), "{r}");
+    }
+
+    #[test]
+    fn cluster_table_scales_out() {
+        // Full quick config (graph_scale 9 -> 8192 block rows): the
+        // acceptance bar is >= 3x simulated speedup at 4 nodes on this
+        // embarrassingly row-parallel product.
+        let cfg = BenchConfig::quick();
+        let mut cache = ProblemCache::default();
+        let t = cluster_scale_out(&cfg, &mut cache);
+        assert_eq!(t.n_rows(), 4);
+        let r = t.render();
+        assert!(!r.contains("error:"), "{r}");
+        let four = &t.rows()[2];
+        assert_eq!(four[0], "4");
+        assert_eq!(four[1], "4", "all four shards live: {r}");
+        let speedup: f64 = four[5].trim_end_matches('x').parse().expect("speedup cell");
+        assert!(speedup >= 3.0, "4-node speedup {speedup} < 3.0\n{r}");
+        // Provenance context rides into the JSON export.
+        assert!(t.context().iter().any(|(k, _)| k == "arch"));
+        assert!(t.context().iter().any(|(k, _)| k == "fabric"));
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! The priced inter-node fabric: one more rung of the memory hierarchy.
+//!
+//! A [`Fabric`] joins the simulated nodes of a cluster the way the bulk-copy
+//! link joins the fast and slow pools inside one node. Pricing reuses the
+//! same roofline shape as [`MachineSpec::bulk_copy_seconds`] — one injection
+//! latency plus `bytes / bandwidth` — and arbitration reuses the
+//! [`SharedLink`] discipline from DESIGN.md §11: a transfer is charged
+//! `natural * (1 + other concurrently streaming exchanges)`, so scatter and
+//! gather phases where several nodes exchange at once contend fairly, while
+//! a lone stream pays exactly its natural time.
+//!
+//! Like the intra-node arbiter, the fabric only inflates **simulated time**;
+//! what bytes move — and therefore what the merged product contains — is
+//! identical to serial execution.
+//!
+//! [`MachineSpec::bulk_copy_seconds`]: crate::memory::machine::MachineSpec::bulk_copy_seconds
+//! [`SharedLink`]: crate::memory::contention::SharedLink
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Remaining declared demand below this is treated as "not streaming"
+/// (mirrors [`LINK_EPS`](crate::memory::contention::LINK_EPS)).
+pub const FABRIC_EPS: f64 = 1e-12;
+
+/// Latency/bandwidth parameters of the inter-node link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FabricSpec {
+    /// Per-message injection latency in seconds.
+    pub latency_s: f64,
+    /// Point-to-point stream bandwidth in bytes/second.
+    pub bandwidth_bps: f64,
+}
+
+impl Default for FabricSpec {
+    /// A 200 Gb/s-class commodity interconnect (HDR InfiniBand): 25 GB/s
+    /// per point-to-point stream, 1.5 µs injection latency.
+    fn default() -> Self {
+        FabricSpec { latency_s: 1.5e-6, bandwidth_bps: 25e9 }
+    }
+}
+
+impl FabricSpec {
+    /// Uncontended seconds to move `bytes` over one stream: the same
+    /// latency-plus-bandwidth roofline the intra-node bulk copy pays.
+    /// Zero bytes cost nothing (no message, no latency).
+    pub fn natural_seconds(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            0.0
+        } else {
+            self.latency_s + bytes as f64 / self.bandwidth_bps
+        }
+    }
+}
+
+/// Cumulative fabric arbitration counters, surfaced in `MetricsSnapshot`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FabricStats {
+    /// Natural (uncontended) transfer seconds pushed through the fabric.
+    pub busy_seconds: f64,
+    /// Extra seconds charged by serialization on top of `busy_seconds`.
+    pub stall_seconds: f64,
+    /// Bytes exchanged between nodes.
+    pub bytes: u64,
+    /// Individual arbitrated transfer requests.
+    pub requests: u64,
+    /// Peak number of concurrently streaming exchanges on any request.
+    pub peak_streams: u64,
+}
+
+impl FabricStats {
+    /// Fraction of fabric time doing useful transfer work: 1.0 means no
+    /// contention was ever observed; lower means serialization stalls.
+    pub fn utilization(&self) -> f64 {
+        let t = self.busy_seconds + self.stall_seconds;
+        if t <= 0.0 {
+            1.0
+        } else {
+            self.busy_seconds / t
+        }
+    }
+}
+
+#[derive(Debug)]
+struct StreamEntry {
+    /// Declared transfer seconds not yet consumed; a stream stops
+    /// inflicting contention once its declared budget is spent.
+    remaining: f64,
+}
+
+#[derive(Debug, Default)]
+struct FabricInner {
+    next_seq: u64,
+    /// Keyed by open order, so iteration is deterministic.
+    entries: BTreeMap<u64, StreamEntry>,
+    stats: FabricStats,
+}
+
+/// The cluster-owned inter-node link arbiter. Cheap to share: one mutex,
+/// touched once per stream open/close and per transfer.
+#[derive(Debug)]
+pub struct Fabric {
+    spec: FabricSpec,
+    inner: Mutex<FabricInner>,
+}
+
+impl Fabric {
+    pub fn new(spec: FabricSpec) -> Arc<Fabric> {
+        Arc::new(Fabric { spec, inner: Mutex::default() })
+    }
+
+    pub fn spec(&self) -> FabricSpec {
+        self.spec
+    }
+
+    pub fn stats(&self) -> FabricStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Open a stream that declares its total exchange demand up front (the
+    /// shard plan knows every exchange size symbolically). The stream
+    /// contends with other open streams until its declared budget drains
+    /// or it is dropped.
+    pub fn open(self: &Arc<Self>, declared_bytes: u64) -> FabricStream {
+        let remaining = self.spec.natural_seconds(declared_bytes);
+        let seq = {
+            let mut inner = self.inner.lock().unwrap();
+            let seq = inner.next_seq;
+            inner.next_seq += 1;
+            inner.entries.insert(seq, StreamEntry { remaining });
+            seq
+        };
+        FabricStream { fabric: Arc::clone(self), seq }
+    }
+
+    fn close(&self, seq: u64) {
+        self.inner.lock().unwrap().entries.remove(&seq);
+    }
+
+    /// Arbitrate one transfer for stream `seq`: returns the charged
+    /// seconds (`natural * (1 + other streams with declared budget left)`).
+    fn transfer(&self, seq: u64, bytes: u64) -> f64 {
+        let natural = self.spec.natural_seconds(bytes);
+        let mut inner = self.inner.lock().unwrap();
+        let others = inner
+            .entries
+            .iter()
+            .filter(|(s, e)| **s != seq && e.remaining > FABRIC_EPS)
+            .count();
+        let streams = 1 + others as u64;
+        let charged = natural * streams as f64;
+        if let Some(e) = inner.entries.get_mut(&seq) {
+            e.remaining = (e.remaining - natural).max(0.0);
+        }
+        inner.stats.busy_seconds += natural;
+        inner.stats.stall_seconds += charged - natural;
+        inner.stats.bytes += bytes;
+        inner.stats.requests += 1;
+        inner.stats.peak_streams = inner.stats.peak_streams.max(streams);
+        charged
+    }
+}
+
+/// One node's live exchange stream. Dropping it detaches the stream from
+/// the arbiter (the exchange finished).
+#[derive(Debug)]
+pub struct FabricStream {
+    fabric: Arc<Fabric>,
+    seq: u64,
+}
+
+impl FabricStream {
+    /// Charge one exchange through the arbiter; returns charged seconds.
+    pub fn transfer(&self, bytes: u64) -> f64 {
+        self.fabric.transfer(self.seq, bytes)
+    }
+}
+
+impl Drop for FabricStream {
+    fn drop(&mut self) {
+        self.fabric.close(self.seq);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn natural_time_is_latency_plus_bandwidth_and_zero_for_no_bytes() {
+        let spec = FabricSpec { latency_s: 1e-6, bandwidth_bps: 1e9 };
+        assert_eq!(spec.natural_seconds(0), 0.0);
+        assert!((spec.natural_seconds(1_000_000_000) - 1.000001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lone_stream_pays_exactly_natural_time() {
+        let fabric = Fabric::new(FabricSpec { latency_s: 0.0, bandwidth_bps: 1e9 });
+        let s = fabric.open(2_000_000_000);
+        assert_eq!(s.transfer(1_000_000_000), 1.0);
+        let st = fabric.stats();
+        assert_eq!(st.busy_seconds, 1.0);
+        assert_eq!(st.stall_seconds, 0.0);
+        assert_eq!(st.bytes, 1_000_000_000);
+        assert_eq!(st.peak_streams, 1);
+        assert!((st.utilization() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concurrent_exchanges_serialize_fairly() {
+        let fabric = Fabric::new(FabricSpec { latency_s: 0.0, bandwidth_bps: 1e9 });
+        let a = fabric.open(1_000_000_000);
+        let b = fabric.open(1_000_000_000);
+        // Two open streams with budget: each pays a 2x factor.
+        assert_eq!(a.transfer(500_000_000), 1.0);
+        assert_eq!(b.transfer(500_000_000), 1.0);
+        let st = fabric.stats();
+        assert_eq!(st.busy_seconds, 1.0);
+        assert_eq!(st.stall_seconds, 1.0);
+        assert_eq!(st.peak_streams, 2);
+        // A's second transfer drains its declared budget; afterwards B
+        // streams alone even while A is still open.
+        assert_eq!(a.transfer(500_000_000), 1.0);
+        assert_eq!(b.transfer(500_000_000), 0.5);
+        drop(a);
+        assert_eq!(b.transfer(250_000_000), 0.25);
+    }
+
+    #[test]
+    fn dropped_streams_stop_contending() {
+        let fabric = Fabric::new(FabricSpec { latency_s: 0.0, bandwidth_bps: 1e9 });
+        let a = fabric.open(1_000_000_000);
+        {
+            let _b = fabric.open(1_000_000_000);
+            assert_eq!(a.transfer(100_000_000), 0.2);
+        }
+        assert_eq!(a.transfer(100_000_000), 0.1);
+    }
+}

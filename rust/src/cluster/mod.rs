@@ -1,0 +1,491 @@
+//! Sharded SpGEMM across simulated nodes (DESIGN.md §12).
+//!
+//! The paper's headline capacity result — products larger than the fastest
+//! memory — stops at one node's slow DRAM. This layer breaks that ceiling
+//! by treating the inter-node link as one more rung of the multilevel
+//! hierarchy: a cluster of N identical nodes joined by a priced, arbitrated
+//! [`Fabric`]. The decomposition is 1D block-row (arXiv:1801.03065): each
+//! node owns a contiguous range of A's rows and the matching rows of C,
+//! while B is replicated, so the per-shard numeric phase is the **unchanged
+//! single-node engine stack** — chunk planners, residency, adaptive
+//! accumulators all compose with scale-out for free (arXiv:1804.01698's
+//! argument for keeping the tuned local kernel intact).
+//!
+//! A sharded product runs in three phases:
+//!
+//! 1. **Scatter** — node 0 (the coordinator, where operands are
+//!    registered) streams each remote node its A block-rows plus the B
+//!    replica; the concurrent streams contend on the fabric.
+//! 2. **Compute** — every non-empty shard runs `Policy::Auto` through the
+//!    ordinary planner on its own node; empty shards are idle.
+//! 3. **Gather** — remote nodes stream their C block-rows home
+//!    concurrently; each node's transfer overlaps the tail of its own
+//!    numeric work (the §3 overlap discipline lifted to the fabric), so a
+//!    node's exposed product time is `max(compute, gather)`.
+//!
+//! The merge contract is pure row concatenation in partition order: every
+//! global row of C is computed by exactly one shard with the identical
+//! kernel and identical k-order accumulation, so the merged product is
+//! **bit-identical** to the single-node product up to per-row entry order
+//! (hash-family engines emit rows unsorted; canonicalize per row to
+//! compare). Fabric arbitration only inflates simulated time.
+
+pub mod fabric;
+pub mod partition;
+
+pub use fabric::{Fabric, FabricSpec, FabricStats, FabricStream};
+pub use partition::{partition_rows, partition_rows_weighted, row_flops, Partition};
+
+use std::sync::Arc;
+
+use crate::coordinator::planner;
+use crate::coordinator::{ExplainRow, Job, JobKind, PlannerOptions, Policy};
+use crate::engine::cost::CostEstimate;
+use crate::error::MlmemError;
+use crate::memory::arch::Arch;
+use crate::memory::SimReport;
+use crate::sparse::Csr;
+
+/// Shape of a simulated cluster: how many identical nodes, joined by what
+/// fabric. Node 0 is the coordinator that owns registered operands and
+/// assembles the merged product.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClusterSpec {
+    pub nodes: usize,
+    pub fabric: FabricSpec,
+}
+
+impl ClusterSpec {
+    pub fn new(nodes: usize) -> Self {
+        ClusterSpec { nodes: nodes.max(1), fabric: FabricSpec::default() }
+    }
+
+    pub fn with_fabric(mut self, fabric: FabricSpec) -> Self {
+        self.fabric = fabric;
+        self
+    }
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        ClusterSpec::new(1)
+    }
+}
+
+/// The global plan a sharded product executes under: the block-row
+/// partition plus the per-shard symbolic multiply counts that justified it.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub partition: Partition,
+    /// Symbolic multiply count per shard; sums to `total_mults`.
+    pub shard_mults: Vec<u64>,
+    /// Global symbolic multiply count (`spgemm_flops / 2`).
+    pub total_mults: u64,
+}
+
+impl ShardPlan {
+    /// One symbolic pass over A×B feeds both the balanced partition and
+    /// the per-shard work accounting.
+    pub fn build(a: &Csr, b: &Csr, nodes: usize) -> ShardPlan {
+        let flops = partition::row_flops(a, b);
+        let partition = partition::partition_rows_weighted(a, &flops, nodes);
+        let shard_mults: Vec<u64> = partition
+            .ranges
+            .iter()
+            .map(|&(lo, hi)| flops[lo..hi].iter().sum())
+            .collect();
+        let total_mults = shard_mults.iter().sum();
+        ShardPlan { partition, shard_mults, total_mults }
+    }
+}
+
+/// One node's record of a sharded run.
+#[derive(Clone, Debug)]
+pub struct ShardRun {
+    pub node: usize,
+    /// Row range of A (and C) this node owned.
+    pub rows: (usize, usize),
+    /// Symbolic multiplies this shard performed.
+    pub mults: u64,
+    /// Local planner decision (`"idle"` for an empty shard).
+    pub decision: String,
+    /// The local planner's cost prediction for the chosen candidate.
+    pub predicted: Option<CostEstimate>,
+    /// Simulated seconds of the node's local numeric phase.
+    pub compute_seconds: f64,
+    /// Fabric-charged seconds streaming this node's C rows home (0 for
+    /// the coordinator and for idle nodes).
+    pub gather_seconds: f64,
+    pub c_nnz: usize,
+}
+
+/// Result of a sharded product: the merged C plus the full cost breakdown.
+#[derive(Debug)]
+pub struct ClusterOutcome {
+    pub c: Csr,
+    pub plan: ShardPlan,
+    pub shards: Vec<ShardRun>,
+    /// All nodes' local simulated work folded into one report (times and
+    /// traffic add — total work, not the critical path).
+    pub report: SimReport,
+    /// Makespan of the operand distribution phase (max charged scatter).
+    pub scatter_seconds: f64,
+    /// Slowest node's local numeric phase.
+    pub compute_seconds: f64,
+    /// Slowest node's charged gather transfer.
+    pub gather_seconds: f64,
+    /// Product-phase critical path: `max over nodes of
+    /// max(compute, gather)` — gather overlaps each node's own compute.
+    pub elapsed_seconds: f64,
+    /// `scatter_seconds + elapsed_seconds`: end-to-end including one-time
+    /// operand distribution.
+    pub total_seconds: f64,
+}
+
+impl ClusterOutcome {
+    /// Total fabric-charged exchange seconds on the critical path.
+    pub fn exchange_seconds(&self) -> f64 {
+        self.scatter_seconds + self.gather_seconds
+    }
+}
+
+/// Run `C = A × B` sharded across `spec.nodes` simulated copies of `arch`,
+/// exchanging over `fabric`. Every non-empty shard goes through the
+/// ordinary `Policy::Auto` planner; a shard whose chosen plan cannot run
+/// (e.g. it does not fit even the shard-sized problem) fails the whole
+/// product, exactly like the single-node path.
+pub fn execute(
+    a: &Arc<Csr>,
+    b: &Arc<Csr>,
+    arch: &Arc<Arch>,
+    spec: &ClusterSpec,
+    fabric: &Arc<Fabric>,
+    opts: &PlannerOptions,
+) -> Result<ClusterOutcome, MlmemError> {
+    if a.ncols != b.nrows {
+        return Err(MlmemError::ShapeMismatch {
+            a: (a.nrows, a.ncols),
+            b: (b.nrows, b.ncols),
+        });
+    }
+    let plan = ShardPlan::build(a, b, spec.nodes);
+    let ranges = plan.partition.ranges.clone();
+    let shards_a: Vec<Csr> = ranges.iter().map(|&(lo, hi)| a.slice_rows(lo, hi)).collect();
+
+    // Scatter: each remote node receives its A block-rows plus the full B
+    // replica in one streamed exchange; the streams run concurrently and
+    // contend. The coordinator's own shard never touches the fabric.
+    let mut scatter_charged = vec![0.0f64; ranges.len()];
+    {
+        let streams: Vec<(usize, u64, FabricStream)> = (1..ranges.len())
+            .filter(|&node| ranges[node].0 < ranges[node].1)
+            .map(|node| {
+                let bytes = shards_a[node].size_bytes() + b.size_bytes();
+                (node, bytes, fabric.open(bytes))
+            })
+            .collect();
+        for (node, bytes, stream) in &streams {
+            scatter_charged[*node] = stream.transfer(*bytes);
+        }
+    }
+    let scatter_seconds = scatter_charged.iter().cloned().fold(0.0, f64::max);
+
+    // Compute: every non-empty shard is an ordinary Auto job on its own
+    // node; the single-node engine stack runs unchanged.
+    let mut shards: Vec<ShardRun> = Vec::with_capacity(ranges.len());
+    let mut products: Vec<Csr> = Vec::with_capacity(ranges.len());
+    let mut reports: Vec<SimReport> = Vec::new();
+    for (node, a_i) in shards_a.into_iter().enumerate() {
+        let (lo, hi) = ranges[node];
+        if lo == hi {
+            products.push(Csr::empty(0, b.ncols));
+            shards.push(ShardRun {
+                node,
+                rows: (lo, hi),
+                mults: 0,
+                decision: "idle".into(),
+                predicted: None,
+                compute_seconds: 0.0,
+                gather_seconds: 0.0,
+                c_nnz: 0,
+            });
+            continue;
+        }
+        let mut job = Job::new(
+            node as u64 + 1,
+            JobKind::Spgemm { a: Arc::new(a_i), b: Arc::clone(b) },
+            Arc::clone(arch),
+            Policy::Auto,
+        );
+        job.keep_product = true;
+        let result = planner::execute(&job, opts)?;
+        let c_i = result.c.expect("keep_product attaches the shard product");
+        shards.push(ShardRun {
+            node,
+            rows: (lo, hi),
+            mults: plan.shard_mults[node],
+            decision: result.decision.name(),
+            predicted: result.predicted,
+            compute_seconds: result.report.seconds,
+            gather_seconds: 0.0,
+            c_nnz: c_i.nnz(),
+        });
+        reports.push(result.report);
+        products.push(c_i);
+    }
+
+    // Gather: remote nodes stream their C block-rows home concurrently;
+    // each node's transfer overlaps its own numeric tail, so the exposed
+    // product time per node is max(compute, gather).
+    {
+        let streams: Vec<(usize, u64, FabricStream)> = (1..ranges.len())
+            .filter(|&node| ranges[node].0 < ranges[node].1)
+            .map(|node| {
+                let bytes = products[node].size_bytes();
+                (node, bytes, fabric.open(bytes))
+            })
+            .collect();
+        for (node, bytes, stream) in &streams {
+            shards[*node].gather_seconds = stream.transfer(*bytes);
+        }
+    }
+
+    let compute_seconds =
+        shards.iter().map(|s| s.compute_seconds).fold(0.0, f64::max);
+    let gather_seconds =
+        shards.iter().map(|s| s.gather_seconds).fold(0.0, f64::max);
+    let elapsed_seconds = shards
+        .iter()
+        .map(|s| s.compute_seconds.max(s.gather_seconds))
+        .fold(0.0, f64::max);
+
+    let report = if reports.is_empty() {
+        empty_report(arch)
+    } else {
+        planner::combine_sim_reports(&reports.iter().collect::<Vec<&SimReport>>())
+    };
+
+    let c = concat_block_rows(&products, b.ncols);
+    Ok(ClusterOutcome {
+        c,
+        plan,
+        shards,
+        report,
+        scatter_seconds,
+        compute_seconds,
+        gather_seconds,
+        elapsed_seconds,
+        total_seconds: scatter_seconds + elapsed_seconds,
+    })
+}
+
+/// Per-shard view of `--explain` for a sharded product: the local
+/// candidate table plus the uncontended fabric price of scattering this
+/// shard's operands.
+#[derive(Debug)]
+pub struct ShardExplain {
+    pub node: usize,
+    pub rows: (usize, usize),
+    pub mults: u64,
+    /// Uncontended seconds to stream this shard's A block-rows + the B
+    /// replica from the coordinator (0 for the coordinator itself).
+    pub scatter_seconds: f64,
+    pub candidates: Vec<ExplainRow>,
+}
+
+/// Score *and run* every Auto candidate for every non-empty shard — the
+/// cluster flavour of `--explain`. Idle shards are omitted.
+pub fn explain(
+    a: &Csr,
+    b: &Csr,
+    arch: &Arc<Arch>,
+    spec: &ClusterSpec,
+    opts: &PlannerOptions,
+) -> Result<(ShardPlan, Vec<ShardExplain>), MlmemError> {
+    if a.ncols != b.nrows {
+        return Err(MlmemError::ShapeMismatch {
+            a: (a.nrows, a.ncols),
+            b: (b.nrows, b.ncols),
+        });
+    }
+    let plan = ShardPlan::build(a, b, spec.nodes);
+    let mut out = Vec::new();
+    for (node, &(lo, hi)) in plan.partition.ranges.iter().enumerate() {
+        if lo == hi {
+            continue;
+        }
+        let a_i = a.slice_rows(lo, hi);
+        let scatter_seconds = if node == 0 {
+            0.0
+        } else {
+            spec.fabric.natural_seconds(a_i.size_bytes() + b.size_bytes())
+        };
+        let candidates = crate::coordinator::explain_spgemm(&a_i, b, arch, opts);
+        out.push(ShardExplain {
+            node,
+            rows: (lo, hi),
+            mults: plan.shard_mults[node],
+            scatter_seconds,
+            candidates,
+        });
+    }
+    Ok((plan, out))
+}
+
+/// Row-concatenate per-shard products in partition order. Pure
+/// concatenation is the whole merge contract: block-row shards never
+/// split a row, so no numeric combining happens at shard boundaries.
+fn concat_block_rows(parts: &[Csr], ncols: usize) -> Csr {
+    let nrows: usize = parts.iter().map(|p| p.nrows).sum();
+    let nnz: usize = parts.iter().map(|p| p.nnz()).sum();
+    let mut rowmap = Vec::with_capacity(nrows + 1);
+    rowmap.push(0usize);
+    let mut entries = Vec::with_capacity(nnz);
+    let mut values = Vec::with_capacity(nnz);
+    for p in parts {
+        let base = entries.len();
+        for r in 1..p.rowmap.len() {
+            rowmap.push(base + p.rowmap[r]);
+        }
+        entries.extend_from_slice(&p.entries);
+        values.extend_from_slice(&p.values);
+    }
+    Csr::new(nrows, ncols, rowmap, entries, values)
+}
+
+/// A zero-work report for the degenerate all-shards-idle product (A has
+/// no rows), shaped like the machine that would have run it.
+fn empty_report(arch: &Arc<Arch>) -> SimReport {
+    SimReport {
+        machine: arch.spec.name.clone(),
+        threads: arch.spec.threads,
+        flops: 0,
+        seconds: 0.0,
+        gflops: 0.0,
+        compute_seconds: 0.0,
+        mem_seconds: 0.0,
+        copy_seconds: 0.0,
+        async_copy_seconds: 0.0,
+        overlap_stall_seconds: 0.0,
+        link_stall_seconds: 0.0,
+        uvm_seconds: 0.0,
+        l1_miss_pct: 0.0,
+        l2_miss_pct: 0.0,
+        traffic: Vec::new(),
+        uvm_faults: 0,
+        uvm_evictions: 0,
+        mcdram_miss_pct: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::rhs::uniform_degree;
+    use crate::gen::scale::ScaleFactor;
+    use crate::memory::arch::{knl, KnlMode};
+    use crate::sparse::ops::{spgemm_flops, spgemm_reference};
+
+    fn canonical(c: &Csr) -> Csr {
+        let mut rowmap = vec![0usize];
+        let mut entries = Vec::with_capacity(c.nnz());
+        let mut values = Vec::with_capacity(c.nnz());
+        for i in 0..c.nrows {
+            let (cols, vals) = c.row(i);
+            let mut row: Vec<(u32, f64)> =
+                cols.iter().copied().zip(vals.iter().copied()).collect();
+            row.sort_by_key(|&(col, _)| col);
+            for (col, v) in row {
+                entries.push(col);
+                values.push(v);
+            }
+            rowmap.push(entries.len());
+        }
+        Csr::new(c.nrows, c.ncols, rowmap, entries, values)
+    }
+
+    fn arch() -> Arc<Arch> {
+        Arc::new(knl(KnlMode::Ddr, 64, ScaleFactor::new(1 << 10)))
+    }
+
+    #[test]
+    fn sharded_product_matches_reference_bitwise_for_every_node_count() {
+        let a = Arc::new(uniform_degree(53, 24, 4, 11));
+        let b = Arc::new(uniform_degree(24, 24, 3, 12));
+        let arch = arch();
+        let opts = PlannerOptions::default();
+        let reference = canonical(&spgemm_reference(&a, &b));
+        for nodes in 1..=8 {
+            let spec = ClusterSpec::new(nodes);
+            let fabric = Fabric::new(spec.fabric);
+            let out = execute(&a, &b, &arch, &spec, &fabric, &opts).unwrap();
+            let got = canonical(&out.c);
+            assert_eq!(got.rowmap, reference.rowmap, "nodes={nodes}");
+            assert_eq!(got.entries, reference.entries, "nodes={nodes}");
+            // Values must be IEEE-bit-identical, not merely close: every
+            // row is produced by the same kernel accumulating in the same
+            // k order regardless of which shard owns it.
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+            assert_eq!(bits(&got.values), bits(&reference.values), "nodes={nodes}");
+        }
+    }
+
+    #[test]
+    fn plan_accounts_for_all_symbolic_work() {
+        let a = Arc::new(uniform_degree(40, 16, 3, 21));
+        let b = Arc::new(uniform_degree(16, 16, 4, 22));
+        let plan = ShardPlan::build(&a, &b, 4);
+        assert_eq!(plan.shard_mults.iter().sum::<u64>(), plan.total_mults);
+        assert_eq!(plan.total_mults, spgemm_flops(&a, &b) / 2);
+    }
+
+    #[test]
+    fn single_node_cluster_pays_no_fabric_time() {
+        let a = Arc::new(uniform_degree(32, 16, 3, 31));
+        let b = Arc::new(uniform_degree(16, 16, 3, 32));
+        let spec = ClusterSpec::new(1);
+        let fabric = Fabric::new(spec.fabric);
+        let out = execute(&a, &b, &arch(), &spec, &fabric, &PlannerOptions::default())
+            .unwrap();
+        assert_eq!(out.scatter_seconds, 0.0);
+        assert_eq!(out.gather_seconds, 0.0);
+        assert_eq!(fabric.stats().bytes, 0);
+        assert_eq!(out.elapsed_seconds, out.compute_seconds);
+    }
+
+    #[test]
+    fn gather_overlaps_compute_in_the_elapsed_time() {
+        let a = Arc::new(uniform_degree(64, 16, 4, 41));
+        let b = Arc::new(uniform_degree(16, 16, 4, 42));
+        let spec = ClusterSpec::new(4);
+        let fabric = Fabric::new(spec.fabric);
+        let out = execute(&a, &b, &arch(), &spec, &fabric, &PlannerOptions::default())
+            .unwrap();
+        let per_node = out
+            .shards
+            .iter()
+            .map(|s| s.compute_seconds.max(s.gather_seconds))
+            .fold(0.0, f64::max);
+        assert_eq!(out.elapsed_seconds, per_node);
+        assert!(out.elapsed_seconds <= out.compute_seconds + out.gather_seconds);
+        assert_eq!(out.total_seconds, out.scatter_seconds + out.elapsed_seconds);
+        assert!(fabric.stats().bytes > 0);
+    }
+
+    #[test]
+    fn explain_reports_every_live_shard() {
+        let a = uniform_degree(48, 16, 3, 51);
+        let b = uniform_degree(16, 16, 3, 52);
+        let spec = ClusterSpec::new(4);
+        let (plan, shards) =
+            explain(&a, &b, &arch(), &spec, &PlannerOptions::default()).unwrap();
+        let live =
+            plan.partition.ranges.iter().filter(|&&(lo, hi)| lo < hi).count();
+        assert_eq!(shards.len(), live);
+        assert_eq!(shards[0].scatter_seconds, 0.0);
+        for s in &shards[1..] {
+            assert!(s.scatter_seconds > 0.0);
+            assert!(!s.candidates.is_empty());
+        }
+    }
+}

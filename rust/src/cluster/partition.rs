@@ -1,0 +1,155 @@
+//! Block-row partitioner: contiguous row ranges balanced by symbolic work.
+//!
+//! The partitioner follows the 1D block-row decomposition of Deveci et
+//! al.'s multi-threaded SpGEMM partitioning study (arXiv:1801.03065): each
+//! node owns a contiguous range of A's rows (and the matching rows of C),
+//! while B is replicated. Ranges are chosen so that the **symbolic
+//! multiply count** — `Σᵢ Σ_{k ∈ A(i,:)} nnz(B(k,:))`, the same quantity
+//! the single-node symbolic pass computes — is as even as possible across
+//! nodes. When the product is symbolically empty the partitioner falls
+//! back to balancing A's nnz, and then to equal row counts, so every input
+//! still gets a covering, contiguous partition.
+
+use crate::sparse::Csr;
+
+/// A contiguous block-row split: `ranges[s] = (lo, hi)` means shard `s`
+/// owns rows `lo..hi` of A. Ranges are contiguous, non-overlapping, and
+/// cover `[0, a.nrows)` exactly; empty ranges are legal (more nodes than
+/// worthwhile splits).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl Partition {
+    pub fn nodes(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// The shard owning `row`, if any (exactly one for rows in range).
+    pub fn owner_of(&self, row: usize) -> Option<usize> {
+        self.ranges.iter().position(|&(lo, hi)| lo <= row && row < hi)
+    }
+}
+
+/// Per-row symbolic multiply counts of `A × B`: for row `i`, the sum of
+/// `nnz(B(k,:))` over the column indices `k` of `A(i,:)`. Summed over all
+/// rows this is exactly `spgemm_flops / 2`.
+pub fn row_flops(a: &Csr, b: &Csr) -> Vec<u64> {
+    (0..a.nrows)
+        .map(|i| a.row(i).0.iter().map(|&k| b.row_len(k as usize) as u64).sum())
+        .collect()
+}
+
+/// Partition A's rows into `nodes` contiguous ranges balanced by the
+/// symbolic multiply count of `A × B`.
+pub fn partition_rows(a: &Csr, b: &Csr, nodes: usize) -> Partition {
+    partition_rows_weighted(a, &row_flops(a, b), nodes)
+}
+
+/// Partition with caller-supplied per-row weights (one per row of A).
+/// All-zero weights fall back to A's per-row nnz, and then to equal row
+/// counts, so the partition is never degenerate for a non-empty A.
+pub fn partition_rows_weighted(a: &Csr, flops: &[u64], nodes: usize) -> Partition {
+    assert_eq!(flops.len(), a.nrows, "one weight per row of A");
+    let nodes = nodes.max(1);
+    if flops.iter().any(|&w| w > 0) {
+        return balanced(flops, nodes);
+    }
+    let nnz: Vec<u64> = (0..a.nrows).map(|i| a.row_len(i) as u64).collect();
+    if nnz.iter().any(|&w| w > 0) {
+        return balanced(&nnz, nodes);
+    }
+    balanced(&vec![1u64; a.nrows], nodes)
+}
+
+/// Greedy prefix split: shard `s` ends at the first row where the weight
+/// prefix sum reaches `total * (s+1) / nodes`; the last shard takes the
+/// remainder. This is the standard 1D chains-on-chains heuristic — within
+/// one row's weight of the optimum for these monotone prefix targets.
+fn balanced(weights: &[u64], nodes: usize) -> Partition {
+    let total: u128 = weights.iter().map(|&w| w as u128).sum();
+    let mut ranges = Vec::with_capacity(nodes);
+    let mut lo = 0usize;
+    let mut cum = 0u128;
+    for s in 0..nodes {
+        let mut hi = lo;
+        if s + 1 == nodes {
+            hi = weights.len();
+        } else {
+            let target = total * (s as u128 + 1) / nodes as u128;
+            while hi < weights.len() && cum < target {
+                cum += weights[hi] as u128;
+                hi += 1;
+            }
+        }
+        ranges.push((lo, hi));
+        lo = hi;
+    }
+    Partition { ranges }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::rhs::uniform_degree;
+
+    fn assert_covering(p: &Partition, m: usize, nodes: usize) {
+        assert_eq!(p.nodes(), nodes);
+        let mut expect = 0usize;
+        for &(lo, hi) in &p.ranges {
+            assert_eq!(lo, expect, "ranges must be contiguous");
+            assert!(lo <= hi);
+            expect = hi;
+        }
+        assert_eq!(expect, m, "ranges must cover [0, m)");
+        for row in 0..m {
+            assert!(p.owner_of(row).is_some());
+        }
+    }
+
+    #[test]
+    fn covers_all_rows_for_every_node_count() {
+        let a = uniform_degree(37, 16, 3, 7);
+        let b = uniform_degree(16, 16, 3, 8);
+        for nodes in 1..=9 {
+            let p = partition_rows(&a, &b, nodes);
+            assert_covering(&p, a.nrows, nodes);
+        }
+    }
+
+    #[test]
+    fn more_nodes_than_rows_yields_empty_tail_shards() {
+        let a = uniform_degree(3, 8, 2, 1);
+        let b = uniform_degree(8, 8, 2, 2);
+        let p = partition_rows(&a, &b, 8);
+        assert_covering(&p, 3, 8);
+        let empty = p.ranges.iter().filter(|&&(lo, hi)| lo == hi).count();
+        assert_eq!(empty, 5);
+    }
+
+    #[test]
+    fn balances_skewed_flops_not_row_counts() {
+        // First row does all the symbolic work; a flop-balanced 2-way
+        // split isolates it instead of splitting rows evenly.
+        let weights = [1000u64, 1, 1, 1, 1, 1, 1, 1];
+        let a = uniform_degree(8, 8, 1, 3);
+        let p = partition_rows_weighted(&a, &weights, 2);
+        assert_eq!(p.ranges, vec![(0, 1), (1, 8)]);
+    }
+
+    #[test]
+    fn empty_symbolic_product_falls_back_to_nnz_then_rows() {
+        // B empty -> zero flops everywhere -> nnz-balanced fallback.
+        let a = uniform_degree(8, 4, 2, 5);
+        let b = uniform_degree(4, 4, 0, 6);
+        let p = partition_rows(&a, &b, 2);
+        assert_covering(&p, 8, 2);
+        assert_eq!(p.ranges, vec![(0, 4), (4, 8)]);
+        // A empty too -> equal-rows last resort.
+        let a0 = uniform_degree(6, 4, 0, 5);
+        let p0 = partition_rows(&a0, &b, 3);
+        assert_covering(&p0, 6, 3);
+        assert_eq!(p0.ranges, vec![(0, 2), (2, 4), (4, 6)]);
+    }
+}

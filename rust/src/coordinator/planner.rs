@@ -1022,7 +1022,7 @@ fn run_chain_hop(
 /// Fold several simulated reports (hops + inter-hop transfers) into one
 /// chain-level report: times, traffic, and fault counts add; the miss
 /// ratios are flop-weighted averages.
-fn combine_sim_reports(parts: &[&SimReport]) -> SimReport {
+pub(crate) fn combine_sim_reports(parts: &[&SimReport]) -> SimReport {
     let first = parts.first().expect("at least one report");
     let mut traffic = first.traffic.clone();
     for part in &parts[1..] {

@@ -5,6 +5,7 @@
 //! session-handle API in `coordinator::session`.
 
 use super::job::{Decision, JobResult};
+use crate::cluster::FabricStats;
 use crate::error::{JobControl, MlmemError};
 use crate::memory::contention::LinkStats;
 use crate::memory::ResidencyStats;
@@ -31,6 +32,10 @@ pub struct Metrics {
     pub sim_time_ns: AtomicU64,
     /// Total simulated flops across completed jobs.
     pub flops: AtomicU64,
+    /// Sharded (cluster) products completed through `spgemm_cluster`.
+    pub cluster_products: AtomicU64,
+    /// Per-node shard jobs those products ran (idle shards not counted).
+    pub shard_runs: AtomicU64,
     dec_flat_default: AtomicU64,
     dec_flat_fast: AtomicU64,
     dec_data_placement: AtomicU64,
@@ -78,19 +83,32 @@ pub struct MetricsSnapshot {
     /// Times the scheduler reordered the Normal lane to pair a
     /// copy-bound job with a compute-bound one.
     pub co_schedule_hits: u64,
+    /// Simulated nodes the session's cluster spans (1 when no cluster
+    /// was configured).
+    pub cluster_nodes: usize,
+    /// Sharded products completed through `spgemm_cluster`.
+    pub cluster_products: u64,
+    /// Per-node shard jobs those products ran (idle shards not counted).
+    pub shard_runs: u64,
+    /// Inter-node fabric arbitration counters: busy/stall seconds
+    /// (utilization), bytes exchanged, requests, peak concurrent streams.
+    pub fabric: FabricStats,
 }
 
 impl Metrics {
     /// Snapshot every counter; the caller supplies the live queue depths
     /// (the worker pool owns those numbers), the session's residency-pool
-    /// stats, the shared link's arbitration stats, and the scheduler's
-    /// co-schedule hit count.
+    /// stats, the shared link's arbitration stats, the scheduler's
+    /// co-schedule hit count, and the cluster's node count + fabric stats
+    /// (1 node and default stats when no cluster was configured).
     pub fn snapshot(
         &self,
         queue: QueueDepth,
         residency: ResidencyStats,
         link: LinkStats,
         co_schedule_hits: u64,
+        cluster_nodes: usize,
+        fabric: FabricStats,
     ) -> MetricsSnapshot {
         let load = |c: &AtomicU64| c.load(Ordering::SeqCst);
         MetricsSnapshot {
@@ -106,6 +124,10 @@ impl Metrics {
             residency,
             link,
             co_schedule_hits,
+            cluster_nodes,
+            cluster_products: load(&self.cluster_products),
+            shard_runs: load(&self.shard_runs),
+            fabric,
             decisions: DecisionCounts {
                 flat_default: load(&self.dec_flat_default),
                 flat_fast: load(&self.dec_flat_fast),
@@ -329,7 +351,14 @@ mod tests {
         m.record_outcome(&Err(MlmemError::DeadlineExceeded));
         m.record_outcome(&Err(MlmemError::Planner("boom".into())));
         let depth = QueueDepth { pending: 3, high: 1, normal: 2 };
-        let s = m.snapshot(depth, ResidencyStats::default(), LinkStats::default(), 5);
+        let s = m.snapshot(
+            depth,
+            ResidencyStats::default(),
+            LinkStats::default(),
+            5,
+            1,
+            FabricStats::default(),
+        );
         assert_eq!((s.cancelled, s.failed, s.completed), (2, 1, 0));
         // The DeadlineExceeded outcome is an SLO miss; plain Cancelled
         // is not.
@@ -338,6 +367,9 @@ mod tests {
         assert_eq!(s.residency, ResidencyStats::default());
         assert_eq!(s.link, LinkStats::default());
         assert_eq!(s.co_schedule_hits, 5);
+        assert_eq!(s.cluster_nodes, 1);
+        assert_eq!((s.cluster_products, s.shard_runs), (0, 0));
+        assert_eq!(s.fabric, FabricStats::default());
     }
 
     #[test]

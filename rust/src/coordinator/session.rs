@@ -35,6 +35,15 @@
 //! compute-bound jobs alongside copy-bound ones so the link and the
 //! cores stay busy together.
 //!
+//! A session can also span a simulated **cluster** (DESIGN.md §12):
+//! [`SessionBuilder::cluster`] configures N identical nodes joined by a
+//! priced inter-node [`Fabric`], and
+//! [`spgemm_cluster`](Session::spgemm_cluster) runs a registered product
+//! sharded block-row across them — each shard through the unchanged
+//! single-node planner — merging the per-shard products bit-identically.
+//! Node count and fabric arbitration counters surface in
+//! [`MetricsSnapshot`].
+//!
 //! ```
 //! use mlmem_spgemm::coordinator::Session;
 //! use mlmem_spgemm::gen::rhs::random_csr;
@@ -57,6 +66,7 @@
 use super::job::{ChainAssoc, Decision, Job, JobKind, JobResult, Policy};
 use super::planner::{self, PlannerOptions};
 use super::service::{AdmissionTicket, JobHandle, Metrics, MetricsSnapshot};
+use crate::cluster::{self, ClusterOutcome, ClusterSpec, Fabric, FabricStats};
 use crate::engine::cost::ShapeCore;
 use crate::engine::{
     EngineKind, EngineReport, ExecPlan, NativeCalibration, Problem, Residency,
@@ -188,6 +198,7 @@ pub struct SessionBuilder {
     default_policy: Policy,
     operand_cache: bool,
     co_schedule: bool,
+    cluster: Option<ClusterSpec>,
 }
 
 impl SessionBuilder {
@@ -200,6 +211,7 @@ impl SessionBuilder {
             default_policy: Policy::Auto,
             operand_cache: true,
             co_schedule: true,
+            cluster: None,
         }
     }
 
@@ -255,6 +267,21 @@ impl SessionBuilder {
         self
     }
 
+    /// Span the session across `nodes` simulated copies of the machine
+    /// joined by the default [`FabricSpec`](crate::cluster::FabricSpec)
+    /// — the [`spgemm_cluster`](Session::spgemm_cluster) path shards
+    /// products block-row across them (DESIGN.md §12).
+    pub fn cluster(self, nodes: usize) -> Self {
+        self.cluster_spec(ClusterSpec::new(nodes))
+    }
+
+    /// Like [`cluster`](Self::cluster) with an explicit node count +
+    /// fabric parameterization.
+    pub fn cluster_spec(mut self, spec: ClusterSpec) -> Self {
+        self.cluster = Some(spec);
+        self
+    }
+
     pub fn build(self) -> Session {
         let fast_capacity = self.arch.spec.pools[FAST.0].usable();
         let workers = self.workers.max(1);
@@ -279,8 +306,19 @@ impl SessionBuilder {
                 fast_pool: ResidencyPool::new(fast_capacity, self.operand_cache),
                 link: SharedLink::new(),
             }),
+            cluster: self.cluster.map(|spec| ClusterState {
+                spec,
+                fabric: Fabric::new(spec.fabric),
+            }),
         }
     }
+}
+
+/// A configured cluster: the spec plus the session-lifetime fabric
+/// arbiter all sharded products exchange over.
+struct ClusterState {
+    spec: ClusterSpec,
+    fabric: Arc<Fabric>,
 }
 
 /// The library-facing service front-end; see the module docs.
@@ -295,6 +333,7 @@ pub struct Session {
     next_handle: AtomicU64,
     operands: Mutex<HashMap<u64, Arc<Operand>>>,
     shared: Arc<Shared>,
+    cluster: Option<ClusterState>,
 }
 
 impl Session {
@@ -707,6 +746,50 @@ impl Session {
         Ok((plan, report))
     }
 
+    /// Synchronously run `C = A × B` sharded across the session's
+    /// configured cluster (DESIGN.md §12): block-row partition balanced
+    /// by symbolic flops, every non-empty shard through the unchanged
+    /// single-node `Policy::Auto` planner on its own node, scatter/gather
+    /// exchanges priced and arbitrated on the session's [`Fabric`]. With
+    /// no cluster configured this degrades to a single node that never
+    /// touches the fabric. The merged product rides back on the
+    /// [`ClusterOutcome`] together with the per-shard records and the
+    /// phase-level cost breakdown.
+    pub fn spgemm_cluster(
+        &self,
+        a: MatrixHandle,
+        b: MatrixHandle,
+    ) -> Result<ClusterOutcome, MlmemError> {
+        let oa = self.resolve(a)?;
+        let ob = self.resolve(b)?;
+        let (spec, fabric) = match &self.cluster {
+            Some(c) => (c.spec, Arc::clone(&c.fabric)),
+            None => {
+                let spec = ClusterSpec::new(1);
+                (spec, Fabric::new(spec.fabric))
+            }
+        };
+        let outcome =
+            cluster::execute(&oa.matrix, &ob.matrix, &self.arch, &spec, &fabric, &self.opts)?;
+        self.shared.metrics.cluster_products.fetch_add(1, Ordering::SeqCst);
+        let live = outcome.shards.iter().filter(|s| s.rows.0 < s.rows.1).count();
+        self.shared.metrics.shard_runs.fetch_add(live as u64, Ordering::SeqCst);
+        Ok(outcome)
+    }
+
+    /// Simulated nodes this session spans (1 when no cluster was
+    /// configured).
+    pub fn cluster_nodes(&self) -> usize {
+        self.cluster.as_ref().map_or(1, |c| c.spec.nodes)
+    }
+
+    /// The session's inter-node fabric arbiter, when a cluster is
+    /// configured — exposed so tools and tests can read exchange
+    /// statistics directly.
+    pub fn cluster_fabric(&self) -> Option<Arc<Fabric>> {
+        self.cluster.as_ref().map(|c| Arc::clone(&c.fabric))
+    }
+
     /// Wait for all queued jobs to complete.
     pub fn drain(&self) {
         self.pool.wait_idle();
@@ -715,13 +798,18 @@ impl Session {
     /// Named snapshot of the service counters, including live per-lane
     /// queue depths, per-decision counts, the fast-pool residency
     /// cache's hits/misses/evicted bytes, the shared link's arbiter
-    /// statistics, and the co-scheduler's pairing hits.
+    /// statistics, the co-scheduler's pairing hits, and the cluster's
+    /// node count + fabric exchange statistics.
     pub fn metrics(&self) -> MetricsSnapshot {
         self.shared.metrics.snapshot(
             self.pool.queue_depth(),
             self.shared.fast_pool.stats(),
             self.shared.link.stats(),
             self.pool.co_schedule_hits(),
+            self.cluster_nodes(),
+            self.cluster
+                .as_ref()
+                .map_or(FabricStats::default(), |c| c.fabric.stats()),
         )
     }
 
@@ -1050,6 +1138,31 @@ mod tests {
         assert_eq!((m.submitted, m.rejected), (0, 1));
         // The turned-away job left no demand on the link.
         assert!(session.shared_link().load().pending.is_empty());
+    }
+
+    #[test]
+    fn cluster_session_shards_and_reports_fabric_metrics() {
+        let session = Session::builder(arch()).workers(1).cluster(4).build();
+        let a = session.register(mat(11));
+        let b = session.register(mat(12));
+        let out = session.spgemm_cluster(a, b).unwrap();
+        assert_eq!(out.plan.partition.nodes(), 4);
+        assert!(out.c.nnz() > 0);
+        assert!(out.scatter_seconds > 0.0);
+        let m = session.metrics();
+        assert_eq!(m.cluster_nodes, 4);
+        assert_eq!((m.cluster_products, m.shard_runs), (1, 4));
+        assert!(m.fabric.bytes > 0);
+        assert!(m.fabric.peak_streams >= 2, "scatter streams contend");
+        // No cluster configured: one node, nothing crosses a fabric.
+        let solo = Session::builder(arch()).workers(1).build();
+        let a2 = solo.register(mat(11));
+        let b2 = solo.register(mat(12));
+        let out2 = solo.spgemm_cluster(a2, b2).unwrap();
+        assert_eq!(out2.scatter_seconds, 0.0);
+        let ms = solo.metrics();
+        assert_eq!(ms.cluster_nodes, 1);
+        assert_eq!(ms.fabric, FabricStats::default());
     }
 
     #[test]

@@ -11,14 +11,17 @@
 //!   available, so their memory subsystems are simulated; see DESIGN.md),
 //!   the unified [`engine`] execution layer (native / simulated / chunked
 //!   / pipelined double-buffered drivers behind one trait), a job
-//!   coordinator that schedules engines, and the benchmark harness that
-//!   regenerates every table and figure of the paper.
+//!   coordinator that schedules engines, a [`cluster`] layer that shards
+//!   products across simulated nodes over a priced inter-node fabric, and
+//!   the benchmark harness that regenerates every table and figure of the
+//!   paper.
 //! * **Layer 2/1 (build-time Python)** — a JAX model + Pallas block-matmul
 //!   kernel AOT-lowered to HLO text, loaded and executed from Rust via the
 //!   PJRT CPU client (`runtime`), used as the dense-block fast path.
 //!
 //! Quickstart: see `examples/quickstart.rs` and `README.md`.
 
+pub mod cluster;
 pub mod engine;
 pub mod error;
 pub mod gen;
@@ -41,6 +44,7 @@ pub use error::{JobControl, MlmemError};
 
 /// Convenience re-exports for examples and integration tests.
 pub mod prelude {
+    pub use crate::cluster::{ClusterSpec, FabricSpec};
     pub use crate::coordinator::{Policy, Session, SessionBuilder};
     pub use crate::error::MlmemError;
     pub use crate::gen::{Domain, Grid, MgProblem, ScaleFactor};

@@ -178,10 +178,11 @@ fn cmd_spgemm(argv: &[String]) -> Result<(), MlmemError> {
              setting it selects the prefetch-chunked path)",
         )
         .opt("scale-denom", "1024", "capacity scale denominator")
+        .opt("nodes", "1", "shard block-row across N simulated nodes joined by the default fabric")
         .switch(
             "explain",
             "score every Auto-planner candidate (predicted vs actual) instead of \
-             running one engine",
+             running one engine; with --nodes N, one candidate table per shard",
         );
     let p = spec.parse(argv)?;
     let scale = scale_from(&p)?;
@@ -228,8 +229,15 @@ fn cmd_spgemm(argv: &[String]) -> Result<(), MlmemError> {
         "" => None,
         _ => Some(scale.gb(p.f64("budget-gb")?)),
     };
+    let nodes = p.usize("nodes")?;
     if p.flag("explain") {
+        if nodes > 1 {
+            return explain_cluster_cmd(&a, &b, arch, nodes);
+        }
         return explain_spgemm_cmd(&a, &b, arch, budget);
+    }
+    if nodes > 1 {
+        return cluster_spgemm_cmd(a, b, arch, nodes);
     }
     // Drive the run through a session: the registry caches the symbolic
     // summary, and failures surface as typed `MlmemError`s.
@@ -318,6 +326,112 @@ fn explain_spgemm_cmd(
             chosen.actual_seconds
         );
     }
+    Ok(())
+}
+
+/// `spgemm --nodes N`: run the product sharded across a simulated
+/// cluster and print the per-shard record plus the phase breakdown.
+fn cluster_spgemm_cmd(
+    a: mlmem_spgemm::sparse::Csr,
+    b: mlmem_spgemm::sparse::Csr,
+    arch: Arch,
+    nodes: usize,
+) -> Result<(), MlmemError> {
+    use mlmem_spgemm::util::table::Table;
+    let session = Session::builder(Arc::new(arch))
+        .workers(1)
+        .cluster(nodes)
+        .build();
+    let ha = session.register(Arc::new(a));
+    let hb = session.register(Arc::new(b));
+    let out = session.spgemm_cluster(ha, hb)?;
+    let mut t = Table::new(&[
+        "node", "rows", "mults", "decision", "pred s", "compute s", "gather s", "C nnz",
+    ])
+    .with_title(format!("{nodes}-node sharded run"));
+    for s in &out.shards {
+        t.row(&[
+            s.node.to_string(),
+            format!("{}..{}", s.rows.0, s.rows.1),
+            s.mults.to_string(),
+            s.decision.clone(),
+            s.predicted
+                .map(|p| format!("{:.6}", p.total_seconds()))
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.6}", s.compute_seconds),
+            format!("{:.6}", s.gather_seconds),
+            s.c_nnz.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nscatter {:.6}s  compute {:.6}s  gather {:.6}s  elapsed {:.6}s \
+         (total with scatter {:.6}s)",
+        out.scatter_seconds,
+        out.compute_seconds,
+        out.gather_seconds,
+        out.elapsed_seconds,
+        out.total_seconds
+    );
+    let m = session.metrics();
+    println!(
+        "fabric: {:.0}% busy ({:.6}s stall), {} in {} transfers, peak {} streams",
+        m.fabric.utilization() * 100.0,
+        m.fabric.stall_seconds,
+        mlmem_spgemm::util::table::human_bytes(m.fabric.bytes),
+        m.fabric.requests,
+        m.fabric.peak_streams
+    );
+    println!("C              : {} rows, {} nnz", out.c.nrows, out.c.nnz());
+    println!("\naggregate (all nodes' local work):");
+    print_report(&out.report);
+    Ok(())
+}
+
+/// `spgemm --nodes N --explain`: the cluster flavour — one candidate
+/// table per shard, plus the fabric's predicted exchange price.
+fn explain_cluster_cmd(
+    a: &mlmem_spgemm::sparse::Csr,
+    b: &mlmem_spgemm::sparse::Csr,
+    arch: Arch,
+    nodes: usize,
+) -> Result<(), MlmemError> {
+    use mlmem_spgemm::cluster::{self, ClusterSpec};
+    use mlmem_spgemm::util::table::Table;
+    let arch = Arc::new(arch);
+    let spec = ClusterSpec::new(nodes);
+    let opts = PlannerOptions::default();
+    let (plan, shards) = cluster::explain(a, b, &arch, &spec, &opts)?;
+    println!(
+        "{} shards over {} rows, {} symbolic mults total",
+        shards.len(),
+        plan.partition.ranges.last().map_or(0, |r| r.1),
+        plan.total_mults
+    );
+    for s in &shards {
+        let mut t = Table::new(&["candidate", "pred total", "actual", "auto"]).with_title(
+            format!(
+                "node {} rows {}..{} ({} mults, scatter {:.6}s)",
+                s.node, s.rows.0, s.rows.1, s.mults, s.scatter_seconds
+            ),
+        );
+        for c in &s.candidates {
+            let actual = if c.actual_seconds.is_finite() && c.actual_seconds > 0.0 {
+                format!("{:.6}", c.actual_seconds)
+            } else {
+                "-".into()
+            };
+            t.row(&[
+                c.label.clone(),
+                format!("{:.6}", c.predicted.total_seconds()),
+                actual,
+                if c.chosen { "<-- argmin".to_string() } else { String::new() },
+            ]);
+        }
+        t.print();
+    }
+    let scatter: f64 = shards.iter().map(|s| s.scatter_seconds).sum();
+    println!("\npredicted uncontended scatter (sum over shards): {scatter:.6}s");
     Ok(())
 }
 

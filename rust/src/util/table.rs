@@ -19,6 +19,10 @@ pub struct Table {
     aligns: Vec<Align>,
     rows: Vec<Vec<String>>,
     title: Option<String>,
+    /// Key/value provenance pairs (arch, machine mode, input family …)
+    /// carried into machine-readable exports so a `BENCH_*.json` row set
+    /// is self-describing.
+    context: Vec<(String, String)>,
 }
 
 impl Table {
@@ -33,12 +37,30 @@ impl Table {
             headers: headers.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
             title: None,
+            context: Vec::new(),
         }
     }
 
     pub fn with_title(mut self, title: impl Into<String>) -> Self {
         self.title = Some(title.into());
         self
+    }
+
+    /// The table's display title, when one was set.
+    pub fn title(&self) -> Option<&str> {
+        self.title.as_deref()
+    }
+
+    /// Attach one provenance key/value pair (e.g. `("arch", "KNL ddr")`)
+    /// for machine-readable exports; repeatable.
+    pub fn with_context(mut self, key: impl Into<String>, value: impl Into<String>) -> Self {
+        self.context.push((key.into(), value.into()));
+        self
+    }
+
+    /// Provenance pairs attached via [`with_context`](Self::with_context).
+    pub fn context(&self) -> &[(String, String)] {
+        &self.context
     }
 
     pub fn align(mut self, col: usize, a: Align) -> Self {
@@ -245,6 +267,21 @@ mod tests {
     fn title_in_render() {
         let t = Table::new(&["x"]).with_title("Table 3");
         assert!(t.render().starts_with("== Table 3 =="));
+        assert_eq!(t.title(), Some("Table 3"));
+    }
+
+    #[test]
+    fn context_pairs_are_kept_in_order() {
+        let t = Table::new(&["x"])
+            .with_context("arch", "KNL ddr")
+            .with_context("input", "laplace");
+        assert_eq!(
+            t.context(),
+            &[
+                ("arch".to_string(), "KNL ddr".to_string()),
+                ("input".to_string(), "laplace".to_string())
+            ]
+        );
     }
 
     #[test]

@@ -1,0 +1,151 @@
+//! Cluster-layer integration suite: the capacity win (a product too big
+//! for one node completes on four nodes, bit-identical to the in-memory
+//! reference), bit-identical merges across node counts and input
+//! families, and the block-row partition invariants (DESIGN.md §12).
+
+use mlmem_spgemm::cluster::{self, ClusterSpec, Fabric, ShardPlan};
+use mlmem_spgemm::coordinator::{
+    execute as planner_execute, Job, JobKind, PlannerOptions, Policy,
+};
+use mlmem_spgemm::gen::graphs::graph500;
+use mlmem_spgemm::gen::rhs::uniform_degree;
+use mlmem_spgemm::gen::scale::ScaleFactor;
+use mlmem_spgemm::gen::stencil::{laplace3d, Grid};
+use mlmem_spgemm::memory::arch::{knl, Arch, KnlMode};
+use mlmem_spgemm::sparse::ops::{spgemm_flops, spgemm_reference};
+use mlmem_spgemm::sparse::Csr;
+use mlmem_spgemm::util::proptest::{check, Gen};
+use std::sync::Arc;
+
+/// Sort each row by column. Engines agree on values bit-for-bit but not
+/// on per-row entry order (hash-family engines emit rows unsorted), so
+/// comparisons canonicalize first.
+fn canonical(c: &Csr) -> Csr {
+    let mut rowmap = vec![0usize];
+    let mut entries = Vec::with_capacity(c.nnz());
+    let mut values = Vec::with_capacity(c.nnz());
+    for i in 0..c.nrows {
+        let (cols, vals) = c.row(i);
+        let mut row: Vec<(u32, f64)> =
+            cols.iter().copied().zip(vals.iter().copied()).collect();
+        row.sort_by_key(|&(col, _)| col);
+        for (col, v) in row {
+            entries.push(col);
+            values.push(v);
+        }
+        rowmap.push(entries.len());
+    }
+    Csr::new(c.nrows, c.ncols, rowmap, entries, values)
+}
+
+fn assert_bit_identical(got: &Csr, want: &Csr, ctx: &str) {
+    assert_eq!(got.rowmap, want.rowmap, "{ctx}: rowmap");
+    assert_eq!(got.entries, want.entries, "{ctx}: entries");
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+    assert_eq!(bits(&got.values), bits(&want.values), "{ctx}: values");
+}
+
+fn cluster_product(a: &Arc<Csr>, b: &Arc<Csr>, arch: &Arc<Arch>, nodes: usize) -> Csr {
+    let spec = ClusterSpec::new(nodes);
+    let fabric = Fabric::new(spec.fabric);
+    cluster::execute(a, b, arch, &spec, &fabric, &PlannerOptions::default())
+        .unwrap_or_else(|e| panic!("nodes={nodes}: {e}"))
+        .c
+}
+
+/// The headline capacity win: shrink the machine until C (~1.57 MB)
+/// exceeds one node's slow pool (~964 KB usable). The single-node Auto
+/// planner must refuse — allocation is enforced and there is no fallback
+/// — while four nodes' ~530 KB shards fit, and the merged product is
+/// bit-identical to the in-memory reference.
+#[test]
+fn over_capacity_product_completes_on_four_nodes() {
+    let arch = Arc::new(knl(KnlMode::Ddr, 64, ScaleFactor::new(96 * 1024)));
+    let a = Arc::new(uniform_degree(4096, 512, 8, 1));
+    let b = Arc::new(uniform_degree(512, 512, 4, 2));
+
+    let mut job = Job::new(
+        1,
+        JobKind::Spgemm { a: Arc::clone(&a), b: Arc::clone(&b) },
+        Arc::clone(&arch),
+        Policy::Auto,
+    );
+    job.keep_product = true;
+    let single = planner_execute(&job, &PlannerOptions::default());
+    assert!(single.is_err(), "single node unexpectedly fit the product");
+
+    let spec = ClusterSpec::new(4);
+    let fabric = Fabric::new(spec.fabric);
+    let out = cluster::execute(&a, &b, &arch, &spec, &fabric, &PlannerOptions::default())
+        .expect("4-node cluster completes the over-capacity product");
+    assert_bit_identical(
+        &canonical(&out.c),
+        &canonical(&spgemm_reference(&a, &b)),
+        "over-capacity 4-node",
+    );
+    assert!(out.scatter_seconds > 0.0, "remote shards paid no scatter");
+    assert!(fabric.stats().bytes > 0, "fabric moved no bytes");
+}
+
+/// Random conformable pairs through every node count: the merged C is
+/// bit-identical to the reference regardless of where the row split falls.
+#[test]
+fn sharded_merge_is_bit_identical_across_node_counts() {
+    check("cluster merge matches reference bitwise", 24, |g: &mut Gen| {
+        let arch = Arc::new(knl(KnlMode::Ddr, 64, ScaleFactor::new(1 << 10)));
+        let (a, b) = g.csr_pair(96, 8);
+        let a = Arc::new(a);
+        let b = Arc::new(b);
+        let want = canonical(&spgemm_reference(&a, &b));
+        let nodes = g.usize(1, 8);
+        let got = canonical(&cluster_product(&a, &b, &arch, nodes));
+        assert_bit_identical(&got, &want, &format!("nodes={nodes}"));
+    });
+}
+
+/// The paper's structured input families — a power-law Graph500 square
+/// and a 3D Laplace stencil square — shard cleanly at every node count.
+#[test]
+fn powerlaw_and_stencil_products_shard_cleanly() {
+    let arch = Arc::new(knl(KnlMode::Ddr, 64, ScaleFactor::new(1 << 10)));
+    let g500 = Arc::new(graph500(7, 8, 7));
+    let lap = Arc::new(laplace3d(Grid::new(8, 8, 8)));
+    for (name, m) in [("powerlaw-g500", &g500), ("laplace3d", &lap)] {
+        let want = canonical(&spgemm_reference(m, m));
+        for nodes in [1usize, 2, 3, 5, 8] {
+            let got = canonical(&cluster_product(m, m, &arch, nodes));
+            assert_bit_identical(&got, &want, &format!("{name} nodes={nodes}"));
+        }
+    }
+}
+
+/// Block-row partition invariants: ranges are contiguous and cover
+/// `[0, m)` exactly, every row has exactly one owner, and the per-shard
+/// symbolic sizes sum to the global symbolic count.
+#[test]
+fn partition_invariants_hold_for_random_inputs() {
+    check("block-row partition invariants", 64, |g: &mut Gen| {
+        let (a, b) = g.csr_pair(128, 6);
+        let nodes = g.usize(1, 9);
+        let plan = ShardPlan::build(&a, &b, nodes);
+        let p = &plan.partition;
+        assert_eq!(p.nodes(), nodes);
+        let mut next = 0usize;
+        for &(lo, hi) in &p.ranges {
+            assert_eq!(lo, next, "ranges must be contiguous");
+            assert!(hi >= lo);
+            next = hi;
+        }
+        assert_eq!(next, a.nrows, "ranges must cover every row");
+        for row in 0..a.nrows {
+            let owner = p.owner_of(row).expect("every row is owned");
+            let (lo, hi) = p.ranges[owner];
+            assert!(lo <= row && row < hi);
+            let owners =
+                p.ranges.iter().filter(|&&(l, h)| l <= row && row < h).count();
+            assert_eq!(owners, 1, "row {row} owned by {owners} shards");
+        }
+        assert_eq!(plan.shard_mults.iter().sum::<u64>(), plan.total_mults);
+        assert_eq!(plan.total_mults, spgemm_flops(&a, &b) / 2);
+    });
+}
