@@ -298,6 +298,9 @@ pub fn run_serve_stream(
         .workers(1)
         .max_pending(4)
         .operand_cache(cached)
+        // Result memoization off: this is the operand-cache baseline the
+        // `serve` and `memo` tables compare against.
+        .memoize(false)
         .build();
     let handles: Vec<_> = scenario
         .operands
@@ -309,6 +312,60 @@ pub fn run_serve_stream(
         let (ia, ib) = scenario.pairs[p];
         let r = session.spgemm(handles[ia], handles[ib]).ok()?.wait().ok()?;
         total += r.report.seconds;
+    }
+    Some((total, session.metrics()))
+}
+
+/// Drive the same serve stream with the result cache on (`fused` also
+/// routes submission through [`Session::spgemm_batch`] so repeated pairs
+/// in the stream are grouped behind their shared operand). Total
+/// simulated seconds only accumulate for jobs that actually computed
+/// ([`Provenance::Computed`]): memo hits and coalesced waiters replay a
+/// cached report, and double-charging it would overstate the cache.
+///
+/// [`Session::spgemm_batch`]: crate::coordinator::Session::spgemm_batch
+/// [`Provenance::Computed`]: crate::coordinator::Provenance
+pub fn run_memo_stream(
+    arch: &std::sync::Arc<Arch>,
+    scenario: &ServeScenario,
+    fused: bool,
+) -> Option<(f64, crate::coordinator::MetricsSnapshot)> {
+    use crate::coordinator::Provenance;
+    use std::sync::Arc;
+    let session = crate::coordinator::Session::builder(Arc::clone(arch))
+        .workers(1)
+        .max_pending(scenario.stream.len().max(4))
+        .build();
+    let handles: Vec<_> = scenario
+        .operands
+        .iter()
+        .map(|m| session.register(Arc::clone(m)))
+        .collect();
+    let mut total = 0.0;
+    if fused {
+        let pairs: Vec<_> = scenario
+            .stream
+            .iter()
+            .map(|&p| {
+                let (ia, ib) = scenario.pairs[p];
+                (handles[ia], handles[ib])
+            })
+            .collect();
+        let batch = session.spgemm_batch(&pairs, Default::default());
+        for h in batch {
+            let r = h.ok()?.wait().ok()?;
+            if r.provenance == Provenance::Computed {
+                total += r.report.seconds;
+            }
+        }
+    } else {
+        for &p in &scenario.stream {
+            let (ia, ib) = scenario.pairs[p];
+            let r = session.spgemm(handles[ia], handles[ib]).ok()?.wait().ok()?;
+            if r.provenance == Provenance::Computed {
+                total += r.report.seconds;
+            }
+        }
     }
     Some((total, session.metrics()))
 }

@@ -16,8 +16,8 @@ use std::path::Path;
 pub const EXPERIMENTS: &[&str] = &[
     "table1", "table2", "table3", "table4", "fig3", "fig4", "fig6", "fig7", "fig9", "fig10",
     "fig11", "fig12", "fig13", "ablate-acc", "ablate-algo", "ablate-compression",
-    "ablate-overlap", "accumulator", "pipeline", "planner", "chain", "serve", "contention",
-    "cluster", "profiles",
+    "ablate-overlap", "accumulator", "pipeline", "planner", "chain", "serve", "memo",
+    "contention", "cluster", "profiles",
 ];
 
 /// Schema version of the `BENCH_*.json` perf-trajectory document; bump
@@ -49,6 +49,7 @@ pub fn run_experiment(id: &str, cfg: &BenchConfig, cache: &mut ProblemCache) -> 
         "planner" => tables::planner_accuracy(cfg, cache),
         "chain" => tables::chain_triple_product(cfg, cache),
         "serve" => tables::serve_operand_cache(cfg, cache),
+        "memo" => tables::serve_memoization(cfg, cache),
         "contention" => tables::contention_shared_link(cfg, cache),
         "cluster" => tables::cluster_scale_out(cfg, cache),
         "profiles" => tables::machine_profiles(cfg),

@@ -648,6 +648,48 @@ pub fn serve_operand_cache(cfg: &BenchConfig, _cache: &mut ProblemCache) -> Tabl
     t
 }
 
+/// The `memo` experiment: the same power-law serve streams with the
+/// serve-path result cache on top of the operand cache (DESIGN.md §13).
+/// One row per scenario: the PR-5 operand-cached baseline, the memoized
+/// stream, the memoized+fused batch (grouped by shared operand), the
+/// gain of memo+fused over the baseline, and the result-cache counters.
+/// Repeated pairs in the stream collapse to one computation each, so the
+/// memoized totals only charge jobs that actually ran
+/// ([`run_memo_stream`](super::experiments::run_memo_stream)).
+pub fn serve_memoization(cfg: &BenchConfig, _cache: &mut ProblemCache) -> Table {
+    use super::experiments::{run_memo_stream, run_serve_stream, serve_scenarios};
+    use crate::gen::scale::ScaleFactor;
+    use std::sync::Arc;
+    let scale = ScaleFactor::new(cfg.scale.denominator.saturating_mul(64));
+    let arch = Arc::new(p100(GpuMode::Pinned, scale));
+    let mut t = Table::new(&[
+        "scenario", "jobs", "cached s", "memo s", "memo+fused s", "gain", "hits", "coalesced",
+        "products",
+    ])
+    .with_title("Memo experiment: serve-path result cache over the operand cache (P100 pinned)")
+    .with_context("arch", "P100 pinned (x64 shrink)");
+    for sc in serve_scenarios(&arch, cfg.seed) {
+        let baseline = run_serve_stream(&arch, &sc, true);
+        let memo = run_memo_stream(&arch, &sc, false);
+        let fused = run_memo_stream(&arch, &sc, true);
+        let mut row = vec![sc.name.to_string(), sc.stream.len().to_string()];
+        match (baseline, memo, fused) {
+            (Some((bs, _)), Some((ms, _)), Some((fs, fm))) => row.extend([
+                format!("{bs:.6}"),
+                format!("{ms:.6}"),
+                format!("{fs:.6}"),
+                format!("{:.2}x", bs / fs.max(1e-12)),
+                fm.memo.hits.to_string(),
+                fm.memo.coalesced.to_string(),
+                fm.memo.products.to_string(),
+            ]),
+            _ => row.extend(vec!["-".to_string(); 7]),
+        }
+        t.row(&row);
+    }
+    t
+}
+
 /// The `contention` experiment: one mixed copy/compute batch replayed
 /// through the shared-bandwidth link under both schedulers. Each row is
 /// one scheduler: total simulated seconds (the makespan proxy — link
@@ -913,6 +955,52 @@ mod tests {
         assert!(om.residency.evicted_bytes > 0, "no eviction under pressure");
         let usable = arch.spec.pools[crate::memory::pool::FAST.0].usable();
         assert!(om.residency.resident_bytes <= usable);
+    }
+
+    #[test]
+    fn serve_memoized_strictly_beats_cached_baseline() {
+        use super::super::experiments::{run_memo_stream, run_serve_stream, serve_scenarios};
+        use crate::gen::scale::ScaleFactor;
+        use std::sync::Arc;
+        let (cfg, _) = quick();
+        let scale = ScaleFactor::new(cfg.scale.denominator * 64);
+        let arch = Arc::new(p100(GpuMode::Pinned, scale));
+        let scenarios = serve_scenarios(&arch, cfg.seed);
+
+        // The power-law stream repeats pairs, so memoization computes
+        // each distinct pair once and replays the rest: strictly less
+        // simulated time than the PR-5 operand-cached baseline, with or
+        // without batch fusion on top.
+        for sc in &scenarios {
+            let (bs, _) = run_serve_stream(&arch, sc, true).expect("baseline runs");
+            let (ms, mm) = run_memo_stream(&arch, sc, false).expect("memo runs");
+            let (fs, fm) = run_memo_stream(&arch, sc, true).expect("fused runs");
+            assert!(ms < bs, "{}: memo {ms} !< baseline {bs}", sc.name);
+            assert!(fs < bs, "{}: memo+fused {fs} !< baseline {bs}", sc.name);
+            // Serial submission: every repeat is a straight memo hit and
+            // each distinct pair computed exactly once.
+            let repeats = (sc.stream.len() - sc.pairs.len()) as u64;
+            assert_eq!(mm.memo.hits, repeats, "{}", sc.name);
+            assert_eq!(mm.memo.products, sc.pairs.len() as u64, "{}", sc.name);
+            assert_eq!(mm.memo.coalesced, 0, "{}", sc.name);
+            // Concurrent batch: repeats split between memo hits and
+            // coalesced waiters depending on worker timing, but they
+            // cover every repeat and nothing recomputes.
+            assert_eq!(fm.memo.hits + fm.memo.coalesced, repeats, "{}", sc.name);
+            assert_eq!(fm.memo.products, sc.pairs.len() as u64, "{}", sc.name);
+            assert!(fm.memo.fused > 0, "{}: batch fused nothing", sc.name);
+        }
+    }
+
+    #[test]
+    fn memo_table_renders_both_scenarios() {
+        let (cfg, mut cache) = quick();
+        let t = serve_memoization(&cfg, &mut cache);
+        assert_eq!(t.n_rows(), 2);
+        let r = t.render();
+        assert!(r.contains("hot-shared-rhs"));
+        assert!(r.contains("over-capacity"));
+        assert!(r.contains("memo+fused s"));
     }
 
     #[test]

@@ -168,6 +168,31 @@ impl ChainSummary {
     }
 }
 
+/// How a completed job's result was obtained — the serve path's memo /
+/// coalesce provenance (DESIGN.md §13). Always `Computed` when the
+/// session's result cache is disabled or the job is not memo-eligible.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Provenance {
+    /// The job ran its own computation.
+    #[default]
+    Computed,
+    /// Served from the session's product cache; no computation ran.
+    MemoHit,
+    /// Coalesced onto an identical in-flight computation; this job waited
+    /// on the shared run instead of starting its own.
+    Coalesced,
+}
+
+impl Provenance {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Provenance::Computed => "computed",
+            Provenance::MemoHit => "memo-hit",
+            Provenance::Coalesced => "coalesced",
+        }
+    }
+}
+
 /// Result of a completed job.
 #[derive(Debug)]
 pub struct JobResult {
@@ -194,6 +219,8 @@ pub struct JobResult {
     pub candidates: Vec<CandidateScore>,
     /// Chain jobs only: association order, order scores, per-hop results.
     pub chain: Option<ChainSummary>,
+    /// How this result was obtained (computed / memo hit / coalesced).
+    pub provenance: Provenance,
 }
 
 impl JobResult {
@@ -227,4 +254,11 @@ mod tests {
         );
     }
 
+    #[test]
+    fn provenance_names_and_default() {
+        assert_eq!(Provenance::default(), Provenance::Computed);
+        assert_eq!(Provenance::Computed.name(), "computed");
+        assert_eq!(Provenance::MemoHit.name(), "memo-hit");
+        assert_eq!(Provenance::Coalesced.name(), "coalesced");
+    }
 }

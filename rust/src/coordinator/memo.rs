@@ -1,0 +1,457 @@
+//! Serve-path result memoization (DESIGN.md §13): a session-owned,
+//! content-addressed **product cache** keyed on registered-operand handle
+//! pairs, built on the same [`TieredCache`](crate::memory::TieredCache)
+//! lease/eviction machinery as the fast-pool
+//! [`ResidencyPool`](crate::memory::ResidencyPool) — one tier up. Where
+//! the operand tier prices an eviction victim by its *re-copy* seconds
+//! per byte, the product tier prices it by its *recompute* seconds per
+//! byte (the planner's own `Engine::predict` estimate for the run that
+//! produced it, falling back to the measured simulated seconds).
+//!
+//! Three behaviors, each pinned by `rust/tests/memo.rs`:
+//!
+//! * **Memo hits.** A memo-eligible submission (`Policy::Auto` SpGEMM on
+//!   registered handles) whose `(A, B)` product is cached completes
+//!   immediately with a bit-identical result and
+//!   [`Provenance::MemoHit`]; no worker slot is consumed and no
+//!   simulated time or flops are re-accounted.
+//! * **Coalescing.** A submission whose identical `(A, B)` product is
+//!   currently *in flight* attaches as a waiter on the one computation
+//!   instead of starting its own ([`Provenance::Coalesced`]). Waiters
+//!   keep independent cancel/deadline controls: an expiring waiter gets
+//!   its own `DeadlineExceeded` without cancelling the shared run.
+//! * **Invalidation.** Re-registering an operand drops every cached
+//!   product whose key uses it — unconditionally, pins and leases
+//!   notwithstanding — and marks matching in-flight computations
+//!   *stale* so their product is neither cached nor trusted by new
+//!   submissions (they still complete for their existing waiters, whose
+//!   operand `Arc`s are unaffected).
+
+use super::job::{CandidateScore, Decision, JobResult, Provenance};
+use crate::engine::CostEstimate;
+use crate::error::{JobControl, MlmemError};
+use crate::memory::tiered::TieredCache;
+use crate::memory::SimReport;
+use crate::sparse::Csr;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Everything needed to replay a completed product without recomputing:
+/// the decision/report/prediction of the run that produced it and the
+/// product matrix itself (shared; waiters clone out only when they asked
+/// to keep it).
+pub struct CachedProduct {
+    pub decision: Decision,
+    pub report: SimReport,
+    pub c_nrows: usize,
+    pub c_nnz: usize,
+    pub c: Arc<Csr>,
+    pub predicted: Option<CostEstimate>,
+    pub candidates: Vec<CandidateScore>,
+}
+
+impl CachedProduct {
+    /// Materialize a [`JobResult`] for one recipient. The replayed
+    /// report/prediction describe the run that produced the product;
+    /// [`Metrics::record_outcome`](super::Metrics) does not re-account
+    /// them for non-`Computed` provenance.
+    pub fn to_result(&self, id: u64, keep_product: bool, provenance: Provenance) -> JobResult {
+        JobResult {
+            id,
+            decision: self.decision.clone(),
+            report: self.report.clone(),
+            c_nrows: self.c_nrows,
+            c_nnz: self.c_nnz,
+            c: keep_product.then(|| (*self.c).clone()),
+            triangles: None,
+            predicted: self.predicted,
+            candidates: self.candidates.clone(),
+            chain: None,
+            provenance,
+        }
+    }
+
+    /// Bytes the cached product occupies (what the budget accounts).
+    pub fn bytes(&self) -> u64 {
+        self.c.size_bytes()
+    }
+
+    /// Seconds recomputing the product would cost — the eviction price.
+    pub fn recompute_seconds(&self) -> f64 {
+        self.predicted
+            .map(|p| p.total_seconds())
+            .unwrap_or(self.report.seconds)
+    }
+}
+
+/// One submission waiting on an in-flight computation it coalesced onto.
+/// The control is the *waiter's own* (checked at delivery, never wired
+/// into the shared run); `tx` is the channel behind its `JobHandle`.
+pub(crate) struct Waiter {
+    pub id: u64,
+    pub control: JobControl,
+    pub keep_product: bool,
+    pub tx: mpsc::Sender<Result<JobResult, MlmemError>>,
+}
+
+/// One in-flight computation of a key. Usually a key has at most one,
+/// but a re-registration mid-flight marks it stale and a subsequent
+/// submission starts a fresh one — hence a `Vec` per key.
+struct InFlight {
+    primary_id: u64,
+    /// Set when an operand of the key was re-registered while the run
+    /// was in flight: the product must not be cached or coalesced onto.
+    stale: bool,
+    waiters: Vec<Waiter>,
+}
+
+/// Counters and gauges of the session's [`ProductCache`], surfaced
+/// through [`MetricsSnapshot`](super::MetricsSnapshot).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MemoStats {
+    /// Memo-eligible submissions served straight from the cache.
+    pub hits: u64,
+    /// Memo-eligible submissions that found nothing cached or in flight
+    /// (they became primaries and computed).
+    pub misses: u64,
+    /// Submissions that attached to an identical in-flight computation.
+    pub coalesced: u64,
+    /// Batch submissions grouped behind a shared operand by
+    /// [`Session::spgemm_batch`](super::Session::spgemm_batch) (the
+    /// group's first job is not counted).
+    pub fused: u64,
+    /// Primary computations that completed (each produced the product
+    /// exactly once, however many waiters shared it).
+    pub products: u64,
+    /// Cached products dropped because an operand was re-registered.
+    pub invalidated: u64,
+    /// Products evicted by cache-budget pressure.
+    pub evictions: u64,
+    /// Total bytes those evictions freed.
+    pub evicted_bytes: u64,
+    /// Bytes of products currently cached (gauge; never exceeds the
+    /// budget).
+    pub resident_bytes: u64,
+    /// Products currently cached (gauge).
+    pub resident_entries: u64,
+}
+
+/// The session-owned product cache plus the in-flight coalescing table;
+/// see the module docs.
+pub struct ProductCache {
+    cache: TieredCache<(u64, u64), Arc<CachedProduct>>,
+    inflight: Mutex<HashMap<(u64, u64), Vec<InFlight>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    coalesced: AtomicU64,
+    fused: AtomicU64,
+    products: AtomicU64,
+    invalidated: AtomicU64,
+}
+
+impl ProductCache {
+    /// A cache budgeting up to `capacity` bytes of products. Disabled
+    /// (`enabled = false`) the whole serve-path memo machinery is inert:
+    /// lookups miss silently, nothing coalesces, nothing is cached —
+    /// the memo-off baseline. A budget of 0 with `enabled = true` keeps
+    /// coalescing live but admits no product.
+    pub fn new(capacity: u64, enabled: bool) -> Self {
+        Self {
+            cache: TieredCache::new(capacity, enabled),
+            inflight: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            fused: AtomicU64::new(0),
+            products: AtomicU64::new(0),
+            invalidated: AtomicU64::new(0),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cache.enabled()
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.cache.capacity()
+    }
+
+    /// Cache lookup; `Some` counts a memo hit. (Misses are counted by
+    /// [`register_primary`](Self::register_primary) so a submission that
+    /// coalesces instead is counted exactly once, as `coalesced`.)
+    pub fn lookup(&self, key: (u64, u64)) -> Option<Arc<CachedProduct>> {
+        let found = self.cache.get(key);
+        if found.is_some() {
+            self.hits.fetch_add(1, Ordering::SeqCst);
+        }
+        found
+    }
+
+    /// Try to attach a waiter to a non-stale in-flight computation of
+    /// `key`. True means the waiter is registered (counted `coalesced`)
+    /// and will be served at the primary's completion; false means the
+    /// caller must become a primary.
+    pub(crate) fn try_attach(&self, key: (u64, u64), waiter: Waiter) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        let mut inflight = self.inflight.lock().expect("memo inflight poisoned");
+        match inflight
+            .get_mut(&key)
+            .and_then(|v| v.iter_mut().find(|f| !f.stale))
+        {
+            Some(f) => {
+                f.waiters.push(waiter);
+                self.coalesced.fetch_add(1, Ordering::SeqCst);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Register a primary computation of `key` (counted as the miss).
+    pub fn register_primary(&self, key: (u64, u64), primary_id: u64) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inflight = self.inflight.lock().expect("memo inflight poisoned");
+        inflight
+            .entry(key)
+            .or_default()
+            .push(InFlight { primary_id, stale: false, waiters: Vec::new() });
+        self.misses.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn pop(&self, key: (u64, u64), primary_id: u64) -> Option<InFlight> {
+        let mut inflight = self.inflight.lock().expect("memo inflight poisoned");
+        let v = inflight.get_mut(&key)?;
+        let i = v.iter().position(|f| f.primary_id == primary_id)?;
+        let f = v.swap_remove(i);
+        if v.is_empty() {
+            inflight.remove(&key);
+        }
+        Some(f)
+    }
+
+    /// A primary whose submission failed after registration (dispatch
+    /// refused): unregister and hand back any already-attached waiters so
+    /// the caller can fan the error out.
+    pub(crate) fn abort_primary(&self, key: (u64, u64), primary_id: u64) -> Vec<Waiter> {
+        self.pop(key, primary_id).map(|f| f.waiters).unwrap_or_default()
+    }
+
+    /// A primary finished. On success (`product` is `Some`) the product
+    /// is admitted under the byte budget **unless** the run was marked
+    /// stale by a mid-flight re-registration. Returns the waiters to fan
+    /// the outcome out to.
+    pub(crate) fn complete(
+        &self,
+        key: (u64, u64),
+        primary_id: u64,
+        product: Option<Arc<CachedProduct>>,
+    ) -> Vec<Waiter> {
+        // Hold the in-flight lock across the cache insert: a concurrent
+        // identical submission must see either the in-flight entry or
+        // the cached product, never a gap between them (which would make
+        // it a needless second primary). TieredCache never re-enters
+        // this table, so the nesting cannot deadlock.
+        let mut inflight = self.inflight.lock().expect("memo inflight poisoned");
+        let f = {
+            let Some(v) = inflight.get_mut(&key) else { return Vec::new() };
+            let Some(i) = v.iter().position(|f| f.primary_id == primary_id) else {
+                return Vec::new();
+            };
+            let f = v.swap_remove(i);
+            if v.is_empty() {
+                inflight.remove(&key);
+            }
+            f
+        };
+        if let Some(p) = product {
+            self.products.fetch_add(1, Ordering::SeqCst);
+            if !f.stale {
+                self.cache.insert(key, Arc::clone(&p), p.bytes(), p.recompute_seconds());
+            }
+        }
+        f.waiters
+    }
+
+    /// An operand was re-registered: drop every cached product whose key
+    /// uses it and mark matching in-flight computations stale. Returns
+    /// how many cached products were invalidated.
+    pub fn invalidate_operand(&self, operand: u64) -> u64 {
+        if !self.enabled() {
+            return 0;
+        }
+        let n = self
+            .cache
+            .invalidate_where(|k| k.0 == operand || k.1 == operand);
+        self.invalidated.fetch_add(n, Ordering::SeqCst);
+        let mut inflight = self.inflight.lock().expect("memo inflight poisoned");
+        for (key, v) in inflight.iter_mut() {
+            if key.0 == operand || key.1 == operand {
+                for f in v.iter_mut() {
+                    f.stale = true;
+                }
+            }
+        }
+        n
+    }
+
+    /// Count batch submissions fused behind a shared operand.
+    pub fn record_fused(&self, n: u64) {
+        if self.enabled() {
+            self.fused.fetch_add(n, Ordering::SeqCst);
+        }
+    }
+
+    pub fn stats(&self) -> MemoStats {
+        let t = self.cache.stats();
+        MemoStats {
+            hits: self.hits.load(Ordering::SeqCst),
+            misses: self.misses.load(Ordering::SeqCst),
+            coalesced: self.coalesced.load(Ordering::SeqCst),
+            fused: self.fused.load(Ordering::SeqCst),
+            products: self.products.load(Ordering::SeqCst),
+            invalidated: self.invalidated.load(Ordering::SeqCst),
+            evictions: t.evictions,
+            evicted_bytes: t.evicted_bytes,
+            resident_bytes: t.resident_bytes,
+            resident_entries: t.resident_entries,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn product(seconds: f64, nnz_bytes: usize) -> Arc<CachedProduct> {
+        let n = (nnz_bytes / 24).max(1);
+        let c = Csr::identity(n);
+        Arc::new(CachedProduct {
+            decision: Decision::FlatFast,
+            report: SimReport {
+                seconds,
+                ..SimReport::default()
+            },
+            c_nrows: n,
+            c_nnz: n,
+            c: Arc::new(c),
+            predicted: None,
+            candidates: Vec::new(),
+        })
+    }
+
+    #[test]
+    fn lookup_miss_then_hit_roundtrip() {
+        let memo = ProductCache::new(1 << 20, true);
+        assert!(memo.lookup((1, 2)).is_none());
+        memo.register_primary((1, 2), 10);
+        let waiters = memo.complete((1, 2), 10, Some(product(1.0, 4096)));
+        assert!(waiters.is_empty());
+        let p = memo.lookup((1, 2)).expect("cached");
+        let r = p.to_result(11, false, Provenance::MemoHit);
+        assert_eq!(r.provenance, Provenance::MemoHit);
+        assert!(r.c.is_none());
+        let r = p.to_result(12, true, Provenance::MemoHit);
+        assert_eq!(r.c.as_ref().map(|c| c.nnz()), Some(p.c_nnz));
+        let s = memo.stats();
+        assert_eq!((s.hits, s.misses, s.products), (1, 1, 1));
+        assert_eq!(s.resident_entries, 1);
+    }
+
+    #[test]
+    fn stale_inflight_product_is_not_cached() {
+        let memo = ProductCache::new(1 << 20, true);
+        memo.register_primary((1, 2), 10);
+        // Operand 2 re-registered mid-flight: the run is stale.
+        assert_eq!(memo.invalidate_operand(2), 0, "nothing cached yet");
+        let _ = memo.complete((1, 2), 10, Some(product(1.0, 4096)));
+        assert!(memo.lookup((1, 2)).is_none(), "stale product cached");
+        // products still counts the completed computation.
+        assert_eq!(memo.stats().products, 1);
+    }
+
+    #[test]
+    fn invalidate_drops_only_matching_keys_and_blocks_stale_attach() {
+        let memo = ProductCache::new(1 << 20, true);
+        for (key, id) in [((1, 2), 10), ((3, 2), 11), ((3, 4), 12)] {
+            memo.register_primary(key, id);
+            let _ = memo.complete(key, id, Some(product(1.0, 4096)));
+        }
+        assert_eq!(memo.invalidate_operand(2), 2);
+        assert!(memo.lookup((1, 2)).is_none());
+        assert!(memo.lookup((3, 2)).is_none());
+        assert!(memo.lookup((3, 4)).is_some());
+        assert_eq!(memo.stats().invalidated, 2);
+        // A stale in-flight run refuses new waiters.
+        memo.register_primary((5, 2), 20);
+        memo.invalidate_operand(2);
+        let (tx, _rx) = mpsc::channel();
+        let attached = memo.try_attach(
+            (5, 2),
+            Waiter { id: 21, control: JobControl::new(), keep_product: false, tx },
+        );
+        assert!(!attached, "attached to a stale in-flight run");
+    }
+
+    #[test]
+    fn waiters_fan_out_at_completion_and_abort() {
+        let memo = ProductCache::new(1 << 20, true);
+        memo.register_primary((1, 2), 10);
+        let (tx, _rx) = mpsc::channel();
+        assert!(memo.try_attach(
+            (1, 2),
+            Waiter { id: 11, control: JobControl::new(), keep_product: true, tx },
+        ));
+        let waiters = memo.complete((1, 2), 10, Some(product(1.0, 4096)));
+        assert_eq!(waiters.len(), 1);
+        assert_eq!(waiters[0].id, 11);
+        assert_eq!(memo.stats().coalesced, 1);
+        // Abort path: registration is popped, waiters handed back.
+        memo.register_primary((3, 4), 20);
+        let (tx, _rx) = mpsc::channel();
+        assert!(memo.try_attach(
+            (3, 4),
+            Waiter { id: 21, control: JobControl::new(), keep_product: false, tx },
+        ));
+        let orphans = memo.abort_primary((3, 4), 20);
+        assert_eq!(orphans.len(), 1);
+        assert!(memo.lookup((3, 4)).is_none());
+    }
+
+    #[test]
+    fn disabled_cache_is_fully_inert() {
+        let memo = ProductCache::new(1 << 20, false);
+        memo.register_primary((1, 2), 10);
+        let (tx, _rx) = mpsc::channel();
+        assert!(!memo.try_attach(
+            (1, 2),
+            Waiter { id: 11, control: JobControl::new(), keep_product: false, tx },
+        ));
+        let _ = memo.complete((1, 2), 10, Some(product(1.0, 4096)));
+        assert!(memo.lookup((1, 2)).is_none());
+        memo.record_fused(3);
+        assert_eq!(memo.invalidate_operand(1), 0);
+        assert_eq!(memo.stats(), MemoStats::default());
+    }
+
+    #[test]
+    fn zero_budget_coalesces_but_caches_nothing() {
+        let memo = ProductCache::new(0, true);
+        memo.register_primary((1, 2), 10);
+        let (tx, _rx) = mpsc::channel();
+        assert!(memo.try_attach(
+            (1, 2),
+            Waiter { id: 11, control: JobControl::new(), keep_product: false, tx },
+        ));
+        let waiters = memo.complete((1, 2), 10, Some(product(1.0, 4096)));
+        assert_eq!(waiters.len(), 1);
+        assert!(memo.lookup((1, 2)).is_none(), "budget 0 admitted a product");
+        let s = memo.stats();
+        assert_eq!((s.coalesced, s.products, s.resident_bytes), (1, 1, 0));
+    }
+}

@@ -6,14 +6,16 @@
 //! ([`MlmemError`](crate::error::MlmemError)).
 
 pub mod job;
+pub mod memo;
 pub mod planner;
 pub mod service;
 pub mod session;
 
 pub use job::{
     CandidateScore, ChainAssoc, ChainSummary, Decision, HopResult, Job, JobKind, JobResult,
-    Policy,
+    Policy, Provenance,
 };
+pub use memo::{CachedProduct, MemoStats, ProductCache};
 pub use planner::{execute, explain_spgemm, ExplainRow, PlannerOptions};
 pub use service::{AdmissionTicket, DecisionCounts, JobHandle, Metrics, MetricsSnapshot};
 pub use session::{MatrixHandle, Session, SessionBuilder, SubmitOptions};

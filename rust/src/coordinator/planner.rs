@@ -14,7 +14,7 @@
 
 use super::job::{
     CandidateScore, ChainAssoc, ChainSummary, Decision, HopResult, Job, JobKind, JobResult,
-    Policy,
+    Policy, Provenance,
 };
 use crate::chunk::heuristic::GpuChunkAlgo;
 use crate::error::{JobControl, MlmemError};
@@ -444,6 +444,7 @@ fn execute_spgemm_precomputed(
         predicted,
         candidates,
         chain: None,
+        provenance: Provenance::Computed,
     })
 }
 
@@ -911,6 +912,7 @@ pub(crate) fn execute_chain_mats(
         predicted,
         candidates: Vec::new(),
         chain: Some(ChainSummary { assoc, order_scores, hops }),
+        provenance: Provenance::Computed,
     })
 }
 
@@ -1109,6 +1111,7 @@ fn execute_tricount(
         predicted: None,
         candidates: Vec::new(),
         chain: None,
+        provenance: Provenance::Computed,
     })
 }
 

@@ -4,7 +4,8 @@
 //! old blocking-only `SpgemmService` front-end was replaced by the
 //! session-handle API in `coordinator::session`.
 
-use super::job::{Decision, JobResult};
+use super::job::{Decision, JobResult, Provenance};
+use super::memo::MemoStats;
 use crate::cluster::FabricStats;
 use crate::error::{JobControl, MlmemError};
 use crate::memory::contention::LinkStats;
@@ -93,14 +94,20 @@ pub struct MetricsSnapshot {
     /// Inter-node fabric arbitration counters: busy/stall seconds
     /// (utilization), bytes exchanged, requests, peak concurrent streams.
     pub fabric: FabricStats,
+    /// Serve-path result-cache counters: memo hits/misses, coalesced
+    /// waiters, fused batch jobs, products cached, invalidations, and
+    /// the live resident gauges (DESIGN.md §13).
+    pub memo: MemoStats,
 }
 
 impl Metrics {
     /// Snapshot every counter; the caller supplies the live queue depths
     /// (the worker pool owns those numbers), the session's residency-pool
     /// stats, the shared link's arbitration stats, the scheduler's
-    /// co-schedule hit count, and the cluster's node count + fabric stats
-    /// (1 node and default stats when no cluster was configured).
+    /// co-schedule hit count, the cluster's node count + fabric stats
+    /// (1 node and default stats when no cluster was configured), and
+    /// the serve-path result-cache stats.
+    #[allow(clippy::too_many_arguments)]
     pub fn snapshot(
         &self,
         queue: QueueDepth,
@@ -109,6 +116,7 @@ impl Metrics {
         co_schedule_hits: u64,
         cluster_nodes: usize,
         fabric: FabricStats,
+        memo: MemoStats,
     ) -> MetricsSnapshot {
         let load = |c: &AtomicU64| c.load(Ordering::SeqCst);
         MetricsSnapshot {
@@ -128,6 +136,7 @@ impl Metrics {
             cluster_products: load(&self.cluster_products),
             shard_runs: load(&self.shard_runs),
             fabric,
+            memo,
             decisions: DecisionCounts {
                 flat_default: load(&self.dec_flat_default),
                 flat_fast: load(&self.dec_flat_fast),
@@ -143,10 +152,16 @@ impl Metrics {
         match result {
             Ok(r) => {
                 self.completed.fetch_add(1, Ordering::SeqCst);
-                self.sim_time_ns
-                    .fetch_add((r.report.seconds * 1e9) as u64, Ordering::SeqCst);
-                self.flops.fetch_add(r.report.flops, Ordering::SeqCst);
-                self.record_decision(&r.decision);
+                // Memo hits and coalesced waiters replay a computation
+                // that was (or is being) accounted once by its primary:
+                // counting their simulated time/flops/decision again
+                // would inflate aggregate throughput.
+                if r.provenance == Provenance::Computed {
+                    self.sim_time_ns
+                        .fetch_add((r.report.seconds * 1e9) as u64, Ordering::SeqCst);
+                    self.flops.fetch_add(r.report.flops, Ordering::SeqCst);
+                    self.record_decision(&r.decision);
+                }
             }
             Err(MlmemError::Cancelled) => {
                 self.cancelled.fetch_add(1, Ordering::SeqCst);
@@ -358,6 +373,7 @@ mod tests {
             5,
             1,
             FabricStats::default(),
+            MemoStats::default(),
         );
         assert_eq!((s.cancelled, s.failed, s.completed), (2, 1, 0));
         // The DeadlineExceeded outcome is an SLO miss; plain Cancelled
@@ -370,6 +386,7 @@ mod tests {
         assert_eq!(s.cluster_nodes, 1);
         assert_eq!((s.cluster_products, s.shard_runs), (0, 0));
         assert_eq!(s.fabric, FabricStats::default());
+        assert_eq!(s.memo, MemoStats::default());
     }
 
     #[test]

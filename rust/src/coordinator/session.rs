@@ -63,7 +63,8 @@
 //! assert_eq!(session.symbolic_passes(), 1);
 //! ```
 
-use super::job::{ChainAssoc, Decision, Job, JobKind, JobResult, Policy};
+use super::job::{ChainAssoc, Decision, Job, JobKind, JobResult, Policy, Provenance};
+use super::memo::{CachedProduct, ProductCache, Waiter};
 use super::planner::{self, PlannerOptions};
 use super::service::{AdmissionTicket, JobHandle, Metrics, MetricsSnapshot};
 use crate::cluster::{self, ClusterOutcome, ClusterSpec, Fabric, FabricStats};
@@ -169,6 +170,10 @@ struct Shared {
     /// The shared fast↔slow bulk-copy link every priced job's transfers
     /// are arbitrated through (DESIGN.md §11).
     link: Arc<SharedLink>,
+    /// Serve-path product cache + in-flight coalescing table: whole
+    /// `(A, B)` products are memoized under a byte budget and identical
+    /// in-flight submissions share one computation (DESIGN.md §13).
+    memo: ProductCache,
 }
 
 impl Shared {
@@ -198,6 +203,8 @@ pub struct SessionBuilder {
     default_policy: Policy,
     operand_cache: bool,
     co_schedule: bool,
+    memoize: bool,
+    result_cache: Option<u64>,
     cluster: Option<ClusterSpec>,
 }
 
@@ -211,6 +218,8 @@ impl SessionBuilder {
             default_policy: Policy::Auto,
             operand_cache: true,
             co_schedule: true,
+            memoize: true,
+            result_cache: None,
             cluster: None,
         }
     }
@@ -267,6 +276,25 @@ impl SessionBuilder {
         self
     }
 
+    /// Enable or disable serve-path result memoization (default on):
+    /// whole `(A, B)` products of Auto-policy jobs are cached under a
+    /// byte budget and identical in-flight submissions coalesce onto one
+    /// computation (DESIGN.md §13). Disabled, every submission computes —
+    /// the memo-off baseline the `memo` bench experiment compares
+    /// against.
+    pub fn memoize(mut self, enabled: bool) -> Self {
+        self.memoize = enabled;
+        self
+    }
+
+    /// Byte budget of the serve-path product cache (default: a quarter
+    /// of the slow pool's usable capacity). A budget of 0 keeps
+    /// coalescing live but caches no product.
+    pub fn result_cache(mut self, bytes: u64) -> Self {
+        self.result_cache = Some(bytes);
+        self
+    }
+
     /// Span the session across `nodes` simulated copies of the machine
     /// joined by the default [`FabricSpec`](crate::cluster::FabricSpec)
     /// — the [`spgemm_cluster`](Session::spgemm_cluster) path shards
@@ -284,6 +312,12 @@ impl SessionBuilder {
 
     pub fn build(self) -> Session {
         let fast_capacity = self.arch.spec.pools[FAST.0].usable();
+        // The product tier budgets against slow (capacity) memory — a
+        // cached product is a *slow-pool* resident the session keeps
+        // instead of recomputing; a quarter of it is the default.
+        let memo_budget = self
+            .result_cache
+            .unwrap_or(self.arch.spec.pools[SLOW.0].usable() / 4);
         let workers = self.workers.max(1);
         Session {
             arch: self.arch,
@@ -305,6 +339,7 @@ impl SessionBuilder {
                 symbolic_passes: AtomicU64::new(0),
                 fast_pool: ResidencyPool::new(fast_capacity, self.operand_cache),
                 link: SharedLink::new(),
+                memo: ProductCache::new(memo_budget, self.memoize),
             }),
             cluster: self.cluster.map(|spec| ClusterState {
                 spec,
@@ -351,6 +386,32 @@ impl Session {
         MatrixHandle { id }
     }
 
+    /// Replace the matrix behind an existing handle. Every derived
+    /// artifact keyed on the handle is dropped — the pair-level symbolic
+    /// cache, the operand's fast-pool residency, and **every cached
+    /// product whose key uses the handle** (counted as `invalidated` in
+    /// [`MemoStats`](super::MemoStats)); in-flight computations of such
+    /// products are marked stale so their result is never cached or
+    /// coalesced onto. Jobs already running against the old matrix keep
+    /// their own `Arc` and complete against it.
+    pub fn reregister(&self, h: MatrixHandle, matrix: Arc<Csr>) -> Result<(), MlmemError> {
+        {
+            let mut registry = self.operands.lock().expect("registry poisoned");
+            let slot = registry
+                .get_mut(&h.id)
+                .ok_or(MlmemError::UnknownHandle(h.id))?;
+            *slot = Arc::new(Operand { matrix, compressed: Mutex::new(None) });
+        }
+        self.shared
+            .pair_cache
+            .lock()
+            .expect("pair cache poisoned")
+            .retain(|k, _| k.0 != h.id && k.1 != h.id);
+        self.shared.fast_pool.remove(h.id);
+        self.shared.memo.invalidate_operand(h.id);
+        Ok(())
+    }
+
     /// The registered matrix behind a handle.
     pub fn operand(&self, h: MatrixHandle) -> Result<Arc<Csr>, MlmemError> {
         Ok(Arc::clone(&self.resolve(h)?.matrix))
@@ -395,11 +456,19 @@ impl Session {
     }
 
     /// Submit `C = A × B` with per-job policy/priority/deadline.
+    ///
+    /// Auto-policy submissions ride the serve-path memo machinery
+    /// (DESIGN.md §13) when the session's result cache is enabled: a
+    /// cached `(A, B)` product completes immediately
+    /// ([`Provenance::MemoHit`]); an identical in-flight product is
+    /// shared ([`Provenance::Coalesced`], one computation, N waiters);
+    /// otherwise the job computes as the pair's primary and its product
+    /// is cached under the byte budget.
     pub fn spgemm_with(
         &self,
         a: MatrixHandle,
         b: MatrixHandle,
-        options: SubmitOptions,
+        mut options: SubmitOptions,
     ) -> Result<JobHandle, MlmemError> {
         let oa = self.resolve(a)?;
         let ob = self.resolve(b)?;
@@ -409,12 +478,71 @@ impl Session {
                 b: (ob.matrix.nrows, ob.matrix.ncols),
             });
         }
+        // Memoization covers exactly the submissions whose plan is the
+        // planner's own (`Policy::Auto`): an explicit policy override is
+        // a request to *run* that policy, not to replay a product some
+        // other plan produced.
+        let policy = options.policy.unwrap_or(self.default_policy);
+        let memo_key = (self.shared.memo.enabled() && policy == Policy::Auto)
+            .then_some((a.id, b.id));
+        if let Some(key) = memo_key {
+            // Compose the job control once, here, so the memo-hit and
+            // coalesce paths honor caller cancellation/deadlines. The
+            // primary path hands the composed token back through
+            // `options` with the deadline left in place — admission
+            // pricing keys off it, and submit re-composing the same
+            // deadline onto the token is a no-op (`deadline_in` keeps
+            // the earlier instant).
+            let control = compose_control(options.control.take(), options.deadline);
+            if let Some(p) = self.shared.memo.lookup(key) {
+                let id = self.next_job.fetch_add(1, Ordering::SeqCst);
+                self.shared.metrics.submitted.fetch_add(1, Ordering::SeqCst);
+                let (tx, rx) = mpsc::channel();
+                let result = control
+                    .checkpoint()
+                    .map(|()| p.to_result(id, options.keep_product, Provenance::MemoHit));
+                self.shared.metrics.record_outcome(&result);
+                let _ = tx.send(result);
+                return Ok(JobHandle::new(id, control, rx));
+            }
+            let id = self.next_job.fetch_add(1, Ordering::SeqCst);
+            let (tx, rx) = mpsc::channel();
+            let waiter = Waiter {
+                id,
+                control: control.clone(),
+                keep_product: options.keep_product,
+                tx,
+            };
+            if self.shared.memo.try_attach(key, waiter) {
+                // Attached to the pair's in-flight computation: no
+                // worker slot, no pricing, no link demand — the primary
+                // carries all of that for the group.
+                self.shared.metrics.submitted.fetch_add(1, Ordering::SeqCst);
+                return Ok(JobHandle::new(id, control, rx));
+            }
+            // The pair's primary may have finished between the lookup
+            // miss and the attach attempt. `complete` publishes the
+            // product before releasing the in-flight entry, so one
+            // re-check closes the window — without it this submission
+            // would become a needless second primary.
+            if let Some(p) = self.shared.memo.lookup(key) {
+                self.shared.metrics.submitted.fetch_add(1, Ordering::SeqCst);
+                let (tx, rx) = mpsc::channel();
+                let result = control
+                    .checkpoint()
+                    .map(|()| p.to_result(id, options.keep_product, Provenance::MemoHit));
+                self.shared.metrics.record_outcome(&result);
+                let _ = tx.send(result);
+                return Ok(JobHandle::new(id, control, rx));
+            }
+            options.control = Some(control);
+        }
         let admission = self.price_spgemm(a, b, &oa, &ob, &options)?;
         let kind = JobKind::Spgemm {
             a: Arc::clone(&oa.matrix),
             b: Arc::clone(&ob.matrix),
         };
-        self.submit(kind, options, admission, move |job, control, opts, shared, link| {
+        self.submit_memo(kind, options, admission, memo_key, move |job, control, opts, shared, link| {
             let core = shared.shape_core_for((a.id, b.id), &oa, &ob);
             // Lease pool-resident operands for the run (the leases keep
             // them unevictable mid-job) and seed the problem's residency
@@ -440,6 +568,43 @@ impl Session {
             }
             result
         })
+    }
+
+    /// Submit a batch of products with **shared-operand fusion**
+    /// (DESIGN.md §13): jobs are dispatched grouped by their B operand
+    /// (groups ordered by first appearance) so a shared right-hand side
+    /// is staged into the fast pool once and every job behind it starts
+    /// residency-hot — and identical pairs inside the batch coalesce
+    /// onto one computation via the normal serve-path machinery. Handles
+    /// come back in the **original** `pairs` order; per-pair failures
+    /// (unknown handle, shape mismatch, admission rejection) are
+    /// returned in place without failing the rest of the batch. Jobs
+    /// fused behind a shared operand (each group's size minus one) are
+    /// counted in [`MemoStats::fused`](super::MemoStats).
+    pub fn spgemm_batch(
+        &self,
+        pairs: &[(MatrixHandle, MatrixHandle)],
+        options: SubmitOptions,
+    ) -> Vec<Result<JobHandle, MlmemError>> {
+        let mut first_seen: HashMap<u64, usize> = HashMap::new();
+        let mut group_sizes: HashMap<u64, u64> = HashMap::new();
+        for (i, p) in pairs.iter().enumerate() {
+            first_seen.entry(p.1.id).or_insert(i);
+            *group_sizes.entry(p.1.id).or_insert(0) += 1;
+        }
+        let fused: u64 = group_sizes.values().map(|&n| n.saturating_sub(1)).sum();
+        self.shared.memo.record_fused(fused);
+        let mut order: Vec<usize> = (0..pairs.len()).collect();
+        order.sort_by_key(|&i| (first_seen[&pairs[i].1.id], i));
+        let mut out: Vec<Option<Result<JobHandle, MlmemError>>> = Vec::new();
+        out.resize_with(pairs.len(), || None);
+        for &i in &order {
+            let (a, b) = pairs[i];
+            out[i] = Some(self.spgemm_with(a, b, options.clone()));
+        }
+        out.into_iter()
+            .map(|o| o.expect("every batch index submitted"))
+            .collect()
     }
 
     /// Price a prospective SpGEMM submission against the shared link's
@@ -653,6 +818,33 @@ impl Session {
             + Send
             + 'static,
     {
+        self.submit_memo(kind, options, admission, None, run)
+    }
+
+    /// [`submit`](Self::submit) plus the serve-path memo plumbing: a
+    /// `Some(memo_key)` submission is registered as the key's in-flight
+    /// *primary* before dispatch (so identical submissions can coalesce
+    /// onto it), forced to keep its product for capture, and finished
+    /// through [`finish_memo`] — cache admission plus waiter fan-out.
+    fn submit_memo<F>(
+        &self,
+        kind: JobKind,
+        options: SubmitOptions,
+        admission: Admission,
+        memo_key: Option<(u64, u64)>,
+        run: F,
+    ) -> Result<JobHandle, MlmemError>
+    where
+        F: FnOnce(
+                &Job,
+                &JobControl,
+                &PlannerOptions,
+                &Shared,
+                Option<LinkHandle>,
+            ) -> Result<JobResult, MlmemError>
+            + Send
+            + 'static,
+    {
         let pending = self.pool.pending();
         if pending >= self.max_pending {
             self.shared.metrics.rejected.fetch_add(1, Ordering::SeqCst);
@@ -665,21 +857,23 @@ impl Session {
         }
         let id = self.next_job.fetch_add(1, Ordering::SeqCst);
         self.shared.metrics.submitted.fetch_add(1, Ordering::SeqCst);
-        let control = match (options.control, options.deadline) {
-            // The merged token shares the caller's cancellation flag and
-            // takes the tighter deadline.
-            (Some(c), Some(d)) => c.deadline_in(d),
-            (Some(c), None) => c,
-            (None, Some(d)) => JobControl::with_deadline(d),
-            (None, None) => JobControl::new(),
-        };
+        let control = compose_control(options.control, options.deadline);
         let mut job = Job::new(
             id,
             kind,
             Arc::clone(&self.arch),
             options.policy.unwrap_or(self.default_policy),
         );
-        job.keep_product = options.keep_product;
+        // A memoized primary always materializes its product — the cache
+        // and any coalesced waiters need it; `finish_memo` restores the
+        // caller's own `keep_product` wish on the primary's result.
+        let orig_keep = options.keep_product;
+        job.keep_product = orig_keep || memo_key.is_some();
+        // Nothing below can fail, so a registered primary is always
+        // completed (or error-completed) by the worker closure.
+        if let Some(key) = memo_key {
+            self.shared.memo.register_primary(key, id);
+        }
         let opts = self.opts;
         let shared = Arc::clone(&self.shared);
         let worker_control = control.clone();
@@ -695,6 +889,10 @@ impl Session {
             let result = worker_control
                 .checkpoint()
                 .and_then(|()| run(&job, &worker_control, &opts, &shared, link));
+            let result = match memo_key {
+                Some(key) => finish_memo(&shared, key, job.id, orig_keep, result),
+                None => result,
+            };
             shared.metrics.record_outcome(&result);
             let _ = tx.send(result);
         });
@@ -810,7 +1008,18 @@ impl Session {
             self.cluster
                 .as_ref()
                 .map_or(FabricStats::default(), |c| c.fabric.stats()),
+            self.shared.memo.stats(),
         )
+    }
+
+    /// Is serve-path result memoization live on this session?
+    pub fn memoize_enabled(&self) -> bool {
+        self.shared.memo.enabled()
+    }
+
+    /// Byte budget of the serve-path product cache.
+    pub fn result_cache_capacity(&self) -> u64 {
+        self.shared.memo.capacity()
     }
 
     /// The session's shared fast↔slow bulk-copy link — the arbiter every
@@ -833,6 +1042,84 @@ impl Session {
             .get(&h.id)
             .map(Arc::clone)
             .ok_or(MlmemError::UnknownHandle(h.id))
+    }
+}
+
+/// Merge a caller-supplied control token with a submission deadline: the
+/// merged token shares the caller's cancellation flag and takes the
+/// tighter deadline. Idempotent for a fixed deadline — re-composing
+/// keeps the earlier expiry instant — so the serve path can compose at
+/// memo lookup and again at dispatch without double-counting.
+fn compose_control(control: Option<JobControl>, deadline: Option<Duration>) -> JobControl {
+    match (control, deadline) {
+        (Some(c), Some(d)) => c.deadline_in(d),
+        (Some(c), None) => c,
+        (None, Some(d)) => JobControl::with_deadline(d),
+        (None, None) => JobControl::new(),
+    }
+}
+
+/// Completion half of the serve-path memo machinery (DESIGN.md §13),
+/// run on the worker after a memoized primary's computation:
+///
+/// 1. pop the key's in-flight registration, admitting the product to
+///    the cache (unless a mid-flight re-registration marked it stale),
+///    priced at its predicted recompute seconds per byte;
+/// 2. fan the outcome out to every coalesced waiter — each gets a
+///    bit-identical result under its own id/`keep_product`, with its
+///    *own* control checked at delivery (a cancelled or expired waiter
+///    gets its typed error; the shared computation is unaffected);
+/// 3. restore the primary caller's `keep_product` wish (the run was
+///    forced to materialize the product for the cache).
+fn finish_memo(
+    shared: &Shared,
+    key: (u64, u64),
+    primary_id: u64,
+    orig_keep: bool,
+    result: Result<JobResult, MlmemError>,
+) -> Result<JobResult, MlmemError> {
+    match result {
+        Ok(mut r) => {
+            let product = r.c.take().map(|c| {
+                Arc::new(CachedProduct {
+                    decision: r.decision.clone(),
+                    report: r.report.clone(),
+                    c_nrows: r.c_nrows,
+                    c_nnz: r.c_nnz,
+                    c: Arc::new(c),
+                    predicted: r.predicted,
+                    candidates: r.candidates.clone(),
+                })
+            });
+            let waiters = shared.memo.complete(key, primary_id, product.clone());
+            for w in waiters {
+                let out = match (w.control.checkpoint(), &product) {
+                    (Err(e), _) => Err(e),
+                    (Ok(()), Some(p)) => {
+                        Ok(p.to_result(w.id, w.keep_product, Provenance::Coalesced))
+                    }
+                    (Ok(()), None) => Err(MlmemError::Planner(
+                        "memoized run completed without a product".into(),
+                    )),
+                };
+                shared.metrics.record_outcome(&out);
+                let _ = w.tx.send(out);
+            }
+            if orig_keep {
+                r.c = product.as_ref().map(|p| (*p.c).clone());
+            }
+            Ok(r)
+        }
+        Err(e) => {
+            // The primary failed (cancelled, expired, planner error):
+            // every waiter shares the typed outcome.
+            for w in shared.memo.complete(key, primary_id, None) {
+                let out = Err(e.clone());
+                shared.metrics.record_outcome(&out);
+                let _ = w.tx.send(out);
+            }
+            Err(e)
+        }
     }
 }
 
@@ -1037,7 +1324,10 @@ mod tests {
 
     #[test]
     fn residency_reflects_fast_pool_capture() {
-        let session = Session::builder(arch()).workers(1).build();
+        // Memoization off: this test pins the *operand* tier's behavior
+        // across repeated identical jobs, which the product tier would
+        // otherwise short-circuit.
+        let session = Session::builder(arch()).workers(1).memoize(false).build();
         let a = session.register(mat(3));
         let b = session.register(mat(4));
         assert_eq!(session.residency(a), None);
@@ -1063,7 +1353,11 @@ mod tests {
 
     #[test]
     fn disabled_operand_cache_is_inert_and_equivalent() {
-        let session = Session::builder(arch()).workers(1).operand_cache(false).build();
+        let session = Session::builder(arch())
+            .workers(1)
+            .operand_cache(false)
+            .memoize(false)
+            .build();
         let a = session.register(mat(3));
         let b = session.register(mat(4));
         let r1 = session.spgemm(a, b).unwrap().wait().unwrap();
@@ -1163,6 +1457,47 @@ mod tests {
         let ms = solo.metrics();
         assert_eq!(ms.cluster_nodes, 1);
         assert_eq!(ms.fabric, FabricStats::default());
+    }
+
+    #[test]
+    fn memo_hit_replays_without_recomputation() {
+        let session = Session::builder(arch()).workers(1).build();
+        let a = session.register(mat(21));
+        let b = session.register(mat(22));
+        let r1 = session.spgemm(a, b).unwrap().wait().unwrap();
+        assert_eq!(r1.provenance, Provenance::Computed);
+        // `wait` returns after the primary's completion hook ran, so the
+        // product is already cached.
+        let r2 = session.spgemm(a, b).unwrap().wait().unwrap();
+        assert_eq!(r2.provenance, Provenance::MemoHit);
+        assert_eq!((r2.c_nrows, r2.c_nnz), (r1.c_nrows, r1.c_nnz));
+        session.drain();
+        let m = session.metrics();
+        assert_eq!((m.memo.hits, m.memo.misses, m.memo.products), (1, 1, 1));
+        assert_eq!((m.submitted, m.completed), (2, 2));
+        // The replay re-accounted no simulated work: one job's worth of
+        // flops and one decision on the books.
+        assert_eq!(session.symbolic_passes(), 1);
+    }
+
+    #[test]
+    fn reregister_invalidates_products_and_recomputes() {
+        let session = Session::builder(arch()).workers(1).build();
+        let a = session.register(mat(23));
+        let b = session.register(mat(24));
+        session.spgemm(a, b).unwrap().wait().unwrap();
+        session.reregister(b, mat(25)).unwrap();
+        let r = session.spgemm(a, b).unwrap().wait().unwrap();
+        assert_eq!(r.provenance, Provenance::Computed, "stale product served");
+        session.drain();
+        let m = session.metrics();
+        assert_eq!(m.memo.invalidated, 1);
+        // The pair-level symbolic cache was dropped too.
+        assert_eq!(session.symbolic_passes(), 2);
+        assert!(matches!(
+            session.reregister(MatrixHandle { id: 999 }, mat(1)),
+            Err(MlmemError::UnknownHandle(999))
+        ));
     }
 
     #[test]

@@ -10,7 +10,7 @@
 use mlmem_spgemm::bench::experiments::{Mul, ProblemCache};
 use mlmem_spgemm::bench::figures::BenchConfig;
 use mlmem_spgemm::bench::{run_and_report, EXPERIMENTS};
-use mlmem_spgemm::coordinator::{MatrixHandle, PlannerOptions, Session, SubmitOptions};
+use mlmem_spgemm::coordinator::{MatrixHandle, PlannerOptions, Provenance, Session, SubmitOptions};
 use mlmem_spgemm::engine::EngineKind;
 use mlmem_spgemm::error::MlmemError;
 use mlmem_spgemm::gen::scale::ScaleFactor;
@@ -609,7 +609,9 @@ fn cmd_serve(argv: &[String]) -> Result<(), MlmemError> {
         .opt("scale-denom", "1024", "capacity scale denominator")
         .opt("deadline-ms", "0", "per-job SLO budget in milliseconds (0 = none)")
         .switch("explain", "print admission tickets, SLO rejections, and link metrics")
-        .switch("fifo", "disable copy/compute co-scheduling (strict two-lane FIFO)");
+        .switch("fifo", "disable copy/compute co-scheduling (strict two-lane FIFO)")
+        .switch("no-memo", "disable the serve-path result cache (every job recomputes)")
+        .switch("fuse", "submit as one batch grouped by shared operand");
     let p = spec.parse(argv)?;
     let scale = scale_from(&p)?;
     let arch = Arc::new(parse_machine(&p, p.usize("threads")?, scale)?);
@@ -620,6 +622,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), MlmemError> {
         .workers(p.usize("workers")?)
         .max_pending(jobs * 2)
         .co_schedule(!p.flag("fifo"))
+        .memoize(!p.flag("no-memo"))
         .build();
     let mut cache = ProblemCache::default();
     let size = p.f64("size-gb")?;
@@ -628,10 +631,10 @@ fn cmd_serve(argv: &[String]) -> Result<(), MlmemError> {
     // jobs share the handles, so the session's registry amortizes the
     // symbolic pass across the batch.
     let mut registered: HashMap<(usize, usize), (MatrixHandle, MatrixHandle)> = HashMap::new();
-    let mut handles = Vec::new();
+    let mut pairs = Vec::new();
     for i in 0..jobs {
         let key = (i % Domain::ALL.len(), i % 2);
-        let (ha, hb) = match registered.get(&key) {
+        let pair = match registered.get(&key) {
             Some(&pair) => pair,
             None => {
                 let prob = cache.get(Domain::ALL[key.0], size, scale).clone();
@@ -644,15 +647,26 @@ fn cmd_serve(argv: &[String]) -> Result<(), MlmemError> {
                 pair
             }
         };
-        let submit = SubmitOptions {
-            deadline: (deadline_ms > 0)
-                .then(|| std::time::Duration::from_millis(deadline_ms)),
-            price_admission: explain,
-            ..Default::default()
-        };
+        pairs.push(pair);
+    }
+    let submit = SubmitOptions {
+        deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
+        price_admission: explain,
+        ..Default::default()
+    };
+    let submissions = if p.flag("fuse") {
+        session.spgemm_batch(&pairs, submit)
+    } else {
+        pairs
+            .iter()
+            .map(|&(ha, hb)| session.spgemm_with(ha, hb, submit.clone()))
+            .collect()
+    };
+    let mut handles = Vec::new();
+    for (i, sub) in submissions.into_iter().enumerate() {
         // SLO rejections are part of the batch's story, not a CLI
         // failure: print the structured context and move on.
-        match session.spgemm_with(ha, hb, submit) {
+        match sub {
             Ok(h) => handles.push(h),
             Err(e @ MlmemError::AdmissionRejected { .. }) => println!("job {:>3}: {e}", i + 1),
             Err(e) => return Err(e),
@@ -673,13 +687,21 @@ fn cmd_serve(argv: &[String]) -> Result<(), MlmemError> {
             }
             _ => String::new(),
         };
+        // Memo hits and coalesced jobs replay the primary run's report;
+        // mark them so the throughput line isn't read as a fresh run.
+        let mark = match r.provenance {
+            Provenance::Computed => "",
+            Provenance::MemoHit => "  [memo-hit]",
+            Provenance::Coalesced => "  [coalesced]",
+        };
         println!(
-            "job {:>3}: {:<18} {:>8.2} GF/s  C nnz {}{}",
+            "job {:>3}: {:<18} {:>8.2} GF/s  C nnz {}{}{}",
             r.id,
             r.decision.name(),
             r.report.gflops,
             r.c_nnz,
-            pred
+            pred,
+            mark
         );
         if let (true, Some(t)) = (explain, ticket) {
             let actual = r.report.seconds;
@@ -718,6 +740,22 @@ fn cmd_serve(argv: &[String]) -> Result<(), MlmemError> {
         mlmem_spgemm::util::table::human_bytes(m.residency.resident_bytes),
         m.residency.resident_entries
     );
+    if session.memoize_enabled() {
+        println!(
+            "result cache: {} hits, {} coalesced, {} fused, {} misses; \
+             {} products cached ({} of {} budget), {} invalidated",
+            m.memo.hits,
+            m.memo.coalesced,
+            m.memo.fused,
+            m.memo.misses,
+            m.memo.resident_entries,
+            mlmem_spgemm::util::table::human_bytes(m.memo.resident_bytes),
+            mlmem_spgemm::util::table::human_bytes(session.result_cache_capacity()),
+            m.memo.invalidated
+        );
+    } else {
+        println!("result cache: disabled (--no-memo)");
+    }
     if explain {
         println!(
             "shared link: {:.0}% busy ({:.4}s simulated stall), {} in {} transfers, \

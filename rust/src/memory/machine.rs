@@ -164,7 +164,7 @@ impl MachineSpec {
 }
 
 /// Result of a simulated run.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct SimReport {
     pub machine: String,
     pub threads: usize,

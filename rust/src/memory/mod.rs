@@ -14,6 +14,7 @@ pub mod machine;
 pub mod mcdram_cache;
 pub mod pool;
 pub mod residency;
+pub mod tiered;
 pub mod uvm;
 
 pub use alloc::Location;
@@ -24,3 +25,4 @@ pub use contention::{
 pub use machine::{MachineSpec, MemSim, MemTracer, NullTracer, RegionId, SimReport};
 pub use pool::{PoolId, FAST, SLOW};
 pub use residency::{Lease, ResidencyPool, ResidencyStats};
+pub use tiered::{TieredCache, TieredLease, TieredStats};

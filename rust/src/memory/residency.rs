@@ -32,6 +32,13 @@
 //!   exceeds the configured capacity (the architecture's usable fast
 //!   bytes); entries larger than the capacity are never admitted.
 //!
+//! Since PR 9 the lease/eviction machinery itself lives in
+//! [`TieredCache`](crate::memory::TieredCache), shared with the serve
+//! path's product cache (`coordinator/memo.rs`); this type is the
+//! operand-tier wrapper (`V = ()`, keys are operand handle ids, restore
+//! cost is the re-copy price). The full invariant suite below pins the
+//! shared machinery from the operand consumer's side.
+//!
 //! The pool is a session-level model: each job still runs against its own
 //! [`MemSim`](crate::memory::MemSim), which accounts the job's *own*
 //! resident operands (the residency-aware drivers shrink their staging
@@ -39,36 +46,7 @@
 //! does not touch is not visible to that job's simulator — the
 //! single-job-at-a-time approximation DESIGN.md §9 documents.
 
-use std::collections::{HashMap, HashSet};
-use std::sync::Mutex;
-
-/// One resident operand.
-struct Entry {
-    bytes: u64,
-    /// Active leases; a leased entry is never evicted.
-    leases: u32,
-    /// Pinned entries are never evicted, leased or not.
-    pinned: bool,
-    /// Logical-clock timestamp of the last touch (LRU tiebreak).
-    last_use: u64,
-    /// Seconds one bulk slow→fast transfer of this operand costs — what
-    /// eviction weighs the freed bytes against.
-    recopy_seconds: f64,
-}
-
-#[derive(Default)]
-struct Inner {
-    entries: HashMap<u64, Entry>,
-    /// Sum of resident entry bytes; invariant: `used <= capacity`.
-    used: u64,
-    clock: u64,
-    hits: u64,
-    misses: u64,
-    evictions: u64,
-    evicted_bytes: u64,
-    /// Keys pinned before their first capture: applied at insert.
-    pending_pins: HashSet<u64>,
-}
+use crate::memory::tiered::{TieredCache, TieredLease};
 
 /// Counters and gauges of a [`ResidencyPool`], surfaced through
 /// [`MetricsSnapshot`](crate::coordinator::MetricsSnapshot).
@@ -91,22 +69,11 @@ pub struct ResidencyStats {
 /// A ref-counted hold on a resident operand for the duration of one job;
 /// releases on drop. While any lease on an entry is live, the entry
 /// cannot be evicted.
-pub struct Lease<'p> {
-    pool: &'p ResidencyPool,
-    key: u64,
-}
-
-impl Drop for Lease<'_> {
-    fn drop(&mut self) {
-        self.pool.release(self.key);
-    }
-}
+pub struct Lease<'p>(#[allow(dead_code)] TieredLease<'p, u64, ()>);
 
 /// The session-owned fast-pool residency manager; see the module docs.
 pub struct ResidencyPool {
-    capacity: u64,
-    enabled: bool,
-    inner: Mutex<Inner>,
+    cache: TieredCache<u64, ()>,
 }
 
 impl ResidencyPool {
@@ -114,49 +81,22 @@ impl ResidencyPool {
     /// inert: every acquire misses silently, nothing is ever captured,
     /// and all counters stay zero (the cache-off baseline).
     pub fn new(capacity: u64, enabled: bool) -> Self {
-        Self { capacity, enabled, inner: Mutex::new(Inner::default()) }
+        Self { cache: TieredCache::new(capacity, enabled) }
     }
 
     pub fn capacity(&self) -> u64 {
-        self.capacity
+        self.cache.capacity()
     }
 
     pub fn enabled(&self) -> bool {
-        self.enabled
+        self.cache.enabled()
     }
 
     /// Try to lease the operand for a job about to run: `Some` when it is
     /// resident (counted as a hit; the entry is ref-locked until the
     /// lease drops), `None` when it is not (counted as a miss).
     pub fn acquire(&self, key: u64) -> Option<Lease<'_>> {
-        if !self.enabled {
-            return None;
-        }
-        let mut guard = self.inner.lock().expect("residency pool poisoned");
-        // Reborrow through the guard once so the arms can touch disjoint
-        // fields while the entry borrow is live.
-        let inner = &mut *guard;
-        inner.clock += 1;
-        let tick = inner.clock;
-        match inner.entries.get_mut(&key) {
-            Some(e) => {
-                e.leases += 1;
-                e.last_use = tick;
-                inner.hits += 1;
-                Some(Lease { pool: self, key })
-            }
-            None => {
-                inner.misses += 1;
-                None
-            }
-        }
-    }
-
-    fn release(&self, key: u64) {
-        let mut inner = self.inner.lock().expect("residency pool poisoned");
-        if let Some(e) = inner.entries.get_mut(&key) {
-            e.leases = e.leases.saturating_sub(1);
-        }
+        self.cache.acquire(key).map(Lease)
     }
 
     /// Capture an operand the just-finished job left wholly materialized
@@ -168,113 +108,44 @@ impl ResidencyPool {
     /// `recopy_seconds` prices one bulk slow→fast transfer of the operand
     /// (see [`MachineSpec::bulk_copy_seconds`](crate::memory::MachineSpec::bulk_copy_seconds)).
     pub fn insert(&self, key: u64, bytes: u64, recopy_seconds: f64) -> bool {
-        if !self.enabled || bytes > self.capacity {
-            return false;
-        }
-        let mut inner = self.inner.lock().expect("residency pool poisoned");
-        inner.clock += 1;
-        let tick = inner.clock;
-        if let Some(e) = inner.entries.get_mut(&key) {
-            e.last_use = tick;
-            return true;
-        }
-        let free = self.capacity - inner.used;
-        if bytes > free {
-            let needed = bytes - free;
-            // Victims sorted by re-copy seconds per byte freed (ascending
-            // — big cheap-to-restream entries go first), then LRU.
-            let mut victims: Vec<(u64, u64, f64, u64)> = inner
-                .entries
-                .iter()
-                .filter(|(_, e)| e.leases == 0 && !e.pinned)
-                .map(|(&k, e)| (k, e.bytes, e.recopy_seconds / e.bytes.max(1) as f64, e.last_use))
-                .collect();
-            victims.sort_by(|x, y| {
-                x.2.partial_cmp(&y.2)
-                    .unwrap_or(std::cmp::Ordering::Equal)
-                    .then(x.3.cmp(&y.3))
-            });
-            let mut chosen = Vec::new();
-            let mut freed = 0u64;
-            for &(k, b, _, _) in &victims {
-                if freed >= needed {
-                    break;
-                }
-                chosen.push((k, b));
-                freed += b;
-            }
-            if freed < needed {
-                return false;
-            }
-            for (k, b) in chosen {
-                inner.entries.remove(&k);
-                inner.used -= b;
-                inner.evictions += 1;
-                inner.evicted_bytes += b;
-            }
-        }
-        let pinned = inner.pending_pins.remove(&key);
-        inner.entries.insert(
-            key,
-            Entry { bytes, leases: 0, pinned, last_use: tick, recopy_seconds },
-        );
-        inner.used += bytes;
-        debug_assert!(inner.used <= self.capacity);
-        true
+        self.cache.insert(key, (), bytes, recopy_seconds)
+    }
+
+    /// Drop a resident operand unconditionally — the re-registration
+    /// path: the bytes in the fast pool no longer describe the handle's
+    /// matrix, so pins and leases do not protect them. Returns whether
+    /// the operand was resident.
+    pub fn remove(&self, key: u64) -> bool {
+        self.cache.remove(key)
     }
 
     /// Mark the operand unevictable. Takes effect immediately when it is
     /// resident; otherwise the mark is remembered and applied at its next
     /// capture. Returns whether the operand is resident right now.
     pub fn pin(&self, key: u64) -> bool {
-        if !self.enabled {
-            return false;
-        }
-        let mut guard = self.inner.lock().expect("residency pool poisoned");
-        let inner = &mut *guard;
-        match inner.entries.get_mut(&key) {
-            Some(e) => {
-                e.pinned = true;
-                true
-            }
-            None => {
-                inner.pending_pins.insert(key);
-                false
-            }
-        }
+        self.cache.pin(key)
     }
 
     /// Clear a pin (resident or pending); the entry becomes an ordinary
     /// eviction candidate again once unleased.
     pub fn unpin(&self, key: u64) {
-        if !self.enabled {
-            return;
-        }
-        let mut inner = self.inner.lock().expect("residency pool poisoned");
-        inner.pending_pins.remove(&key);
-        if let Some(e) = inner.entries.get_mut(&key) {
-            e.pinned = false;
-        }
+        self.cache.unpin(key)
     }
 
     /// Is the operand resident right now?
     pub fn contains(&self, key: u64) -> bool {
-        self.inner
-            .lock()
-            .expect("residency pool poisoned")
-            .entries
-            .contains_key(&key)
+        self.cache.contains(key)
     }
 
     pub fn stats(&self) -> ResidencyStats {
-        let inner = self.inner.lock().expect("residency pool poisoned");
+        let s = self.cache.stats();
         ResidencyStats {
-            hits: inner.hits,
-            misses: inner.misses,
-            evictions: inner.evictions,
-            evicted_bytes: inner.evicted_bytes,
-            resident_bytes: inner.used,
-            resident_entries: inner.entries.len() as u64,
+            hits: s.hits,
+            misses: s.misses,
+            evictions: s.evictions,
+            evicted_bytes: s.evicted_bytes,
+            resident_bytes: s.resident_bytes,
+            resident_entries: s.resident_entries,
         }
     }
 }
@@ -309,6 +180,7 @@ mod tests {
         assert!(pool.acquire(1).is_none());
         assert!(!pool.insert(1, 10, cost(10)));
         assert!(!pool.pin(1));
+        assert!(!pool.remove(1));
         assert_eq!(pool.stats(), ResidencyStats::default());
     }
 
@@ -386,6 +258,20 @@ mod tests {
         assert!(pool.insert(1, 400, 1.0));
         assert!(pool.insert(3, 400, 1.0));
         assert!(pool.contains(1) && !pool.contains(2));
+    }
+
+    #[test]
+    fn remove_drops_resident_operand_without_counting_eviction() {
+        let pool = ResidencyPool::new(1000, true);
+        assert!(pool.insert(1, 400, cost(400)));
+        assert!(pool.pin(1));
+        // Re-registration: even a pinned entry goes.
+        assert!(pool.remove(1));
+        assert!(!pool.contains(1));
+        assert!(!pool.remove(1), "already gone");
+        let s = pool.stats();
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.resident_bytes, 0);
     }
 
     #[test]

@@ -1,0 +1,538 @@
+//! A byte-budgeted, cost-aware cache shared by the session's two reuse
+//! tiers: resident *operands* (the fast-pool
+//! [`ResidencyPool`](crate::memory::ResidencyPool), which wraps this
+//! type with `V = ()`) and memoized *products* (the serve-path result
+//! cache in `coordinator/memo.rs`, which stores `Arc<CachedProduct>`
+//! values). Both consumers share one eviction discipline:
+//!
+//! * **Accounting is capacity-bounded.** The sum of resident bytes never
+//!   exceeds the configured capacity; entries larger than the capacity
+//!   are refused outright.
+//! * **Leases are ref-counted.** [`acquire`](TieredCache::acquire) hands
+//!   out a [`TieredLease`] that ref-locks the entry until drop; leased
+//!   and pinned entries are never chosen as capacity-eviction victims.
+//! * **Eviction is cost-aware.** Victims are the unleased, unpinned
+//!   entries with the lowest *restore cost per byte freed* — for
+//!   operands the seconds one bulk slow→fast re-copy costs, for
+//!   products the predicted recompute seconds — with least-recently-used
+//!   as the tiebreak. An insert that cannot be satisfied evicts nothing.
+//! * **Invalidation overrides everything.** [`remove`](TieredCache::remove)
+//!   and [`invalidate_where`](TieredCache::invalidate_where) drop entries
+//!   unconditionally (pins and leases do not protect a *stale* value;
+//!   holders of an `Arc`'d value keep their clone). Invalidations are
+//!   counted separately from capacity evictions.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::Hash;
+use std::sync::Mutex;
+
+struct Entry<V> {
+    value: V,
+    bytes: u64,
+    /// Active leases; a leased entry is never a capacity-eviction victim.
+    leases: u32,
+    /// Pinned entries are never capacity-eviction victims, leased or not.
+    pinned: bool,
+    /// Logical-clock timestamp of the last touch (LRU tiebreak).
+    last_use: u64,
+    /// Seconds restoring this entry would cost (re-copy for operands,
+    /// recompute for products) — what eviction weighs freed bytes against.
+    cost_seconds: f64,
+}
+
+struct Inner<K, V> {
+    entries: HashMap<K, Entry<V>>,
+    /// Sum of resident entry bytes; invariant: `used <= capacity`.
+    used: u64,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    evicted_bytes: u64,
+    invalidations: u64,
+    /// Keys pinned before their first insert: applied at insert.
+    pending_pins: HashSet<K>,
+}
+
+impl<K, V> Default for Inner<K, V> {
+    fn default() -> Self {
+        Self {
+            entries: HashMap::new(),
+            used: 0,
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            evicted_bytes: 0,
+            invalidations: 0,
+            pending_pins: HashSet::new(),
+        }
+    }
+}
+
+/// Counters and gauges of a [`TieredCache`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TieredStats {
+    /// Lookups that found the entry resident.
+    pub hits: u64,
+    /// Lookups that found nothing resident.
+    pub misses: u64,
+    /// Entries evicted by capacity pressure.
+    pub evictions: u64,
+    /// Total bytes capacity evictions freed.
+    pub evicted_bytes: u64,
+    /// Entries dropped by explicit invalidation (`remove` /
+    /// `invalidate_where`), counted separately from capacity evictions.
+    pub invalidations: u64,
+    /// Bytes currently resident (gauge; never exceeds the capacity).
+    pub resident_bytes: u64,
+    /// Entries currently resident (gauge).
+    pub resident_entries: u64,
+}
+
+/// A ref-counted hold on a resident entry; releases on drop. While any
+/// lease on an entry is live, capacity pressure cannot evict it
+/// (explicit invalidation still can — the value is stale by definition).
+pub struct TieredLease<'c, K: Eq + Hash + Copy, V> {
+    cache: &'c TieredCache<K, V>,
+    key: K,
+}
+
+impl<K: Eq + Hash + Copy, V> TieredLease<'_, K, V> {
+    pub fn key(&self) -> K {
+        self.key
+    }
+}
+
+impl<K: Eq + Hash + Copy, V> Drop for TieredLease<'_, K, V> {
+    fn drop(&mut self) {
+        self.cache.release(self.key);
+    }
+}
+
+/// The shared lease/eviction machinery; see the module docs.
+pub struct TieredCache<K: Eq + Hash + Copy, V> {
+    capacity: u64,
+    enabled: bool,
+    inner: Mutex<Inner<K, V>>,
+}
+
+impl<K: Eq + Hash + Copy, V> TieredCache<K, V> {
+    /// A cache accounting up to `capacity` bytes. A disabled cache is
+    /// inert: every lookup misses silently, nothing is ever admitted,
+    /// and all counters stay zero (the cache-off baseline).
+    pub fn new(capacity: u64, enabled: bool) -> Self {
+        Self { capacity, enabled, inner: Mutex::new(Inner::default()) }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Try to lease the entry: `Some` when resident (counted as a hit;
+    /// ref-locked until the lease drops), `None` when not (a miss).
+    pub fn acquire(&self, key: K) -> Option<TieredLease<'_, K, V>> {
+        if !self.enabled {
+            return None;
+        }
+        let mut guard = self.inner.lock().expect("tiered cache poisoned");
+        let inner = &mut *guard;
+        inner.clock += 1;
+        let tick = inner.clock;
+        match inner.entries.get_mut(&key) {
+            Some(e) => {
+                e.leases += 1;
+                e.last_use = tick;
+                inner.hits += 1;
+                Some(TieredLease { cache: self, key })
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Clone the entry's value out without holding a lease: `Some` when
+    /// resident (a hit; LRU refreshed), `None` when not (a miss). The
+    /// product-cache path uses this — its values are `Arc`s, so the
+    /// caller's clone stays valid even if the entry is evicted next.
+    pub fn get(&self, key: K) -> Option<V>
+    where
+        V: Clone,
+    {
+        if !self.enabled {
+            return None;
+        }
+        let mut guard = self.inner.lock().expect("tiered cache poisoned");
+        let inner = &mut *guard;
+        inner.clock += 1;
+        let tick = inner.clock;
+        match inner.entries.get_mut(&key) {
+            Some(e) => {
+                e.last_use = tick;
+                inner.hits += 1;
+                Some(e.value.clone())
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    fn release(&self, key: K) {
+        let mut inner = self.inner.lock().expect("tiered cache poisoned");
+        if let Some(e) = inner.entries.get_mut(&key) {
+            e.leases = e.leases.saturating_sub(1);
+        }
+    }
+
+    /// Admit an entry. Evicts unleased, unpinned victims (cheapest
+    /// restore cost per byte first, LRU tiebreak) when space is needed;
+    /// refuses — without evicting anything — when the remaining entries
+    /// are all leased or pinned, or the entry exceeds the capacity.
+    /// Re-inserting a resident key refreshes its LRU position and keeps
+    /// the existing value. `cost_seconds` prices restoring the entry
+    /// after an eviction (re-copy for operands, recompute for products).
+    pub fn insert(&self, key: K, value: V, bytes: u64, cost_seconds: f64) -> bool {
+        if !self.enabled || bytes > self.capacity {
+            return false;
+        }
+        let mut guard = self.inner.lock().expect("tiered cache poisoned");
+        let inner = &mut *guard;
+        inner.clock += 1;
+        let tick = inner.clock;
+        if let Some(e) = inner.entries.get_mut(&key) {
+            e.last_use = tick;
+            return true;
+        }
+        let free = self.capacity - inner.used;
+        if bytes > free {
+            let needed = bytes - free;
+            // Victims sorted by restore seconds per byte freed (ascending
+            // — big cheap-to-restore entries go first), then LRU.
+            let mut victims: Vec<(K, u64, f64, u64)> = inner
+                .entries
+                .iter()
+                .filter(|(_, e)| e.leases == 0 && !e.pinned)
+                .map(|(&k, e)| (k, e.bytes, e.cost_seconds / e.bytes.max(1) as f64, e.last_use))
+                .collect();
+            victims.sort_by(|x, y| {
+                x.2.partial_cmp(&y.2)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(x.3.cmp(&y.3))
+            });
+            let mut chosen = Vec::new();
+            let mut freed = 0u64;
+            for &(k, b, _, _) in &victims {
+                if freed >= needed {
+                    break;
+                }
+                chosen.push((k, b));
+                freed += b;
+            }
+            if freed < needed {
+                return false;
+            }
+            for (k, b) in chosen {
+                inner.entries.remove(&k);
+                inner.used -= b;
+                inner.evictions += 1;
+                inner.evicted_bytes += b;
+            }
+        }
+        let pinned = inner.pending_pins.remove(&key);
+        inner.entries.insert(
+            key,
+            Entry { value, bytes, leases: 0, pinned, last_use: tick, cost_seconds },
+        );
+        inner.used += bytes;
+        debug_assert!(inner.used <= self.capacity);
+        true
+    }
+
+    /// Drop one entry unconditionally (stale values are not protected by
+    /// pins or leases; `Arc` holders keep their clone). Counted as an
+    /// invalidation, not a capacity eviction. Returns whether it existed.
+    pub fn remove(&self, key: K) -> bool {
+        if !self.enabled {
+            return false;
+        }
+        let mut inner = self.inner.lock().expect("tiered cache poisoned");
+        inner.pending_pins.remove(&key);
+        if let Some(e) = inner.entries.remove(&key) {
+            inner.used -= e.bytes;
+            inner.invalidations += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Drop every entry whose key matches `pred`, unconditionally (the
+    /// re-registration contract: a stale product must never be served).
+    /// Returns how many entries were dropped.
+    pub fn invalidate_where(&self, pred: impl Fn(&K) -> bool) -> u64 {
+        if !self.enabled {
+            return 0;
+        }
+        let mut guard = self.inner.lock().expect("tiered cache poisoned");
+        let inner = &mut *guard;
+        let doomed: Vec<K> = inner.entries.keys().filter(|k| pred(k)).copied().collect();
+        let n = doomed.len() as u64;
+        for k in doomed {
+            if let Some(e) = inner.entries.remove(&k) {
+                inner.used -= e.bytes;
+            }
+        }
+        inner.invalidations += n;
+        n
+    }
+
+    /// Mark the entry unevictable by capacity pressure. Takes effect
+    /// immediately when resident; otherwise remembered and applied at its
+    /// next insert. Returns whether the entry is resident right now.
+    pub fn pin(&self, key: K) -> bool {
+        if !self.enabled {
+            return false;
+        }
+        let mut guard = self.inner.lock().expect("tiered cache poisoned");
+        let inner = &mut *guard;
+        match inner.entries.get_mut(&key) {
+            Some(e) => {
+                e.pinned = true;
+                true
+            }
+            None => {
+                inner.pending_pins.insert(key);
+                false
+            }
+        }
+    }
+
+    /// Clear a pin (resident or pending); the entry becomes an ordinary
+    /// eviction candidate again once unleased.
+    pub fn unpin(&self, key: K) {
+        if !self.enabled {
+            return;
+        }
+        let mut inner = self.inner.lock().expect("tiered cache poisoned");
+        inner.pending_pins.remove(&key);
+        if let Some(e) = inner.entries.get_mut(&key) {
+            e.pinned = false;
+        }
+    }
+
+    /// Is the entry resident right now?
+    pub fn contains(&self, key: K) -> bool {
+        self.inner
+            .lock()
+            .expect("tiered cache poisoned")
+            .entries
+            .contains_key(&key)
+    }
+
+    pub fn stats(&self) -> TieredStats {
+        let inner = self.inner.lock().expect("tiered cache poisoned");
+        TieredStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            evicted_bytes: inner.evicted_bytes,
+            invalidations: inner.invalidations,
+            resident_bytes: inner.used,
+            resident_entries: inner.entries.len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+
+    /// A flat per-byte price keeps scoring deterministic in unit tests.
+    fn cost(bytes: u64) -> f64 {
+        bytes as f64 * 1e-9
+    }
+
+    #[test]
+    fn get_counts_hits_and_misses_and_clones_value() {
+        let cache: TieredCache<u64, u32> = TieredCache::new(1000, true);
+        assert!(cache.get(1).is_none());
+        assert!(cache.insert(1, 7, 400, cost(400)));
+        assert_eq!(cache.get(1), Some(7));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.resident_bytes, 400);
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let cache: TieredCache<u64, ()> = TieredCache::new(1000, false);
+        assert!(cache.acquire(1).is_none());
+        assert!(!cache.insert(1, (), 10, cost(10)));
+        assert!(!cache.pin(1));
+        assert!(!cache.remove(1));
+        assert_eq!(cache.invalidate_where(|_| true), 0);
+        assert_eq!(cache.stats(), TieredStats::default());
+    }
+
+    #[test]
+    fn oversized_entry_is_refused() {
+        let cache: TieredCache<u64, ()> = TieredCache::new(100, true);
+        assert!(!cache.insert(1, (), 101, cost(101)));
+        assert!(cache.insert(2, (), 100, cost(100)));
+    }
+
+    #[test]
+    fn leased_entries_are_never_evicted_by_capacity() {
+        let cache: TieredCache<u64, ()> = TieredCache::new(1000, true);
+        assert!(cache.insert(1, (), 900, cost(900)));
+        let lease = cache.acquire(1).expect("resident");
+        assert_eq!(lease.key(), 1);
+        assert!(!cache.insert(2, (), 200, cost(200)));
+        assert!(cache.contains(1));
+        assert_eq!(cache.stats().evictions, 0);
+        drop(lease);
+        assert!(cache.insert(2, (), 200, cost(200)));
+        assert!(!cache.contains(1));
+        let s = cache.stats();
+        assert_eq!((s.evictions, s.evicted_bytes), (1, 900));
+    }
+
+    #[test]
+    fn eviction_prefers_cheap_restore_per_byte_then_lru() {
+        let cache: TieredCache<u64, ()> = TieredCache::new(1200, true);
+        // Same size; entry 1 is twice as expensive to restore.
+        assert!(cache.insert(1, (), 400, 2.0));
+        assert!(cache.insert(2, (), 400, 1.0));
+        assert!(cache.insert(3, (), 300, 0.75)); // same 2.5e-3 s/B as entry 2
+        // Need 300: entry 2 ties entry 3 on cost/byte, is older -> goes.
+        assert!(cache.insert(4, (), 200, cost(200)));
+        assert!(!cache.contains(2));
+        assert!(cache.contains(1) && cache.contains(3) && cache.contains(4));
+    }
+
+    #[test]
+    fn failed_insert_evicts_nothing() {
+        let cache: TieredCache<u64, ()> = TieredCache::new(1000, true);
+        assert!(cache.insert(1, (), 500, cost(500)));
+        let lease = cache.acquire(1).expect("resident");
+        assert!(!cache.insert(2, (), 600, cost(600)));
+        assert_eq!(cache.stats().evictions, 0);
+        assert_eq!(cache.stats().resident_bytes, 500);
+        drop(lease);
+    }
+
+    #[test]
+    fn remove_and_invalidate_override_pins_and_leases() {
+        let cache: TieredCache<(u64, u64), u32> = TieredCache::new(1000, true);
+        assert!(cache.insert((1, 2), 12, 300, cost(300)));
+        assert!(cache.insert((1, 3), 13, 300, cost(300)));
+        assert!(cache.insert((4, 5), 45, 300, cost(300)));
+        assert!(cache.pin((1, 2)));
+        let lease = cache.acquire((1, 3)).expect("resident");
+        // Invalidate everything touching operand 1: pin and lease do not
+        // protect stale values.
+        assert_eq!(cache.invalidate_where(|k| k.0 == 1 || k.1 == 1), 2);
+        assert!(!cache.contains((1, 2)) && !cache.contains((1, 3)));
+        assert!(cache.contains((4, 5)));
+        drop(lease);
+        let s = cache.stats();
+        assert_eq!(s.invalidations, 2);
+        assert_eq!(s.evictions, 0, "invalidations are not capacity evictions");
+        assert_eq!(s.resident_bytes, 300);
+        assert!(cache.remove((4, 5)));
+        assert!(!cache.remove((4, 5)), "already gone");
+        assert_eq!(cache.stats().invalidations, 3);
+        assert_eq!(cache.stats().resident_bytes, 0);
+    }
+
+    #[test]
+    fn reinsert_refreshes_lru_and_keeps_value() {
+        let cache: TieredCache<u64, u32> = TieredCache::new(1000, true);
+        assert!(cache.insert(1, 10, 400, 1.0));
+        assert!(cache.insert(2, 20, 400, 1.0));
+        // Touch 1 so 2 becomes the LRU victim; the stored value stays.
+        assert!(cache.insert(1, 99, 400, 1.0));
+        assert_eq!(cache.get(1), Some(10));
+        assert!(cache.insert(3, 30, 400, 1.0));
+        assert!(cache.contains(1) && !cache.contains(2));
+    }
+
+    #[test]
+    fn prop_accounting_never_exceeds_capacity_and_holds_are_safe() {
+        check("tiered cache accounting invariants", 200, |g: &mut Gen| {
+            let capacity = g.usize(64, 4096) as u64;
+            let cache: TieredCache<u64, u64> = TieredCache::new(capacity, true);
+            let keys: Vec<u64> = (0..g.usize(2, 8) as u64).collect();
+            let mut leases: Vec<TieredLease<u64, u64>> = Vec::new();
+            let mut leased_keys: Vec<u64> = Vec::new();
+            let mut pinned: std::collections::HashSet<u64> =
+                std::collections::HashSet::new();
+            for _ in 0..g.usize(10, 60) {
+                let key = *g.pick(&keys);
+                match g.usize(0, 5) {
+                    0 => {
+                        let bytes = g.usize(1, 2 * capacity as usize) as u64;
+                        let admitted = cache.insert(key, key, bytes, cost(bytes));
+                        if bytes > capacity {
+                            assert!(!admitted, "oversized entry admitted");
+                        }
+                    }
+                    1 => {
+                        if let Some(l) = cache.acquire(key) {
+                            leases.push(l);
+                            leased_keys.push(key);
+                        }
+                    }
+                    2 => {
+                        if !leases.is_empty() {
+                            let i = g.usize(0, leases.len() - 1);
+                            leases.swap_remove(i);
+                            leased_keys.swap_remove(i);
+                        }
+                    }
+                    3 => {
+                        if cache.pin(key) {
+                            pinned.insert(key);
+                        }
+                    }
+                    4 => {
+                        cache.unpin(key);
+                        pinned.remove(&key);
+                    }
+                    _ => {
+                        // Explicit invalidation drops the entry even when
+                        // leased or pinned; forget our local holds on it.
+                        cache.remove(key);
+                        pinned.remove(&key);
+                        while let Some(i) = leased_keys.iter().position(|&k| k == key) {
+                            leases.swap_remove(i);
+                            leased_keys.swap_remove(i);
+                        }
+                    }
+                }
+                let s = cache.stats();
+                assert!(
+                    s.resident_bytes <= capacity,
+                    "accounted {} > capacity {capacity}",
+                    s.resident_bytes
+                );
+                // Leased and pinned entries survive capacity pressure.
+                for k in &leased_keys {
+                    assert!(cache.contains(*k), "leased {k} was evicted");
+                }
+                for k in &pinned {
+                    assert!(cache.contains(*k), "pinned {k} was evicted");
+                }
+            }
+        });
+    }
+}

@@ -8,7 +8,7 @@
 //!
 //! Regenerate with `GOLDEN_BLESS=1 cargo test -q --test explain_golden`.
 
-use mlmem_spgemm::coordinator::{explain_spgemm, PlannerOptions, Session};
+use mlmem_spgemm::coordinator::{explain_spgemm, PlannerOptions, Session, SubmitOptions};
 use mlmem_spgemm::gen::rhs::uniform_degree;
 use mlmem_spgemm::gen::scale::ScaleFactor;
 use mlmem_spgemm::memory::arch::{knl, KnlMode};
@@ -78,6 +78,58 @@ fn spgemm_explain_candidate_table_is_stable() {
         rows.iter().all(|r| r.predicted.passes >= 1)
     ));
     check_golden("spgemm_explain_knl.txt", &out);
+}
+
+/// The serve path's memo provenance (DESIGN.md §13) on a fixed job
+/// sequence: a repeated pair replays as a memo hit, re-registering an
+/// operand invalidates its products and forces a recompute, and
+/// concurrent identical jobs coalesce onto one computation. Structural:
+/// provenance markers and result-cache counters, never timings.
+#[test]
+fn serve_memo_provenance_is_stable() {
+    let arch = Arc::new(knl(KnlMode::Ddr, 64, ScaleFactor::default()));
+    let session = Session::builder(arch).workers(1).build();
+    let small = |seed| Arc::new(mlmem_spgemm::gen::rhs::random_csr(60, 60, 1, 5, seed));
+    let a = session.register(small(81));
+    let b = session.register(small(82));
+    let c = session.register(small(83));
+    let mut serial = Vec::new();
+    for (x, y) in [(a, b), (a, b), (a, c), (a, c)] {
+        serial.push(session.spgemm(x, y).unwrap().wait().unwrap().provenance.name());
+    }
+    session.reregister(a, small(84)).unwrap();
+    let invalidated = session.metrics().memo.invalidated;
+    let after = session.spgemm(a, b).unwrap().wait().unwrap().provenance.name();
+    // Concurrent identical jobs on operands big enough (real
+    // milliseconds of simulation) that the single worker is still
+    // grinding the primary when the repeats arrive and attach.
+    let d = session.register(Arc::new(mlmem_spgemm::gen::rhs::random_csr(600, 600, 6, 10, 85)));
+    let e = session.register(Arc::new(mlmem_spgemm::gen::rhs::random_csr(600, 600, 6, 10, 86)));
+    let keep = || SubmitOptions { keep_product: true, ..Default::default() };
+    let handles: Vec<_> = (0..3).map(|_| session.spgemm_with(d, e, keep()).unwrap()).collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+    let concurrent: Vec<_> = results.iter().map(|r| r.provenance.name()).collect();
+    let first = results[0].c.as_ref().expect("primary keeps C");
+    let identical = results[1..].iter().all(|r| {
+        let w = r.c.as_ref().expect("waiters get the shared product");
+        w.rowmap == first.rowmap && w.entries == first.entries && w.approx_eq(first, 0.0)
+    });
+    session.drain();
+    let m = session.metrics();
+    let mut out = String::new();
+    out.push_str(&format!("serial.provenance={}\n", serial.join(",")));
+    out.push_str(&format!("reregister.invalidated={invalidated}\n"));
+    out.push_str(&format!("after-invalidate.provenance={after}\n"));
+    out.push_str(&format!("concurrent.provenance={}\n", concurrent.join(",")));
+    out.push_str(&format!(
+        "concurrent.bit-identical={}\n",
+        if identical { "yes" } else { "no" }
+    ));
+    out.push_str(&format!(
+        "memo.counters=hits:{},misses:{},coalesced:{},products:{},invalidated:{}\n",
+        m.memo.hits, m.memo.misses, m.memo.coalesced, m.memo.products, m.memo.invalidated
+    ));
+    check_golden("serve_memo_provenance.txt", &out);
 }
 
 /// The chain planner's output on a fixed 3-chain whose right fold is

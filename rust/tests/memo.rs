@@ -1,0 +1,252 @@
+//! Serve-path memoization integration suite (DESIGN.md §13). The
+//! contract under test: the result cache changes *work*, never
+//! *results* — a memoized serve stream is bit-identical job-by-job to
+//! the memo-off stream across interleavings and byte budgets (including
+//! 0 and smaller-than-any-product); re-registering an operand
+//! invalidates every cached product using it; N identical concurrent
+//! jobs coalesce onto exactly one computation; and a waiter's own
+//! cancel/deadline never touches the shared run.
+
+use mlmem_spgemm::coordinator::{Provenance, Session, SubmitOptions};
+use mlmem_spgemm::error::JobControl;
+use mlmem_spgemm::gen::scale::ScaleFactor;
+use mlmem_spgemm::memory::arch::{knl, Arch, KnlMode};
+use mlmem_spgemm::prelude::*;
+use mlmem_spgemm::util::proptest::{check, Gen};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn arch() -> Arc<Arch> {
+    Arc::new(knl(KnlMode::Ddr, 64, ScaleFactor::default()))
+}
+
+fn square(n: usize, deg: usize, seed: u64) -> Arc<Csr> {
+    Arc::new(mlmem_spgemm::gen::rhs::random_csr(n, n, 0, deg, seed))
+}
+
+/// Big enough that the simulated run takes real milliseconds, so
+/// submissions racing the single worker deterministically find the
+/// primary still in flight.
+fn slow_operand(seed: u64) -> Arc<Csr> {
+    Arc::new(mlmem_spgemm::gen::rhs::random_csr(600, 600, 6, 10, seed))
+}
+
+fn keep() -> SubmitOptions {
+    SubmitOptions { keep_product: true, ..Default::default() }
+}
+
+fn assert_same_product(want: &Csr, got: &Csr, label: &str) {
+    assert_eq!(want.rowmap, got.rowmap, "{label}: rowmap diverged");
+    assert_eq!(want.entries, got.entries, "{label}: entries diverged");
+    assert!(want.approx_eq(got, 0.0), "{label}: values must be bit-identical");
+}
+
+/// Replay `stream` (pairs of indices into `mats`) through one session,
+/// submitting `chunk` jobs at a time before waiting on them, and return
+/// each job's product in stream order.
+fn run_stream(
+    arch: &Arc<Arch>,
+    mats: &[Arc<Csr>],
+    stream: &[(usize, usize)],
+    memo: bool,
+    budget: Option<u64>,
+    chunk: usize,
+) -> Vec<(usize, usize, Csr)> {
+    let mut builder = Session::builder(Arc::clone(arch))
+        .workers(1)
+        .max_pending(stream.len() + 2)
+        .memoize(memo);
+    if let Some(bytes) = budget {
+        builder = builder.result_cache(bytes);
+    }
+    let session = builder.build();
+    let handles: Vec<_> = mats.iter().map(|m| session.register(Arc::clone(m))).collect();
+    let mut out = Vec::new();
+    for block in stream.chunks(chunk.max(1)) {
+        let hs: Vec<_> = block
+            .iter()
+            .map(|&(i, j)| {
+                session.spgemm_with(handles[i], handles[j], keep()).expect("admitted")
+            })
+            .collect();
+        for h in hs {
+            let r = h.wait().expect("job ok");
+            out.push((r.c_nrows, r.c_nnz, r.c.expect("keep_product attaches C")));
+        }
+    }
+    out
+}
+
+#[test]
+fn memo_on_streams_are_bit_identical_to_memo_off() {
+    check("memo on == memo off, job by job", 6, |g: &mut Gen| {
+        let arch = arch();
+        let n = g.usize(20, 48);
+        let mats: Vec<_> = (0..3).map(|_| square(n, g.usize(1, 5), g.u64())).collect();
+        let len = g.usize(4, 9);
+        let stream: Vec<(usize, usize)> =
+            (0..len).map(|_| (g.usize(0, 2), g.usize(0, 2))).collect();
+        // Budgets cover: session default, disabled-by-budget (0), smaller
+        // than any product (1 byte), and effectively unbounded.
+        let budget = *g.pick(&[None, Some(0), Some(1), Some(1 << 40)]);
+        let chunk = g.usize(1, len);
+        let off = run_stream(&arch, &mats, &stream, false, None, 1);
+        let on = run_stream(&arch, &mats, &stream, true, budget, chunk);
+        assert_eq!(off.len(), on.len());
+        for (k, (o, m)) in off.iter().zip(&on).enumerate() {
+            assert_eq!((o.0, o.1), (m.0, m.1), "job {k}: shape/nnz diverged");
+            assert_same_product(&o.2, &m.2, &format!("job {k}"));
+        }
+    });
+}
+
+#[test]
+fn reregistration_invalidates_every_product_using_the_operand() {
+    let session = Session::builder(arch()).workers(1).build();
+    let a = session.register(square(40, 4, 1));
+    let b = session.register(square(40, 4, 2));
+    let c = session.register(square(40, 4, 3));
+    for (x, y) in [(a, b), (b, c), (a, c)] {
+        session.spgemm(x, y).unwrap().wait().unwrap();
+    }
+    let m = session.metrics();
+    assert_eq!((m.memo.products, m.memo.misses, m.memo.hits), (3, 3, 0));
+
+    // Re-registering B drops (A,B) and (B,C) but spares (A,C).
+    session.reregister(b, square(40, 4, 9)).unwrap();
+    assert_eq!(session.metrics().memo.invalidated, 2);
+
+    let r_ab = session.spgemm(a, b).unwrap().wait().unwrap();
+    let r_bc = session.spgemm(b, c).unwrap().wait().unwrap();
+    let r_ac = session.spgemm(a, c).unwrap().wait().unwrap();
+    assert_eq!(r_ab.provenance, Provenance::Computed, "stale (A,B) served");
+    assert_eq!(r_bc.provenance, Provenance::Computed, "stale (B,C) served");
+    assert_eq!(r_ac.provenance, Provenance::MemoHit, "(A,C) was needlessly dropped");
+    session.drain();
+    let m = session.metrics();
+    assert_eq!((m.memo.invalidated, m.memo.hits, m.memo.products), (2, 1, 5));
+}
+
+#[test]
+fn concurrent_identical_jobs_coalesce_onto_one_computation() {
+    let session = Session::builder(arch()).workers(1).build();
+    let a = session.register(slow_operand(40));
+    let b = session.register(slow_operand(41));
+    let n = 4;
+    let handles: Vec<_> =
+        (0..n).map(|_| session.spgemm_with(a, b, keep()).expect("admitted")).collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.wait().expect("ok")).collect();
+    let prov: Vec<_> = results.iter().map(|r| r.provenance).collect();
+    assert_eq!(prov[0], Provenance::Computed);
+    assert!(
+        prov[1..].iter().all(|p| *p == Provenance::Coalesced),
+        "all repeats must attach to the in-flight run, got {prov:?}"
+    );
+    let first = results[0].c.as_ref().expect("primary keeps C");
+    for (k, r) in results[1..].iter().enumerate() {
+        let c = r.c.as_ref().expect("waiters get the shared product");
+        assert_same_product(first, c, &format!("waiter {k}"));
+    }
+    session.drain();
+    let m = session.metrics();
+    assert_eq!(m.memo.products, 1, "exactly one computation for {n} jobs");
+    assert_eq!((m.memo.misses, m.memo.coalesced), (1, n as u64 - 1));
+    assert_eq!((m.submitted, m.completed), (n as u64, n as u64));
+    assert_eq!(session.symbolic_passes(), 1);
+}
+
+#[test]
+fn waiter_cancel_and_deadline_do_not_affect_the_shared_run() {
+    let session = Session::builder(arch()).workers(1).build();
+    let a = session.register(slow_operand(50));
+    let b = session.register(slow_operand(51));
+    let primary = session.spgemm_with(a, b, keep()).expect("admitted");
+    // A waiter whose 1 ms budget expires while the shared run (real
+    // milliseconds of simulation) grinds on...
+    let doomed = session
+        .spgemm_with(
+            a,
+            b,
+            SubmitOptions { deadline: Some(Duration::from_millis(1)), ..Default::default() },
+        )
+        .expect("coalesced submissions are not SLO-priced");
+    // ...and one cancelled outright after attaching.
+    let flag = JobControl::new();
+    let cancelled = session
+        .spgemm_with(a, b, SubmitOptions { control: Some(flag.clone()), ..Default::default() })
+        .expect("admitted");
+    flag.cancel();
+    let healthy = session.spgemm_with(a, b, keep()).expect("admitted");
+
+    let r_primary = primary.wait().expect("the shared run itself must survive");
+    assert!(matches!(doomed.wait(), Err(MlmemError::DeadlineExceeded)));
+    assert!(matches!(cancelled.wait(), Err(MlmemError::Cancelled)));
+    let r_healthy = healthy.wait().expect("an unrelated waiter is unaffected");
+    assert_eq!(r_primary.provenance, Provenance::Computed);
+    assert_eq!(r_healthy.provenance, Provenance::Coalesced);
+    assert_same_product(
+        r_primary.c.as_ref().unwrap(),
+        r_healthy.c.as_ref().unwrap(),
+        "healthy waiter",
+    );
+    session.drain();
+    let m = session.metrics();
+    assert_eq!((m.memo.products, m.memo.coalesced), (1, 3));
+    assert_eq!(m.completed, 2, "primary + healthy waiter");
+    assert_eq!(m.cancelled, 2, "doomed + cancelled waiters, charged to them alone");
+    assert_eq!(m.failed, 0);
+}
+
+#[test]
+fn zero_budget_keeps_coalescing_correct_without_caching() {
+    let session = Session::builder(arch()).workers(1).result_cache(0).build();
+    let a = session.register(square(40, 4, 60));
+    let b = session.register(square(40, 4, 61));
+    let r1 = session.spgemm_with(a, b, keep()).unwrap().wait().unwrap();
+    let r2 = session.spgemm_with(a, b, keep()).unwrap().wait().unwrap();
+    // Nothing fit the cache, so both serial submissions computed...
+    assert_eq!(r1.provenance, Provenance::Computed);
+    assert_eq!(r2.provenance, Provenance::Computed);
+    assert_same_product(r1.c.as_ref().unwrap(), r2.c.as_ref().unwrap(), "recompute");
+    session.drain();
+    let m = session.metrics();
+    assert_eq!((m.memo.hits, m.memo.products), (0, 2));
+    assert_eq!((m.memo.resident_entries, m.memo.resident_bytes), (0, 0));
+}
+
+#[test]
+fn result_cache_budget_evicts_and_stays_within_bytes() {
+    // Probe the two products' cached sizes with an ample budget...
+    let mats = [square(40, 4, 70), square(40, 4, 71), square(40, 4, 72)];
+    let probe = Session::builder(arch()).workers(1).build();
+    let pa = probe.register(Arc::clone(&mats[0]));
+    let pb = probe.register(Arc::clone(&mats[1]));
+    let pc = probe.register(Arc::clone(&mats[2]));
+    probe.spgemm(pa, pb).unwrap().wait().unwrap();
+    let s1 = probe.metrics().memo.resident_bytes;
+    probe.spgemm(pa, pc).unwrap().wait().unwrap();
+    let s2 = probe.metrics().memo.resident_bytes - s1;
+    assert!(s1 > 0 && s2 > 0);
+
+    // ...then rerun under a budget that holds either product but not
+    // both: the second admission must evict the first, and the gauge
+    // never exceeds the budget.
+    let budget = s1 + s2 - 1;
+    let session = Session::builder(arch()).workers(1).result_cache(budget).build();
+    let a = session.register(Arc::clone(&mats[0]));
+    let b = session.register(Arc::clone(&mats[1]));
+    let c = session.register(Arc::clone(&mats[2]));
+    session.spgemm(a, b).unwrap().wait().unwrap();
+    session.spgemm(a, c).unwrap().wait().unwrap();
+    let m = session.metrics();
+    assert_eq!(m.memo.evictions, 1, "(A,B) must make room for (A,C)");
+    assert_eq!(m.memo.evicted_bytes, s1);
+    assert_eq!(m.memo.resident_bytes, s2);
+    assert!(m.memo.resident_bytes <= budget);
+    // The resident pair replays; the evicted one recomputes (and its
+    // re-admission in turn displaces the resident product).
+    let r_ac = session.spgemm(a, c).unwrap().wait().unwrap();
+    assert_eq!(r_ac.provenance, Provenance::MemoHit);
+    let r_ab = session.spgemm(a, b).unwrap().wait().unwrap();
+    assert_eq!(r_ab.provenance, Provenance::Computed);
+}

@@ -51,9 +51,12 @@ fn serve_batch_stages_shared_operand_once_and_is_bit_identical() {
 
     let n = 4;
     let run_batch = |cached: bool| -> (Vec<JobResult>, MetricsSnapshot) {
+        // Memoization off: this test measures operand staging across
+        // genuinely repeated computations; memo hits would skip them.
         let session = Session::builder(Arc::clone(&arch))
             .workers(1)
             .operand_cache(cached)
+            .memoize(false)
             .build();
         let ha = session.register(Arc::clone(&a));
         let hb = session.register(Arc::clone(&b));
@@ -130,7 +133,9 @@ fn eviction_keeps_accounting_within_capacity() {
         "the two RHSs must not co-reside"
     );
 
-    let session = Session::builder(Arc::clone(&arch)).workers(1).build();
+    // Memoization off: the repeated (a0, b0) jobs below must recompute
+    // to exercise the pool's capture/eviction accounting.
+    let session = Session::builder(Arc::clone(&arch)).workers(1).memoize(false).build();
     let ha0 = session.register(a0);
     let hb0 = session.register(Arc::clone(&b0));
     let ha1 = session.register(a1);

@@ -31,9 +31,13 @@ fn operand(seed: u64) -> Arc<Csr> {
 #[test]
 fn mixed_batch_typed_failures_and_bit_identical_successes() {
     let arch = arch();
+    // Result memoization off: this suite pins the recompute path —
+    // with it on, the repeat submissions below would coalesce or replay
+    // instead of hitting backpressure.
     let session = Session::builder(Arc::clone(&arch))
         .workers(1)
         .max_pending(2)
+        .memoize(false)
         .build();
     let a_mat = operand(1);
     let b_mat = operand(2);
@@ -136,7 +140,9 @@ fn mixed_batch_typed_failures_and_bit_identical_successes() {
 
 #[test]
 fn admission_control_rejects_beyond_max_pending_and_recovers() {
-    let session = Session::builder(arch()).workers(1).max_pending(1).build();
+    // Memoization off: identical submissions must queue (and overflow),
+    // not coalesce onto the in-flight run.
+    let session = Session::builder(arch()).workers(1).max_pending(1).memoize(false).build();
     let a = session.register(operand(10));
     let b = session.register(operand(11));
 
@@ -168,7 +174,9 @@ fn admission_control_rejects_beyond_max_pending_and_recovers() {
 
 #[test]
 fn registry_reuse_skips_second_symbolic_pass() {
-    let session = Session::builder(arch()).workers(1).build();
+    // Memoization off so the second multiply actually runs — this test
+    // pins the pair cache (symbolic reuse), not the result cache.
+    let session = Session::builder(arch()).workers(1).memoize(false).build();
     let a = session.register(operand(20));
     let b = session.register(operand(21));
 
