@@ -1,6 +1,6 @@
 # Convenience targets; the tier-1 gate is `cargo build --release && cargo test -q`.
 
-.PHONY: build test bench artifacts fmt
+.PHONY: build test bench scale artifacts fmt
 
 build:
 	cargo build --release
@@ -10,6 +10,11 @@ test: build
 
 bench:
 	cargo bench --bench pipeline
+
+# Walk one operand across both tier boundaries of the three-tier profile
+# (asserts the no-cliff guarantee; writes BENCH_scale.json).
+scale: build
+	cargo run --release -- bench --exp scale --quick --out-dir '' --json BENCH_scale.json
 
 fmt:
 	cargo fmt --check

@@ -17,7 +17,7 @@ pub const EXPERIMENTS: &[&str] = &[
     "table1", "table2", "table3", "table4", "fig3", "fig4", "fig6", "fig7", "fig9", "fig10",
     "fig11", "fig12", "fig13", "ablate-acc", "ablate-algo", "ablate-compression",
     "ablate-overlap", "accumulator", "pipeline", "planner", "chain", "serve", "memo",
-    "contention", "cluster", "profiles",
+    "contention", "cluster", "scale", "profiles",
 ];
 
 /// Schema version of the `BENCH_*.json` perf-trajectory document; bump
@@ -52,6 +52,7 @@ pub fn run_experiment(id: &str, cfg: &BenchConfig, cache: &mut ProblemCache) -> 
         "memo" => tables::serve_memoization(cfg, cache),
         "contention" => tables::contention_shared_link(cfg, cache),
         "cluster" => tables::cluster_scale_out(cfg, cache),
+        "scale" => tables::scale_walk(cfg, cache),
         "profiles" => tables::machine_profiles(cfg),
         _ => return None,
     })

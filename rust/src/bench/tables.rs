@@ -795,6 +795,101 @@ pub fn cluster_scale_out(cfg: &BenchConfig, _cache: &mut ProblemCache) -> Table 
     t
 }
 
+/// The `scale` experiment: one compute-light product family walked
+/// across **both** tier boundaries of the three-tier KNL profile
+/// (DESIGN.md §14) — B grows from fast-resident, past the fast pool's
+/// usable capacity (into two-tier chunking), then past the slow pool's
+/// usable capacity (into capacity-forced disk-tiered staging). Every
+/// point runs under `Policy::Auto`; rows report the planner's decision,
+/// simulated seconds, and effective GB/s over the operand bytes.
+///
+/// The table *asserts* the no-cliff guarantee while it prints: each
+/// adjacent point's time ratio, normalized by the byte ratio, must stay
+/// within a generous margin of the bandwidth gap of any tier boundary
+/// crossed — degradation at a boundary is bounded by the hardware's own
+/// bandwidth ratio, never a super-proportional cliff (and never an
+/// error: a point that fails to complete panics the experiment).
+pub fn scale_walk(cfg: &BenchConfig, _cache: &mut ProblemCache) -> Table {
+    use crate::coordinator::job::{Job, JobKind, Policy};
+    use crate::coordinator::planner::{execute, PlannerOptions};
+    use crate::gen::scale::ScaleFactor;
+    use crate::memory::arch::knl_ooc;
+    use crate::memory::pool::{DISK, FAST, SLOW};
+    use std::sync::Arc;
+    // x64 shrink (as serve/memo/contention): fast ~256 KiB, slow ~6 MiB,
+    // disk ~32 MiB at the default denominator — a walk past both
+    // boundaries stays CI-sized.
+    let scale = ScaleFactor::new(cfg.scale.denominator.saturating_mul(64));
+    let arch = Arc::new(knl_ooc(KnlMode::Ddr, 64, scale));
+    let fast = arch.spec.pools[FAST.0].usable();
+    let slow = arch.spec.pools[SLOW.0].usable();
+    let bw = |i: usize| arch.spec.pools[i].bandwidth_bps;
+    let points: &[(&str, u64)] = &[
+        ("0.5x fast", fast / 2),
+        ("0.8x fast", fast * 4 / 5),
+        ("2x fast", fast * 2),
+        ("0.5x slow", slow / 2),
+        ("0.8x slow", slow * 4 / 5),
+        ("1.2x slow", slow * 6 / 5),
+        ("1.6x slow", slow * 8 / 5),
+    ];
+    const DEG: usize = 8;
+    // Square B of degree 8 sized to the target bytes: per row, 8 B of
+    // rowmap + 12 B per entry.
+    let rows_for = |bytes: u64| (bytes / (8 + 12 * DEG as u64)).max(2) as usize;
+    let mut t = Table::new(&["point", "B bytes", "decision", "sim s", "eff GB/s", "norm ratio"])
+        .with_title("Scale experiment: operand walk across both tier boundaries (KNL ddr -ooc)")
+        .with_context("arch", "KNL ddr 64T + NVMe tier (x64 shrink)")
+        .with_context("input", "uniform square B deg 8, fixed 256-row A deg 2");
+    let mut prev: Option<(u64, f64)> = None;
+    for &(label, bytes) in points {
+        let r = rows_for(bytes);
+        let b = Arc::new(uniform_degree(r, r, DEG, cfg.seed));
+        let a = Arc::new(uniform_degree(256, r, 2, cfg.seed + 1));
+        let job = Job::new(
+            0,
+            JobKind::Spgemm { a: Arc::clone(&a), b: Arc::clone(&b) },
+            Arc::clone(&arch),
+            Policy::Auto,
+        );
+        let res = execute(&job, &PlannerOptions::default())
+            .unwrap_or_else(|e| panic!("scale-walk point `{label}` failed: {e}"));
+        let secs = res.report.seconds;
+        let eff = (a.size_bytes() + b.size_bytes()) as f64 / secs.max(1e-15) / 1e9;
+        let norm = prev.map(|(pb, ps)| {
+            (secs / ps.max(1e-15)) / (bytes as f64 / pb as f64)
+        });
+        if let Some((pb, _)) = prev {
+            // Allowed degradation: 8x margin, widened by the bandwidth
+            // gap of a boundary crossed between the two points.
+            let penalty = if pb <= slow && bytes > slow {
+                bw(SLOW.0) / bw(DISK.0)
+            } else if pb <= fast && bytes > fast {
+                bw(FAST.0) / bw(SLOW.0)
+            } else {
+                1.0
+            };
+            let norm = norm.expect("prev implies norm");
+            assert!(
+                norm <= 8.0 * penalty,
+                "degradation cliff at `{label}`: normalized adjacent time ratio \
+                 {norm:.2} exceeds {:.2}",
+                8.0 * penalty
+            );
+        }
+        t.row(&[
+            label.to_string(),
+            crate::util::table::human_bytes(b.size_bytes()),
+            res.decision.name(),
+            format!("{secs:.6}"),
+            format!("{eff:.3}"),
+            norm.map(|n| format!("{n:.2}")).unwrap_or_else(|| "-".into()),
+        ]);
+        prev = Some((bytes, secs));
+    }
+    t
+}
+
 /// Sanity table: P100 profile — not in the paper, prints the machine
 /// parameters used (documentation aid).
 pub fn machine_profiles(cfg: &BenchConfig) -> Table {

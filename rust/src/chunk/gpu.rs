@@ -62,15 +62,46 @@ pub(crate) struct Staged<'m> {
     pub(crate) transferred: u64,
 }
 
-/// True when a region triple already lives in the fast pool — staging
-/// from it is an addressing view, not a transfer.
-fn src_in_fast(sim: &MemSim, src: CsrRegions) -> bool {
-    sim.region(src.0).loc == Location::Pool(FAST)
+/// Stage a row slice of `m` from the `src` regions into `dst` — the one
+/// tier-agnostic staging primitive shared by the two-level drivers
+/// (slow→fast) and the tiered executor (disk→slow, then slow→fast one
+/// level further in). When the source regions already live in `dst`
+/// (a chain hop's fast-resident intermediate), the copy is skipped and
+/// nothing is charged. `overlap` issues the transfer on the simulator's
+/// overlap stream (double-buffered staging) instead of the serial clock.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn stage_slice_to<'m>(
+    sim: &mut MemSim,
+    name: &str,
+    m: &'m Csr,
+    src: CsrRegions,
+    lo: usize,
+    hi: usize,
+    dst: Location,
+    overlap: bool,
+) -> Result<Staged<'m>, AllocError> {
+    let slice = m.slice_rows(lo, hi);
+    let regions = alloc_csr_regions(sim, name, &slice, dst)?;
+    if sim.region(src.0).loc == dst {
+        return Ok(Staged { regions, csr: std::borrow::Cow::Owned(slice), transferred: 0 });
+    }
+    let transferred = slice.size_bytes();
+    let mut copy = |s, d, bytes| {
+        if overlap {
+            sim.bulk_copy_async(s, d, bytes);
+        } else {
+            sim.bulk_copy(s, d, bytes);
+        }
+    };
+    copy(src.0, regions.0, (slice.nrows as u64 + 1) * 8);
+    if slice.nnz() > 0 {
+        copy(src.1, regions.1, slice.nnz() as u64 * 4);
+        copy(src.2, regions.2, slice.nnz() as u64 * 8);
+    }
+    Ok(Staged { regions, csr: std::borrow::Cow::Owned(slice), transferred })
 }
 
 /// Stage a row slice of `m` into the fast pool, charging the bulk copy.
-/// When the source regions are already fast-resident (a chain hop's
-/// intermediate), the copy is skipped and nothing is charged.
 pub(crate) fn stage_slice<'m>(
     sim: &mut MemSim,
     name: &str,
@@ -79,18 +110,7 @@ pub(crate) fn stage_slice<'m>(
     lo: usize,
     hi: usize,
 ) -> Result<Staged<'m>, AllocError> {
-    let slice = m.slice_rows(lo, hi);
-    let regions = alloc_csr_regions(sim, name, &slice, Location::Pool(FAST))?;
-    if src_in_fast(sim, src) {
-        return Ok(Staged { regions, csr: std::borrow::Cow::Owned(slice), transferred: 0 });
-    }
-    let transferred = slice.size_bytes();
-    sim.bulk_copy(src.0, regions.0, (slice.nrows as u64 + 1) * 8);
-    if slice.nnz() > 0 {
-        sim.bulk_copy(src.1, regions.1, slice.nnz() as u64 * 4);
-        sim.bulk_copy(src.2, regions.2, slice.nnz() as u64 * 8);
-    }
-    Ok(Staged { regions, csr: std::borrow::Cow::Owned(slice), transferred })
+    stage_slice_to(sim, name, m, src, lo, hi, Location::Pool(FAST), false)
 }
 
 /// Like [`stage_slice`] but issued on the simulator's overlap stream:
@@ -104,18 +124,7 @@ pub(crate) fn stage_slice_async<'m>(
     lo: usize,
     hi: usize,
 ) -> Result<Staged<'m>, AllocError> {
-    let slice = m.slice_rows(lo, hi);
-    let regions = alloc_csr_regions(sim, name, &slice, Location::Pool(FAST))?;
-    if src_in_fast(sim, src) {
-        return Ok(Staged { regions, csr: std::borrow::Cow::Owned(slice), transferred: 0 });
-    }
-    let transferred = slice.size_bytes();
-    sim.bulk_copy_async(src.0, regions.0, (slice.nrows as u64 + 1) * 8);
-    if slice.nnz() > 0 {
-        sim.bulk_copy_async(src.1, regions.1, slice.nnz() as u64 * 4);
-        sim.bulk_copy_async(src.2, regions.2, slice.nnz() as u64 * 8);
-    }
-    Ok(Staged { regions, csr: std::borrow::Cow::Owned(slice), transferred })
+    stage_slice_to(sim, name, m, src, lo, hi, Location::Pool(FAST), true)
 }
 
 pub(crate) fn free_regions(sim: &mut MemSim, r: CsrRegions) {

@@ -1,15 +1,18 @@
 //! Chunking algorithms for problems larger than the fast memory
 //! (§3.2.2, §3.3.1): row-wise partitioning, the KNL B-chunking
-//! (Algorithm 1), the GPU 2D chunking (Algorithms 2–3), and the
-//! copy-cost decision heuristic (Algorithm 4).
+//! (Algorithm 1), the GPU 2D chunking (Algorithms 2–3), the copy-cost
+//! decision heuristic (Algorithm 4), and the recursive three-tier
+//! out-of-core executor (DESIGN.md §14).
 
 pub mod gpu;
 pub mod heuristic;
 pub mod knl;
 pub mod partition;
+pub mod tiered;
 
 pub use gpu::{gpu_chunked_sim, gpu_chunked_sim_forced, gpu_chunked_sim_forced_res};
 pub use heuristic::{
     plan_gpu_chunks, plan_gpu_chunks_sized, plan_gpu_chunks_with, GpuChunkAlgo, GpuChunkPlan,
 };
 pub use knl::{knl_chunked_sim, knl_chunked_sim_res, ChunkedProduct};
+pub use tiered::{plan_tiered_chunks, tiered_sim, TieredPlan};

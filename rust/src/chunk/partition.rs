@@ -58,6 +58,38 @@ pub fn partition_balanced(prefix: &[u64], max_bytes: u64) -> Vec<(usize, usize)>
     parts
 }
 
+/// Group consecutive inner parts into outer groups of at most `max_bytes`
+/// each — the tiered executor's disk→slow chunks (DESIGN.md §14). Each
+/// group is a contiguous range of *inner-part indices*, so the flat
+/// sequence of inner parts is untouched by the grouping: tiering changes
+/// where bytes wait, never the summation order. An inner part larger than
+/// `max_bytes` gets its own (oversized) group — callers treat that as
+/// "does not fit".
+pub fn group_consecutive(
+    prefix: &[u64],
+    inner: &[(usize, usize)],
+    max_bytes: u64,
+) -> Vec<(usize, usize)> {
+    assert!(max_bytes > 0, "zero byte budget");
+    if inner.is_empty() {
+        return vec![(0, 0)];
+    }
+    let mut groups = Vec::new();
+    let mut start = 0usize;
+    let mut bytes = 0u64;
+    for (i, &(lo, hi)) in inner.iter().enumerate() {
+        let part = range_bytes(prefix, lo, hi);
+        if i > start && bytes + part > max_bytes {
+            groups.push((start, i));
+            start = i;
+            bytes = 0;
+        }
+        bytes += part;
+    }
+    groups.push((start, inner.len()));
+    groups
+}
+
 /// Validate that ranges tile `[0, nrows)` exactly.
 pub fn is_partition(parts: &[(usize, usize)], nrows: usize) -> bool {
     if nrows == 0 {
@@ -152,6 +184,38 @@ mod tests {
     #[test]
     fn sum_prefixes_adds() {
         assert_eq!(sum_prefixes(&[0, 2, 5], &[0, 1, 1]), vec![0, 3, 6]);
+    }
+
+    #[test]
+    fn group_consecutive_tiles_inner_indices() {
+        let mat = m(&[4, 4, 4, 4, 4, 4, 4, 4]);
+        let p = csr_prefix_bytes(&mat);
+        let inner = partition_balanced(&p, p[8] / 4 + 1);
+        let groups = group_consecutive(&p, &inner, p[8] / 2 + 1);
+        // Groups tile the inner-part index range exactly.
+        let mut expect = 0usize;
+        for &(lo, hi) in &groups {
+            assert_eq!(lo, expect);
+            assert!(hi > lo);
+            expect = hi;
+        }
+        assert_eq!(expect, inner.len());
+        // Each group's bytes respect the cap.
+        for &(glo, ghi) in &groups {
+            let bytes = range_bytes(&p, inner[glo].0, inner[ghi - 1].1);
+            assert!(bytes <= p[8] / 2 + 1);
+        }
+        assert!(groups.len() >= 2);
+    }
+
+    #[test]
+    fn group_consecutive_isolates_oversized_inner_part() {
+        let mat = m(&[1, 50, 1]);
+        let p = csr_prefix_bytes(&mat);
+        let inner = partition_balanced(&p, 64);
+        // Budget smaller than the big inner part: it sits alone.
+        let groups = group_consecutive(&p, &inner, 32);
+        assert_eq!(groups.len(), inner.len());
     }
 
     #[test]

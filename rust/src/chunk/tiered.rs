@@ -1,0 +1,471 @@
+//! The recursive three-tier chunk executor (DESIGN.md §14): Algorithm 1's
+//! B-chunking discipline applied across TWO tier boundaries at once. A
+//! disk-resident operand is staged disk→slow in *outer* groups while each
+//! outer group is staged slow→fast in *inner* chunks and computed — the
+//! PR-1 double-buffering idea one level down, so a steady-state outer
+//! group costs `max(disk_transfer, inner_pipeline)` instead of their sum.
+//!
+//! The bit-identity invariant everything here rests on: the inner
+//! partition is computed GLOBALLY over B at the fast cut, and the outer
+//! grouping only gathers *consecutive* inner parts. The flat sequence of
+//! inner passes — and therefore the summation order of every C row — is
+//! identical to a two-tier run at the same fast cut, so three-tier
+//! products are bitwise equal to the two-tier (and, transitively, the
+//! flat) reference. Tiering changes where bytes wait, never what the
+//! kernel computes.
+
+use super::gpu::{free_regions, stage_slice, stage_slice_async, stage_slice_to, CsrRegions, Staged};
+use super::knl::ChunkedProduct;
+use super::partition::{csr_prefix_bytes, group_consecutive, partition_balanced, range_bytes};
+use crate::engine::TierAssign;
+use crate::error::MlmemError;
+use crate::kkmem::mempool::PooledAcc;
+use crate::kkmem::numeric::{emit_row, fused_numeric_row, Layout};
+use crate::kkmem::spgemm::{
+    acc_region_bytes, acc_trace_wrap, alloc_csr_regions, alloc_csr_regions_sized,
+};
+use crate::kkmem::symbolic::{max_row_upper_bound, rowmap_from_sizes, symbolic};
+use crate::kkmem::{CompressedMatrix, SpgemmOptions};
+use crate::memory::alloc::Location;
+use crate::memory::machine::{MemSim, MemTracer};
+use crate::memory::pool::{DISK, FAST, SLOW};
+use crate::sparse::csr::{Csr, Idx};
+
+/// The nested chunk plan of a three-tier run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TieredPlan {
+    /// Row ranges of the slow→fast inner chunks: the GLOBAL partition of
+    /// B at the fast cut, identical to the two-tier partition at the same
+    /// budget (the bit-identity invariant).
+    pub inner: Vec<(usize, usize)>,
+    /// Ranges over `inner` *indices*: each outer group's rows are staged
+    /// disk→slow together.
+    pub outer: Vec<(usize, usize)>,
+}
+
+impl TieredPlan {
+    /// Row range covered by outer group `g`.
+    pub fn outer_rows(&self, g: usize) -> (usize, usize) {
+        let (plo, phi) = self.outer[g];
+        (self.inner[plo].0, self.inner[phi - 1].1)
+    }
+}
+
+/// Nest the existing partition logic across the tier boundary: cut B
+/// globally at the fast budget, then gather consecutive inner parts into
+/// outer groups that fit the slow staging budget.
+pub fn plan_tiered_chunks(prefix: &[u64], fast_cut: u64, slow_cut: u64) -> TieredPlan {
+    let inner = partition_balanced(prefix, fast_cut.max(1));
+    let outer = group_consecutive(prefix, &inner, slow_cut.max(1));
+    TieredPlan { inner, outer }
+}
+
+/// Safety margin subtracted from the slow arena before cutting outer
+/// groups: each staged slice carries a terminal rowmap entry beyond its
+/// prefix bytes, and a pathological grouping must never push the second
+/// live buffer past the pool.
+const SLOW_SLACK: u64 = 64;
+
+/// The next outer group's pre-allocated slow regions plus the per-stream
+/// byte totals still to arrive from disk (rowmap, entries, values).
+struct NextOuter {
+    regions: CsrRegions,
+    totals: [u64; 3],
+}
+
+/// Simulated three-tier SpGEMM. Operands flagged `Disk` in `tier` start
+/// in the NVMe pool; everything else follows Algorithm 1's layout (A and
+/// the ping-pong C buffers in the slow pool, B chunks staged to fast).
+/// A disk-resident A is staged whole into the slow pool up front; a
+/// disk-resident B streams through the nested outer/inner chunk plan.
+/// `pipelined` double-buffers BOTH boundaries on the simulator's overlap
+/// stream: the next inner chunk prefetches slow→fast while the next outer
+/// group's disk→slow transfer is spread across the current group's inner
+/// compute windows. In the returned product, `n_parts_b` is the inner
+/// chunk count and `n_parts_ac` is repurposed as the outer group count.
+#[allow(clippy::too_many_arguments)]
+pub fn tiered_sim(
+    sim: &mut MemSim,
+    a: &Csr,
+    b: &Csr,
+    slow_budget: u64,
+    fast_budget: u64,
+    opts: &SpgemmOptions,
+    pipelined: bool,
+    tier: TierAssign,
+) -> Result<ChunkedProduct, MlmemError> {
+    assert_eq!(a.ncols, b.nrows, "spgemm shape mismatch");
+    assert!(
+        sim.spec.disk().is_some(),
+        "tiered executor needs a disk pool (use an `_ooc` profile)"
+    );
+    sim.set_compute_efficiency(crate::memory::machine::lane_efficiency(
+        a.avg_degree(),
+        b.avg_degree(),
+    ));
+    let disk = Location::Pool(DISK);
+    let slow = Location::Pool(SLOW);
+
+    // Symbolic once for the final structure (partials are subsets of it).
+    let b_comp = CompressedMatrix::compress(b);
+    let sizes = symbolic(a, &b_comp);
+    let final_rowmap = rowmap_from_sizes(&sizes);
+    let final_nnz = *final_rowmap.last().expect("rowmap nonempty");
+    let row_ub = max_row_upper_bound(a, b);
+
+    let mut copied_bytes = 0u64;
+    // A disk-resident A is staged whole into the slow pool up front; the
+    // kernel then reads it from DDR exactly like the two-tier drivers.
+    let a_reg: CsrRegions = if tier.a.is_disk() {
+        let master = alloc_csr_regions(sim, "A.disk", a, disk)?;
+        let dst = alloc_csr_regions(sim, "A", a, slow)?;
+        sim.bulk_copy(master.0, dst.0, (a.nrows as u64 + 1) * 8);
+        if a.nnz() > 0 {
+            sim.bulk_copy(master.1, dst.1, a.nnz() as u64 * 4);
+            sim.bulk_copy(master.2, dst.2, a.nnz() as u64 * 8);
+        }
+        copied_bytes += a.size_bytes();
+        dst
+    } else {
+        alloc_csr_regions(sim, "A", a, slow)?
+    };
+    let b_disk = tier.b.is_disk();
+    let b_master: CsrRegions = alloc_csr_regions(sim, "B", b, if b_disk { disk } else { slow })?;
+    let c_cur = alloc_csr_regions_sized(sim, "C.cur", a.nrows, final_nnz, slow)?;
+    let c_prev = alloc_csr_regions_sized(sim, "C.prev", a.nrows, final_nnz, slow)?;
+    let acc_wrap = acc_trace_wrap(sim);
+    let acc_bytes = acc_region_bytes(opts.acc.footprint_bytes(row_ub, b.ncols), acc_wrap);
+    let acc_region = sim.alloc("accumulator", acc_bytes, slow)?;
+
+    // Inner (slow→fast) cut: the two-tier drivers' rules exactly — the
+    // serial budget, or half the pool when two staging buffers are live —
+    // so a matching budget yields the IDENTICAL flat pass sequence.
+    let fast_usable = sim.spec.pools[FAST.0].usable();
+    let fast_cut = if pipelined {
+        fast_budget.min((fast_usable / 2).max(1)).max(1)
+    } else {
+        fast_budget.min(fast_usable).max(1)
+    };
+    // Outer (disk→slow) cut: the slow arena left after the DDR residents,
+    // halved when the next outer group double-buffers alongside.
+    let slow_avail = sim.available(SLOW).saturating_sub(SLOW_SLACK);
+    let slow_cut = if pipelined {
+        slow_budget.min((slow_avail / 2).max(1)).max(1)
+    } else {
+        slow_budget.min(slow_avail.max(1)).max(1)
+    };
+
+    let prefix = csr_prefix_bytes(b);
+    let plan = if b_disk {
+        plan_tiered_chunks(&prefix, fast_cut, slow_cut)
+    } else {
+        // Only A is out-of-core: B stages straight from DDR, one group.
+        let inner = partition_balanced(&prefix, fast_cut);
+        let n = inner.len();
+        TieredPlan { inner, outer: vec![(0, n)] }
+    };
+    let mut acc = PooledAcc::build_wrapped(
+        opts.acc,
+        row_ub,
+        b.ncols,
+        opts.tl_l1_entries,
+        acc_region,
+        acc_wrap,
+    );
+
+    let mut partial: Option<Csr> = None;
+    let mut mults = 0u64;
+    let mut c_regions = [c_cur, c_prev];
+    // Slow regions of the next outer group, fully transferred by the time
+    // its first inner pass needs them (pipelined disk overlap).
+    let mut prestaged: Option<CsrRegions> = None;
+    for (gi, &(plo, phi)) in plan.outer.iter().enumerate() {
+        sim.checkpoint()?;
+        let (rlo, rhi) = plan.outer_rows(gi);
+        // Outer staging: group 0 (and any group whose prefetch was
+        // skipped) pays the disk→slow transfer serially, like the serial
+        // chunk 0 of the two-tier pipeline.
+        let outer_regions: Option<CsrRegions> = if b_disk {
+            Some(match prestaged.take() {
+                Some(r) => r,
+                None => {
+                    let st =
+                        stage_slice_to(sim, &format!("SlowB.{gi}"), b, b_master, rlo, rhi, slow, false)?;
+                    copied_bytes += st.transferred;
+                    st.regions
+                }
+            })
+        } else {
+            None
+        };
+        let src = outer_regions.unwrap_or(b_master);
+        // Pre-allocate the NEXT outer group's slow regions; its disk→slow
+        // transfer is spread across this group's inner compute windows so
+        // the steady-state outer cost is max(disk, inner pipeline).
+        let mut next_state: Option<NextOuter> = None;
+        if pipelined && b_disk && gi + 1 < plan.outer.len() {
+            let (nplo, nphi) = plan.outer[gi + 1];
+            let (nrlo, nrhi) = (plan.inner[nplo].0, plan.inner[nphi - 1].1);
+            let need = range_bytes(&prefix, nrlo, nrhi) + 24;
+            if need <= sim.available(SLOW) {
+                let nnz = (b.rowmap[nrhi] - b.rowmap[nrlo]) as u64;
+                let regions = alloc_csr_regions_sized(
+                    sim,
+                    &format!("SlowB.{}", gi + 1),
+                    nrhi - nrlo,
+                    nnz as usize,
+                    slow,
+                )?;
+                next_state = Some(NextOuter {
+                    regions,
+                    totals: [(nrhi - nrlo + 1) as u64 * 8, nnz * 4, nnz * 8],
+                });
+            }
+        }
+        let windows = (phi - plo) as u64;
+        let mut staged_inner: Option<Staged> = None;
+        for (s, pi) in (plo..phi).enumerate() {
+            let (lo, hi) = plan.inner[pi];
+            sim.checkpoint()?;
+            let fb = match staged_inner.take() {
+                Some(f) => f,
+                // First inner pass of a group (or a skipped prefetch):
+                // serial staging, exactly like the serial driver.
+                None => stage_slice(sim, &format!("FastB.{pi}"), b, src, lo, hi)?,
+            };
+            copied_bytes += fb.transferred;
+            if pipelined {
+                // Inner prefetch: the next chunk's slow→fast transfer
+                // rides the overlap stream while this chunk multiplies
+                // (only within the group — the next group's rows are not
+                // in the slow pool yet).
+                if pi + 1 < phi {
+                    let (nlo, nhi) = plan.inner[pi + 1];
+                    let need = range_bytes(&prefix, nlo, nhi) + 24;
+                    staged_inner = if need <= sim.available(FAST) {
+                        Some(stage_slice_async(
+                            sim,
+                            &format!("FastB.{}", pi + 1),
+                            b,
+                            src,
+                            nlo,
+                            nhi,
+                        )?)
+                    } else {
+                        None
+                    };
+                }
+                // Cross-level prefetch: this window's prorated share of
+                // the next outer group's disk→slow transfer.
+                if let Some(next) = &next_state {
+                    let s64 = s as u64;
+                    let legs = [
+                        (b_master.0, next.regions.0, next.totals[0]),
+                        (b_master.1, next.regions.1, next.totals[1]),
+                        (b_master.2, next.regions.2, next.totals[2]),
+                    ];
+                    for (src_r, dst_r, total) in legs {
+                        let share = total * (s64 + 1) / windows - total * s64 / windows;
+                        if share > 0 {
+                            sim.bulk_copy_async(src_r, dst_r, share);
+                        }
+                    }
+                }
+            }
+            let (cur_c, prev_c) = (c_regions[0], c_regions[1]);
+            let lay = Layout {
+                a_rowmap: a_reg.0,
+                a_entries: a_reg.1,
+                a_values: a_reg.2,
+                b_rowmap: fb.regions.0,
+                b_entries: fb.regions.1,
+                b_values: fb.regions.2,
+                c_rowmap: cur_c.0,
+                c_entries: cur_c.1,
+                c_values: cur_c.2,
+                acc: acc_region,
+                c_prev_rowmap: prev_c.0,
+                c_prev_entries: prev_c.1,
+                c_prev_values: prev_c.2,
+            };
+            let mut rowmap = vec![0usize; a.nrows + 1];
+            let mut entries: Vec<Idx> = Vec::with_capacity(final_nnz);
+            let mut values: Vec<f64> = Vec::with_capacity(final_nnz);
+            let mut out: Vec<(Idx, f64)> = Vec::new();
+            for i in 0..a.nrows {
+                mults += fused_numeric_row(
+                    sim,
+                    &lay,
+                    a,
+                    &fb.csr,
+                    (lo, hi),
+                    partial.as_ref(),
+                    i,
+                    &mut acc,
+                    &mut out,
+                );
+                sim.write(lay.c_rowmap, (i as u64 + 1) * 8, 8);
+                let pos = entries.len();
+                entries.resize(pos + out.len(), 0);
+                values.resize(pos + out.len(), 0.0);
+                emit_row(sim, &lay, pos, &out, &mut entries, &mut values);
+                rowmap[i + 1] = entries.len();
+            }
+            if pipelined {
+                // This chunk's compute window closes: whatever of the
+                // prefetches (inner AND outer) it could not hide becomes
+                // stall.
+                sim.overlap_barrier();
+            }
+            partial = Some(Csr::new(a.nrows, b.ncols, rowmap, entries, values));
+            c_regions.swap(0, 1);
+            free_regions(sim, fb.regions);
+        }
+        if let Some(r) = outer_regions {
+            free_regions(sim, r);
+        }
+        if let Some(next) = next_state.take() {
+            copied_bytes += next.totals.iter().sum::<u64>();
+            prestaged = Some(next.regions);
+        }
+    }
+    let c = partial.unwrap_or_else(|| Csr::empty(a.nrows, b.ncols));
+    Ok(ChunkedProduct {
+        c,
+        mults,
+        n_parts_b: plan.inner.len(),
+        n_parts_ac: plan.outer.len(),
+        copied_bytes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::partition::is_partition;
+    use crate::engine::OperandTier;
+    use crate::gen::scale::ScaleFactor;
+    use crate::memory::arch::{knl, knl_ooc, KnlMode};
+    use crate::sparse::ops::spgemm_reference;
+
+    fn ooc_sim() -> MemSim {
+        MemSim::new(knl_ooc(KnlMode::Ddr, 256, ScaleFactor::default()).spec)
+    }
+
+    #[test]
+    fn plan_nests_partitions() {
+        let b = crate::gen::rhs::random_csr(200, 50, 1, 8, 9);
+        let prefix = csr_prefix_bytes(&b);
+        let total = prefix[b.nrows];
+        let plan = plan_tiered_chunks(&prefix, total / 9 + 1, total / 3 + 1);
+        assert!(is_partition(&plan.inner, b.nrows));
+        assert!(is_partition(&plan.outer, plan.inner.len()));
+        assert!(plan.inner.len() > plan.outer.len());
+        assert!(plan.outer.len() >= 3);
+        // The flat inner sequence equals the two-tier partition verbatim.
+        assert_eq!(plan.inner, partition_balanced(&prefix, total / 9 + 1));
+    }
+
+    #[test]
+    fn tiered_matches_two_tier_bit_identically() {
+        let a = crate::gen::rhs::random_csr(50, 40, 1, 6, 1);
+        let b = crate::gen::rhs::random_csr(40, 60, 1, 6, 2);
+        let expect = spgemm_reference(&a, &b);
+        let fast_budget = b.size_bytes() / 4;
+        let arch = knl(KnlMode::Ddr, 256, ScaleFactor::default());
+        let mut two_sim = MemSim::new(arch.spec);
+        let two = crate::chunk::knl_chunked_sim(
+            &mut two_sim,
+            &a,
+            &b,
+            fast_budget,
+            &SpgemmOptions::default(),
+        )
+        .unwrap();
+        for tier in [
+            TierAssign { a: OperandTier::Mem, b: OperandTier::Disk },
+            TierAssign { a: OperandTier::Disk, b: OperandTier::Mem },
+            TierAssign { a: OperandTier::Disk, b: OperandTier::Disk },
+        ] {
+            let mut sim = ooc_sim();
+            let p = tiered_sim(
+                &mut sim,
+                &a,
+                &b,
+                b.size_bytes() / 2,
+                fast_budget,
+                &SpgemmOptions::default(),
+                false,
+                tier,
+            )
+            .unwrap();
+            assert_eq!(p.n_parts_b, two.n_parts_b, "{tier:?}");
+            if tier.b.is_disk() {
+                assert!(p.n_parts_ac >= 2, "{tier:?}: expected multiple outer groups");
+            }
+            assert!(p.c.approx_eq(&expect, 1e-12), "{tier:?}");
+            assert!(p.c.approx_eq(&two.c, 0.0), "{tier:?}: must be bit-identical");
+            let rep = sim.finish();
+            assert!(rep.copy_seconds > 0.0);
+        }
+    }
+
+    #[test]
+    fn pipelined_tiered_bit_identical_and_faster() {
+        // Dense-ish A gives the chunk kernels real compute to hide both
+        // staging levels behind; small budgets force many inner chunks
+        // and several outer groups.
+        let a = crate::gen::rhs::uniform_degree(800, 8000, 24, 5);
+        let b = crate::gen::rhs::uniform_degree(8000, 800, 8, 6);
+        let fast_budget = b.size_bytes() / 6;
+        let slow_budget = b.size_bytes() / 2;
+        let tier = TierAssign { a: OperandTier::Mem, b: OperandTier::Disk };
+        let opts = SpgemmOptions::default();
+        let mut serial_sim = ooc_sim();
+        let serial =
+            tiered_sim(&mut serial_sim, &a, &b, slow_budget, fast_budget, &opts, false, tier)
+                .unwrap();
+        let serial_rep = serial_sim.finish();
+        let mut pipe_sim = ooc_sim();
+        let piped =
+            tiered_sim(&mut pipe_sim, &a, &b, slow_budget, fast_budget, &opts, true, tier)
+                .unwrap();
+        let pipe_rep = pipe_sim.finish();
+        // Budget ≤ usable/2 at both levels ⇒ identical nested plans ⇒
+        // bit-identical products.
+        assert_eq!(piped.n_parts_b, serial.n_parts_b);
+        assert!(serial.n_parts_ac >= 2, "expected multiple outer groups");
+        assert!(piped.c.approx_eq(&serial.c, 0.0));
+        assert!(
+            pipe_rep.seconds < serial_rep.seconds,
+            "pipelined {} !< serial {}",
+            pipe_rep.seconds,
+            serial_rep.seconds
+        );
+        // Some transfer time was actually hidden.
+        assert!(pipe_rep.async_copy_seconds > pipe_rep.overlap_stall_seconds);
+    }
+
+    #[test]
+    fn only_a_on_disk_stages_a_once() {
+        let a = crate::gen::rhs::random_csr(40, 30, 1, 5, 7);
+        let b = crate::gen::rhs::random_csr(30, 40, 1, 5, 8);
+        let tier = TierAssign { a: OperandTier::Disk, b: OperandTier::Mem };
+        let mut sim = ooc_sim();
+        let p = tiered_sim(
+            &mut sim,
+            &a,
+            &b,
+            u64::MAX,
+            10 * b.size_bytes(),
+            &SpgemmOptions::default(),
+            false,
+            tier,
+        )
+        .unwrap();
+        assert_eq!(p.n_parts_ac, 1, "B in DRAM: one outer group");
+        assert!(p.c.approx_eq(&spgemm_reference(&a, &b), 1e-12));
+        // A's up-front disk→slow staging is the only extra traffic.
+        assert!(p.copied_bytes >= a.size_bytes());
+    }
+}

@@ -71,6 +71,9 @@ pub enum Decision {
     ChunkedKnl { parts: usize },
     ChunkedGpu { parts_ac: usize, parts_b: usize },
     Pipelined { parts_ac: usize, parts_b: usize },
+    /// Three-tier recursive staging (DESIGN.md §14): `outer` disk→slow
+    /// groups, each running `inner`-chunk slow→fast staging.
+    Tiered { outer: usize, inner: usize, pipelined: bool },
 }
 
 impl Decision {
@@ -85,6 +88,10 @@ impl Decision {
             }
             Decision::Pipelined { parts_ac, parts_b } => {
                 format!("pipelined({parts_ac}x{parts_b})")
+            }
+            Decision::Tiered { outer, inner, pipelined } => {
+                let base = if *pipelined { "tiered-pipelined" } else { "tiered-serial" };
+                format!("{base}({outer}x{inner})")
             }
         }
     }
@@ -251,6 +258,14 @@ mod tests {
         assert_eq!(
             Decision::Pipelined { parts_ac: 1, parts_b: 3 }.name(),
             "pipelined(1x3)"
+        );
+        assert_eq!(
+            Decision::Tiered { outer: 2, inner: 6, pipelined: false }.name(),
+            "tiered-serial(2x6)"
+        );
+        assert_eq!(
+            Decision::Tiered { outer: 3, inner: 9, pipelined: true }.name(),
+            "tiered-pipelined(3x9)"
         );
     }
 

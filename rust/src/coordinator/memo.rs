@@ -122,6 +122,12 @@ pub struct MemoStats {
     /// [`Session::spgemm_batch`](super::Session::spgemm_batch) (the
     /// group's first job is not counted).
     pub fused: u64,
+    /// Re-registrations of byte-identical matrices deduplicated by the
+    /// session's content-hash index
+    /// ([`Session::register`](super::Session::register)): the caller got
+    /// the existing handle back, so every product/pair cache entry keyed
+    /// on it stays warm.
+    pub rehash_hits: u64,
     /// Primary computations that completed (each produced the product
     /// exactly once, however many waiters shared it).
     pub products: u64,
@@ -147,6 +153,7 @@ pub struct ProductCache {
     misses: AtomicU64,
     coalesced: AtomicU64,
     fused: AtomicU64,
+    rehash_hits: AtomicU64,
     products: AtomicU64,
     invalidated: AtomicU64,
 }
@@ -165,6 +172,7 @@ impl ProductCache {
             misses: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
             fused: AtomicU64::new(0),
+            rehash_hits: AtomicU64::new(0),
             products: AtomicU64::new(0),
             invalidated: AtomicU64::new(0),
         }
@@ -307,6 +315,13 @@ impl ProductCache {
         }
     }
 
+    /// Count a registration deduplicated by content hash. Unconditional:
+    /// handle dedup keeps the *pair* cache warm even when the product
+    /// cache is disabled.
+    pub fn record_rehash(&self) {
+        self.rehash_hits.fetch_add(1, Ordering::SeqCst);
+    }
+
     pub fn stats(&self) -> MemoStats {
         let t = self.cache.stats();
         MemoStats {
@@ -314,6 +329,7 @@ impl ProductCache {
             misses: self.misses.load(Ordering::SeqCst),
             coalesced: self.coalesced.load(Ordering::SeqCst),
             fused: self.fused.load(Ordering::SeqCst),
+            rehash_hits: self.rehash_hits.load(Ordering::SeqCst),
             products: self.products.load(Ordering::SeqCst),
             invalidated: self.invalidated.load(Ordering::SeqCst),
             evictions: t.evictions,

@@ -19,8 +19,8 @@ use super::job::{
 use crate::chunk::heuristic::GpuChunkAlgo;
 use crate::error::{JobControl, MlmemError};
 use crate::engine::{
-    CostEstimate, Engine, ExecPlan, GpuChunkEngine, KnlChunkEngine, PipelinedChunkEngine,
-    Problem, ProblemShape, Residency, SimEngine,
+    CostEstimate, Engine, ExecPlan, GpuChunkEngine, KnlChunkEngine, OperandTier,
+    PipelinedChunkEngine, Problem, ProblemShape, Residency, SimEngine, TierAssign, TieredEngine,
 };
 use crate::kkmem::CompressedMatrix;
 use crate::kkmem::Placement;
@@ -96,6 +96,7 @@ enum DecisionFlavor {
     ChunkedKnl,
     ChunkedGpu,
     Pipelined,
+    Tiered { pipelined: bool },
 }
 
 impl DecisionFlavor {
@@ -112,6 +113,13 @@ impl DecisionFlavor {
             DecisionFlavor::Pipelined => Decision::Pipelined {
                 parts_ac: rep.n_parts_ac,
                 parts_b: rep.n_parts_b,
+            },
+            // The tiered drivers repurpose the AC slot for the outer
+            // (disk→slow) group count.
+            DecisionFlavor::Tiered { pipelined } => Decision::Tiered {
+                outer: rep.n_parts_ac,
+                inner: rep.n_parts_b,
+                pipelined,
             },
         }
     }
@@ -166,6 +174,44 @@ fn spgemm_candidates(
         c_bytes: shape.c_bytes + 8,
     };
     let mut out = Vec::new();
+    // Effective operand tiers (DESIGN.md §14): declared disk residency,
+    // plus capacity-forced promotion — on a machine with a disk rung, an
+    // operand the slow pool cannot even hold must stream from disk, so
+    // the planner treats it as disk-resident whatever the declaration.
+    // Out-of-core problems are only runnable by the tiered executor:
+    // every two-level plan would mis-price (or outright reject) a
+    // disk-resident operand, so the enumeration is tiered-serial vs
+    // tiered-pipelined and nothing else.
+    if arch.spec.disk().is_some() {
+        let slow_usable = arch.spec.pools[SLOW.0].usable();
+        let force = |declared: OperandTier, bytes: u64| {
+            if declared.is_disk() || bytes > slow_usable {
+                OperandTier::Disk
+            } else {
+                OperandTier::Mem
+            }
+        };
+        let tier = TierAssign {
+            a: force(problem.tier.a, sizes.a_bytes),
+            b: force(problem.tier.b, sizes.b_bytes),
+        };
+        if tier.any_disk() {
+            for pipelined in [false, true] {
+                push_candidate(
+                    &mut out,
+                    if pipelined { "tiered-pipelined" } else { "tiered-serial" },
+                    Box::new(
+                        TieredEngine::new(Arc::clone(arch), spgemm_opts, opts.auto_chunk_budget)
+                            .pipelined(pipelined)
+                            .with_tier(tier),
+                    ),
+                    DecisionFlavor::Tiered { pipelined },
+                    problem,
+                );
+            }
+            return out;
+        }
+    }
     // `slow_pinned` marks chain intermediates physically in the slow
     // pool: flat plans that would teleport them fast are excluded (the
     // chain executor instead charges an explicit promote and flips the
@@ -1221,6 +1267,37 @@ mod tests {
             .fold(f64::INFINITY, f64::min);
         let chosen = rows.iter().find(|r| r.chosen).unwrap();
         assert_eq!(chosen.predicted.total_seconds(), min_pred);
+    }
+
+    #[test]
+    fn auto_on_ooc_profile_gates_tiered_candidates_on_disk_tier() {
+        let arch = Arc::new(crate::memory::arch::knl_ooc(
+            KnlMode::Ddr,
+            256,
+            ScaleFactor::default(),
+        ));
+        let a = Arc::new(crate::gen::rhs::random_csr(50, 40, 1, 6, 21));
+        let b = Arc::new(crate::gen::rhs::random_csr(40, 60, 1, 6, 22));
+        let job = Job::new(
+            7,
+            JobKind::Spgemm { a: Arc::clone(&a), b: Arc::clone(&b) },
+            Arc::clone(&arch),
+            Policy::Auto,
+        );
+        // In-memory operands on an ooc profile: the usual enumeration.
+        let r = execute(&job, &PlannerOptions::default()).unwrap();
+        assert!(r.candidates.iter().any(|c| c.label == "flat-fast"));
+        assert!(!r.candidates.iter().any(|c| c.label.starts_with("tiered")));
+        // A declared-disk B switches the enumeration to tiered only.
+        let problem = Problem::try_new(&a, &b).unwrap().with_tier(TierAssign {
+            a: OperandTier::Mem,
+            b: OperandTier::Disk,
+        });
+        let r = execute_spgemm(&job, &problem, &PlannerOptions::default()).unwrap();
+        assert_eq!(r.candidates.len(), 2, "{:?}", r.candidates);
+        assert!(r.candidates.iter().all(|c| c.label.starts_with("tiered")));
+        assert!(matches!(r.decision, Decision::Tiered { .. }));
+        assert!(r.c_nnz > 0);
     }
 
     #[test]

@@ -333,6 +333,7 @@ impl SessionBuilder {
             next_job: AtomicU64::new(1),
             next_handle: AtomicU64::new(1),
             operands: Mutex::new(HashMap::new()),
+            content_index: Mutex::new(HashMap::new()),
             shared: Arc::new(Shared {
                 metrics: Metrics::default(),
                 pair_cache: Mutex::new(HashMap::new()),
@@ -367,6 +368,10 @@ pub struct Session {
     next_job: AtomicU64,
     next_handle: AtomicU64,
     operands: Mutex<HashMap<u64, Arc<Operand>>>,
+    /// Content hash → handle ids with that hash — the register-time
+    /// dedup index. Hash collisions are tolerated (each candidate is
+    /// verified by full equality), so a bucket holds a `Vec`.
+    content_index: Mutex<HashMap<u64, Vec<u64>>>,
     shared: Arc<Shared>,
     cluster: Option<ClusterState>,
 }
@@ -379,10 +384,31 @@ impl Session {
     /// Register a matrix, returning a handle valid for this session.
     /// The per-matrix symbolic summary is cached behind the handle and
     /// reused by every job it participates in.
+    ///
+    /// Registration is **content-addressed**: a matrix byte-identical to
+    /// one already registered returns the *existing* handle (counted as
+    /// `rehash_hits` in [`MemoStats`](super::MemoStats)), so the pair
+    /// cache, fast-pool residency, and every cached product keyed on it
+    /// stay warm. A client that re-reads its input and registers it
+    /// afresh therefore loses no cached state. Candidate hash matches
+    /// are verified by full equality before reuse.
     pub fn register(&self, matrix: Arc<Csr>) -> MatrixHandle {
+        let hash = content_hash(&matrix);
+        // Lock order: registry, then index (reregister matches).
+        let mut registry = self.operands.lock().expect("registry poisoned");
+        let mut index = self.content_index.lock().expect("content index poisoned");
+        if let Some(ids) = index.get(&hash) {
+            for &id in ids {
+                if registry.get(&id).is_some_and(|op| *op.matrix == *matrix) {
+                    self.shared.memo.record_rehash();
+                    return MatrixHandle { id };
+                }
+            }
+        }
         let id = self.next_handle.fetch_add(1, Ordering::SeqCst);
         let operand = Arc::new(Operand { matrix, compressed: Mutex::new(None) });
-        self.operands.lock().expect("registry poisoned").insert(id, operand);
+        registry.insert(id, operand);
+        index.entry(hash).or_default().push(id);
         MatrixHandle { id }
     }
 
@@ -396,11 +422,23 @@ impl Session {
     /// their own `Arc` and complete against it.
     pub fn reregister(&self, h: MatrixHandle, matrix: Arc<Csr>) -> Result<(), MlmemError> {
         {
+            let new_hash = content_hash(&matrix);
             let mut registry = self.operands.lock().expect("registry poisoned");
             let slot = registry
                 .get_mut(&h.id)
                 .ok_or(MlmemError::UnknownHandle(h.id))?;
+            let old_hash = content_hash(&slot.matrix);
             *slot = Arc::new(Operand { matrix, compressed: Mutex::new(None) });
+            // Move the handle to its new content bucket so later
+            // registrations dedup against what it holds *now*.
+            let mut index = self.content_index.lock().expect("content index poisoned");
+            if let Some(ids) = index.get_mut(&old_hash) {
+                ids.retain(|&id| id != h.id);
+                if ids.is_empty() {
+                    index.remove(&old_hash);
+                }
+            }
+            index.entry(new_hash).or_default().push(h.id);
         }
         self.shared
             .pair_cache
@@ -1146,6 +1184,10 @@ fn decision_leaves_fast(arch: &Arch, d: &Decision) -> (bool, bool) {
             MachineKind::Knl => (false, *parts_b == 1),
             MachineKind::Gpu => (*parts_ac == 1, *parts_b == 1),
         },
+        // Three-tier staging materializes operands in the slow arena and
+        // streams chunks through fast memory — nothing ends up wholly
+        // fast-resident.
+        Decision::Tiered { .. } => (false, false),
     }
 }
 
@@ -1163,7 +1205,28 @@ fn plan_leaves_fast(arch: &Arch, plan: &ExecPlan, rep: &EngineReport) -> (bool, 
             MachineKind::Knl => (false, rep.n_parts_b == 1),
             MachineKind::Gpu => (rep.n_parts_ac == 1, rep.n_parts_b == 1),
         },
+        ExecPlan::Tiered { .. } => (false, false),
     }
+}
+
+/// Content hash of a matrix for register-time dedup: the dimensions plus
+/// all three CSR arrays, values hashed by f64 bit pattern. The hash only
+/// routes candidates — [`Session::register`] verifies every candidate by
+/// full equality, so a collision costs a comparison and a bit-pattern
+/// mismatch of `==`-equal values (e.g. `0.0` vs `-0.0`) merely skips a
+/// dedup opportunity.
+fn content_hash(m: &Csr) -> u64 {
+    use std::collections::hash_map::DefaultHasher;
+    use std::hash::{Hash, Hasher};
+    let mut h = DefaultHasher::new();
+    m.nrows.hash(&mut h);
+    m.ncols.hash(&mut h);
+    m.rowmap.hash(&mut h);
+    m.entries.hash(&mut h);
+    for v in &m.values {
+        v.to_bits().hash(&mut h);
+    }
+    h.finish()
 }
 
 /// Offer one operand to the fast-pool cache, pricing its re-copy through
@@ -1320,6 +1383,31 @@ mod tests {
         ));
         // Neither error consumed a job id or a submitted slot.
         assert_eq!(session.metrics().submitted, 0);
+    }
+
+    #[test]
+    fn register_dedups_byte_identical_matrices() {
+        let session = Session::builder(arch()).workers(1).build();
+        let m = mat(9);
+        let a = session.register(Arc::clone(&m));
+        // A byte-identical copy (fresh allocation) resolves to the same
+        // handle — the pair/product caches keyed on it stay warm.
+        let a2 = session.register(Arc::new((*m).clone()));
+        assert_eq!(a, a2);
+        assert_eq!(session.metrics().memo.rehash_hits, 1);
+        // Different content gets its own handle.
+        let b = session.register(mat(10));
+        assert_ne!(a, b);
+        assert_eq!(session.metrics().memo.rehash_hits, 1);
+        // Re-registering moves the handle to its new content bucket: the
+        // old bytes no longer dedup onto it...
+        session.reregister(a, mat(11)).unwrap();
+        let c = session.register(Arc::new((*m).clone()));
+        assert_ne!(a, c);
+        // ...while its new content does.
+        let d = session.register(session.operand(a).unwrap());
+        assert_eq!(a, d);
+        assert_eq!(session.metrics().memo.rehash_hits, 2);
     }
 
     #[test]

@@ -3,17 +3,21 @@
 //! copies are serial with compute — the baseline the pipelined engine is
 //! judged against.
 
-use super::cost::{gpu_chunked_estimate_res, knl_chunked_estimate_res, CostEstimate, ProblemShape};
-use super::{Engine, EngineReport, ExecPlan, Problem};
+use super::cost::{
+    gpu_chunked_estimate_res, knl_chunked_estimate_res, tiered_estimate, CostEstimate,
+    ProblemShape,
+};
+use super::{Engine, EngineReport, ExecPlan, Problem, TierAssign};
 use crate::chunk::gpu::gpu_chunked_sim_forced_res;
 use crate::chunk::heuristic::GpuChunkAlgo;
 use crate::chunk::knl::ChunkedProduct;
 use crate::chunk::knl_chunked_sim_res;
-use crate::chunk::partition::{csr_prefix_bytes, partition_balanced};
+use crate::chunk::partition::{csr_prefix_bytes, group_consecutive, partition_balanced};
+use crate::chunk::tiered::tiered_sim;
 use crate::error::{JobControl, MlmemError};
 use crate::kkmem::SpgemmOptions;
 use crate::memory::arch::Arch;
-use crate::memory::pool::FAST;
+use crate::memory::pool::{FAST, SLOW};
 use crate::memory::MemSim;
 use crate::util::timer::Timer;
 use std::sync::Arc;
@@ -21,6 +25,19 @@ use std::sync::Arc;
 fn effective_budget(arch: &Arch, fast_budget: Option<u64>) -> u64 {
     let usable = arch.spec.pools[FAST.0].usable();
     fast_budget.unwrap_or(usable).min(usable).max(1)
+}
+
+/// Two-level engines cannot read an operand declared on the disk rung
+/// (DESIGN.md §14): they would silently price a disk-resident matrix as
+/// if it sat in DDR. Reject at plan time so `Policy::Auto` never scores
+/// them for out-of-core problems.
+pub(super) fn reject_disk_tier(name: &str, p: &Problem) -> Result<(), MlmemError> {
+    if p.tier.any_disk() {
+        return Err(MlmemError::Planner(format!(
+            "{name} engine is two-level; a disk-declared operand needs the tiered engine"
+        )));
+    }
+    Ok(())
 }
 
 fn estimate_b_parts(p: &Problem, budget: u64) -> usize {
@@ -81,6 +98,7 @@ impl Engine for KnlChunkEngine {
     }
 
     fn plan(&self, p: &Problem) -> Result<ExecPlan, MlmemError> {
+        reject_disk_tier(self.name(), p)?;
         let budget = effective_budget(&self.arch, self.fast_budget);
         Ok(ExecPlan::Chunked {
             fast_budget: budget,
@@ -142,6 +160,7 @@ impl Engine for GpuChunkEngine {
     }
 
     fn plan(&self, p: &Problem) -> Result<ExecPlan, MlmemError> {
+        reject_disk_tier(self.name(), p)?;
         let budget = effective_budget(&self.arch, self.fast_budget);
         Ok(ExecPlan::Chunked {
             fast_budget: budget,
@@ -185,11 +204,156 @@ impl Engine for GpuChunkEngine {
     }
 }
 
+/// The three-tier recursive staging executor (`chunk::tiered`,
+/// DESIGN.md §14) as an engine: disk-resident operands stream disk→slow
+/// in outer groups while each group runs Algorithm 1's slow→fast inner
+/// chunking. The effective tier of each operand is the union of the
+/// problem's declaration and the engine's own assignment (the planner
+/// pins capacity-forced tiers through [`TieredEngine::with_tier`]).
+pub struct TieredEngine {
+    arch: Arc<Arch>,
+    opts: SpgemmOptions,
+    slow_budget: Option<u64>,
+    fast_budget: Option<u64>,
+    pipelined: bool,
+    tier: TierAssign,
+}
+
+impl TieredEngine {
+    pub fn new(arch: Arc<Arch>, opts: SpgemmOptions, fast_budget: Option<u64>) -> Self {
+        Self {
+            arch,
+            opts,
+            slow_budget: None,
+            fast_budget,
+            pipelined: false,
+            tier: TierAssign::NONE,
+        }
+    }
+
+    /// Select the double-buffered executor (both staging boundaries).
+    pub fn pipelined(mut self, pipelined: bool) -> Self {
+        self.pipelined = pipelined;
+        self
+    }
+
+    /// Cap the disk→slow staging arena (None = the slow pool's capacity).
+    pub fn with_slow_budget(mut self, slow_budget: Option<u64>) -> Self {
+        self.slow_budget = slow_budget;
+        self
+    }
+
+    /// Pin operands to the disk rung beyond the problem's declaration
+    /// (the planner's capacity-forced tiers).
+    pub fn with_tier(mut self, tier: TierAssign) -> Self {
+        self.tier = tier;
+        self
+    }
+
+    fn effective_tier(&self, p: &Problem) -> TierAssign {
+        use super::OperandTier;
+        let or = |x: OperandTier, y: OperandTier| {
+            if x.is_disk() || y.is_disk() { OperandTier::Disk } else { OperandTier::Mem }
+        };
+        TierAssign { a: or(self.tier.a, p.tier.a), b: or(self.tier.b, p.tier.b) }
+    }
+
+    fn slow_budget(&self) -> u64 {
+        let usable = self.arch.spec.pools[SLOW.0].usable();
+        self.slow_budget.unwrap_or(usable).min(usable).max(1)
+    }
+}
+
+impl Engine for TieredEngine {
+    fn name(&self) -> &'static str {
+        if self.pipelined { "tiered-pipelined" } else { "tiered" }
+    }
+
+    fn plan(&self, p: &Problem) -> Result<ExecPlan, MlmemError> {
+        if self.arch.spec.disk().is_none() {
+            return Err(MlmemError::Planner(format!(
+                "tiered engine needs a machine with a disk rung, got {}",
+                self.arch.spec.name
+            )));
+        }
+        let tier = self.effective_tier(p);
+        let fast_budget = effective_budget(&self.arch, self.fast_budget);
+        let slow_budget = self.slow_budget();
+        // Plan-time estimates from the same partition logic the driver
+        // nests; the driver refines the slow cut against live residents.
+        let fast_usable = self.arch.spec.pools[FAST.0].usable();
+        let fast_cut = if self.pipelined {
+            fast_budget.min((fast_usable / 2).max(1)).max(1)
+        } else {
+            fast_budget
+        };
+        let prefix = csr_prefix_bytes(p.b);
+        let inner = partition_balanced(&prefix, fast_cut);
+        let est_outer = if tier.b.is_disk() {
+            let slow_usable = self.arch.spec.pools[SLOW.0].usable();
+            let slow_cut = if self.pipelined {
+                slow_budget.min((slow_usable / 2).max(1)).max(1)
+            } else {
+                slow_budget.min(slow_usable).max(1)
+            };
+            group_consecutive(&prefix, &inner, slow_cut).len()
+        } else {
+            1
+        };
+        Ok(ExecPlan::Tiered {
+            slow_budget,
+            fast_budget,
+            pipelined: self.pipelined,
+            est_outer,
+            est_inner: inner.len(),
+            disk_a: tier.a.is_disk(),
+            disk_b: tier.b.is_disk(),
+        })
+    }
+
+    fn predict(&self, p: &Problem, plan: &ExecPlan) -> Result<CostEstimate, MlmemError> {
+        let ExecPlan::Tiered { slow_budget, fast_budget, pipelined, disk_a, disk_b, .. } = plan
+        else {
+            return Err(MlmemError::Planner(
+                "tiered engine got an incompatible plan".into(),
+            ));
+        };
+        let shape = ProblemShape::measure(p, &self.opts, &self.arch.spec);
+        Ok(tiered_estimate(
+            &self.arch.spec,
+            &shape,
+            *slow_budget,
+            *fast_budget,
+            *pipelined,
+            *disk_a,
+            *disk_b,
+        ))
+    }
+
+    fn run(&self, p: &Problem, plan: &ExecPlan) -> Result<EngineReport, MlmemError> {
+        let ExecPlan::Tiered { slow_budget, fast_budget, pipelined, disk_a, disk_b, .. } = plan
+        else {
+            return Err(MlmemError::Planner(
+                "tiered engine got an incompatible plan".into(),
+            ));
+        };
+        use super::OperandTier;
+        let tier = TierAssign {
+            a: if *disk_a { OperandTier::Disk } else { OperandTier::Mem },
+            b: if *disk_b { OperandTier::Disk } else { OperandTier::Mem },
+        };
+        chunk_report(self.name(), &self.arch, &p.control, p.link.clone(), |sim| {
+            tiered_sim(sim, p.a, p.b, *slow_budget, *fast_budget, &self.opts, *pipelined, tier)
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::OperandTier;
     use crate::gen::scale::ScaleFactor;
-    use crate::memory::arch::{knl, p100, GpuMode, KnlMode};
+    use crate::memory::arch::{knl, knl_ooc, p100, GpuMode, KnlMode};
     use crate::sparse::ops::spgemm_reference;
 
     #[test]
@@ -208,6 +372,43 @@ mod tests {
         assert_eq!(rep.n_parts_b, *est_parts);
         assert!(rep.copied_bytes > 0);
         assert!(rep.sim.unwrap().copy_seconds > 0.0);
+    }
+
+    #[test]
+    fn tiered_engine_runs_disk_problem_and_two_level_engines_reject_it() {
+        let a = crate::gen::rhs::random_csr(50, 40, 1, 6, 1);
+        let b = crate::gen::rhs::random_csr(40, 60, 1, 6, 2);
+        let tier = TierAssign { a: OperandTier::Mem, b: OperandTier::Disk };
+        let p = Problem::new(&a, &b).with_tier(tier);
+        let ooc = Arc::new(knl_ooc(KnlMode::Ddr, 256, ScaleFactor::default()));
+        let eng = TieredEngine::new(Arc::clone(&ooc), SpgemmOptions::default(), Some(b.size_bytes() / 4))
+            .with_slow_budget(Some(b.size_bytes() / 2));
+        let plan = eng.plan(&p).unwrap();
+        let ExecPlan::Tiered { est_outer, est_inner, disk_b: true, .. } = &plan else {
+            panic!("plan kind: {plan:?}")
+        };
+        assert!(*est_inner >= 3);
+        assert!(*est_outer >= 2);
+        let est = eng.predict(&p, &plan).unwrap();
+        assert!(est.total_seconds().is_finite() && est.total_seconds() > 0.0);
+        let rep = eng.run(&p, &plan).unwrap();
+        assert!(rep.c.approx_eq(&spgemm_reference(&a, &b), 1e-12));
+        assert_eq!(rep.n_parts_b, *est_inner);
+        assert_eq!(rep.n_parts_ac, *est_outer);
+        // Two-level engines must refuse the disk-declared problem.
+        let knl_arch = Arc::new(knl(KnlMode::Ddr, 256, ScaleFactor::default()));
+        let knl_eng = KnlChunkEngine::new(knl_arch, SpgemmOptions::default(), None);
+        assert!(matches!(knl_eng.plan(&p), Err(MlmemError::Planner(_))));
+        let gpu_arch = Arc::new(p100(GpuMode::Pinned, ScaleFactor::default()));
+        let gpu_eng = GpuChunkEngine::new(gpu_arch, SpgemmOptions::default(), None);
+        assert!(matches!(gpu_eng.plan(&p), Err(MlmemError::Planner(_))));
+        // And the tiered engine refuses machines without a disk rung.
+        let flat = TieredEngine::new(
+            Arc::new(knl(KnlMode::Ddr, 256, ScaleFactor::default())),
+            SpgemmOptions::default(),
+            None,
+        );
+        assert!(matches!(flat.plan(&p), Err(MlmemError::Planner(_))));
     }
 
     #[test]

@@ -23,14 +23,16 @@
 
 use crate::chunk::gpu::c_prefix_from_sizes;
 use crate::chunk::heuristic::{plan_gpu_chunks_with, GpuChunkAlgo};
-use crate::chunk::partition::{csr_prefix_bytes, partition_balanced, range_bytes, sum_prefixes};
+use crate::chunk::partition::{
+    csr_prefix_bytes, group_consecutive, partition_balanced, range_bytes, sum_prefixes,
+};
 use crate::kkmem::spgemm::acc_region_bytes;
 use crate::kkmem::symbolic::symbolic_stats;
 use crate::kkmem::{CompressedMatrix, Placement, SpgemmOptions};
 use crate::memory::alloc::Location;
 use crate::memory::contention::{LinkLoad, LINK_EPS};
 use crate::memory::machine::{lane_efficiency, MachineSpec};
-use crate::memory::pool::{FAST, SLOW};
+use crate::memory::pool::{DISK, FAST, SLOW};
 
 use super::{Problem, Residency};
 
@@ -542,6 +544,92 @@ pub fn gpu_chunked_estimate_res(
     (plan.algo, pipeline_split(kernel, hideable, serial, stages as usize, pipelined))
 }
 
+/// Estimate for the three-tier recursive executor (`tiered_sim`,
+/// DESIGN.md §14). The slow→fast inner pipeline is priced by the same
+/// [`knl_chunked_estimate_res`] the two-tier candidates use (the inner
+/// pass sequence is literally Algorithm 1's), and the disk→slow leg is
+/// layered on top: serial plans pay the whole disk transfer up front,
+/// while the pipelined plan amortizes it across the outer groups and
+/// exposes only what each group's disk share exceeds its inner-pipeline
+/// slice by — `max(disk_transfer, inner_pipeline)` per steady-state
+/// group. Cut rules mirror the executor exactly so the outer-group count
+/// matches what `plan_tiered_chunks` will produce.
+#[allow(clippy::too_many_arguments)]
+pub fn tiered_estimate(
+    spec: &MachineSpec,
+    shape: &ProblemShape,
+    slow_budget: u64,
+    fast_budget: u64,
+    pipelined: bool,
+    disk_a: bool,
+    disk_b: bool,
+) -> CostEstimate {
+    assert!(spec.pools.len() > DISK.0, "tiered estimate needs a disk pool");
+    // Inner (slow→fast) leg: identical cut rules to the two-tier engines,
+    // so this is the two-tier estimate at the same budget.
+    let inner = knl_chunked_estimate_res(spec, shape, fast_budget, pipelined, Residency::NONE);
+    // Outer (disk→slow) group count, mirroring the executor: the slow
+    // arena left after the DDR residents (A, the ping-pong C buffers, the
+    // accumulator), halved when the next group double-buffers alongside.
+    let outer = if disk_b {
+        let residents = (shape.a_bytes + 8)
+            .saturating_add(2 * (shape.c_bytes + 8))
+            .saturating_add(shape.acc_bytes);
+        let slow_avail = spec.pools[SLOW.0]
+            .usable()
+            .saturating_sub(residents)
+            .saturating_sub(64);
+        let slow_cut = if pipelined {
+            slow_budget.min((slow_avail / 2).max(1)).max(1)
+        } else {
+            slow_budget.min(slow_avail.max(1)).max(1)
+        };
+        let fast_cut = {
+            let usable = spec.pools[FAST.0].usable();
+            if pipelined {
+                fast_budget.min((usable / 2).max(1)).max(1)
+            } else {
+                fast_budget.min(usable).max(1)
+            }
+        };
+        let inner_parts = partition_balanced(&shape.b_prefix, fast_cut);
+        group_consecutive(&shape.b_prefix, &inner_parts, slow_cut).len()
+    } else {
+        1
+    };
+    // Disk legs: B streams across once in outer groups, a disk-resident A
+    // is staged whole up front (always serial).
+    let a_copy = if disk_a {
+        spec.bulk_copy_seconds(DISK, SLOW, shape.a_bytes)
+    } else {
+        0.0
+    };
+    let disk_copy = if disk_b {
+        spec.bulk_copy_seconds(DISK, SLOW, shape.b_bytes)
+            + (3 * outer) as f64 * spec.pools[DISK.0].latency_s
+    } else {
+        0.0
+    };
+    if pipelined && outer > 1 {
+        let s = outer as f64;
+        let per_disk = disk_copy / s;
+        let per_inner = inner.total_seconds() / s;
+        CostEstimate {
+            kernel_seconds: inner.kernel_seconds,
+            copy_seconds: inner.copy_seconds + a_copy + per_disk,
+            stall_seconds: inner.stall_seconds + (s - 1.0) * (per_disk - per_inner).max(0.0),
+            passes: inner.passes,
+        }
+    } else {
+        CostEstimate {
+            kernel_seconds: inner.kernel_seconds,
+            copy_seconds: inner.copy_seconds + a_copy + disk_copy,
+            stall_seconds: inner.stall_seconds,
+            passes: inner.passes,
+        }
+    }
+}
+
 /// Split staging time into serial + stall: pipelined stages expose the
 /// first transfer plus whatever each steady-state transfer exceeds its
 /// stage's kernel slice by; serial plans expose everything.
@@ -671,6 +759,35 @@ mod tests {
         assert_eq!(managed.kernel_seconds, hbm.kernel_seconds);
         assert!(managed.copy_seconds > 0.0, "no migration charged");
         assert!(managed.total_seconds() > hbm.total_seconds());
+    }
+
+    #[test]
+    fn tiered_estimate_prices_disk_leg_and_pipelining() {
+        let a = crate::gen::rhs::uniform_degree(800, 6000, 24, 5);
+        let b = crate::gen::rhs::uniform_degree(6000, 800, 6, 6);
+        let spec = crate::memory::arch::knl_ooc(KnlMode::Ddr, 256, ScaleFactor::default()).spec;
+        let shape = shape_for(&a, &b, &spec);
+        // Budget well under usable/2 so serial and pipelined share the
+        // inner cut (the executor's bit-identity regime).
+        let budget = shape.b_bytes / 6;
+        let slow_budget = shape.b_bytes / 2;
+        let two_tier = knl_chunked_estimate(&spec, &shape, budget, false);
+        let serial = tiered_estimate(&spec, &shape, slow_budget, budget, false, false, true);
+        // Same inner pipeline as the two-tier estimate, plus a disk leg.
+        assert_eq!(serial.kernel_seconds, two_tier.kernel_seconds);
+        assert_eq!(serial.passes, two_tier.passes);
+        assert!(serial.total_seconds() > two_tier.total_seconds());
+        // Pipelining amortizes the disk leg across outer groups.
+        let piped = tiered_estimate(&spec, &shape, slow_budget, budget, true, false, true);
+        assert!(
+            piped.total_seconds() < serial.total_seconds(),
+            "{} !< {}",
+            piped.total_seconds(),
+            serial.total_seconds()
+        );
+        // A disk-resident A adds a serial staging leg.
+        let with_a = tiered_estimate(&spec, &shape, slow_budget, budget, false, true, true);
+        assert!(with_a.copy_seconds > serial.copy_seconds);
     }
 
     #[test]

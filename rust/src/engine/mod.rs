@@ -25,7 +25,7 @@ use crate::memory::SimReport;
 use crate::sparse::Csr;
 use std::sync::Arc;
 
-pub use chunked::{GpuChunkEngine, KnlChunkEngine};
+pub use chunked::{GpuChunkEngine, KnlChunkEngine, TieredEngine};
 pub use cost::{ContendedEstimate, CostEstimate, ProblemShape};
 pub use native::{pipelined_spgemm_native, NativeCalibration, NativeEngine};
 pub use pipelined::{
@@ -72,6 +72,43 @@ impl Residency {
     }
 }
 
+/// Which memory tier an operand is **declared** to live in before the
+/// run starts (DESIGN.md §14). `Mem` is the paper's two-level world:
+/// the operand sits in the slow pool (or wherever the plan places it).
+/// `Disk` pins the operand to the out-of-core rung of an `*_ooc`
+/// profile: engines must stage it up through the slow pool explicitly,
+/// and the two-level engines refuse the problem outright.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OperandTier {
+    /// In-memory (slow pool) — the two-level default.
+    #[default]
+    Mem,
+    /// Resident on the disk rung; must be staged disk→slow to be read.
+    Disk,
+}
+
+impl OperandTier {
+    pub fn is_disk(&self) -> bool {
+        matches!(self, OperandTier::Disk)
+    }
+}
+
+/// Declared tier of each operand of a multiplication.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierAssign {
+    pub a: OperandTier,
+    pub b: OperandTier,
+}
+
+impl TierAssign {
+    /// Both operands in memory (the two-level default).
+    pub const NONE: TierAssign = TierAssign { a: OperandTier::Mem, b: OperandTier::Mem };
+
+    pub fn any_disk(&self) -> bool {
+        self.a.is_disk() || self.b.is_disk()
+    }
+}
+
 /// One multiplication `C = A × B` as the engines see it. Carries a lazy
 /// cache of the machine-independent symbolic summary so that scoring
 /// many candidate plans against one problem (`Policy::Auto`) runs the
@@ -102,6 +139,11 @@ pub struct Problem<'a> {
     /// other jobs' concurrent streams (DESIGN.md §11). Default `None` —
     /// standalone runs keep the single-tenant clock.
     pub link: Option<crate::memory::contention::LinkHandle>,
+    /// Declared memory tier of each operand (DESIGN.md §14). A `Disk`
+    /// operand lives on the out-of-core rung of an `*_ooc` profile; only
+    /// the tiered engine can run such a problem — the two-level engines
+    /// reject it at plan time. Default: both in memory.
+    pub tier: TierAssign,
     pub(crate) shape_core: std::cell::OnceCell<Arc<cost::ShapeCore>>,
 }
 
@@ -127,6 +169,7 @@ impl<'a> Problem<'a> {
             residency: Residency::NONE,
             slow_pinned: Residency::NONE,
             link: None,
+            tier: TierAssign::NONE,
             shape_core: std::cell::OnceCell::new(),
         })
     }
@@ -155,6 +198,12 @@ impl<'a> Problem<'a> {
     /// simulated bulk transfers are then arbitrated against other jobs.
     pub fn with_link(mut self, link: Option<crate::memory::contention::LinkHandle>) -> Self {
         self.link = link;
+        self
+    }
+
+    /// Declare the memory tier of each operand (DESIGN.md §14).
+    pub fn with_tier(mut self, tier: TierAssign) -> Self {
+        self.tier = tier;
         self
     }
 
@@ -195,6 +244,20 @@ pub enum ExecPlan {
         gpu_algo: Option<GpuChunkAlgo>,
         resident: Residency,
     },
+    /// Three-tier recursive staging (DESIGN.md §14): disk-resident
+    /// operands stream disk→slow in `est_outer` outer groups while each
+    /// group is staged slow→fast in `est_inner` inner chunks and
+    /// computed. `pipelined` double-buffers BOTH boundaries; `disk_a` /
+    /// `disk_b` record which operands start on the disk rung.
+    Tiered {
+        slow_budget: u64,
+        fast_budget: u64,
+        pipelined: bool,
+        est_outer: usize,
+        est_inner: usize,
+        disk_a: bool,
+        disk_b: bool,
+    },
 }
 
 impl ExecPlan {
@@ -213,6 +276,10 @@ impl ExecPlan {
                     Some(GpuChunkAlgo::BResident) => format!("{base}(~{est_parts},B-res)"),
                     None => format!("{base}(~{est_parts})"),
                 }
+            }
+            ExecPlan::Tiered { pipelined, est_outer, est_inner, .. } => {
+                let base = if *pipelined { "tiered-pipelined" } else { "tiered" };
+                format!("{base}(~{est_outer}x{est_inner})")
             }
         }
     }

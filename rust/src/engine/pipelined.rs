@@ -614,6 +614,7 @@ impl Engine for PipelinedChunkEngine {
     }
 
     fn plan(&self, p: &Problem) -> Result<ExecPlan, MlmemError> {
+        super::chunked::reject_disk_tier(self.name(), p)?;
         let budget = self.budget();
         let est_parts = if p.residency.b {
             // A fast-resident B is consumed in place: one pass.

@@ -38,6 +38,7 @@ impl Engine for SimEngine {
     }
 
     fn plan(&self, p: &Problem) -> Result<ExecPlan, MlmemError> {
+        super::chunked::reject_disk_tier(self.name(), p)?;
         // A fast-resident operand (chain hop intermediate) overrides the
         // engine's nominal placement: it is physically in the fast pool,
         // so the committed plan reads it from there. Honored only when

@@ -17,7 +17,8 @@ use mlmem_spgemm::gen::scale::ScaleFactor;
 use mlmem_spgemm::gen::stencil::Domain;
 use mlmem_spgemm::gen::{graphs::GraphKind, MgProblem};
 use mlmem_spgemm::kkmem::{AccKind, CompressedMatrix, SpgemmOptions};
-use mlmem_spgemm::memory::arch::{knl, p100, Arch, GpuMode, KnlMode};
+use mlmem_spgemm::memory::arch::{knl, knl_ooc, p100, p100_ooc, Arch, GpuMode, KnlMode};
+use mlmem_spgemm::sparse::io::read_mm_streaming;
 use mlmem_spgemm::memory::{MemSim, SimReport};
 use mlmem_spgemm::tricount::{degree_sorted_lower, tricount_sim, TriPlacement};
 use mlmem_spgemm::util::cli::{CommandSpec, ParsedArgs};
@@ -75,7 +76,14 @@ fn scale_from(p: &ParsedArgs) -> Result<ScaleFactor, String> {
 
 fn cmd_bench(argv: &[String]) -> Result<(), MlmemError> {
     let spec = CommandSpec::new("bench", "regenerate the paper's tables and figures")
-        .opt("exp", "all", "experiment ids (comma list) or `all`")
+        .opt(
+            "exp",
+            "all",
+            "experiment ids (comma list) or `all`: table1..table4, fig3, fig4, fig6, \
+             fig7, fig9..fig13, ablate-acc, ablate-algo, ablate-compression, \
+             ablate-overlap, accumulator, pipeline, planner, chain, serve, memo, \
+             contention, cluster, scale, profiles",
+        )
         .opt("sizes", "1,2,4,8,16,32", "A sizes in paper-GB")
         .opt("graph-scale", "13", "log2 vertices for Figure 11 graphs")
         .opt("scale-denom", "1024", "capacity scale denominator (1024 = paper-GB -> MiB)")
@@ -105,17 +113,25 @@ fn cmd_bench(argv: &[String]) -> Result<(), MlmemError> {
 fn parse_machine(p: &ParsedArgs, threads: usize, scale: ScaleFactor) -> Result<Arch, String> {
     let machine = p.str("machine");
     match machine {
-        "knl" => {
+        "knl" | "knl-ooc" => {
             let mode = KnlMode::parse(p.str("mode"))
                 .ok_or_else(|| format!("bad KNL mode `{}`", p.str("mode")))?;
-            Ok(knl(mode, threads, scale))
+            Ok(if machine == "knl-ooc" {
+                knl_ooc(mode, threads, scale)
+            } else {
+                knl(mode, threads, scale)
+            })
         }
-        "gpu" | "p100" => {
+        "gpu" | "p100" | "gpu-ooc" | "p100-ooc" => {
             let mode = GpuMode::parse(p.str("mode"))
                 .ok_or_else(|| format!("bad GPU mode `{}`", p.str("mode")))?;
-            Ok(p100(mode, scale))
+            Ok(if machine.ends_with("-ooc") {
+                p100_ooc(mode, scale)
+            } else {
+                p100(mode, scale)
+            })
         }
-        other => Err(format!("unknown machine `{other}` (knl|gpu)")),
+        other => Err(format!("unknown machine `{other}` (knl|gpu|knl-ooc|gpu-ooc)")),
     }
 }
 
@@ -158,7 +174,14 @@ fn cmd_spgemm(argv: &[String]) -> Result<(), MlmemError> {
         .opt("domain", "laplace", "laplace|bigstar|brick|elasticity")
         .opt("mul", "rxa", "rxa|axp")
         .opt("size-gb", "4", "A matrix size in paper-GB")
-        .opt("machine", "knl", "knl|gpu")
+        .opt(
+            "mtx-a",
+            "",
+            "MatrixMarket file for A (streamed two-pass ingest; needs --mtx-b, \
+             overrides --domain/--mul/--size-gb)",
+        )
+        .opt("mtx-b", "", "MatrixMarket file for B (needs --mtx-a)")
+        .opt("machine", "knl", "knl|gpu|knl-ooc|gpu-ooc (-ooc adds the NVMe disk tier)")
         .opt("mode", "ddr", "knl: hbm|ddr|cache16|cache8; gpu: hbm|pinned|uvm")
         .opt("threads", "256", "KNL thread count")
         .opt(
@@ -198,18 +221,31 @@ fn cmd_spgemm(argv: &[String]) -> Result<(), MlmemError> {
         "native|sim|knl-chunk|gpu-chunk|pipelined",
     )?;
     let arch = parse_machine(&p, p.usize("threads")?, scale)?;
-    let mut cache = ProblemCache::default();
-    let prob: MgProblem = cache.get(domain, p.f64("size-gb")?, scale).clone();
-    // Move the operands out of the (already cloned) problem instead of
-    // deep-copying them again for the session registry.
-    let (a, b) = match mul {
-        Mul::AxP => (prob.a, prob.p),
-        Mul::RxA => (prob.r, prob.a),
+    let (label, a, b) = match (p.string("mtx-a"), p.string("mtx-b")) {
+        (pa, pb) if pa.is_empty() && pb.is_empty() => {
+            let mut cache = ProblemCache::default();
+            let prob: MgProblem = cache.get(domain, p.f64("size-gb")?, scale).clone();
+            // Move the operands out of the (already cloned) problem
+            // instead of deep-copying them again for the registry.
+            let (a, b) = match mul {
+                Mul::AxP => (prob.a, prob.p),
+                Mul::RxA => (prob.r, prob.a),
+            };
+            (format!("{} {}", domain.name(), mul.name()), a, b)
+        }
+        (pa, pb) if !pa.is_empty() && !pb.is_empty() => {
+            let a = read_mm_streaming(&pa).map_err(|e| format!("--mtx-a {pa}: {e}"))?;
+            let b = read_mm_streaming(&pb).map_err(|e| format!("--mtx-b {pb}: {e}"))?;
+            (format!("{pa} x {pb}"), a, b)
+        }
+        _ => {
+            return Err(MlmemError::Cli(
+                "--mtx-a and --mtx-b must be given together".into(),
+            ))
+        }
     };
     println!(
-        "{} {}: A {}x{} nnz {}  B {}x{} nnz {}",
-        domain.name(),
-        mul.name(),
+        "{label}: A {}x{} nnz {}  B {}x{} nnz {}",
         a.nrows,
         a.ncols,
         a.nnz(),
@@ -442,7 +478,7 @@ fn cmd_chain(argv: &[String]) -> Result<(), MlmemError> {
     )
     .opt("domain", "laplace", "laplace|bigstar|brick|elasticity")
     .opt("size-gb", "1", "A matrix size in paper-GB")
-    .opt("machine", "gpu", "knl|gpu")
+    .opt("machine", "gpu", "knl|gpu|knl-ooc|gpu-ooc")
     .opt("mode", "pinned", "knl: hbm|ddr|cache16|cache8; gpu: hbm|pinned|uvm")
     .opt("threads", "256", "KNL thread count")
     .opt("scale-denom", "1024", "capacity scale denominator")
@@ -566,7 +602,7 @@ fn cmd_tricount(argv: &[String]) -> Result<(), MlmemError> {
     let spec = CommandSpec::new("tricount", "triangle counting on a generated graph")
         .opt("graph", "g500", "g500|twitter|uk2005")
         .opt("graph-scale", "13", "log2 vertex count")
-        .opt("machine", "knl", "knl|gpu")
+        .opt("machine", "knl", "knl|gpu|knl-ooc|gpu-ooc")
         .opt("mode", "ddr", "memory mode")
         .opt("threads", "256", "KNL thread count")
         .opt("seed", "42", "graph seed")
@@ -602,7 +638,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), MlmemError> {
     let spec = CommandSpec::new("serve", "run the session coordinator over a job batch")
         .opt("jobs", "16", "number of multiplications to submit")
         .opt("workers", "4", "executor worker threads")
-        .opt("machine", "knl", "knl|gpu")
+        .opt("machine", "knl", "knl|gpu|knl-ooc|gpu-ooc")
         .opt("mode", "ddr", "memory mode")
         .opt("threads", "256", "KNL thread count")
         .opt("size-gb", "1", "A size per job in paper-GB")

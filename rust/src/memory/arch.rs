@@ -36,7 +36,7 @@ use super::pool::PoolSpec;
 use super::uvm::UvmSpec;
 use crate::gen::scale::ScaleFactor;
 use crate::memory::alloc::Location;
-use crate::memory::pool::{FAST, SLOW};
+use crate::memory::pool::{PoolId, DISK, FAST, SLOW};
 
 /// KNL memory configurations benchmarked in the paper (Figures 3/4).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -114,6 +114,40 @@ pub enum MachineKind {
     Gpu,
 }
 
+/// The staging chain of a machine: the ordered rungs data climbs to reach
+/// the compute-adjacent pool. `chain[0]` is the fast pool; each later
+/// entry is one level further out. Two-level machines have `[FAST, SLOW]`;
+/// the `*_ooc` profiles append the NVMe rung, `[FAST, SLOW, DISK]`. The
+/// chunk planners recurse along this chain: an operand at `chain[k]` is
+/// staged to `chain[k-1]` in outer chunks while each outer chunk is staged
+/// one rung further in inner chunks (DESIGN.md §14).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TierPath {
+    pub chain: Vec<PoolId>,
+}
+
+impl TierPath {
+    /// The classic fast/slow two-level hierarchy.
+    pub fn two_level() -> Self {
+        Self { chain: vec![FAST, SLOW] }
+    }
+
+    /// Fast/slow plus an out-of-core NVMe rung.
+    pub fn three_level() -> Self {
+        Self { chain: vec![FAST, SLOW, DISK] }
+    }
+
+    /// Whether the chain reaches an out-of-core rung.
+    pub fn has_disk(&self) -> bool {
+        self.chain.contains(&DISK)
+    }
+
+    /// Number of rungs in the chain.
+    pub fn levels(&self) -> usize {
+        self.chain.len()
+    }
+}
+
 /// A machine profile plus the default placement its mode implies.
 #[derive(Clone, Debug)]
 pub struct Arch {
@@ -121,6 +155,8 @@ pub struct Arch {
     /// Where structures go unless a placement plan overrides it.
     pub default_loc: Location,
     pub kind: MachineKind,
+    /// The staging chain (see [`TierPath`]).
+    pub tiers: TierPath,
 }
 
 /// Cache scale factor: `s^(1/3)` (see module docs).
@@ -207,7 +243,34 @@ pub fn knl(mode: KnlMode, threads: usize, scale: ScaleFactor) -> Arch {
         KnlMode::Hbm => Location::Pool(FAST),
         _ => Location::Pool(SLOW),
     };
-    Arch { spec, default_loc, kind: MachineKind::Knl }
+    Arch { spec, default_loc, kind: MachineKind::Knl, tiers: TierPath::two_level() }
+}
+
+/// NVMe-class out-of-core pool. Streaming bandwidth is PCIe-gen3-NVMe
+/// (~3.5 GB/s), latency is flash-read-class (~80 µs) with a deep device
+/// queue; random line-granular traffic collapses to a tiny fraction of
+/// streaming — which is exactly why the tiered executor only ever moves
+/// disk data in bulk outer chunks (DESIGN.md §14).
+fn nvme_pool(scale: ScaleFactor) -> PoolSpec {
+    PoolSpec {
+        name: "NVMe",
+        bandwidth_bps: 3.5e9,
+        latency_s: 80e-6,
+        capacity: scale.bytes(2048 * GB),
+        alloc_headroom: 0.98,
+        max_outstanding: 64.0,
+        single_thread_bw_frac: 0.25,
+        random_bw_frac: 0.05,
+    }
+}
+
+/// KNL profile with the NVMe out-of-core rung appended as a third pool.
+pub fn knl_ooc(mode: KnlMode, threads: usize, scale: ScaleFactor) -> Arch {
+    let mut arch = knl(mode, threads, scale);
+    arch.spec.pools.push(nvme_pool(scale));
+    arch.spec.name.push_str("-ooc");
+    arch.tiers = TierPath::three_level();
+    arch
 }
 
 fn p100_pools(scale: ScaleFactor) -> Vec<PoolSpec> {
@@ -274,7 +337,16 @@ pub fn p100(mode: GpuMode, scale: ScaleFactor) -> Arch {
         GpuMode::Pinned => Location::Pool(SLOW),
         GpuMode::Uvm => Location::Managed,
     };
-    Arch { spec, default_loc, kind: MachineKind::Gpu }
+    Arch { spec, default_loc, kind: MachineKind::Gpu, tiers: TierPath::two_level() }
+}
+
+/// P100 profile with the NVMe out-of-core rung appended as a third pool.
+pub fn p100_ooc(mode: GpuMode, scale: ScaleFactor) -> Arch {
+    let mut arch = p100(mode, scale);
+    arch.spec.pools.push(nvme_pool(scale));
+    arch.spec.name.push_str("-ooc");
+    arch.tiers = TierPath::three_level();
+    arch
 }
 
 #[cfg(test)]
@@ -341,6 +413,32 @@ mod tests {
         // Hyperthreading shrinks the per-thread share 4x.
         let ht = knl(KnlMode::Ddr, 256, ScaleFactor::new(1));
         assert_eq!(ht.spec.l1.size_bytes, 8 * 1024);
+    }
+
+    #[test]
+    fn ooc_profiles_append_nvme_rung() {
+        let s = ScaleFactor::default();
+        let base = knl(KnlMode::Ddr, 64, s);
+        assert_eq!(base.tiers, TierPath::two_level());
+        assert!(!base.tiers.has_disk());
+
+        let ooc = knl_ooc(KnlMode::Ddr, 64, s);
+        assert_eq!(ooc.tiers, TierPath::three_level());
+        assert!(ooc.tiers.has_disk());
+        assert_eq!(ooc.spec.pools.len(), 3);
+        assert_eq!(ooc.spec.pools[DISK.0].name, "NVMe");
+        // The rung ordering must be strictly slower outward.
+        assert!(ooc.spec.pools[DISK.0].bandwidth_bps < ooc.spec.pools[SLOW.0].bandwidth_bps);
+        assert!(ooc.spec.pools[DISK.0].capacity > ooc.spec.pools[SLOW.0].capacity);
+        assert!(ooc.spec.name.ends_with("-ooc"));
+        // Base profile is untouched apart from the appended rung.
+        assert_eq!(ooc.spec.pools[FAST.0].capacity, base.spec.pools[FAST.0].capacity);
+        assert_eq!(ooc.default_loc, base.default_loc);
+
+        let gpu = p100_ooc(GpuMode::Pinned, s);
+        assert_eq!(gpu.spec.pools.len(), 3);
+        assert!(gpu.tiers.has_disk());
+        assert!(gpu.spec.name.ends_with("-ooc"));
     }
 
     #[test]

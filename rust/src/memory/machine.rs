@@ -38,7 +38,7 @@ use super::alloc::{AllocError, AllocTracker, Location, Region};
 use super::cache::{Cache, CacheSpec, LINE};
 use super::mcdram_cache::McdramCache;
 use super::contention::LinkHandle;
-use super::pool::{PoolId, PoolSpec, PoolTraffic, FAST, SLOW};
+use super::pool::{PoolId, PoolSpec, PoolTraffic, DISK, FAST, SLOW};
 use super::uvm::{Uvm, UvmOutcome, UvmSpec};
 use crate::error::{JobControl, MlmemError};
 
@@ -125,6 +125,11 @@ impl MachineSpec {
 
     pub fn slow(&self) -> &PoolSpec {
         &self.pools[SLOW.0]
+    }
+
+    /// The out-of-core rung, present only on the `*_ooc` profiles.
+    pub fn disk(&self) -> Option<&PoolSpec> {
+        self.pools.get(DISK.0)
     }
 
     /// The roofline's compute leg: seconds of pure arithmetic for `flops`

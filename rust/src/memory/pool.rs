@@ -22,6 +22,8 @@ pub struct PoolId(pub usize);
 pub const FAST: PoolId = PoolId(0);
 /// The slow pool of every machine profile.
 pub const SLOW: PoolId = PoolId(1);
+/// The out-of-core rung (NVMe-class) present only on `*_ooc` profiles.
+pub const DISK: PoolId = PoolId(2);
 
 /// Static characteristics of one memory pool.
 #[derive(Clone, Debug)]

@@ -1,0 +1,195 @@
+//! Three-tier out-of-core integration suite (DESIGN.md §14). The
+//! contract under test: tiering changes where bytes wait, never what the
+//! kernel computes — a three-tier run is bit-identical to the two-tier
+//! chunk driver at the same fast cut (and any interleaving of disk-bound
+//! jobs through the shared link is bit-identical to serial execution);
+//! operands the slow pool cannot hold complete on an `_ooc` profile but
+//! fail with a typed `Alloc` error on a two-tier machine; and pipelining
+//! both staging boundaries beats serial staging without perturbing a
+//! single bit of the product.
+
+use mlmem_spgemm::chunk::{knl_chunked_sim, tiered_sim};
+use mlmem_spgemm::coordinator::{
+    execute, Decision, Job, JobKind, PlannerOptions, Policy, Session, SubmitOptions,
+};
+use mlmem_spgemm::engine::{OperandTier, TierAssign};
+use mlmem_spgemm::error::MlmemError;
+use mlmem_spgemm::gen::rhs::uniform_degree;
+use mlmem_spgemm::gen::scale::ScaleFactor;
+use mlmem_spgemm::kkmem::SpgemmOptions;
+use mlmem_spgemm::memory::arch::{knl, knl_ooc, KnlMode};
+use mlmem_spgemm::memory::pool::SLOW;
+use mlmem_spgemm::memory::MemSim;
+use mlmem_spgemm::sparse::csr::Csr;
+use mlmem_spgemm::sparse::ops::spgemm_reference;
+use mlmem_spgemm::util::proptest::{check, Gen};
+use std::sync::Arc;
+
+/// Bytes of a degree-8 uniform row (8 B rowmap slot + 8 × 12 B entries).
+const ROW_BYTES: u64 = 8 + 12 * 8;
+
+#[test]
+fn three_tier_bit_identical_to_two_tier_across_generators() {
+    check("tiered runs reproduce the two-tier product bitwise", 8, |g: &mut Gen| {
+        let (a, b) = g.csr_pair(40, 4);
+        let fast_budget = (b.size_bytes() / 4).max(64);
+        let slow_budget = (b.size_bytes() / 2).max(128);
+        // Two-tier reference at the same fast cut.
+        let mut two_sim = MemSim::new(knl(KnlMode::Ddr, 64, ScaleFactor::default()).spec);
+        let two =
+            knl_chunked_sim(&mut two_sim, &a, &b, fast_budget, &SpgemmOptions::default())
+                .expect("two-tier reference");
+        let tier = match g.usize(0, 2) {
+            0 => TierAssign { a: OperandTier::Mem, b: OperandTier::Disk },
+            1 => TierAssign { a: OperandTier::Disk, b: OperandTier::Mem },
+            _ => TierAssign { a: OperandTier::Disk, b: OperandTier::Disk },
+        };
+        let pipelined = g.usize(0, 1) == 1;
+        let mut sim = MemSim::new(knl_ooc(KnlMode::Ddr, 64, ScaleFactor::default()).spec);
+        let p = tiered_sim(
+            &mut sim,
+            &a,
+            &b,
+            slow_budget,
+            fast_budget,
+            &SpgemmOptions::default(),
+            pipelined,
+            tier,
+        )
+        .expect("tiered run");
+        assert_eq!(p.n_parts_b, two.n_parts_b, "{tier:?} pipelined={pipelined}");
+        assert_eq!(p.c.rowmap, two.c.rowmap, "{tier:?} pipelined={pipelined}");
+        assert_eq!(p.c.entries, two.c.entries, "{tier:?} pipelined={pipelined}");
+        assert!(
+            p.c.approx_eq(&two.c, 0.0),
+            "{tier:?} pipelined={pipelined}: values must be bit-identical"
+        );
+    });
+}
+
+#[test]
+fn oversized_operand_completes_on_ooc_and_allocs_on_two_tier() {
+    // Shrink hard enough that a CI-sized B overflows the slow pool: at
+    // 2^20 the KNL DDR arena is a few hundred kilobytes.
+    let scale = ScaleFactor::new(1 << 20);
+    let two = Arc::new(knl(KnlMode::Ddr, 64, scale));
+    let ooc = Arc::new(knl_ooc(KnlMode::Ddr, 64, scale));
+    let slow_usable = two.spec.pools[SLOW.0].usable();
+    let rows = (slow_usable * 3 / 2 / ROW_BYTES) as usize;
+    let b = Arc::new(uniform_degree(rows, rows, 8, 3));
+    assert!(b.size_bytes() > slow_usable, "B must overflow the slow pool");
+    let a = Arc::new(uniform_degree(128, rows, 2, 4));
+    let mk_job = |arch| {
+        let kind = JobKind::Spgemm { a: Arc::clone(&a), b: Arc::clone(&b) };
+        let mut job = Job::new(1, kind, arch, Policy::Auto);
+        job.keep_product = true;
+        job
+    };
+    // Two memory levels: no plan can even hold B, and the failure is the
+    // typed allocation error, not a panic or a silent wrong answer.
+    let err = execute(&mk_job(two), &PlannerOptions::default())
+        .expect_err("a two-tier machine cannot hold B");
+    assert!(matches!(err, MlmemError::Alloc(_)), "expected Alloc, got {err:?}");
+    // Three levels: capacity forces the tiered enumeration and the job
+    // completes with the right product.
+    let r = execute(&mk_job(ooc), &PlannerOptions::default()).expect("ooc profile completes");
+    assert!(matches!(r.decision, Decision::Tiered { .. }), "got {:?}", r.decision);
+    let c = r.c.expect("kept product");
+    let expect = spgemm_reference(&a, &b);
+    assert_eq!(c.nnz(), expect.nnz());
+    assert!(c.approx_eq(&expect, 1e-12));
+}
+
+#[test]
+fn pipelined_tiered_beats_serial_across_budget_splits() {
+    // Dense-ish A gives the inner kernel real compute to hide both
+    // staging boundaries behind; the budget splits force several outer
+    // groups and many inner chunks.
+    let a = uniform_degree(800, 8000, 24, 5);
+    let b = uniform_degree(8000, 800, 8, 6);
+    let tier = TierAssign { a: OperandTier::Mem, b: OperandTier::Disk };
+    let opts = SpgemmOptions::default();
+    for (fast_div, slow_div) in [(6, 2), (10, 3)] {
+        let fast_budget = b.size_bytes() / fast_div;
+        let slow_budget = b.size_bytes() / slow_div;
+        let mut serial_sim = MemSim::new(knl_ooc(KnlMode::Ddr, 256, ScaleFactor::default()).spec);
+        let serial =
+            tiered_sim(&mut serial_sim, &a, &b, slow_budget, fast_budget, &opts, false, tier)
+                .expect("serial tiered");
+        let serial_rep = serial_sim.finish();
+        let mut pipe_sim = MemSim::new(knl_ooc(KnlMode::Ddr, 256, ScaleFactor::default()).spec);
+        let piped =
+            tiered_sim(&mut pipe_sim, &a, &b, slow_budget, fast_budget, &opts, true, tier)
+                .expect("pipelined tiered");
+        let pipe_rep = pipe_sim.finish();
+        assert!(serial.n_parts_ac >= 2, "split 1/{fast_div},1/{slow_div}: want >1 outer group");
+        assert!(
+            piped.c.approx_eq(&serial.c, 0.0),
+            "split 1/{fast_div},1/{slow_div}: overlap must not perturb the product"
+        );
+        assert!(
+            pipe_rep.seconds < serial_rep.seconds,
+            "split 1/{fast_div},1/{slow_div}: pipelined {} !< serial {}",
+            pipe_rep.seconds,
+            serial_rep.seconds
+        );
+    }
+}
+
+#[test]
+fn concurrent_disk_bound_jobs_bit_identical_over_shared_link() {
+    // Three jobs whose B overflows the (shrunk) slow pool — every one is
+    // capacity-forced through the disk tier and the shared link. Any
+    // interleaving of their transfers must yield the serial products.
+    let arch = Arc::new(knl_ooc(KnlMode::Ddr, 64, ScaleFactor::new(1024 * 64)));
+    let slow_usable = arch.spec.pools[SLOW.0].usable();
+    let rows = (slow_usable * 13 / 10 / ROW_BYTES) as usize;
+    let pairs: Vec<(Arc<Csr>, Arc<Csr>)> = (0..3u64)
+        .map(|i| {
+            let b = Arc::new(uniform_degree(rows, rows, 8, 40 + i));
+            let a = Arc::new(uniform_degree(192, rows, 2, 50 + i));
+            (a, b)
+        })
+        .collect();
+    let submit = || SubmitOptions {
+        keep_product: true,
+        price_admission: true,
+        ..Default::default()
+    };
+    // Serial reference: one worker, one job in flight at a time.
+    let serial = Session::builder(Arc::clone(&arch))
+        .workers(1)
+        .co_schedule(false)
+        .build();
+    let mut reference = Vec::new();
+    for (a, b) in &pairs {
+        let ha = serial.register(Arc::clone(a));
+        let hb = serial.register(Arc::clone(b));
+        let r = serial.spgemm_with(ha, hb, submit()).unwrap().wait().unwrap();
+        assert!(
+            matches!(r.decision, Decision::Tiered { .. }),
+            "capacity must force tiering, got {:?}",
+            r.decision
+        );
+        reference.push(r.c.expect("kept product"));
+    }
+    // Concurrent: everything in flight at once, all priced through the
+    // shared link, co-scheduler free to reorder.
+    let concurrent = Session::builder(arch).workers(4).build();
+    let handles: Vec<_> = pairs
+        .iter()
+        .map(|(a, b)| {
+            let ha = concurrent.register(Arc::clone(a));
+            let hb = concurrent.register(Arc::clone(b));
+            concurrent.spgemm_with(ha, hb, submit()).unwrap()
+        })
+        .collect();
+    for (h, want) in handles.into_iter().zip(&reference) {
+        let r = h.wait().unwrap();
+        assert!(matches!(r.decision, Decision::Tiered { .. }));
+        let got = r.c.expect("kept product");
+        assert_eq!(got.rowmap, want.rowmap);
+        assert_eq!(got.entries, want.entries);
+        assert!(got.approx_eq(want, 0.0), "values must be bit-identical");
+    }
+}
